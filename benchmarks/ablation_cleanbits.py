@@ -1,0 +1,67 @@
+"""Section 2.5 ablations: latent precision sweep + clean-bit seeding.
+
+(a) lat_bits sweep (paper 2.5.1: diminishing returns past ~12-16 bits);
+(b) seeding with clean bits vs cold-start (paper 3.2: ~hundreds of bits
+    needed to avoid initial-chain inefficiency/underflow).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import ans, bbans
+from repro.data import synthetic_mnist
+from repro.models import vae as vae_lib
+
+
+def run(train_steps: int = 1000, n_images: int = 128, lanes: int = 16,
+        seed: int = 0):
+    base = vae_lib.paper_config("bernoulli")
+    params, neg_elbo = common.train_vae(base, steps=train_steps, seed=seed)
+    imgs, _ = synthetic_mnist.load("test", n_images, seed)
+    imgs = synthetic_mnist.binarize(imgs, seed + 1)
+    n_chain = n_images // lanes
+    data = jnp.asarray(imgs[:n_chain * lanes].reshape(n_chain, lanes, -1),
+                       jnp.int32)
+    rows = []
+    for lat_bits in (6, 8, 10, 12):
+        cfg = dataclasses.replace(base, lat_bits=lat_bits)
+        codec = vae_lib.make_codec(params, cfg)
+        stack = ans.make_stack(lanes, n_chain * 300 + 512,
+                               key=jax.random.PRNGKey(7))
+        stack = ans.seed_stack(stack, jax.random.PRNGKey(8), 32)
+        b0 = float(ans.stack_content_bits(stack))
+        stack = bbans.append_batch(codec, stack, data)
+        rate = (float(ans.stack_content_bits(stack)) - b0) / data.size
+        rows.append({"ablation": "lat_bits", "value": lat_bits,
+                     "bpd": rate, "neg_elbo": neg_elbo})
+    for n_seed_chunks in (0, 8, 32):
+        codec = vae_lib.make_codec(params, base)
+        stack = ans.make_stack(lanes, n_chain * 300 + 512,
+                               key=jax.random.PRNGKey(7))
+        if n_seed_chunks:
+            stack = ans.seed_stack(stack, jax.random.PRNGKey(8),
+                                   n_seed_chunks)
+        b0 = float(ans.stack_content_bits(stack))
+        stack = bbans.append_batch(codec, stack, data)
+        rate = (float(ans.stack_content_bits(stack)) - b0) / data.size
+        rows.append({"ablation": "seed_chunks", "value": n_seed_chunks,
+                     "bpd": rate,
+                     "underflows": int(jnp.sum(stack.underflows))})
+    return rows
+
+
+def main():
+    for r in run():
+        extra = (f",underflows={r['underflows']}"
+                 if "underflows" in r else "")
+        print(f"ablation,{r['ablation']},{r['value']},bpd={r['bpd']:.4f}"
+              + extra)
+
+
+if __name__ == "__main__":
+    main()

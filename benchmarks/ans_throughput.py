@@ -1,0 +1,52 @@
+"""ANS coder throughput (symbols/s) - core jnp path and the Pallas
+kernel path (interpret mode on CPU: correctness-representative, not
+perf-representative; the table reports both with that caveat)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import ans
+from repro.kernels.ans import ops as ans_ops
+
+
+def run(lanes: int = 256, steps: int = 256, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    probs = rng.dirichlet(np.ones(16), size=lanes).astype(np.float32)
+    table = ans.probs_to_starts(jnp.asarray(probs), 14)
+    syms = jnp.asarray(rng.integers(0, 16, (steps, lanes)), jnp.int32)
+    tab = np.asarray(table)
+    idx = np.arange(lanes)[None]
+    starts = jnp.asarray(tab[idx, np.asarray(syms)], jnp.uint32)
+    freqs = jnp.asarray(tab[idx, np.asarray(syms) + 1] -
+                        tab[idx, np.asarray(syms)], jnp.uint32)
+
+    stack = ans.make_stack(lanes, steps + 8, key=jax.random.PRNGKey(1))
+
+    @jax.jit
+    def core_push(stack):
+        def body(t, st):
+            return ans.push(st, starts[t], freqs[t], 14)
+        return jax.lax.fori_loop(0, steps, body, stack)
+
+    us_core, _ = common.timer(core_push, stack)
+    us_kernel, _ = common.timer(
+        lambda s: ans_ops.push_many(s, starts, freqs, 14), stack)
+    n = lanes * steps
+    return [{"path": "core-jnp", "us": us_core,
+             "msym_per_s": n / us_core},
+            {"path": "pallas-interpret", "us": us_kernel,
+             "msym_per_s": n / us_kernel}]
+
+
+def main():
+    for r in run():
+        print(f"ans_throughput,{r['path']},us={r['us']:.0f},"
+              f"Msym/s={r['msym_per_s']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

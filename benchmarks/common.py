@@ -1,0 +1,90 @@
+"""Shared benchmark utilities: VAE training on synthetic MNIST, baseline
+compressors, timing."""
+
+from __future__ import annotations
+
+import bz2
+import gzip
+import lzma
+import time
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    import zstandard as zstd
+except ImportError:  # pragma: no cover
+    zstd = None
+
+from repro.data import synthetic_mnist
+from repro.models import vae as vae_lib
+from repro.optim import adamw
+
+
+def train_vae(cfg: vae_lib.VAEConfig, *, steps: int = 1500,
+              batch: int = 128, n_train: int = 8000, seed: int = 0,
+              lr: float = 1e-3) -> Tuple[dict, float]:
+    """Train the paper's VAE on synthetic MNIST; returns (params,
+    final test -ELBO bits/dim)."""
+    train_imgs, _ = synthetic_mnist.load("train", n_train, seed)
+    if cfg.likelihood == "bernoulli":
+        train_imgs = synthetic_mnist.binarize(train_imgs, seed)
+    test_imgs, _ = synthetic_mnist.load("test", 1024, seed)
+    if cfg.likelihood == "bernoulli":
+        test_imgs = synthetic_mnist.binarize(test_imgs, seed + 1)
+
+    params = vae_lib.init(jax.random.PRNGKey(seed), cfg)
+    opt = adamw.AdamW(learning_rate=adamw.cosine_lr(lr, 100, steps))
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, key, batch_imgs):
+        loss, grads = jax.value_and_grad(vae_lib.loss)(
+            params, cfg, key, batch_imgs)
+        params, state = opt.update(grads, state, params)
+        return params, state, loss
+
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed + 1)
+    for i in range(steps):
+        idx = rng.integers(0, len(train_imgs), batch)
+        key, sub = jax.random.split(key)
+        params, state, loss = step(
+            params, state, sub, jnp.asarray(train_imgs[idx], jnp.int32))
+
+    keys = jax.random.split(jax.random.PRNGKey(seed + 2), 8)
+    elbos = [float(vae_lib.elbo_bits_per_dim(
+        params, cfg, k, jnp.asarray(test_imgs, jnp.int32))) for k in keys]
+    return params, float(np.mean(elbos))
+
+
+def baseline_rates(images: np.ndarray, binary: bool) -> Dict[str, float]:
+    """bits/dim for generic compressors on the (bit-packed) test set."""
+    n_dims = images.size
+    payload = np.packbits(images.astype(np.uint8)).tobytes() if binary \
+        else images.astype(np.uint8).tobytes()
+    out = {
+        "gzip": len(gzip.compress(payload, 9)) * 8 / n_dims,
+        "bz2": len(bz2.compress(payload, 9)) * 8 / n_dims,
+        "lzma": len(lzma.compress(payload, preset=6)) * 8 / n_dims,
+    }
+    if zstd is not None:
+        out["zstd"] = len(zstd.ZstdCompressor(level=19).compress(payload)
+                          ) * 8 / n_dims
+    return out
+
+
+def timer(fn: Callable, *args, repeats: int = 3) -> Tuple[float, object]:
+    """Median wall time (us) of fn(*args) with block_until_ready."""
+    out = None
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.tree_util.tree_map(
+            lambda x: x.block_until_ready()
+            if hasattr(x, "block_until_ready") else x, out)
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times)), out

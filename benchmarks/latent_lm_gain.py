@@ -1,0 +1,126 @@
+"""Bits-back gain over direct LM-ANS on per-sequence-structured data.
+
+Corpus: each sequence is drawn wholly from one of 4 Markov regimes.
+A causal LM must *infer* the regime from early tokens (paying extra bits
+at the sequence start); a LatentLM encodes the regime in a per-sequence
+latent whose net cost is the KL (bits-back refunds the rest) - the
+paper's mechanism, on an assigned backbone.
+
+Reported: plain-LM CE/token vs LatentLM -ELBO/token (analytic, stable),
+plus a chained BB-ANS roundtrip (exactness + achieved rate).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import base as cfg_base
+from repro.core import ans, bbans, lm_codec
+from repro.data import tokens as tok_data
+from repro.models import latent_lm, transformer
+from repro.optim import adamw
+from repro.train import trainer
+
+
+def regime_corpus(n_seqs: int, seq_len: int, vocab: int = 64,
+                  n_regimes: int = 4, seed: int = 0):
+    """[n_seqs, seq_len] int32, each row from one Markov regime."""
+    rng = np.random.default_rng(seed)
+    mats = [tok_data.make_transition_matrix(vocab, alpha=1.1,
+                                            seed=seed + 17 * r)
+            for r in range(n_regimes)]
+    cdfs = [np.cumsum(m, axis=1) for m in mats]
+    out = np.empty((n_seqs, seq_len), np.int32)
+    regimes = rng.integers(0, n_regimes, n_seqs)
+    for i in range(n_seqs):
+        cdf = cdfs[regimes[i]]
+        t = rng.integers(vocab)
+        for j in range(seq_len):
+            t = int(np.searchsorted(cdf[t], rng.random()))
+            out[i, j] = t
+    return out, regimes
+
+
+def run(train_steps: int = 300, seq_len: int = 32, seed: int = 0):
+    vocab = 64
+    bb = dataclasses.replace(
+        cfg_base.reduced(cfg_base.get("smollm-360m"), layers=2, width=96),
+        vocab=vocab, loss_chunk=seq_len)
+    data, _ = regime_corpus(2048, seq_len, vocab, seed=seed)
+    test, _ = regime_corpus(256, seq_len, vocab, seed=seed + 1)
+    test_j = jnp.asarray(test)
+
+    # --- plain LM ---
+    opt = trainer.make_optimizer(bb, lr=3e-3, total_steps=train_steps)
+    state = trainer.init_state(jax.random.PRNGKey(seed), bb, opt)
+    step = jax.jit(trainer.make_train_step(bb, opt))
+    rng = np.random.default_rng(seed)
+    for i in range(train_steps):
+        idx = rng.integers(0, len(data), 32)
+        state, m = step(state, {"tokens": jnp.asarray(data[idx])})
+    lm_bits = lm_codec.expected_bits(state.params, bb, test_j) / test.size
+
+    # --- LatentLM (same backbone size + per-sequence latent) ---
+    lcfg = latent_lm.LatentLMConfig(backbone=bb, latent_dim=8, n_prefix=1,
+                                    lat_bits=8)
+    lparams = latent_lm.init(jax.random.PRNGKey(seed + 1), lcfg)
+    lopt = adamw.AdamW(learning_rate=adamw.cosine_lr(
+        3e-3, 50, train_steps))
+    lstate = lopt.init(lparams)
+
+    @jax.jit
+    def lstep(params, ostate, key, batch):
+        (l, metrics), grads = jax.value_and_grad(
+            latent_lm.loss, has_aux=True)(params, lcfg, key, batch)
+        params, ostate = lopt.update(grads, ostate, params)
+        return params, ostate, l
+
+    key = jax.random.PRNGKey(seed + 2)
+    for i in range(train_steps):
+        idx = rng.integers(0, len(data), 32)
+        key, sub = jax.random.split(key)
+        lparams, lstate, l = lstep(lparams, lstate, sub,
+                                   jnp.asarray(data[idx]))
+    keys = jax.random.split(jax.random.PRNGKey(seed + 3), 8)
+    elbos = [float(jnp.mean(latent_lm.elbo(lparams, lcfg, k, test_j)))
+             for k in keys]
+    latent_bits = -float(np.mean(elbos)) / (seq_len * np.log(2.0))
+
+    # --- BB-ANS roundtrip on a short chain (exactness + rate) ---
+    lanes, n_chain = 4, 4
+    chain = jnp.asarray(test[:lanes * n_chain].reshape(n_chain, lanes,
+                                                       seq_len))
+    codec = latent_lm.make_codec(lparams, lcfg, seq_len=seq_len)
+    stack = ans.make_stack(lanes, 8192, key=jax.random.PRNGKey(9))
+    stack = ans.seed_stack(stack, jax.random.PRNGKey(10), 64)
+    b0 = float(ans.stack_content_bits(stack))
+    stack = bbans.append_batch(codec, stack, chain, scan=False)
+    bb_rate = (float(ans.stack_content_bits(stack)) - b0) / chain.size
+    stack, out = bbans.pop_batch(codec, stack, n_chain, scan=False)
+    exact = bool(jnp.array_equal(out, chain))
+
+    return [{
+        "bench": "latent_lm_gain",
+        "plain_lm_bpt": lm_bits,
+        "latent_lm_elbo_bpt": latent_bits,
+        "gain_bpt": lm_bits - latent_bits,
+        "bbans_measured_bpt": bb_rate,
+        "lossless": exact,
+    }]
+
+
+def main():
+    for r in run():
+        print(f"latent_lm_gain,plain={r['plain_lm_bpt']:.4f},"
+              f"latent_elbo={r['latent_lm_elbo_bpt']:.4f},"
+              f"gain={r['gain_bpt']:+.4f},"
+              f"bbans={r['bbans_measured_bpt']:.4f},"
+              f"lossless={r['lossless']}")
+
+
+if __name__ == "__main__":
+    main()

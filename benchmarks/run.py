@@ -1,0 +1,71 @@
+"""Benchmark harness entry point - one function per paper table/figure
+plus the framework's own perf benches. Prints ``name,...`` CSV lines.
+
+Full runs: PYTHONPATH=src python -m benchmarks.run
+Quick run: PYTHONPATH=src python -m benchmarks.run --quick
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced image counts / training steps")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (ablation_cleanbits, ans_throughput, fig3_chain,
+                            latent_lm_gain, lm_compression, table2_rates,
+                            table3_predict)
+
+    q = args.quick
+    benches = {
+        "table2": lambda: table2_rates.run(
+            n_images=128 if q else 512, train_steps=400 if q else 2500),
+        "fig3": lambda: fig3_chain.run(
+            n_images=128 if q else 480, train_steps=300 if q else 1200)[0],
+        "table3": lambda: table3_predict.run(
+            train_steps=300 if q else 1500, n_images=64 if q else 256),
+        "ablation": lambda: ablation_cleanbits.run(
+            train_steps=300 if q else 1000, n_images=64 if q else 128),
+        "ans_throughput": lambda: ans_throughput.run(
+            lanes=128 if q else 256, steps=64 if q else 256),
+        "lm_compression": lambda: lm_compression.run(
+            train_steps=120 if q else 250),
+        "latent_lm_gain": lambda: latent_lm_gain.run(
+            train_steps=120 if q else 300),
+    }
+    failures = 0
+    for name, fn in benches.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        try:
+            rows = fn()
+            dt = time.time() - t0
+            us = dt * 1e6 / max(len(rows), 1)
+            for row in rows:
+                if isinstance(row, dict):
+                    payload = ",".join(
+                        f"{k}={v:.4f}" if isinstance(v, float) else
+                        f"{k}={v}" for k, v in row.items())
+                else:
+                    payload = ",".join(
+                        f"{v:.4f}" if isinstance(v, float) else str(v)
+                        for v in row)
+                print(f"{name},{us:.0f},{payload}", flush=True)
+        except Exception:
+            failures += 1
+            print(f"{name},FAILED", flush=True)
+            traceback.print_exc()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

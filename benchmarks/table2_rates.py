@@ -1,0 +1,97 @@
+"""Paper Table 2: BB-ANS compression rates vs -ELBO and generic codecs.
+
+Binarized + full synthetic-MNIST (real MNIST unavailable offline -
+DESIGN.md section 6; the paper's own numbers are printed alongside for
+reference). For each dataset: train the paper's VAE, chain-compress the
+test set with BB-ANS, verify exact decompression, report bits/dim.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import ans, bbans
+from repro.data import synthetic_mnist
+from repro.models import vae as vae_lib
+
+PAPER = {  # (VAE ELBO, BB-ANS, bz2, gzip) from the paper's Table 2
+    "binarized": (0.19, 0.19, 0.25, 0.33),
+    "full": (1.39, 1.41, 1.42, 1.64),
+}
+
+
+def run(n_images: int = 512, lanes: int = 32, train_steps: int = 1500,
+        seed: int = 0):
+    rows = []
+    for name, likelihood in (("binarized", "bernoulli"),
+                             ("full", "beta_binomial")):
+        cfg = vae_lib.paper_config(likelihood)
+        params, neg_elbo = common.train_vae(cfg, steps=train_steps,
+                                            seed=seed)
+
+        test_imgs, _ = synthetic_mnist.load("test", n_images, seed)
+        if likelihood == "bernoulli":
+            test_imgs = synthetic_mnist.binarize(test_imgs, seed + 1)
+        n_chain = n_images // lanes
+        data = jnp.asarray(
+            test_imgs[:n_chain * lanes].reshape(n_chain, lanes, -1),
+            jnp.int32)
+
+        codec = vae_lib.make_codec(params, cfg)
+        bits_per_img = 4096 if likelihood == "bernoulli" else 16384
+        cap = int(n_chain * bits_per_img / 16) + 256
+        stack = ans.make_stack(lanes, cap, key=jax.random.PRNGKey(9))
+        stack = ans.seed_stack(stack, jax.random.PRNGKey(10), 32)
+
+        t0 = time.perf_counter()
+        bits0 = float(ans.stack_content_bits(stack))
+        stack2 = bbans.append_batch(codec, stack, data)
+        enc_s = time.perf_counter() - t0
+        assert int(jnp.sum(stack2.underflows)) == 0, "dirty bits consumed"
+        bits1 = float(ans.stack_content_bits(stack2))
+        rate = (bits1 - bits0) / data.size * lanes / lanes
+
+        # verify losslessness on the chain
+        t1 = time.perf_counter()
+        _, decoded = bbans.pop_batch(codec, stack2, n_chain)
+        dec_s = time.perf_counter() - t1
+        exact = bool(jnp.array_equal(decoded, data))
+
+        base = common.baseline_rates(
+            np.asarray(test_imgs[:n_chain * lanes]),
+            binary=(likelihood == "bernoulli"))
+        flush_overhead = 32.0 * lanes / data.size
+
+        p_elbo, p_bbans, p_bz2, p_gzip = PAPER[name]
+        rows.append({
+            "dataset": name, "neg_elbo_bpd": neg_elbo,
+            "bbans_bpd": rate, "lossless": exact,
+            "flush_overhead_bpd": flush_overhead,
+            **{f"{k}_bpd": v for k, v in base.items()},
+            "paper_elbo": p_elbo, "paper_bbans": p_bbans,
+            "paper_bz2": p_bz2, "paper_gzip": p_gzip,
+            "encode_s": enc_s, "decode_s": dec_s,
+            "images": n_chain * lanes,
+        })
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"table2,{r['dataset']},bbans={r['bbans_bpd']:.4f},"
+              f"elbo={r['neg_elbo_bpd']:.4f},"
+              f"gzip={r.get('gzip_bpd', 0):.4f},"
+              f"bz2={r.get('bz2_bpd', 0):.4f},"
+              f"lzma={r.get('lzma_bpd', 0):.4f},"
+              f"zstd={r.get('zstd_bpd', 0):.4f},"
+              f"lossless={r['lossless']},"
+              f"paper_bbans={r['paper_bbans']}")
+
+
+if __name__ == "__main__":
+    main()

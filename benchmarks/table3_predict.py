@@ -1,0 +1,57 @@
+"""Paper Table 3: predicted BB-ANS rates for a *better* model.
+
+The paper predicts BB-ANS rates for PixelVAE from its reported ELBO,
+arguing the coder gap stays negligible. We reproduce the methodology at
+our scale: train a larger VAE (hidden 400, latent 80), verify the gap is
+still ~0, and report predicted = measured for the small model vs the big
+model's ELBO-based prediction and its measured rate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import ans, bbans
+from repro.data import synthetic_mnist
+from repro.models import vae as vae_lib
+
+
+def run(train_steps: int = 1500, n_images: int = 256, lanes: int = 16,
+        seed: int = 0):
+    small = vae_lib.paper_config("bernoulli")
+    big = dataclasses.replace(small, hidden=400, latent=80)
+    out = []
+    for name, cfg in (("paper-vae", small), ("bigger-vae", big)):
+        params, neg_elbo = common.train_vae(cfg, steps=train_steps,
+                                            seed=seed)
+        imgs, _ = synthetic_mnist.load("test", n_images, seed)
+        imgs = synthetic_mnist.binarize(imgs, seed + 1)
+        n_chain = n_images // lanes
+        data = jnp.asarray(
+            imgs[:n_chain * lanes].reshape(n_chain, lanes, -1), jnp.int32)
+        codec = vae_lib.make_codec(params, cfg)
+        stack = ans.make_stack(lanes, n_chain * 256 + 512,
+                               key=jax.random.PRNGKey(2))
+        stack = ans.seed_stack(stack, jax.random.PRNGKey(3), 32)
+        b0 = float(ans.stack_content_bits(stack))
+        stack = bbans.append_batch(codec, stack, data)
+        measured = (float(ans.stack_content_bits(stack)) - b0) / data.size
+        out.append({"model": name, "predicted_bpd": neg_elbo,
+                    "measured_bpd": measured,
+                    "gap_pct": 100 * (measured - neg_elbo) /
+                    max(neg_elbo, 1e-9)})
+    return out
+
+
+def main():
+    for r in run():
+        print(f"table3,{r['model']},predicted={r['predicted_bpd']:.4f},"
+              f"measured={r['measured_bpd']:.4f},gap={r['gap_pct']:.2f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Neural lossless compression of token streams with an assigned LM arch.
+
+Trains a reduced qwen2-style backbone on a Markov corpus with known
+entropy, then uses the serving engine's compression service: ANS-code the
+stream with the LM as probability model, decompress, verify, and compare
+against the entropy floor and gzip.
+
+Run: PYTHONPATH=src:. python examples/lm_compression.py
+"""
+
+from benchmarks import lm_compression
+
+def main():
+    rows = lm_compression.run(train_steps=150)
+    r = rows[0]
+    print(f"entropy floor        : {r['entropy_floor_bpt']:.3f} bits/token")
+    print(f"model cross-entropy  : {r['model_ce_bpt']:.3f} bits/token")
+    print(f"LM-ANS achieved      : {r['achieved_bpt']:.3f} bits/token "
+          f"(incl. {r['flush_overhead_bpt']:.3f} flush overhead)")
+    print(f"gzip -9              : {r['gzip_bpt']:.3f} bits/token")
+    print(f"bz2 -9               : {r['bz2_bpt']:.3f} bits/token")
+    print("roundtrip: exact - lossless verified (asserted inside)")
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Quickstart: the paper in ~60 lines.
+
+Trains the paper's VAE on (synthetic) binarized MNIST for a few hundred
+steps, chain-compresses a batch of images with BB-ANS, decompresses them,
+verifies bit-exactness and prints the achieved rate vs the ELBO bound and
+gzip.
+
+Run: PYTHONPATH=src:. python examples/quickstart.py
+"""
+
+import gzip
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ans, bbans
+from repro.data import synthetic_mnist
+from repro.models import vae as vae_lib
+from benchmarks.common import train_vae
+
+def main():
+    cfg = vae_lib.paper_config("bernoulli")
+    print("training the paper's VAE (hidden 100, latent 40)...")
+    params, neg_elbo = train_vae(cfg, steps=600, seed=0)
+    print(f"  test -ELBO: {neg_elbo:.4f} bits/dim")
+
+    lanes, n_chain = 16, 8
+    imgs, _ = synthetic_mnist.load("test", lanes * n_chain, 0)
+    imgs = synthetic_mnist.binarize(imgs, 1)
+    data = jnp.asarray(imgs.reshape(n_chain, lanes, -1), jnp.int32)
+
+    codec = vae_lib.make_codec(params, cfg)
+    stack = ans.make_stack(lanes, 4096, key=jax.random.PRNGKey(0))
+    stack = ans.seed_stack(stack, jax.random.PRNGKey(1), 32)
+
+    bits0 = float(ans.stack_content_bits(stack))
+    stack = bbans.append_batch(codec, stack, data)
+    bits1 = float(ans.stack_content_bits(stack))
+    rate = (bits1 - bits0) / data.size
+    print(f"  BB-ANS rate: {rate:.4f} bits/dim "
+          f"(gap to ELBO {(rate - neg_elbo) / neg_elbo * 100:+.2f}%)")
+
+    gz = len(gzip.compress(np.packbits(imgs).tobytes(), 9)) * 8 / imgs.size
+    print(f"  gzip -9    : {gz:.4f} bits/dim")
+
+    stack, decoded = bbans.pop_batch(codec, stack, n_chain)
+    assert bool(jnp.array_equal(decoded, data))
+    print("  decompression: exact (bit-for-bit) - lossless verified")
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: BB-ANS lossless compression framework at pod scale (JAX)."""
+__version__ = "1.0.0"

@@ -1,0 +1,13 @@
+"""arctic-480b [moe]: 128 experts top-2 in parallel with a dense residual
+MLP. [hf:Snowflake/snowflake-arctic-base; hf]"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="arctic-480b", family="moe",
+    n_layers=35, d_model=7168, n_heads=56, n_kv_heads=8,
+    d_ff=4864, vocab=32000,
+    n_experts=128, top_k=2, moe_d_ff=4864, dense_ff_parallel=True,
+    rope_kind="rope",
+    optimizer="adafactor", remat="full", param_dtype="bfloat16",
+    grad_accum=8,
+))

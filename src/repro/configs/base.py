@@ -1,0 +1,216 @@
+"""Architecture config schema + registry + input-shape cells.
+
+Every assigned architecture is a frozen ``ArchConfig``; the four assigned
+input-shape cells are ``SHAPES``. ``input_specs`` builds the
+ShapeDtypeStruct stand-ins used by the multi-pod dry-run (no allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int                # query heads (0 for attn-free)
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: Optional[int] = None          # explicit head dim (mistral-nemo)
+    qkv_bias: bool = False
+    rope_kind: str = "rope"               # rope | mrope | none
+    rope_theta: float = 10000.0
+    mrope_sections: Tuple[int, ...] = (16, 24, 24)  # t/h/w for M-RoPE
+    norm: str = "rmsnorm"                 # rmsnorm | layernorm
+    act: str = "silu"                     # silu | gelu
+    tie_embeddings: bool = False
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 1
+    moe_d_ff: Optional[int] = None        # expert hidden (defaults d_ff)
+    shared_expert: bool = False           # llama4: always-on shared expert
+    dense_ff_parallel: bool = False       # arctic: dense MLP residual + MoE
+    capacity_factor: float = 1.25
+    # --- mixer ---
+    mixer: str = "attention"              # attention | rwkv6 | hymba
+    ssm_state: int = 16
+    sliding_window: Optional[int] = None
+    global_attn_every: int = 0            # hymba: full-attn layer stride
+    # --- structure ---
+    enc_dec: bool = False
+    n_enc_layers: int = 0
+    frontend: Optional[str] = None        # audio_stub | vision_stub
+    # --- numerics/training ---
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    optimizer: str = "adamw"              # adamw | adafactor
+    remat: str = "dots"                   # none | dots | full
+    loss_chunk: int = 1024                # seq chunking for the vocab loss
+    grad_accum: int = 1                   # microbatches per train step
+    fsdp_regather_once: bool = False      # gather params once per step
+    kv_cache_dtype: str = "bfloat16"      # bfloat16 | int8 (serving)
+
+    @property
+    def head_dim(self) -> int:
+        if self.d_head is not None:
+            return self.d_head
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def expert_d_ff(self) -> int:
+        return self.moe_d_ff if self.moe_d_ff is not None else self.d_ff
+
+    @property
+    def is_subquadratic(self) -> bool:
+        return self.mixer in ("rwkv6", "hymba")
+
+    def n_params(self) -> int:
+        """Approximate parameter count (embeddings + blocks)."""
+        d, dh = self.d_model, self.head_dim
+        attn = (self.n_heads * dh + 2 * self.n_kv_heads * dh) * d \
+            + self.n_heads * dh * d
+        if self.mixer == "rwkv6":
+            attn = 4 * d * d  # r/k/v/out (+ small lora terms, ignored)
+        dense_mlp = 3 * d * self.d_ff if self.act == "silu" \
+            else 2 * d * self.d_ff
+        per_layer = attn
+        if self.n_experts:
+            per_layer += self.n_experts * 3 * d * self.expert_d_ff
+            if self.shared_expert:
+                per_layer += 3 * d * self.expert_d_ff
+            if self.dense_ff_parallel:
+                per_layer += dense_mlp
+        else:
+            per_layer += dense_mlp
+        if self.mixer == "hymba":
+            per_layer += 2 * d * d  # ssm branch in/out (+ small ssm params)
+        n_blocks = self.n_layers + self.n_enc_layers
+        embed = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return n_blocks * per_layer + embed
+
+    def active_params(self) -> int:
+        """Params touched per token (MoE: only routed experts)."""
+        if not self.n_experts:
+            return self.n_params()
+        d = self.d_model
+        full = self.n_params()
+        all_experts = (self.n_layers *
+                       self.n_experts * 3 * d * self.expert_d_ff)
+        routed = self.n_layers * self.top_k * 3 * d * self.expert_d_ff
+        return full - all_experts + routed
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_is_skipped(cfg: ArchConfig, cell: ShapeCell) -> Optional[str]:
+    """Return a skip reason or None. Per the assignment: long_500k only for
+    sub-quadratic mixers."""
+    if cell.name == "long_500k" and not cfg.is_subquadratic:
+        return "full-attention arch: 500k dense-KV decode is out of scope"
+    return None
+
+
+_REGISTRY: Dict[str, ArchConfig] = {}
+
+
+def register(cfg: ArchConfig) -> ArchConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get(name: str) -> ArchConfig:
+    if not _REGISTRY:
+        _load_all()
+    return _REGISTRY[name]
+
+
+def all_archs() -> Dict[str, ArchConfig]:
+    if not _REGISTRY:
+        _load_all()
+    return dict(_REGISTRY)
+
+
+def _load_all():
+    # Import for registration side effects.
+    from repro.configs import (arctic_480b, hymba_1_5b,  # noqa: F401
+                               llama4_scout_17b_a16e, mistral_nemo_12b,
+                               qwen2_0_5b, qwen2_vl_2b, rwkv6_3b,
+                               smollm_360m, stablelm_12b, vae_mnist,
+                               whisper_small)
+
+
+def input_shapes(cfg: ArchConfig, cell: ShapeCell) -> Dict[str, Tuple]:
+    """Abstract input shapes (name -> (shape, dtype)) for a cell.
+
+    Used by the dry-run to build ShapeDtypeStructs (and by the data pipeline
+    to size real batches). Frontend stubs follow the assignment spec:
+    whisper gets precomputed frame embeddings (seq split 50/50 enc/dec),
+    qwen2-vl gets precomputed merged patch+text embeddings.
+    """
+    b, s = cell.global_batch, cell.seq_len
+    if cell.kind in ("train", "prefill"):
+        if cfg.enc_dec:
+            half = s // 2
+            return {
+                "enc_embeds": ((b, half, cfg.d_model), jnp.bfloat16),
+                "tokens": ((b, half), jnp.int32),
+            }
+        if cfg.frontend == "vision_stub":
+            return {
+                "embeds": ((b, s, cfg.d_model), jnp.bfloat16),
+                "tokens": ((b, s), jnp.int32),
+            }
+        return {"tokens": ((b, s), jnp.int32)}
+    # decode cells: one new token against a cache of length s.
+    return {"tokens": ((b, 1), jnp.int32)}
+
+
+def reduced(cfg: ArchConfig, layers: int = 2, width: int = 64) -> ArchConfig:
+    """Shrink a config to smoke-test scale, preserving family structure."""
+    dh = 16
+    n_heads = max(2, min(4, cfg.n_heads)) if cfg.n_heads else 0
+    # Keep the GQA ratio >= 1 and divisible.
+    n_kv = max(1, min(cfg.n_kv_heads, n_heads)) if cfg.n_heads else 0
+    if n_heads and n_kv and n_heads % n_kv:
+        n_kv = 1
+    d_model = width
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-smoke",
+        n_layers=layers,
+        n_enc_layers=min(cfg.n_enc_layers, layers) if cfg.enc_dec else 0,
+        d_model=d_model,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        d_head=dh,
+        d_ff=width * 2,
+        moe_d_ff=width * 2 if cfg.n_experts else None,
+        n_experts=min(cfg.n_experts, 4),
+        mrope_sections=(dh // 8, dh // 8 + dh // 16, dh // 8 + dh // 16),
+        vocab=257,
+        sliding_window=min(cfg.sliding_window, 32)
+        if cfg.sliding_window else None,
+        loss_chunk=16,
+        remat="none",
+    )

@@ -1,0 +1,13 @@
+"""hymba-1.5b [hybrid]: parallel attention + mamba heads per layer,
+sliding-window attention with periodic global layers, ssm_state=16.
+[arXiv:2411.13676; hf]"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="hymba-1.5b", family="hybrid",
+    n_layers=32, d_model=1600, n_heads=25, n_kv_heads=5,
+    d_ff=5504, vocab=32001,
+    mixer="hymba", ssm_state=16,
+    sliding_window=1024, global_attn_every=16,
+    rope_kind="rope", optimizer="adamw", remat="full", grad_accum=2,
+))

@@ -1,0 +1,13 @@
+"""llama4-scout-17b-a16e [moe]: 16 experts top-1 + shared expert, early
+fusion (text cells exercise the LM backbone).
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="llama4-scout-17b-a16e", family="moe",
+    n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8,
+    d_ff=8192, vocab=202048,
+    n_experts=16, top_k=1, moe_d_ff=8192, shared_expert=True,
+    rope_kind="rope", rope_theta=500000.0,
+    optimizer="adafactor", remat="full", grad_accum=4,
+))

@@ -1,0 +1,13 @@
+"""qwen2-vl-2b [vlm]: M-RoPE, dynamic-resolution vision stubbed (patch
+embeddings provided by input_specs). [arXiv:2409.12191; hf]"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="qwen2-vl-2b", family="vlm",
+    n_layers=28, d_model=1536, n_heads=12, n_kv_heads=2,
+    d_ff=8960, vocab=151936,
+    qkv_bias=True, tie_embeddings=True,
+    rope_kind="mrope", mrope_sections=(16, 24, 24),
+    rope_theta=1000000.0, frontend="vision_stub",
+    optimizer="adamw", remat="full", grad_accum=2, fsdp_regather_once=True,
+))

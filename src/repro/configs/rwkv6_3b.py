@@ -1,0 +1,11 @@
+"""rwkv6-3b 'Finch' [ssm]: attention-free, data-dependent decay.
+[arXiv:2404.05892; hf]"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="rwkv6-3b", family="ssm",
+    n_layers=32, d_model=2560, n_heads=0, n_kv_heads=0, d_head=64,
+    d_ff=8960, vocab=65536,
+    mixer="rwkv6", rope_kind="none",
+    optimizer="adamw", remat="full", grad_accum=8,
+))

@@ -1,0 +1,6 @@
+"""The paper's own model: fully-connected VAE for (binarized) MNIST,
+exposed as a config so launch/train drivers treat it uniformly."""
+from repro.models.vae import VAEConfig, paper_config
+
+BINARIZED = paper_config("bernoulli")
+FULL = paper_config("beta_binomial")

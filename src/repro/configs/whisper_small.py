@@ -1,0 +1,12 @@
+"""whisper-small [audio]: enc-dec, conv frontend stubbed (frame embeddings
+provided by input_specs). [arXiv:2212.04356; unverified]"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="whisper-small", family="encdec",
+    n_layers=12, n_enc_layers=12, enc_dec=True,
+    d_model=768, n_heads=12, n_kv_heads=12, d_ff=3072, vocab=51865,
+    rope_kind="none", norm="layernorm", act="gelu",
+    frontend="audio_stub", qkv_bias=True,
+    optimizer="adamw", remat="full", grad_accum=2, fsdp_regather_once=True,
+))

@@ -1,0 +1,1 @@
+"""BB-ANS core: entropy coding, bits-back, discretization, distributions."""

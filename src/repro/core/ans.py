@@ -1,0 +1,294 @@
+"""Lane-vectorized rANS entropy coder in pure JAX.
+
+This is the substrate for BB-ANS (Townsend, Bird & Barber, ICLR 2019).
+
+Design (TPU-native adaptation, see DESIGN.md section 3):
+
+  * 32-bit state per lane, normalized interval ``[2^16, 2^32)``.
+  * 16-bit renormalization chunks stored in a per-lane stack (``buf``/``ptr``).
+  * Coding precision ``r <= 16`` bits. With ``L = 2^16`` and 16-bit chunks
+    this guarantees each ``push`` emits *at most one* chunk and each ``pop``
+    reads *at most one* chunk:
+
+      - push renorm: while ``x >= freq << (32 - r)``: emit 16 bits. After one
+        emission ``x < 2^16 <= freq << (32 - r)`` for any ``freq >= 1``,
+        ``r <= 16``; so a single masked emission suffices.
+      - pop renorm: after the state update ``x >= 1``, so one 16-bit read
+        brings ``x >= 2^16 = L``; a single masked read suffices.
+
+    This removes the data-dependent while-loop of scalar rANS and makes the
+    coder a fixed sequence of vector integer ops - exactly what the TPU VPU
+    (and ``jax.jit``) wants.
+  * Lanes are fully independent coders (independent stacks). A fused message
+    is produced by ``flatten`` and consumed by ``unflatten``; the only
+    overhead versus a single-stream coder is one 32-bit head flush per lane.
+
+The coder is *exact*: pushes and pops are bit-precise inverses, verified by
+property tests in ``tests/test_ans.py``.
+
+All functions are jittable and differentiable-free (integer only).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# Normalization lower bound: state lives in [RANS_L, 2^32).
+RANS_L = jnp.uint32(1 << 16)
+_MASK16 = jnp.uint32(0xFFFF)
+MAX_PRECISION = 16
+#: Default coding precision (bits). 2^r is the total frequency budget.
+DEFAULT_PRECISION = 16
+
+
+class ANSStack(NamedTuple):
+    """State of ``lanes`` independent rANS coders.
+
+    Attributes:
+      head: uint32[lanes] - rANS state per lane, in ``[2^16, 2^32)``.
+      buf:  uint16[lanes, capacity] - renormalization chunk stack per lane.
+      ptr:  int32[lanes] - number of valid chunks per lane (stack depth).
+      underflows: int32[lanes] - count of pops that tried to read past the
+        bottom of the stack. Always 0 in a correctly seeded chain; exposed
+        so tests and the BB-ANS driver can assert cleanliness.
+    """
+
+    head: jnp.ndarray
+    buf: jnp.ndarray
+    ptr: jnp.ndarray
+    underflows: jnp.ndarray
+
+    @property
+    def lanes(self) -> int:
+        return self.buf.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.buf.shape[1]
+
+
+def make_stack(lanes: int, capacity: int,
+               key: Optional[jax.Array] = None) -> ANSStack:
+    """Create an empty stack; if ``key`` given, heads are random (clean bits).
+
+    A fresh head carries ``log2(head) - 16`` bits of recoverable randomness;
+    seeding with random heads in ``[2^16, 2^32)`` provides ~16 bits/lane of
+    "extra information" for the first bits-back pop. Use ``seed_stack`` to
+    add more.
+    """
+    if key is None:
+        head = jnp.full((lanes,), RANS_L, dtype=jnp.uint32)
+    else:
+        head = jax.random.randint(
+            key, (lanes,), minval=1 << 16, maxval=(1 << 31) - 1,
+            dtype=jnp.int32).astype(jnp.uint32) | jnp.uint32(1 << 31)
+    return ANSStack(
+        head=head,
+        buf=jnp.zeros((lanes, capacity), dtype=jnp.uint16),
+        ptr=jnp.zeros((lanes,), dtype=jnp.int32),
+        underflows=jnp.zeros((lanes,), dtype=jnp.int32),
+    )
+
+
+def seed_stack(stack: ANSStack, key: jax.Array, n_chunks: int) -> ANSStack:
+    """Push ``n_chunks`` uniform random 16-bit chunks per lane (clean bits).
+
+    This implements the paper's 'initialize the BB-ANS chain with a supply of
+    clean bits' (section 3.2): the first posterior pops consume these instead
+    of underflowing.
+    """
+    chunks = jax.random.randint(
+        key, (stack.lanes, n_chunks), 0, 1 << 16, dtype=jnp.int32
+    ).astype(jnp.uint16)
+    rows = jnp.arange(stack.lanes)[:, None]
+    cols = stack.ptr[:, None] + jnp.arange(n_chunks)[None, :]
+    buf = stack.buf.at[rows, cols].set(chunks, mode="drop")
+    return stack._replace(buf=buf, ptr=stack.ptr + n_chunks)
+
+
+def _as_u32(x: jnp.ndarray) -> jnp.ndarray:
+    return x.astype(jnp.uint32)
+
+
+def push(stack: ANSStack, start: jnp.ndarray, freq: jnp.ndarray,
+         precision: int = DEFAULT_PRECISION) -> ANSStack:
+    """Encode one symbol per lane, given its (start, freq) at ``precision``.
+
+    ``start``/``freq`` are uint32[lanes] with ``0 < freq``, ``start + freq <=
+    2**precision``. Adds ``precision - log2(freq)`` bits per lane.
+    """
+    assert 0 < precision <= MAX_PRECISION
+    head, buf, ptr = stack.head, stack.buf, stack.ptr
+    start, freq = _as_u32(start), _as_u32(freq)
+
+    # Single masked renormalization (see module docstring for the bound).
+    x_max = freq << (32 - precision)
+    need = head >= x_max
+    rows = jnp.arange(stack.lanes)
+    # Masked scatter: lanes that don't emit write out-of-bounds (dropped).
+    idx = jnp.where(need, ptr, stack.capacity)
+    buf = buf.at[rows, idx].set((head & _MASK16).astype(jnp.uint16),
+                                mode="drop")
+    ptr = ptr + need.astype(jnp.int32)
+    head = jnp.where(need, head >> 16, head)
+
+    head = ((head // freq) << precision) + (head % freq) + start
+    return stack._replace(head=head, buf=buf, ptr=ptr)
+
+
+def peek(stack: ANSStack, precision: int = DEFAULT_PRECISION) -> jnp.ndarray:
+    """Return the decode slot (``head mod 2^precision``) per lane."""
+    assert 0 < precision <= MAX_PRECISION
+    return stack.head & jnp.uint32((1 << precision) - 1)
+
+
+def pop_update(stack: ANSStack, start: jnp.ndarray, freq: jnp.ndarray,
+               precision: int = DEFAULT_PRECISION) -> ANSStack:
+    """Advance the decoder after the symbol for ``peek``'s slot was resolved.
+
+    Exactly inverts ``push(stack, start, freq, precision)``.
+    """
+    assert 0 < precision <= MAX_PRECISION
+    head, buf, ptr = stack.head, stack.buf, stack.ptr
+    start, freq = _as_u32(start), _as_u32(freq)
+    slot = peek(stack, precision)
+
+    head = freq * (head >> precision) + slot - start
+
+    # Single masked renormalization read.
+    need = head < RANS_L
+    rows = jnp.arange(stack.lanes)
+    read_idx = jnp.maximum(ptr - 1, 0)
+    chunk = buf[rows, read_idx].astype(jnp.uint32)
+    head = jnp.where(need, (head << 16) | chunk, head)
+    under = need & (ptr <= 0)
+    ptr = jnp.maximum(ptr - need.astype(jnp.int32), 0)
+    return stack._replace(
+        head=head, buf=buf, ptr=ptr,
+        underflows=stack.underflows + under.astype(jnp.int32))
+
+
+def pop_with_table(stack: ANSStack, starts_table: jnp.ndarray,
+                   precision: int = DEFAULT_PRECISION
+                   ) -> Tuple[ANSStack, jnp.ndarray]:
+    """Decode one symbol per lane from a cumulative-starts table.
+
+    ``starts_table``: uint32[lanes, A+1], row ``l`` is the fixed-point CDF
+    ``F`` of lane ``l``'s alphabet: ``F[0] = 0 <= F[1] < ... <= F[A] =
+    2^precision``, strictly increasing where freq > 0. Returns (new stack,
+    symbol int32[lanes]).
+    """
+    slot = peek(stack, precision)
+    # searchsorted per-lane: symbol = max i such that F[i] <= slot.
+    sym = jax.vmap(
+        lambda row, s: jnp.searchsorted(row, s, side="right") - 1
+    )(starts_table, slot).astype(jnp.int32)
+    rows = jnp.arange(stack.lanes)
+    start = starts_table[rows, sym]
+    freq = starts_table[rows, sym + 1] - start
+    return pop_update(stack, start, freq, precision), sym
+
+
+def push_with_table(stack: ANSStack, starts_table: jnp.ndarray,
+                    symbol: jnp.ndarray,
+                    precision: int = DEFAULT_PRECISION) -> ANSStack:
+    """Encode one symbol per lane from a cumulative-starts table."""
+    rows = jnp.arange(stack.lanes)
+    sym = symbol.astype(jnp.int32)
+    start = starts_table[rows, sym]
+    freq = starts_table[rows, sym + 1] - start
+    return push(stack, start, freq, precision)
+
+
+def stack_bits(stack: ANSStack) -> jnp.ndarray:
+    """Total message length in bits if flushed now (includes 32b/lane head)."""
+    return jnp.sum(stack.ptr) * 16 + 32 * stack.lanes
+
+
+def stack_content_bits(stack: ANSStack) -> jnp.ndarray:
+    """Information currently on the stack, *excluding* flush overhead.
+
+    ``log2(head)`` counts the fractional bits held in each head register;
+    useful for rate measurements that should match -ELBO without the
+    per-lane constant.
+    """
+    head_bits = jnp.log2(stack.head.astype(jnp.float64)
+                         if jax.config.jax_enable_x64
+                         else stack.head.astype(jnp.float32))
+    return jnp.sum(stack.ptr).astype(jnp.float32) * 16.0 + jnp.sum(head_bits)
+
+
+def flatten(stack: ANSStack) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Serialize to (message uint16[lanes, cap+2], lengths int32[lanes]).
+
+    Row layout: [head_hi16, head_lo16, chunks...(ptr of them)]. The fused
+    wire format is the concatenation of ``message[l, :lengths[l]]``; lengths
+    must be transmitted (or derivable) as framing, as in any blocked codec.
+    """
+    head_hi = (stack.head >> 16).astype(jnp.uint16)[:, None]
+    head_lo = (stack.head & _MASK16).astype(jnp.uint16)[:, None]
+    msg = jnp.concatenate([head_hi, head_lo, stack.buf], axis=1)
+    return msg, stack.ptr + 2
+
+
+def unflatten(msg: jnp.ndarray, lengths: jnp.ndarray,
+              capacity: Optional[int] = None) -> ANSStack:
+    """Inverse of ``flatten``."""
+    lanes = msg.shape[0]
+    cap = capacity if capacity is not None else msg.shape[1] - 2
+    head = (msg[:, 0].astype(jnp.uint32) << 16) | msg[:, 1].astype(jnp.uint32)
+    buf = msg[:, 2:2 + cap]
+    if buf.shape[1] < cap:
+        buf = jnp.pad(buf, ((0, 0), (0, cap - buf.shape[1])))
+    return ANSStack(head=head, buf=buf.astype(jnp.uint16),
+                    ptr=lengths - 2,
+                    underflows=jnp.zeros((lanes,), dtype=jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Fixed-point CDF helpers ("freq tables")
+# ---------------------------------------------------------------------------
+
+def cdf_to_starts(cdf: jnp.ndarray,
+                  precision: int = DEFAULT_PRECISION) -> jnp.ndarray:
+    """Quantize a float CDF to a fixed-point starts table with freqs >= 1.
+
+    ``cdf``: float[..., A+1], non-decreasing with cdf[...,0]=0, cdf[...,A]=1.
+    Returns uint32[..., A+1] table F with F[0]=0, F[A]=2^precision and
+    F[i+1]-F[i] >= 1 for all i (every symbol codable), via
+
+        F[i] = floor((2^p - A) * cdf[i]) + i
+
+    which is exact-total and strictly increasing. Requires A <= 2^p - A,
+    i.e. alphabet at most ~2^(p-1) (use factored coders beyond that).
+    """
+    a = cdf.shape[-1] - 1
+    total = 1 << precision
+    if a >= total:
+        raise ValueError(
+            f"alphabet {a} too large for precision {precision}; "
+            "use a factored codec (core.distributions.FactoredCategorical)")
+    if a < 2:
+        # A 1-symbol alphabet needs freq = 2^precision, which overflows the
+        # uint32 renormalization bound (freq << 16). It also carries zero
+        # information - callers must skip the push/pop instead.
+        raise ValueError("degenerate alphabet (< 2 symbols): skip coding")
+    scaled = jnp.floor(cdf * (total - a)).astype(jnp.uint32)
+    ramp = jnp.arange(a + 1, dtype=jnp.uint32)
+    ramp = ramp.reshape((1,) * (cdf.ndim - 1) + (-1,))
+    return scaled + ramp
+
+
+def probs_to_starts(probs: jnp.ndarray,
+                    precision: int = DEFAULT_PRECISION) -> jnp.ndarray:
+    """Like ``cdf_to_starts`` but from a probability vector float[..., A]."""
+    cdf = jnp.cumsum(probs, axis=-1)
+    cdf = cdf / cdf[..., -1:]
+    zero = jnp.zeros(cdf.shape[:-1] + (1,), cdf.dtype)
+    cdf = jnp.concatenate([zero, cdf], axis=-1)
+    # Guard against float drift: clamp into [0, 1] monotonically.
+    cdf = jnp.clip(cdf, 0.0, 1.0)
+    return cdf_to_starts(cdf, precision)

@@ -1,0 +1,147 @@
+"""Maximum-entropy discretization of continuous latents (paper App. B).
+
+The latent space of each dimension is partitioned into ``K = 2^lat_bits``
+buckets of *equal mass under the prior* ``N(0, 1)``:
+
+  * bucket edges  ``z_i = ndtri(i / K)``  (z_0 = -inf, z_K = +inf),
+  * bucket centre ``c_i = ndtri((i + 0.5) / K)``.
+
+Consequences exploited here:
+
+  * **Prior coding is uniform**: pushing bucket ``i`` under the prior is a
+    uniform code - ``start = i << (prec - lat_bits)``, ``freq = 2^(prec -
+    lat_bits)`` - exactly ``lat_bits`` bits, no CDF evaluation at all.
+  * **Posterior coding** uses the fixed-point CDF
+    ``F(i) = floor((2^prec - K) * ndtr((z_i - mu) / sigma)) + i`` which is
+    strictly increasing with ``F(0) = 0`` and ``F(K) = 2^prec``, so every
+    bucket has nonzero frequency and the total is exact. ``F`` is evaluated
+    *pointwise* (no K-sized tables), and decoding inverts it with a
+    ``lat_bits``-step vectorized bisection. Encoder and decoder evaluate the
+    identical jitted function, so the roundtrip is bit-exact.
+
+Rate note: the ``+ i`` ramp makes the *coded* posterior the mixture
+``Q' = (1 - eps) Q + eps P`` with ``eps = 2^(lat_bits - precision)`` (the
+smeared mass lands uniformly on buckets = the prior, by max-entropy
+construction). The rate penalty is at most ``-log2(1 - eps) + eps *
+E_Q[log Q/P]`` bits per latent dimension - with the default
+``lat_bits=10, precision=16`` that is < 0.03 bits/dim, measured end-to-end
+in ``benchmarks/table2_rates.py``. In exchange, F stays pointwise-evaluable
+(O(1) memory, bisection decode) - the TPU-friendly trade.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import ndtr, ndtri
+
+from repro.core import ans
+
+
+def bucket_edge(i: jnp.ndarray, lat_bits: int) -> jnp.ndarray:
+    """z_i = Phi^-1(i / K); exact -inf/+inf at the ends."""
+    k = 1 << lat_bits
+    frac = i.astype(jnp.float32) / k
+    return ndtri(jnp.clip(frac, 1e-38, 1.0 - 1e-7))  # interior only; ends
+    # are special-cased by callers via ndtr saturation (see _posterior_cdf).
+
+
+def bucket_centre(i: jnp.ndarray, lat_bits: int) -> jnp.ndarray:
+    """Representative latent value for bucket i (its prior median)."""
+    k = 1 << lat_bits
+    frac = (i.astype(jnp.float32) + 0.5) / k
+    return ndtri(frac)
+
+
+def _posterior_cdf(i: jnp.ndarray, mu: jnp.ndarray, sigma: jnp.ndarray,
+                   lat_bits: int) -> jnp.ndarray:
+    """Phi((z_i - mu) / sigma) with exact 0/1 at i = 0 / K."""
+    k = 1 << lat_bits
+    z = bucket_edge(i, lat_bits)
+    c = ndtr((z - mu) / sigma)
+    c = jnp.where(i <= 0, 0.0, c)
+    c = jnp.where(i >= k, 1.0, c)
+    return c
+
+
+def posterior_starts_fn(mu: jnp.ndarray, sigma: jnp.ndarray, lat_bits: int,
+                        precision: int):
+    """Return pointwise fixed-point CDF ``F(i)`` for a diag-Gaussian
+    posterior over the max-entropy prior buckets.
+
+    F maps int32[...] bucket indices (same shape as mu after broadcast) to
+    uint32 cumulative starts.
+    """
+    k = 1 << lat_bits
+    total = 1 << precision
+    scale = float(total - k)
+    if scale <= 0:
+        raise ValueError("need precision > lat_bits")
+
+    def f(i):
+        c = _posterior_cdf(i, mu, sigma, lat_bits)
+        return jnp.floor(c * scale).astype(jnp.uint32) + i.astype(jnp.uint32)
+
+    return f
+
+
+def push_posterior(stack: ans.ANSStack, idx: jnp.ndarray, mu: jnp.ndarray,
+                   sigma: jnp.ndarray, lat_bits: int,
+                   precision: int = ans.DEFAULT_PRECISION) -> ans.ANSStack:
+    """Encode bucket indices (one per lane) under Q(y|s)."""
+    f = posterior_starts_fn(mu, sigma, lat_bits, precision)
+    start = f(idx)
+    freq = f(idx + 1) - start
+    return ans.push(stack, start, freq, precision)
+
+
+def pop_posterior(stack: ans.ANSStack, mu: jnp.ndarray, sigma: jnp.ndarray,
+                  lat_bits: int,
+                  precision: int = ans.DEFAULT_PRECISION
+                  ) -> Tuple[ans.ANSStack, jnp.ndarray]:
+    """Decode bucket indices (one per lane) under Q(y|s) == sample from the
+    discretized posterior using stack bits as the randomness source."""
+    f = posterior_starts_fn(mu, sigma, lat_bits, precision)
+    slot = ans.peek(stack, precision)
+    # Bisection for the largest i with F(i) <= slot, i in [0, K).
+    lo = jnp.zeros_like(slot, dtype=jnp.int32)
+    hi = jnp.full_like(lo, 1 << lat_bits)  # exclusive
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = (lo + hi + 1) // 2
+        go_up = f(mid) <= slot
+        return jnp.where(go_up, mid, lo), jnp.where(go_up, hi, mid)
+
+    # After lat_bits+1 halvings of a K+1-point range the bracket is exact.
+    lo, hi = jax.lax.fori_loop(0, lat_bits + 1, body, (lo, hi))
+    idx = lo
+    start = f(idx)
+    freq = f(idx + 1) - start
+    return ans.pop_update(stack, start, freq, precision), idx
+
+
+def push_prior(stack: ans.ANSStack, idx: jnp.ndarray, lat_bits: int,
+               precision: int = ans.DEFAULT_PRECISION) -> ans.ANSStack:
+    """Encode bucket indices under the prior: exact uniform code."""
+    shift = precision - lat_bits
+    if shift < 0:
+        raise ValueError("need precision >= lat_bits")
+    start = idx.astype(jnp.uint32) << shift
+    freq = jnp.full_like(start, 1 << shift)
+    return ans.push(stack, start, freq, precision)
+
+
+def pop_prior(stack: ans.ANSStack, lat_bits: int,
+              precision: int = ans.DEFAULT_PRECISION
+              ) -> Tuple[ans.ANSStack, jnp.ndarray]:
+    """Decode bucket indices under the prior."""
+    shift = precision - lat_bits
+    slot = ans.peek(stack, precision)
+    idx = (slot >> shift).astype(jnp.int32)
+    start = idx.astype(jnp.uint32) << shift
+    freq = jnp.full_like(start, 1 << shift)
+    return ans.pop_update(stack, start, freq, precision), idx

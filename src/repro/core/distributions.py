@@ -1,0 +1,199 @@
+"""Observation-model coders: fixed-point (start, freq) interfaces over ANS.
+
+Each coder exposes ``push(stack, symbol) -> stack`` and ``pop(stack) ->
+(stack, symbol)`` operating lane-wise (one symbol per lane per call), plus
+log-probability helpers used by the ELBO/rate tests. All are exact LIFO
+inverses of each other - the property the whole of BB-ANS rests on.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import gammaln
+
+from repro.core import ans
+
+
+# ---------------------------------------------------------------------------
+# Bernoulli (binarized-MNIST likelihood)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Bernoulli:
+    """Per-lane Bernoulli with success probability sigmoid(logit)."""
+
+    logits: jnp.ndarray  # float[lanes]
+    precision: int = ans.DEFAULT_PRECISION
+
+    def _freq1(self) -> jnp.ndarray:
+        total = 1 << self.precision
+        p = jax.nn.sigmoid(self.logits.astype(jnp.float32))
+        f1 = jnp.round(p * (total - 2)).astype(jnp.uint32) + 1
+        return f1  # in [1, total - 1]
+
+    def push(self, stack: ans.ANSStack, sym: jnp.ndarray) -> ans.ANSStack:
+        total = 1 << self.precision
+        f1 = self._freq1()
+        f0 = total - f1
+        is1 = sym.astype(bool)
+        start = jnp.where(is1, f0, jnp.uint32(0))
+        freq = jnp.where(is1, f1, f0)
+        return ans.push(stack, start, freq, self.precision)
+
+    def pop(self, stack: ans.ANSStack) -> Tuple[ans.ANSStack, jnp.ndarray]:
+        total = 1 << self.precision
+        f1 = self._freq1()
+        f0 = total - f1
+        slot = ans.peek(stack, self.precision)
+        is1 = slot >= f0
+        start = jnp.where(is1, f0, jnp.uint32(0))
+        freq = jnp.where(is1, f1, f0)
+        return (ans.pop_update(stack, start, freq, self.precision),
+                is1.astype(jnp.int32))
+
+    def log_prob(self, sym: jnp.ndarray) -> jnp.ndarray:
+        x = sym.astype(self.logits.dtype)
+        return x * jax.nn.log_sigmoid(self.logits) + (1 - x) * \
+            jax.nn.log_sigmoid(-self.logits)
+
+
+# ---------------------------------------------------------------------------
+# Beta-binomial (full-MNIST likelihood; paper section 3.2)
+# ---------------------------------------------------------------------------
+
+def beta_binomial_log_pmf(k: jnp.ndarray, n: int, alpha: jnp.ndarray,
+                          beta: jnp.ndarray) -> jnp.ndarray:
+    """log BetaBin(k | n, alpha, beta), exact via lgamma."""
+    k = k.astype(jnp.float32)
+    return (gammaln(n + 1.0) - gammaln(k + 1.0) - gammaln(n - k + 1.0)
+            + gammaln(k + alpha) + gammaln(n - k + beta)
+            - gammaln(n + alpha + beta)
+            + gammaln(alpha + beta) - gammaln(alpha) - gammaln(beta))
+
+
+@dataclass(frozen=True)
+class BetaBinomial:
+    """Per-lane beta-binomial on {0..n}; two positive params per lane."""
+
+    alpha: jnp.ndarray  # float[lanes]
+    beta: jnp.ndarray   # float[lanes]
+    n: int = 255
+    precision: int = ans.DEFAULT_PRECISION
+
+    def _table(self) -> jnp.ndarray:
+        ks = jnp.arange(self.n + 1, dtype=jnp.float32)
+        logp = beta_binomial_log_pmf(
+            ks[None, :], self.n, self.alpha[:, None].astype(jnp.float32),
+            self.beta[:, None].astype(jnp.float32))
+        probs = jax.nn.softmax(logp, axis=-1)  # renormalize in fp
+        return ans.probs_to_starts(probs, self.precision)
+
+    def push(self, stack: ans.ANSStack, sym: jnp.ndarray) -> ans.ANSStack:
+        return ans.push_with_table(stack, self._table(), sym, self.precision)
+
+    def pop(self, stack: ans.ANSStack) -> Tuple[ans.ANSStack, jnp.ndarray]:
+        return ans.pop_with_table(stack, self._table(), self.precision)
+
+    def log_prob(self, sym: jnp.ndarray) -> jnp.ndarray:
+        return beta_binomial_log_pmf(sym, self.n,
+                                     self.alpha.astype(jnp.float32),
+                                     self.beta.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Categorical (small alphabets: routing decisions, factored pieces)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Categorical:
+    """Per-lane categorical over an alphabet of size logits.shape[-1]."""
+
+    logits: jnp.ndarray  # float[lanes, A]
+    precision: int = ans.DEFAULT_PRECISION
+
+    def _table(self) -> jnp.ndarray:
+        probs = jax.nn.softmax(self.logits.astype(jnp.float32), axis=-1)
+        return ans.probs_to_starts(probs, self.precision)
+
+    def push(self, stack: ans.ANSStack, sym: jnp.ndarray) -> ans.ANSStack:
+        return ans.push_with_table(stack, self._table(), sym, self.precision)
+
+    def pop(self, stack: ans.ANSStack) -> Tuple[ans.ANSStack, jnp.ndarray]:
+        return ans.pop_with_table(stack, self._table(), self.precision)
+
+    def log_prob(self, sym: jnp.ndarray) -> jnp.ndarray:
+        logp = jax.nn.log_softmax(self.logits.astype(jnp.float32), axis=-1)
+        return jnp.take_along_axis(logp, sym[:, None].astype(jnp.int32),
+                                   axis=-1)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Factored categorical (LM vocabularies beyond 2^(precision-1))
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FactoredCategorical:
+    """Categorical over a large vocabulary, coded as (chunk, offset).
+
+    The vocabulary is split into chunks of ``chunk_size``; a token ``v`` is
+    coded as ``hi = v // chunk_size`` under the chunk-marginal followed by
+    ``lo = v % chunk_size`` under the within-chunk conditional (chain rule -
+    rate unchanged up to rounding). This keeps every alphabet below the
+    16-bit fixed-point budget for vocabularies up to ~2^23.
+
+    LIFO discipline: ``push`` pushes *lo then hi* so that ``pop`` pops *hi
+    then lo*.
+    """
+
+    logits: jnp.ndarray  # float[lanes, V]
+    chunk_size: int = 256
+    precision: int = ans.DEFAULT_PRECISION
+
+    def _parts(self):
+        lanes, v = self.logits.shape
+        cs = self.chunk_size
+        n_chunks = -(-v // cs)
+        pad = n_chunks * cs - v
+        logits = self.logits.astype(jnp.float32)
+        if pad:
+            logits = jnp.pad(logits, ((0, 0), (0, pad)),
+                             constant_values=-1e30)
+        grouped = logits.reshape(lanes, n_chunks, cs)
+        # Chunk marginal in log space (stable): logsumexp within chunk.
+        chunk_logits = jax.nn.logsumexp(grouped, axis=-1)  # [lanes, n_chunks]
+        return grouped, chunk_logits, n_chunks
+
+    def push(self, stack: ans.ANSStack, sym: jnp.ndarray) -> ans.ANSStack:
+        grouped, chunk_logits, n_chunks = self._parts()
+        sym = sym.astype(jnp.int32)
+        hi = sym // self.chunk_size
+        lo = sym % self.chunk_size
+        rows = jnp.arange(grouped.shape[0])
+        within = Categorical(grouped[rows, hi], self.precision)
+        stack = within.push(stack, lo)
+        if n_chunks > 1:  # a 1-chunk outer code carries 0 bits; coding it
+            # would need freq = 2^precision which overflows the fixed point.
+            outer = Categorical(chunk_logits, self.precision)
+            stack = outer.push(stack, hi)
+        return stack
+
+    def pop(self, stack: ans.ANSStack) -> Tuple[ans.ANSStack, jnp.ndarray]:
+        grouped, chunk_logits, n_chunks = self._parts()
+        rows = jnp.arange(grouped.shape[0])
+        if n_chunks > 1:
+            outer = Categorical(chunk_logits, self.precision)
+            stack, hi = outer.pop(stack)
+        else:
+            hi = jnp.zeros((grouped.shape[0],), jnp.int32)
+        within = Categorical(grouped[rows, hi], self.precision)
+        stack, lo = within.pop(stack)
+        return stack, hi * self.chunk_size + lo
+
+    def log_prob(self, sym: jnp.ndarray) -> jnp.ndarray:
+        logp = jax.nn.log_softmax(self.logits.astype(jnp.float32), axis=-1)
+        return jnp.take_along_axis(logp, sym[:, None].astype(jnp.int32),
+                                   axis=-1)[:, 0]

@@ -1,0 +1,133 @@
+"""Lossless token-stream compression with any supported LM backbone.
+
+Two modes (DESIGN.md section 4):
+
+  * ``encode_tokens``/``decode_tokens`` - direct ANS entropy coding with the
+    LM's next-token distribution (the latent-free special case of BB-ANS).
+
+  * ``models/latent_lm.py`` - bits-back proper, with a per-sequence
+    continuous latent (see that module).
+
+DETERMINISM CONTRACT (the make-or-break property of neural compression):
+encoder and decoder must derive *bit-identical* fixed-point tables. A
+teacher-forced parallel forward and an incremental cached decode are
+mathematically equal but NOT bitwise equal - XLA schedules reductions
+differently per fusion context, and a one-ULP logit difference
+occasionally flips a table boundary, corrupting the stream (observed;
+regression-tested in tests/test_serving.py). Both encoder and decoder
+therefore step the network through *the same jit-compiled executable*
+(``jitted_decode_step``, cached per config) from Python-level loops: same
+artifact, same inputs => bitwise-identical logits on both sides.
+
+The token alphabet is coded with the factored (chunk, offset) categorical,
+so any assigned vocabulary (up to 202k) fits the 16-bit fixed-point budget.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ans
+from repro.core.distributions import FactoredCategorical
+from repro.models import transformer
+
+BOS = 0
+
+
+@functools.lru_cache(maxsize=None)
+def jitted_decode_step(cfg):
+    """One shared compiled decode step per config - the determinism
+    anchor for all coding paths (including LatentLM's)."""
+    return jax.jit(functools.partial(transformer.decode_step, cfg=cfg))
+
+
+@functools.lru_cache(maxsize=None)
+def jitted_decode_step_embeds(cfg):
+    return jax.jit(functools.partial(transformer.decode_step_embeds,
+                                     cfg=cfg))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_push(precision: int):
+    def push(stack, logits_t, toks_t):
+        dist = FactoredCategorical(logits_t, precision=precision)
+        return dist.push(stack, toks_t)
+
+    return jax.jit(push)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_pop(precision: int):
+    def pop(stack, logits_t):
+        dist = FactoredCategorical(logits_t, precision=precision)
+        return dist.pop(stack)
+
+    return jax.jit(pop)
+
+
+def collect_decoder_logits(params, cfg, tokens: jnp.ndarray) -> list:
+    """Teacher-forced logits via the decoder's own compiled step."""
+    lanes, n = tokens.shape
+    step = jitted_decode_step(cfg)
+    state = transformer.init_decode_state(cfg, lanes, max_len=n)
+    tok = jnp.full((lanes, 1), BOS, jnp.int32)
+    out = []
+    for t in range(n):
+        logits, state = step(params, tok=tok, state=state)
+        out.append(logits[:, 0].astype(jnp.float32))
+        tok = tokens[:, t:t + 1]
+    return out
+
+
+def encode_tokens(params, cfg, tokens: jnp.ndarray,
+                  stack: ans.ANSStack,
+                  precision: int = ans.DEFAULT_PRECISION) -> ans.ANSStack:
+    """tokens int32[lanes, N] -> stack with N symbols/lane pushed.
+
+    Pushes in reverse order so the decoder pops tokens forward.
+    """
+    lanes, n = tokens.shape
+    logits = collect_decoder_logits(params, cfg, tokens)
+    push = _jitted_push(precision)
+    for t in reversed(range(n)):
+        stack = push(stack, logits[t], tokens[:, t])
+    return stack
+
+
+def decode_tokens(params, cfg, stack: ans.ANSStack, n: int,
+                  precision: int = ans.DEFAULT_PRECISION
+                  ) -> Tuple[ans.ANSStack, jnp.ndarray]:
+    """Pop n tokens/lane, regenerating logits autoregressively through the
+    same compiled step the encoder used."""
+    lanes = stack.lanes
+    step = jitted_decode_step(cfg)
+    pop = _jitted_pop(precision)
+    state = transformer.init_decode_state(cfg, lanes, max_len=n)
+    tok = jnp.full((lanes, 1), BOS, jnp.int32)
+    out = []
+    for _ in range(n):
+        logits, state = step(params, tok=tok, state=state)
+        stack, sym = pop(stack, logits[:, 0].astype(jnp.float32))
+        out.append(sym)
+        tok = sym[:, None].astype(jnp.int32)
+    return stack, jnp.stack(out, axis=1)
+
+
+def expected_bits(params, cfg, tokens: jnp.ndarray) -> float:
+    """Cross-entropy of the model on the stream, bits (the coding bound).
+
+    Uses the parallel teacher-forced forward (analysis only - tiny fp
+    deviations from the coding path are irrelevant here).
+    """
+    inp = jnp.concatenate(
+        [jnp.full((tokens.shape[0], 1), BOS, tokens.dtype),
+         tokens[:, :-1]], axis=1)
+    logits, _ = transformer.forward(params, cfg, inp)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    tgt = jnp.take_along_axis(logp, tokens[..., None].astype(jnp.int32),
+                              axis=-1)[..., 0]
+    return float(-jnp.sum(tgt) / jnp.log(2.0))

@@ -1,0 +1,44 @@
+"""jit wrapper: Pallas emission kernel + XLA compaction -> ANSStack push.
+
+``push_many`` is the production batch-encode path: the ALU-bound coder
+loop runs in the Pallas kernel (VPU lanes), the irregular per-lane stack
+append becomes one vectorized cumsum + scatter.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ans
+from repro.kernels.ans import kernel as K
+
+
+def push_many(stack: ans.ANSStack, starts: jnp.ndarray, freqs: jnp.ndarray,
+              precision: int = ans.DEFAULT_PRECISION,
+              interpret: bool = True) -> ans.ANSStack:
+    """Push ``steps`` symbols per lane. starts/freqs uint32[steps, lanes].
+
+    Bit-exact equivalent of ``steps`` sequential ``ans.push`` calls.
+    """
+    steps, lanes = starts.shape
+    pad = (-lanes) % K.LANE_TILE
+    head = stack.head
+    if pad:
+        head = jnp.pad(head, (0, pad), constant_values=1 << 16)
+        starts = jnp.pad(starts, ((0, 0), (0, pad)))
+        freqs = jnp.pad(freqs, ((0, 0), (0, pad)), constant_values=1)
+    new_head, chunks, need = K.push_emit(head, starts, freqs, precision,
+                                         interpret=interpret)
+    new_head = new_head[:lanes]
+    chunks = chunks[:, :lanes]
+    need = need[:, :lanes]
+    # Compaction: chunk emitted at step t lands at ptr + (#emits before t).
+    before = jnp.cumsum(need, axis=0) - need
+    pos = stack.ptr[None, :] + before
+    cols = jnp.where(need.astype(bool), pos, stack.capacity)  # drop if not
+    rows = jnp.broadcast_to(jnp.arange(lanes)[None, :], cols.shape)
+    buf = stack.buf.at[rows, cols].set(chunks.astype(jnp.uint16),
+                                       mode="drop")
+    ptr = stack.ptr + jnp.sum(need, axis=0).astype(jnp.int32)
+    return stack._replace(head=new_head, buf=buf, ptr=ptr)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the ANS push kernel: the core coder, symbol by
+symbol, via repro.core.ans (itself exhaustively property-tested)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ans
+
+
+def push_emit_ref(head, starts, freqs, precision):
+    """Reference for kernel.push_emit: same (new_head, chunks, need)."""
+    steps, lanes = starts.shape
+
+    def body(t, carry):
+        head, chunks, need = carry
+        x_max = freqs[t] << (32 - precision)
+        n = head >= x_max
+        c = jnp.where(n, head & jnp.uint32(0xFFFF), jnp.uint32(0))
+        chunks = chunks.at[t].set(c)
+        need = need.at[t].set(n.astype(jnp.uint32))
+        head = jnp.where(n, head >> 16, head)
+        head = ((head // freqs[t]) << precision) + (head % freqs[t]) \
+            + starts[t]
+        return head, chunks, need
+
+    chunks0 = jnp.zeros((steps, lanes), jnp.uint32)
+    need0 = jnp.zeros((steps, lanes), jnp.uint32)
+    return jax.lax.fori_loop(0, steps, body, (head, chunks0, need0))
+
+
+def push_many_ref(stack: ans.ANSStack, starts, freqs,
+                  precision) -> ans.ANSStack:
+    """End-to-end reference: sequential core-library pushes."""
+    steps = starts.shape[0]
+
+    def body(t, st):
+        return ans.push(st, starts[t], freqs[t], precision)
+
+    return jax.lax.fori_loop(0, steps, body, stack)

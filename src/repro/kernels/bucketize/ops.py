@@ -1,0 +1,19 @@
+"""jit wrapper for the fused posterior-decode kernel (pads lane tiles)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.bucketize import kernel as K
+
+
+def bucketize(slot, mu, sigma, lat_bits, precision, interpret=True):
+    lanes = slot.shape[0]
+    pad = (-lanes) % K.LANE_TILE
+    if pad:
+        slot = jnp.pad(slot, (0, pad))
+        mu = jnp.pad(mu, (0, pad))
+        sigma = jnp.pad(sigma, (0, pad), constant_values=1.0)
+    idx, start, freq = K.bucketize(slot, mu, sigma, lat_bits, precision,
+                                   interpret=interpret)
+    return idx[:lanes], start[:lanes], freq[:lanes]

@@ -1,0 +1,22 @@
+"""Oracle: the same posterior decode via core.discretize (pure jnp)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import discretize
+
+
+def bucketize_ref(slot, mu, sigma, lat_bits, precision):
+    f = discretize.posterior_starts_fn(mu, sigma, lat_bits, precision)
+    lo = jnp.zeros_like(slot, jnp.int32)
+    hi = jnp.full_like(lo, 1 << lat_bits)
+    import jax
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = (lo + hi + 1) // 2
+        up = f(mid) <= slot
+        return jnp.where(up, mid, lo), jnp.where(up, hi, mid)
+    lo, hi = jax.lax.fori_loop(0, lat_bits + 1, body, (lo, hi))
+    start = f(lo)
+    return lo, start, f(lo + 1) - start

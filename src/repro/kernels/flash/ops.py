@@ -1,0 +1,29 @@
+"""jit wrapper: model-layout flash attention via the Pallas kernel.
+
+``flash_attention`` takes the model's [B, S, H, Dh] GQA layout, expands
+kv heads, folds (B, H) into the kernel grid, and restores the layout.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.flash import kernel as K
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
+                    block_k=128, interpret=True):
+    """q [B, Sq, Hq, Dh]; k/v [B, Sk, Hkv, Dh] -> [B, Sq, Hq, Dh]."""
+    b, sq, hq, dh = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    if g > 1:  # expand GQA kv heads for the kernel's per-head grid
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * hq, sq, dh)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hq, -1, dh)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hq, -1, dh)
+    out = K.flash_fwd(qf, kf, vf, causal=causal, window=window,
+                      block_q=block_q, block_k=block_k,
+                      interpret=interpret)
+    return out.reshape(b, hq, sq, dh).transpose(0, 2, 1, 3)

@@ -1,0 +1,17 @@
+"""Oracle: exact SDPA with a materialized mask (repro.models.attention)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import attention
+
+
+def flash_ref(q, k, v, *, causal=True, window=0):
+    """q/k/v [BH, S, D] -> [BH, Sq, D] via exact softmax attention."""
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    mask = attention._mask(sq, sk, causal, window if window > 0 else None)
+    out = attention.sdpa(q[:, :, None, :], k[:, :, None, :],
+                         v[:, :, None, :], mask)
+    return out[:, :, 0, :]

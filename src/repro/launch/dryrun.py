@@ -1,0 +1,325 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the real jit program (train_step / prefill_step /
+serve_step) with full production shardings, AOT-lowers it against
+ShapeDtypeStruct inputs (no allocation), compiles under the 512-host-device
+emulation, and records:
+
+  * memory_analysis()   - bytes/device: proves the cell fits a v5e (16 GB)
+  * cost_analysis()     - per-device HLO FLOPs + bytes for the roofline
+  * collective bytes    - parsed from the optimized HLO (all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute)
+
+Results land in experiments/dryrun/<mesh>/<arch>__<shape>.json; the
+roofline report (launch/roofline.py) and EXPERIMENTS.md read from there.
+
+Usage:
+  python -m repro.launch.dryrun                     # full sweep, both meshes
+  python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k \
+      --mesh single                                 # one cell
+"""
+
+import argparse
+import functools
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import base as cfg_base
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer
+from repro.sharding import api as shard_api
+from repro.sharding import policies
+from repro.train import trainer
+
+OUT_ROOT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                        "experiments", "dryrun")
+
+COLLECTIVE_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\]))\S*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.I)
+SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9, ]+)\}")
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "c64": 8, "c128": 16}
+
+
+def _tensor_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def parse_collectives(hlo_text: str):
+    """Sum per-device link bytes by collective kind from optimized HLO.
+
+    Ring-algorithm accounting per device: all-reduce moves ~2*S*(g-1)/g,
+    all-gather/reduce-scatter/all-to-all ~S*(g-1)/g, collective-permute S,
+    where S is the (per-device) tensor size and g the replica-group size.
+    """
+    out = {"all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0, "count": 0}
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        size = _tensor_bytes(m.group(1))
+        kind = m.group(2).lower()
+        gm = GROUPS_RE.search(line)
+        g = len(gm.group(1).split(",")) if gm else 2
+        frac = (g - 1) / g if g > 1 else 0.0
+        if kind == "all-reduce":
+            out[kind] += 2.0 * size * frac
+        elif kind == "collective-permute":
+            out[kind] += float(size)
+        else:
+            out[kind] += size * frac
+        out["count"] += 1
+    out["total_bytes"] = sum(v for k, v in out.items()
+                             if k not in ("count",))
+    return out
+
+
+def _named(mesh, spec_tree, shapes_tree=None):
+    return policies.to_named(mesh, spec_tree, shapes_tree)
+
+
+def _abstract(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _batch_structs(cfg, cell, mesh):
+    shapes = cfg_base.input_shapes(cfg, cell)
+    specs = {k: P(policies.FSDP, *(None,) * (len(shp) - 1))
+             for k, (shp, _) in shapes.items()}
+    structs = {
+        k: jax.ShapeDtypeStruct(shp, dt)
+        for k, (shp, dt) in shapes.items()}
+    return structs, _named(mesh, specs, structs)
+
+
+def build_train(cfg, cell, mesh):
+    opt = trainer.make_optimizer(cfg)
+    state_shapes = jax.eval_shape(
+        functools.partial(trainer.init_state, jax.random.PRNGKey(0), cfg,
+                          opt))
+    pspec = policies.param_pspecs(state_shapes.params)
+    ospec = policies.opt_state_pspecs(state_shapes.opt_state,
+                                      state_shapes.params, pspec)
+    state_spec = trainer.TrainState(step=P(), params=pspec,
+                                    opt_state=ospec, compress_state=None)
+    batch_structs, batch_sh = _batch_structs(cfg, cell, mesh)
+    state_sh = _named(mesh, state_spec, state_shapes)
+    regather = None
+    if cfg.fsdp_regather_once and cfg.grad_accum > 1:
+        regather = _named(mesh, policies.drop_fsdp(pspec),
+                          state_shapes.params)
+    step_fn = trainer.make_train_step(cfg, opt, accum=cfg.grad_accum,
+                                      regather_shardings=regather)
+    jitted = jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, None), donate_argnums=0)
+    return jitted, (state_shapes, batch_structs)
+
+
+def build_prefill(cfg, cell, mesh):
+    batch_structs, batch_sh = _batch_structs(cfg, cell, mesh)
+    params_shapes = jax.eval_shape(
+        functools.partial(transformer.init, jax.random.PRNGKey(0), cfg))
+    pspec = policies.param_pspecs(params_shapes)
+    params_sh = _named(mesh, pspec, params_shapes)
+    seq = (batch_structs["tokens"].shape[1])
+    fn = functools.partial(transformer.prefill, cfg=cfg, max_len=seq)
+    wrapped = lambda params, batch: fn(params, batch=batch)
+    # Shard the *output* session state (the filled KV cache dominates
+    # prefill memory: batch on data, cache sequence on model).
+    out_shapes = jax.eval_shape(wrapped, params_shapes, batch_structs)
+    logits_shapes, state_shapes = out_shapes
+    sspec = policies.decode_state_pspecs(state_shapes)
+    state_sh = _named(mesh, sspec, state_shapes)
+    jitted = jax.jit(wrapped, in_shardings=(params_sh, batch_sh),
+                     out_shardings=(None, state_sh))
+    return jitted, (params_shapes, batch_structs)
+
+
+def build_decode(cfg, cell, mesh):
+    b, t = cell.global_batch, cell.seq_len
+    params_shapes = jax.eval_shape(
+        functools.partial(transformer.init, jax.random.PRNGKey(0), cfg))
+    pspec = policies.param_pspecs(params_shapes)
+    params_sh = _named(mesh, pspec, params_shapes)
+
+    if cfg.enc_dec:
+        enc_struct = jax.ShapeDtypeStruct((b, t // 2, cfg.d_model),
+                                          jnp.bfloat16)
+        state_shapes = jax.eval_shape(
+            lambda enc: transformer.init_decode_state(cfg, b, t,
+                                                      enc_out=enc),
+            enc_struct)
+    else:
+        state_shapes = jax.eval_shape(
+            functools.partial(transformer.init_decode_state, cfg, b, t))
+    sspec = policies.decode_state_pspecs(state_shapes)
+    state_sh = _named(mesh, sspec, state_shapes)
+    tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    tok_sh = _named(mesh, P(policies.FSDP, None), tok)
+    fn = functools.partial(transformer.decode_step, cfg=cfg)
+    jitted = jax.jit(lambda params, tok, state: fn(params, tok=tok,
+                                                   state=state),
+                     in_shardings=(params_sh, tok_sh, state_sh),
+                     out_shardings=(None, state_sh),
+                     donate_argnums=2)
+    return jitted, (params_shapes, tok, state_shapes)
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, overrides=None):
+    import dataclasses
+    cfg = cfg_base.get(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    cell = cfg_base.SHAPES[shape]
+    skip = cfg_base.cell_is_skipped(cfg, cell)
+    rec = {"arch": arch, "shape": shape,
+           "mesh": "multi" if multi_pod else "single",
+           "kind": cell.kind}
+    if skip:
+        rec["status"] = "skipped"
+        rec["reason"] = skip
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = {"seq": "model"} if cell.kind in ("train", "prefill") else {}
+    t0 = time.time()
+    with shard_api.use_mesh(mesh, rules):
+        if cell.kind == "train":
+            jitted, args = build_train(cfg, cell, mesh)
+        elif cell.kind == "prefill":
+            jitted, args = build_prefill(cfg, cell, mesh)
+        else:
+            jitted, args = build_decode(cfg, cell, mesh)
+        lowered = jitted.lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+    mem = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": int(mem.argument_size_in_bytes),
+        "output_bytes": int(mem.output_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "alias_bytes": int(mem.alias_size_in_bytes),
+        "peak_device_bytes": int(mem.argument_size_in_bytes
+                                 + mem.output_size_in_bytes
+                                 + mem.temp_size_in_bytes
+                                 - mem.alias_size_in_bytes),
+    }
+    cost = compiled.cost_analysis()
+    rec["cost"] = {k: float(v) for k, v in cost.items()
+                   if k in ("flops", "bytes accessed")
+                   or k.startswith("bytes accessed")}
+    rec["collectives"] = parse_collectives(compiled.as_text())
+    rec["n_params"] = int(cfg.n_params())
+    rec["active_params"] = int(cfg.active_params())
+    rec["status"] = "ok"
+    return rec
+
+
+def _is_struct(x):
+    return isinstance(x, jax.ShapeDtypeStruct)
+
+
+def _identity(x):
+    return x
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=OUT_ROOT)
+    ap.add_argument("--remat", default=None,
+                    help="override cfg.remat (perf experiments)")
+    ap.add_argument("--loss-chunk", type=int, default=None)
+    ap.add_argument("--param-dtype", default=None)
+    ap.add_argument("--grad-accum", type=int, default=None)
+    ap.add_argument("--regather", default=None, choices=["on", "off"])
+    ap.add_argument("--kv-dtype", default=None)
+    args = ap.parse_args()
+    overrides = {}
+    if args.remat:
+        overrides["remat"] = args.remat
+    if args.loss_chunk:
+        overrides["loss_chunk"] = args.loss_chunk
+    if args.param_dtype:
+        overrides["param_dtype"] = args.param_dtype
+    if args.grad_accum:
+        overrides["grad_accum"] = args.grad_accum
+    if args.regather:
+        overrides["fsdp_regather_once"] = args.regather == "on"
+    if args.kv_dtype:
+        overrides["kv_cache_dtype"] = args.kv_dtype
+
+    archs = [args.arch] if args.arch else sorted(cfg_base.all_archs())
+    shapes = [args.shape] if args.shape else list(cfg_base.SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for multi in meshes:
+        mesh_name = "multi" if multi else "single"
+        for arch in archs:
+            for shape in shapes:
+                path = os.path.join(args.out,
+                                    f"{mesh_name}__{arch}__{shape}.json")
+                try:
+                    rec = run_cell(arch, shape, multi, overrides)
+                except Exception as e:  # record and continue the sweep
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "status": "error", "error": repr(e),
+                           "traceback": traceback.format_exc()[-2000:]}
+                    failures += 1
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    gb = rec["memory"]["peak_device_bytes"] / 2 ** 30
+                    extra = (f" mem/dev={gb:.2f}GiB "
+                             f"flops/dev={rec['cost'].get('flops', 0):.3g} "
+                             f"coll={rec['collectives']['total_bytes']:.3g}B"
+                             f" compile={rec.get('compile_s')}s")
+                elif status == "error":
+                    extra = " " + rec["error"][:120]
+                elif status == "skipped":
+                    extra = " (" + rec["reason"][:60] + ")"
+                print(f"[{mesh_name}] {arch} x {shape}: {status}{extra}",
+                      flush=True)
+    print(f"done; failures={failures}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,196 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape).
+
+Two measurement sources, used for what each is reliable for:
+
+  * **Analytic terms** (this module): FLOPs / HBM bytes / collective link
+    bytes per device from the config + cell + sharding policy, with the
+    standard accounting (6*N*D training FLOPs, flash-attention S^2 terms,
+    FSDP gathers ~ P*(dp-1)/dp, TP reduces ~ 2/layer, MoE a2a, decode KV
+    sweeps). These set the roofline denominators and the dominant term.
+  * **HLO-measured values** (from the dry-run JSONs): `cost_analysis` and
+    the collective parse. CAVEAT, verified empirically: XLA:CPU cost
+    analysis counts while/scan bodies ONCE, so with scan-over-layers these
+    are per-iteration values - useless as absolutes, but *valid for
+    relative before/after comparison* in the perf loop (same loop
+    structure on both sides). Reported as `hlo_*` columns.
+
+Hardware: TPU v5e - 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+Usage: python -m repro.launch.roofline [--mesh single] [--json out.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # bytes/s / chip
+ICI_BW = 50e9           # bytes/s/link
+V5E_HBM_BYTES = 16 * 2 ** 30
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                          "experiments", "dryrun")
+
+
+def _mesh_dims(mesh: str):
+    return (2, 16, 16) if mesh == "multi" else (1, 16, 16)  # pod, dp, tp
+
+
+def analytic_terms(cfg, cell, mesh: str):
+    """Per-device (flops, hbm_bytes, collective_bytes) for one step."""
+    pod, dp, tp = _mesh_dims(mesh)
+    chips = pod * dp * tp
+    ddp = pod * dp                      # data-parallel degree
+    n_act = cfg.active_params()
+    pbytes = 4 if cfg.param_dtype == "float32" else 2
+    p_dev = cfg.n_params() * pbytes / chips
+    d, l = cfg.d_model, cfg.n_layers + cfg.n_enc_layers
+    hq, dh = max(cfg.n_heads, 1), cfg.head_dim
+    b, s = cell.global_batch, cell.seq_len
+    tokens = b * s
+    tok_dev = tokens / ddp              # tokens a data shard owns
+    act = tok_dev * d * 2               # one residual tensor, bytes/device
+
+    if cell.kind == "train":
+        accum = cfg.grad_accum
+        flops = 6 * n_act * tokens / chips
+        if cfg.mixer != "rwkv6":
+            # flash fwd 4 + bwd 8 + fwd-recompute 4 = 16 matmul units of
+            # B*S^2*H*Dh, no causal skip in the blockwise path (see Perf).
+            flops += 16 * b * s * s * hq * dh / chips
+        # HBM: params fwd+bwd per microbatch, grads + factored update,
+        # ~20 activation-tensor r/w per layer per microbatch.
+        hbm = accum * 2 * p_dev + 3 * p_dev + 20 * act * l
+        # Collectives: FSDP gathers (fwd+bwd per microbatch; ONCE per
+        # step under regather-once) + grad RS + 2 TP reduces per layer.
+        # Gathers move the bf16 compute copy regardless of param dtype
+        # (XLA commutes the cast below the gather - measured, see Perf).
+        p_gather = cfg.n_params() * 2 / chips
+        n_gathers = 3 if cfg.fsdp_regather_once else (2 * accum + 1)
+        coll = n_gathers * p_gather * (ddp - 1) \
+            + 2 * l * (act / 1) * 2 * (tp - 1) / tp
+        if cfg.n_experts:
+            # MoE a2a both ways per layer per microbatch (+ bwd).
+            coll += 2 * 2 * l * act * cfg.top_k * cfg.capacity_factor
+    elif cell.kind == "prefill":
+        flops = 2 * n_act * tokens / chips
+        if cfg.mixer != "rwkv6":
+            flops += 4 * b * s * s * hq * dh / chips
+        kv_dev = (l * b * s * cfg.n_kv_heads * dh * 2 * 2) / (ddp * tp)
+        hbm = p_dev + 8 * act * l + kv_dev
+        coll = p_dev * (ddp - 1) + 2 * l * act * (tp - 1) / tp
+        if cfg.n_experts:
+            coll += 2 * l * act * cfg.top_k * cfg.capacity_factor
+    else:  # decode: one token against a cache of length s
+        flops = 2 * n_act * b / chips
+        if cfg.mixer != "rwkv6":
+            flops += 4 * b * s * cfg.n_kv_heads * dh / chips
+        # KV cache sweep dominates HBM:
+        kv_dev = (l * b * s * cfg.n_kv_heads * dh * 2 * 2) / (ddp * tp)
+        if cfg.mixer == "rwkv6":
+            h = d // dh
+            kv_dev = l * (b / max(ddp, 1)) * h * dh * dh * 4 / tp
+        tok_act = (b / ddp) * d * 2
+        hbm = p_dev + kv_dev + 10 * tok_act * l
+        coll = 2 * l * tok_act * 2 * (tp - 1) / tp \
+            + p_dev * 0  # params stay resident, no per-step gather
+        if cfg.n_experts:
+            coll += 2 * l * tok_act * cfg.top_k * cfg.capacity_factor
+    return flops, hbm, coll
+
+
+def model_flops(cfg, cell) -> float:
+    """The 'useful' FLOPs: 6*N_active*D train / 2*N_active*D inference."""
+    n_act = cfg.active_params()
+    if cell.kind == "train":
+        return 6.0 * n_act * cell.seq_len * cell.global_batch
+    if cell.kind == "prefill":
+        return 2.0 * n_act * cell.seq_len * cell.global_batch
+    return 2.0 * n_act * cell.global_batch
+
+
+def analyse(rec, mesh: str):
+    from repro.configs import base as cfg_base
+    cfg = cfg_base.get(rec["arch"])
+    cell = cfg_base.SHAPES[rec["shape"]]
+    pod, dp, tp = _mesh_dims(mesh)
+    chips = pod * dp * tp
+
+    flops, hbm, coll = analytic_terms(cfg, cell, mesh)
+    terms = {"compute": flops / PEAK_FLOPS, "memory": hbm / HBM_BW,
+             "collective": coll / ICI_BW}
+    dominant = max(terms, key=terms.get)
+    total = sum(terms.values())
+    step_time = max(terms.values())     # perfect-overlap bound
+    mf = model_flops(cfg, cell)
+    mfu = mf / (chips * PEAK_FLOPS * step_time) if step_time else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "kind": rec["kind"],
+        "compute_s": terms["compute"], "memory_s": terms["memory"],
+        "collective_s": terms["collective"], "dominant": dominant,
+        "roofline_fraction": terms[dominant] / total if total else 0.0,
+        "model_flops": mf,
+        "mfu_bound": mfu,
+        "hlo_flops_periter": rec["cost"].get("flops", 0.0),
+        "hlo_bytes_periter": rec["cost"].get("bytes accessed", 0.0),
+        "hlo_coll_periter": rec["collectives"]["total_bytes"],
+        "mem_gib": rec["memory"]["peak_device_bytes"] / 2 ** 30,
+        "fits_v5e": rec["memory"]["peak_device_bytes"] < V5E_HBM_BYTES,
+    }
+
+
+def load(mesh: str = "single", dryrun_dir: str = DRYRUN_DIR):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir,
+                                              f"{mesh}__*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi"])
+    ap.add_argument("--dir", default=DRYRUN_DIR)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+
+    rows = []
+    for rec in load(args.mesh, args.dir):
+        if rec.get("status") == "ok":
+            rows.append(analyse(rec, args.mesh))
+        elif rec.get("status") == "skipped":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "skipped": rec["reason"]})
+        else:
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "error": rec.get("error", "?")[:80]})
+
+    print("| arch | shape | compute_s | memory_s | collective_s | "
+          "dominant | fraction | MFU-bound | mem GiB | fits |")
+    print("|" + "---|" * 10)
+    for r in rows:
+        if "skipped" in r:
+            print(f"| {r['arch']} | {r['shape']} | - | - | - | skipped "
+                  f"| - | - | - | - |")
+            continue
+        if "error" in r:
+            print(f"| {r['arch']} | {r['shape']} | - | - | - | ERROR | "
+                  f"- | - | - | - |")
+            continue
+        print(f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+              f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+              f"{r['dominant']} | {r['roofline_fraction']:.2f} | "
+              f"{r['mfu_bound']:.3f} | {r['mem_gib']:.2f} | "
+              f"{'y' if r['fits_v5e'] else 'NO'} |")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

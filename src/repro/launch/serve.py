@@ -1,0 +1,71 @@
+"""Serving/compression launcher.
+
+``python -m repro.launch.serve --arch qwen2-0.5b --mode compress``
+trains nothing: it builds a (reduced) model, runs the compression
+service end to end on a synthetic corpus and reports rates; ``--mode
+generate`` runs batched greedy decoding. The same Engine runs on pod
+meshes via the dryrun-validated decode/prefill programs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import base as cfg_base
+from repro.data import tokens as tok_data
+from repro.models import transformer
+from repro.serve.engine import Engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--mode", default="compress",
+                    choices=["compress", "generate"])
+    ap.add_argument("--lanes", type=int, default=4)
+    ap.add_argument("--tokens", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kv-dtype", default="bfloat16")
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        cfg_base.reduced(cfg_base.get(args.arch)),
+        vocab=256, kv_cache_dtype=args.kv_dtype)
+    params = transformer.init(jax.random.PRNGKey(args.seed), cfg)
+    eng = Engine(params, cfg, max_len=args.tokens, jit=False)
+
+    if args.mode == "generate":
+        prompt = {"tokens": jnp.asarray(
+            np.random.default_rng(args.seed).integers(
+                0, cfg.vocab, (args.lanes, 8)), jnp.int32)}
+        t0 = time.perf_counter()
+        out = eng.generate(prompt, args.tokens)
+        dt = time.perf_counter() - t0
+        print(f"generated {out.shape} in {dt:.2f}s "
+              f"({out.size / dt:.1f} tok/s, untrained weights)")
+        return
+
+    corpus, entropy = tok_data.markov_corpus(
+        50_000, vocab=cfg.vocab, seed=args.seed)
+    rng = np.random.default_rng(args.seed + 1)
+    starts = rng.integers(0, len(corpus) - args.tokens, args.lanes)
+    toks = jnp.asarray(
+        np.stack([corpus[s:s + args.tokens] for s in starts]), jnp.int32)
+    t0 = time.perf_counter()
+    msg, lengths, bits = eng.compress(toks)
+    enc = time.perf_counter() - t0
+    out = eng.decompress(msg, lengths, args.tokens)
+    ok = bool(jnp.array_equal(out, toks))
+    print(f"corpus entropy {entropy:.3f} bits/tok; achieved "
+          f"{bits / toks.size:.3f} bits/tok (untrained model: ~log2 V); "
+          f"lossless={ok}; encode {enc:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,391 @@
+"""Attention: GQA/MQA/MHA with RoPE variants, sliding windows, cross
+attention, and single-token cached decode (flash-decoding-style sharded
+softmax over the KV sequence).
+
+Layouts:
+  q:        [B, S, Hq, Dh]
+  k/v:      [B, S, Hkv, Dh]
+  KV cache: [B, T, Hkv, Dh] (sequence axis shardable -> 'kv_seq')
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.sharding.api import constrain
+
+
+class AttnParams(NamedTuple):
+    pass  # params are plain dicts; this module is functional
+
+
+def attn_init(key, cfg):
+    d, dh = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": layers.dense_init(ks[0], d, (cfg.n_heads, dh), cfg.qkv_bias),
+        "wk": layers.dense_init(ks[1], d, (cfg.n_kv_heads, dh),
+                                cfg.qkv_bias),
+        "wv": layers.dense_init(ks[2], d, (cfg.n_kv_heads, dh),
+                                cfg.qkv_bias),
+        "wo": layers.dense_init(ks[3], cfg.n_heads * dh, d),
+    }
+
+
+def cross_attn_init(key, cfg):
+    return attn_init(key, cfg)
+
+
+def _split_gqa(q, n_kv):
+    """[B, S, Hq, Dh] -> [B, S, Hkv, G, Dh]."""
+    b, s, hq, dh = q.shape
+    return q.reshape(b, s, n_kv, hq // n_kv, dh)
+
+
+def _qkv(p, x, cfg, positions, compute_dtype):
+    q = layers.dense(p["wq"], x, compute_dtype)
+    k = layers.dense(p["wk"], x, compute_dtype)
+    v = layers.dense(p["wv"], x, compute_dtype)
+    if cfg.rope_kind == "rope":
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope_kind == "mrope":
+        q = layers.apply_mrope(q, positions, cfg.mrope_sections,
+                               cfg.rope_theta)
+        k = layers.apply_mrope(k, positions, cfg.mrope_sections,
+                               cfg.rope_theta)
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+    v = constrain(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def _mask(s_q: int, s_k: int, causal: bool,
+          sliding_window: Optional[int], q_offset: int = 0) -> jnp.ndarray:
+    qi = jnp.arange(s_q)[:, None] + q_offset
+    ki = jnp.arange(s_k)[None, :]
+    m = jnp.ones((s_q, s_k), bool)
+    if causal:
+        m &= ki <= qi
+    if sliding_window is not None:
+        m &= ki > qi - sliding_window
+    return m
+
+
+def sdpa(q, k, v, mask: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Grouped scaled dot-product attention.
+
+    q [B, Sq, Hq, Dh]; k, v [B, Sk, Hkv, Dh]; mask broadcastable to
+    [B, Hkv, G, Sq, Sk] or [Sq, Sk]. Softmax statistics in f32.
+    """
+    b, sq, hq, dh = q.shape
+    hkv = k.shape[2]
+    qg = _split_gqa(q, hkv)  # [B, Sq, Hkv, G, Dh]
+    scale = dh ** -0.5
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+    logits = logits * scale
+    if mask is not None:
+        logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(b, sq, hq, dh)
+
+
+# Sequences at or above this length use the blockwise (flash-style)
+# online-softmax path: O(chunk^2) score memory instead of O(S^2).
+BLOCKWISE_THRESHOLD = 2048
+Q_CHUNK = 1024
+KV_CHUNK = 1024
+_NEG_INF = -1e30
+
+
+def _block_mask(q_ids, k_ids, sk, causal, window):
+    valid = k_ids[None, :] < sk
+    if causal:
+        valid &= k_ids[None, :] <= q_ids[:, None]
+    # window is an f32 scalar (custom_vjp-friendly cotangent type).
+    valid &= k_ids[None, :].astype(jnp.float32) > \
+        q_ids[:, None].astype(jnp.float32) - window
+    return valid
+
+
+def _flash_fwd_impl(qg, k, v, window, *, causal, q_offset, q_chunk,
+                    kv_chunk, sk):
+    """qg [B, Sq_pad, Hkv, G, Dh]; k/v [B, Sk_pad, Hkv, Dh] ->
+    (out f32 [B, Hkv, G, Sq_pad, Dh], lse f32 [B, Hkv, G, Sq_pad])."""
+    b, sq_pad, hkv, g, dh = qg.shape
+    nq = sq_pad // q_chunk
+    nk = k.shape[1] // kv_chunk
+    scale = dh ** -0.5
+    kb = k.reshape(b, nk, kv_chunk, hkv, dh).swapaxes(0, 1)
+    vb = v.reshape(b, nk, kv_chunk, hkv, dh).swapaxes(0, 1)
+    qb = qg.reshape(b, nq, q_chunk, hkv, g, dh).swapaxes(0, 1)
+
+    def q_block(args):
+        qi_block, qc = args
+        q_ids = qc * q_chunk + jnp.arange(q_chunk) + q_offset
+
+        def kv_step(carry, args2):
+            m, l, acc = carry
+            kv, vv, kc = args2
+            k_ids = kc * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qi_block, kv
+                           ).astype(jnp.float32) * scale
+            valid = _block_mask(q_ids, k_ids, sk, causal, window)
+            s = jnp.where(valid[None, None, None], s, _NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(vv.dtype), vv
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, q_chunk), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, q_chunk, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (kb, vb, jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return out, lse
+
+    outs, lses = jax.lax.map(q_block, (qb, jnp.arange(nq)))
+    # [nq, B, Hkv, G, qc, *] -> [B, Hkv, G, Sq_pad, *]
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(b, hkv, g, sq_pad, dh)
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(b, hkv, g, sq_pad)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+def _flash(qg, k, v, window, causal, q_offset, q_chunk, kv_chunk, sk):
+    out, _ = _flash_fwd_impl(qg, k, v, window, causal=causal,
+                             q_offset=q_offset, q_chunk=q_chunk,
+                             kv_chunk=kv_chunk, sk=sk)
+    return out
+
+
+def _flash_fwd(qg, k, v, window, causal, q_offset, q_chunk, kv_chunk, sk):
+    out, lse = _flash_fwd_impl(qg, k, v, window, causal=causal,
+                               q_offset=q_offset, q_chunk=q_chunk,
+                               kv_chunk=kv_chunk, sk=sk)
+    # Flash residuals: only (q, k, v, window, out, lse) - O(S), not O(S^2).
+    return out, (qg, k, v, window, out, lse)
+
+
+def _flash_bwd(causal, q_offset, q_chunk, kv_chunk, sk, res, dout):
+    """Blockwise backward: recompute p per (q, kv) block pair; dk/dv are
+    single accumulators updated in place across the scan (never saved
+    per-step - this is primal computation, not differentiated)."""
+    qg, k, v, window, out, lse = res
+    b, sq_pad, hkv, g, dh = qg.shape
+    nq = sq_pad // q_chunk
+    nk = k.shape[1] // kv_chunk
+    scale = dh ** -0.5
+    dout = dout.astype(jnp.float32)
+    # delta[t] = sum_d dout[t, d] * out[t, d]
+    delta = jnp.sum(dout * out, axis=-1)  # [B, Hkv, G, Sq_pad]
+
+    qb = qg.reshape(b, nq, q_chunk, hkv, g, dh).swapaxes(0, 1)
+    dob = dout.reshape(b, hkv, g, nq, q_chunk, dh).transpose(
+        3, 0, 1, 2, 4, 5)
+    lseb = lse.reshape(b, hkv, g, nq, q_chunk).transpose(3, 0, 1, 2, 4)
+    deltab = delta.reshape(b, hkv, g, nq, q_chunk).transpose(
+        3, 0, 1, 2, 4)
+    kb = k.reshape(b, nk, kv_chunk, hkv, dh).swapaxes(0, 1)
+    vb = v.reshape(b, nk, kv_chunk, hkv, dh).swapaxes(0, 1)
+
+    def q_step(carry, args):
+        dk, dv = carry
+        qi_block, do, ls, dl, qc = args
+        q_ids = qc * q_chunk + jnp.arange(q_chunk) + q_offset
+
+        def kv_step(carry2, args2):
+            dq_i, dk, dv = carry2
+            kv, vv, kc = args2
+            k_ids = kc * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qi_block, kv
+                           ).astype(jnp.float32) * scale
+            valid = _block_mask(q_ids, k_ids, sk, causal, window)
+            s = jnp.where(valid[None, None, None], s, _NEG_INF)
+            p = jnp.exp(s - ls[..., None])              # [B,H,G,qc,kc]
+            dp = jnp.einsum("bhgqd,bkhd->bhgqk", do,
+                            vv.astype(jnp.float32))
+            ds = p * (dp - dl[..., None]) * scale
+            dv_blk = jnp.einsum("bhgqk,bhgqd->bkhd", p, do)
+            dk_blk = jnp.einsum("bhgqk,bqhgd->bkhd", ds,
+                                qi_block.astype(jnp.float32))
+            dq_i = dq_i + jnp.einsum("bhgqk,bkhd->bqhgd", ds,
+                                     kv.astype(jnp.float32))
+            dk = jax.lax.dynamic_update_slice_in_dim(
+                dk, dk_blk + jax.lax.dynamic_slice_in_dim(
+                    dk, kc * kv_chunk, kv_chunk, 1), kc * kv_chunk, 1)
+            dv = jax.lax.dynamic_update_slice_in_dim(
+                dv, dv_blk + jax.lax.dynamic_slice_in_dim(
+                    dv, kc * kv_chunk, kv_chunk, 1), kc * kv_chunk, 1)
+            return (dq_i, dk, dv), None
+
+        dq0 = jnp.zeros_like(qi_block, jnp.float32)
+        (dq_i, dk, dv), _ = jax.lax.scan(
+            kv_step, (dq0, dk, dv), (kb, vb, jnp.arange(nk)))
+        return (dk, dv), dq_i
+
+    dk0 = jnp.zeros((b, k.shape[1], hkv, dh), jnp.float32)
+    dv0 = jnp.zeros_like(dk0)
+    (dk, dv), dqs = jax.lax.scan(
+        q_step, (dk0, dv0), (qb, dob, lseb, deltab, jnp.arange(nq)))
+    dq = dqs.swapaxes(0, 1).reshape(b, sq_pad, hkv, g, dh)
+    return (dq.astype(qg.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            jnp.zeros_like(window))
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def sdpa_blockwise(q, k, v, *, causal: bool, window=None, q_offset: int = 0,
+                   q_chunk: int = Q_CHUNK, kv_chunk: int = KV_CHUNK
+                   ) -> jnp.ndarray:
+    """Flash-attention SDPA: online softmax forward, block-recomputing
+    custom-VJP backward. Residual memory is O(S), score memory O(chunk^2).
+
+    This jnp implementation is the reference for the Pallas flash kernel
+    (kernels/flash). ``window`` may be a traced scalar (per-layer sliding
+    windows); None means no window.
+    """
+    b, sq, hq, dh = q.shape
+    hkv = k.shape[2]
+    q_chunk = min(q_chunk, max(sq, 1))
+    kv_chunk = min(kv_chunk, max(k.shape[1], 1))
+    nq = -(-sq // q_chunk)
+    sq_pad = nq * q_chunk
+    sk = k.shape[1]
+    nk = -(-sk // kv_chunk)
+    sk_pad = nk * kv_chunk
+
+    qg = _split_gqa(q, hkv)
+    if sq_pad != sq:
+        qg = jnp.pad(qg, ((0, 0), (0, sq_pad - sq), (0, 0), (0, 0),
+                          (0, 0)))
+    if sk_pad != sk:
+        k = jnp.pad(k, ((0, 0), (0, sk_pad - sk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sk_pad - sk), (0, 0), (0, 0)))
+    if window is None:
+        window = jnp.asarray(float(1 << 30), jnp.float32)
+    else:
+        window = jnp.asarray(window, jnp.float32)
+    out = _flash(qg, k, v, window, causal, q_offset, q_chunk, kv_chunk,
+                 sk)
+    # [B, Hkv, G, Sq_pad, Dh] -> [B, Sq, Hq, Dh]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq_pad, hq, dh)[:, :sq]
+    return out.astype(v.dtype)
+
+
+def self_attention(p, x, cfg, positions, *, causal: bool = True,
+                   compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    q, k, v = _qkv(p, x, cfg, positions, compute_dtype)
+    mask = _mask(x.shape[1], x.shape[1], causal, cfg.sliding_window)
+    out = sdpa(q, k, v, mask)
+    out = out.reshape(*out.shape[:2], -1)
+    return layers.dense(p["wo"], out, compute_dtype)
+
+
+def cross_attention(p, x, enc_out, cfg, compute_dtype=jnp.bfloat16):
+    q = layers.dense(p["wq"], x, compute_dtype)
+    k = layers.dense(p["wk"], enc_out, compute_dtype)
+    v = layers.dense(p["wv"], enc_out, compute_dtype)
+    q = constrain(q, "batch", None, "heads", None)
+    if max(x.shape[1], enc_out.shape[1]) >= BLOCKWISE_THRESHOLD:
+        out = sdpa_blockwise(q, k, v, causal=False)
+    else:
+        out = sdpa(q, k, v, None)
+    out = out.reshape(*out.shape[:2], -1)
+    return layers.dense(p["wo"], out, compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Cached decode (one new token against a KV cache)
+# ---------------------------------------------------------------------------
+
+def quantize_kv(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """[..., Dh] -> (int8 values, per-vector f32 scale). The decode-cell
+    HBM term is dominated by the KV sweep; int8 halves it (hillclimb 3,
+    EXPERIMENTS.md section Perf)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / 127.0 + 1e-9
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray,
+                  dtype=jnp.bfloat16) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+def prefill_kv(p, x, cfg, positions, compute_dtype=jnp.bfloat16):
+    """Return (k, v) for the cache from a full prefix pass."""
+    _, k, v = _qkv(p, x, cfg, positions, compute_dtype)
+    return k, v
+
+
+def decode_attention(p, x_t, cfg, k_cache, v_cache, cache_len,
+                     compute_dtype=jnp.bfloat16,
+                     window=None, kv_scales=None) -> Tuple[jnp.ndarray,
+                                                          jnp.ndarray,
+                                                          jnp.ndarray]:
+    """One-token decode. x_t [B, 1, D]; caches [B, T, Hkv, Dh];
+    cache_len int32[] (valid prefix length, == position of the new token).
+
+    The new token's k/v are written *in place* at ``cache_len`` (donation
+    makes this a true in-place update at run time), then attention runs over
+    the full cache with a validity mask. The softmax over the (possibly
+    'kv_seq'-sharded) cache axis lowers to partial max/sum + all-reduce -
+    the flash-decoding pattern (DESIGN.md section 5).
+
+    Returns (attn output [B, 1, D], new k_cache, new v_cache).
+    """
+    b, t = k_cache.shape[0], k_cache.shape[1]
+    pos = jnp.full((b, 1), cache_len, jnp.int32)
+    if cfg.rope_kind == "mrope":
+        pos = jnp.broadcast_to(pos[..., None], (b, 1, 3))
+    q, k_t, v_t = _qkv(p, x_t, cfg, pos, compute_dtype)
+
+    int8_kv = k_cache.dtype == jnp.int8
+    start = (jnp.zeros((), jnp.int32), cache_len.astype(jnp.int32),
+             jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+    if int8_kv:
+        # kv_scales [B, T, Hkv, 2] f32: per-(token, head) scales for k, v.
+        kq, ks = quantize_kv(k_t)   # ks [B, 1, Hkv, 1]
+        vq, vs = quantize_kv(v_t)
+        k_cache = jax.lax.dynamic_update_slice(k_cache, kq, start)
+        v_cache = jax.lax.dynamic_update_slice(v_cache, vq, start)
+        new_scales = jnp.concatenate([ks, vs], axis=-1)  # [B, 1, Hkv, 2]
+        kv_scales = jax.lax.dynamic_update_slice(kv_scales, new_scales,
+                                                 start)
+        k_use = dequantize_kv(k_cache, kv_scales[..., 0:1], compute_dtype)
+        v_use = dequantize_kv(v_cache, kv_scales[..., 1:2], compute_dtype)
+    else:
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k_t.astype(k_cache.dtype), start)
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v_t.astype(v_cache.dtype), start)
+        k_use, v_use = (k_cache.astype(compute_dtype),
+                        v_cache.astype(compute_dtype))
+
+    ki = jnp.arange(t)[None, :]
+    valid = ki <= cache_len  # slot cache_len now holds the new token
+    if window is not None:
+        valid &= ki > cache_len - window
+    elif cfg.sliding_window is not None:
+        valid &= ki > cache_len - cfg.sliding_window
+    mask = valid[:, None, None, None, :]  # -> [B, Hkv, G, 1, T]
+    out = sdpa(q, k_use, v_use, mask)
+    out = out.reshape(b, 1, -1)
+    if int8_kv:
+        return (layers.dense(p["wo"], out, compute_dtype), k_cache,
+                v_cache, kv_scales)
+    return layers.dense(p["wo"], out, compute_dtype), k_cache, v_cache

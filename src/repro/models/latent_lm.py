@@ -1,0 +1,245 @@
+"""LatentLM: bits-back coding over token *sequences* with any backbone.
+
+This is the paper's technique applied to the assigned LM architectures
+(DESIGN.md section 4): a per-sequence continuous latent
+
+    y ~ N(0, I_Z),   q(y|s) = N(mu(s), diag(sigma^2(s))),
+    p(s|y) = prod_t backbone(tok_t | prefix(y), tok_<t)
+
+where ``prefix(y)`` maps the latent to ``n_prefix`` soft tokens prepended
+to the sequence. Chaining across sequences works exactly as the paper's
+Table 1: pop y from Q (bits back), push tokens under p(s|y), push y under
+the max-entropy-discretized prior.
+
+When per-sequence structure exists (regimes, topics, styles), the latent
+captures it and -ELBO < plain LM cross-entropy: bits-back then wins over
+direct LM-ANS coding - measured in benchmarks/latent_lm_gain.py.
+
+The posterior encoder is a pooled-embedding MLP (cheap; the backbone is
+the expensive decoder side, as in the paper's VAE where encoder and
+decoder are symmetric small MLPs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ans, bbans, discretize, lm_codec
+from repro.core.distributions import FactoredCategorical
+from repro.models import layers, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class LatentLMConfig:
+    backbone: Any                 # an ArchConfig
+    latent_dim: int = 16
+    n_prefix: int = 2
+    enc_hidden: int = 128
+    lat_bits: int = 10
+    precision: int = 16
+
+    @property
+    def seq_precision(self) -> int:
+        return self.precision
+
+
+def init(key: jax.Array, cfg: LatentLMConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 5)
+    bb = transformer.init(ks[0], cfg.backbone)
+    d = cfg.backbone.d_model
+    return {
+        "backbone": bb,
+        "enc_h": layers.dense_init(ks[1], d, cfg.enc_hidden, bias=True),
+        "enc_mu": layers.dense_init(ks[2], cfg.enc_hidden, cfg.latent_dim,
+                                    bias=True),
+        "enc_logvar": layers.dense_init(ks[3], cfg.enc_hidden,
+                                        cfg.latent_dim, bias=True),
+        "prefix": layers.dense_init(ks[4], cfg.latent_dim,
+                                    (cfg.n_prefix, d), bias=True),
+    }
+
+
+def encode_posterior(params, cfg: LatentLMConfig, tokens: jnp.ndarray
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens [B, N] -> (mu, sigma) [B, Z]."""
+    emb = layers.embed_apply(params["backbone"]["embed"], tokens,
+                             jnp.float32)
+    pooled = jnp.mean(emb, axis=1)
+    h = jax.nn.tanh(layers.dense(params["enc_h"], pooled, jnp.float32))
+    mu = layers.dense(params["enc_mu"], h, jnp.float32)
+    logvar = jnp.clip(layers.dense(params["enc_logvar"], h, jnp.float32),
+                      -10.0, 10.0)
+    return mu, jnp.exp(0.5 * logvar)
+
+
+def _decoder_embeds(params, cfg: LatentLMConfig, y: jnp.ndarray,
+                    tokens_in: jnp.ndarray) -> jnp.ndarray:
+    """[prefix(y); embed(tokens_in)] -> [B, P + N, D]."""
+    pref = layers.dense(params["prefix"], y.astype(jnp.float32),
+                        jnp.float32)                       # [B, P, D]
+    emb = layers.embed_apply(params["backbone"]["embed"], tokens_in,
+                             jnp.float32)
+    return jnp.concatenate([pref, emb.astype(jnp.float32)], axis=1)
+
+
+def decoder_logits(params, cfg: LatentLMConfig, y: jnp.ndarray,
+                   tokens: jnp.ndarray) -> jnp.ndarray:
+    """Teacher-forced logits: position P-1+t predicts tokens[:, t]."""
+    b, n = tokens.shape
+    inp = jnp.concatenate(
+        [jnp.zeros((b, 1), tokens.dtype), tokens[:, :-1]], axis=1)
+    embeds = _decoder_embeds(params, cfg, y, inp)
+    logits, _ = transformer.forward(params["backbone"], cfg.backbone,
+                                    embeds=embeds)
+    p = cfg.n_prefix
+    # Input layout: [pref_0..pref_{P-1}, BOS, tok_0..tok_{N-2}]; the
+    # distribution of tok_t is the output at input index P+t.
+    return logits[:, p:p + n]
+
+
+def elbo(params, cfg: LatentLMConfig, key: jax.Array,
+         tokens: jnp.ndarray) -> jnp.ndarray:
+    """Per-sequence ELBO (nats). -ELBO == expected bits-back length."""
+    mu, sigma = encode_posterior(params, cfg, tokens)
+    eps = jax.random.normal(key, mu.shape)
+    y = mu + sigma * eps
+    logits = decoder_logits(params, cfg, y, tokens).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    recon = jnp.sum(jnp.take_along_axis(
+        logp, tokens[..., None].astype(jnp.int32), axis=-1)[..., 0], -1)
+    kl = 0.5 * jnp.sum(mu ** 2 + sigma ** 2 - 1.0
+                       - 2.0 * jnp.log(sigma), axis=-1)
+    return recon - kl
+
+
+def loss(params, cfg: LatentLMConfig, key: jax.Array,
+         tokens: jnp.ndarray) -> Tuple[jnp.ndarray, Dict]:
+    el = elbo(params, cfg, key, tokens)
+    l = -jnp.mean(el)
+    n = tokens.shape[-1]
+    return l, {"bits_per_token": l / (n * jnp.log(2.0))}
+
+
+# ---------------------------------------------------------------------------
+# BB-ANS codec over sequences (paper Table 1, with s = a whole sequence)
+# ---------------------------------------------------------------------------
+
+def make_codec(params, cfg: LatentLMConfig, seq_len: int
+               ) -> bbans.BBANSCodec:
+    z = cfg.latent_dim
+
+    def posterior_pop(stack, s):
+        mu, sigma = encode_posterior(params, cfg, s)
+
+        def body(d, carry):
+            stack, idx = carry
+            stack, i = discretize.pop_posterior(
+                stack, mu[:, d], sigma[:, d], cfg.lat_bits, cfg.precision)
+            return stack, idx.at[:, d].set(i)
+
+        idx0 = jnp.zeros(mu.shape, jnp.int32)
+        return jax.lax.fori_loop(0, z, body, (stack, idx0))
+
+    def posterior_push(stack, s, idx):
+        mu, sigma = encode_posterior(params, cfg, s)
+
+        def body(k, stack):
+            d = z - 1 - k
+            return discretize.push_posterior(
+                stack, idx[:, d], mu[:, d], sigma[:, d], cfg.lat_bits,
+                cfg.precision)
+
+        return jax.lax.fori_loop(0, z, body, stack)
+
+    def _collect_logits(y, s):
+        """Step the shared compiled decoder graph (lm_codec determinism
+        contract): prefix soft tokens, BOS, then teacher-forced tokens."""
+        b = s.shape[0]
+        bb_cfg = cfg.backbone
+        step = lm_codec.jitted_decode_step_embeds(bb_cfg)
+        state = transformer.init_decode_state(
+            bb_cfg, b, max_len=cfg.n_prefix + seq_len)
+        pref = layers.dense(params["prefix"], y.astype(jnp.float32),
+                            jnp.float32)
+        logits = None
+        for pi in range(cfg.n_prefix):
+            logits, state = step(params["backbone"], x=pref[:, pi:pi + 1],
+                                 state=state)
+        emb_bos = layers.embed_apply(params["backbone"]["embed"],
+                                     jnp.zeros((b, 1), jnp.int32),
+                                     jnp.float32)
+        logits, state = step(params["backbone"], x=emb_bos, state=state)
+        collected = [logits[:, 0].astype(jnp.float32)]
+        for t in range(seq_len - 1):
+            emb = layers.embed_apply(params["backbone"]["embed"],
+                                     s[:, t:t + 1], jnp.float32)
+            logits, state = step(params["backbone"], x=emb, state=state)
+            collected.append(logits[:, 0].astype(jnp.float32))
+        return collected
+
+    def likelihood_push(stack, idx, s):
+        y = discretize.bucket_centre(idx, cfg.lat_bits)
+        logits = _collect_logits(y, s)
+        push = lm_codec._jitted_push(cfg.precision)
+        for t in reversed(range(seq_len)):
+            stack = push(stack, logits[t], s[:, t])
+        return stack
+
+    def likelihood_pop(stack, idx):
+        y = discretize.bucket_centre(idx, cfg.lat_bits)
+        b = idx.shape[0]
+        bb_cfg = cfg.backbone
+        step = lm_codec.jitted_decode_step_embeds(bb_cfg)
+        pop = lm_codec._jitted_pop(cfg.precision)
+        state = transformer.init_decode_state(
+            bb_cfg, b, max_len=cfg.n_prefix + seq_len)
+        pref = layers.dense(params["prefix"], y.astype(jnp.float32),
+                            jnp.float32)
+        logits = None
+        for pi in range(cfg.n_prefix):
+            logits, state = step(params["backbone"], x=pref[:, pi:pi + 1],
+                                 state=state)
+        emb_bos = layers.embed_apply(params["backbone"]["embed"],
+                                     jnp.zeros((b, 1), jnp.int32),
+                                     jnp.float32)
+        logits, state = step(params["backbone"], x=emb_bos, state=state)
+        out = []
+        for i in range(seq_len):
+            stack, sym = pop(stack, logits[:, 0].astype(jnp.float32))
+            out.append(sym)
+            if i < seq_len - 1:
+                emb = layers.embed_apply(params["backbone"]["embed"],
+                                         sym[:, None].astype(jnp.int32),
+                                         jnp.float32)
+                logits, state = step(params["backbone"], x=emb,
+                                     state=state)
+        return stack, jnp.stack(out, axis=1)
+
+    def prior_push(stack, idx):
+        def body(k, stack):
+            d = z - 1 - k
+            return discretize.push_prior(stack, idx[:, d], cfg.lat_bits,
+                                         cfg.precision)
+
+        return jax.lax.fori_loop(0, z, body, stack)
+
+    def prior_pop(stack):
+        def body(d, carry):
+            stack, idx = carry
+            stack, i = discretize.pop_prior(stack, cfg.lat_bits,
+                                            cfg.precision)
+            return stack, idx.at[:, d].set(i)
+
+        idx0 = jnp.zeros((stack.lanes, z), jnp.int32)
+        return jax.lax.fori_loop(0, z, body, (stack, idx0))
+
+    return bbans.BBANSCodec(
+        posterior_pop=posterior_pop, posterior_push=posterior_push,
+        likelihood_push=likelihood_push, likelihood_pop=likelihood_pop,
+        prior_push=prior_push, prior_pop=prior_pop)
+
+

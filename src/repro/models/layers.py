@@ -1,0 +1,169 @@
+"""Shared neural building blocks: norms, dense, embeddings, RoPE/M-RoPE,
+gated MLPs. Pure functions over param pytrees; bf16 compute / f32 params by
+default; activations constrained via the logical-axis sharding API.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.api import constrain
+
+
+def truncated_normal_init(key, shape, scale, dtype=jnp.float32):
+    stddev = scale / max(1.0, (shape[-2] if len(shape) > 1 else 1)) ** 0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape) *
+            stddev).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: Tuple[int, ...] | int,
+               bias: bool = False, dtype=jnp.float32):
+    if isinstance(d_out, int):
+        d_out = (d_out,)
+    w = truncated_normal_init(key, (d_in,) + d_out, 1.0, dtype)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros(d_out, dtype)
+    return p
+
+
+def dense(p, x, compute_dtype=jnp.bfloat16):
+    """x [..., d_in] @ w [d_in, *d_out] -> [..., *d_out]."""
+    w = p["w"].astype(compute_dtype)
+    y = jnp.tensordot(x.astype(compute_dtype), w, axes=1)
+    if "b" in p:
+        y = y + p["b"].astype(compute_dtype)
+    return y
+
+
+def rmsnorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return y.astype(dt)
+
+
+def layernorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y.astype(dt)
+
+
+def norm_init(kind: str, d: int):
+    return rmsnorm_init(d) if kind == "rmsnorm" else layernorm_init(d)
+
+
+def norm_apply(kind: str, p, x):
+    return rmsnorm(p, x) if kind == "rmsnorm" else layernorm(p, x)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + multimodal M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x [B, S, H, Dh], positions [B, S] (int) -> same shape."""
+    freqs = rope_freqs(x.shape[-1], theta)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, Dh/2]
+    sin, cos = jnp.sin(ang)[:, :, None], jnp.cos(ang)[:, :, None]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions: jnp.ndarray,
+                sections: Tuple[int, ...],
+                theta: float = 10000.0) -> jnp.ndarray:
+    """Multimodal RoPE (Qwen2-VL): positions [B, S, 3] (t, h, w ids); the
+    frequency bands are partitioned across the 3 position streams.
+
+    ``sections`` are per-stream band counts in *pairs* (sum = Dh/2).
+    """
+    dh = x.shape[-1]
+    assert sum(sections) == dh // 2, (sections, dh)
+    freqs = rope_freqs(dh, theta)  # [Dh/2]
+    parts = []
+    off = 0
+    for i, sec in enumerate(sections):
+        ang = positions[..., i:i + 1].astype(jnp.float32) * \
+            freqs[off:off + sec]
+        parts.append(ang)
+        off += sec
+    ang = jnp.concatenate(parts, -1)  # [B, S, Dh/2]
+    sin, cos = jnp.sin(ang)[:, :, None], jnp.cos(ang)[:, :, None]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None]
+    ang = pos / (10000.0 ** (dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, act: str):
+    ks = jax.random.split(key, 3)
+    if act == "silu":  # gated (SwiGLU-style): wi, wg, wo
+        return {"wi": dense_init(ks[0], d_model, d_ff),
+                "wg": dense_init(ks[1], d_model, d_ff),
+                "wo": dense_init(ks[2], d_ff, d_model)}
+    return {"wi": dense_init(ks[0], d_model, d_ff, bias=True),
+            "wo": dense_init(ks[2], d_ff, d_model, bias=True)}
+
+
+def mlp_apply(p, x, act: str, compute_dtype=jnp.bfloat16):
+    h = dense(p["wi"], x, compute_dtype)
+    if act == "silu":
+        h = jax.nn.silu(h) * dense(p["wg"], x, compute_dtype)
+    else:
+        h = jax.nn.gelu(h)
+    h = constrain(h, "batch", None, "ff")  # Megatron-SP: ff-sharded, seq gathered
+    return dense(p["wo"], h, compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab: int, d_model: int):
+    return {"table": (jax.random.normal(key, (vocab, d_model)) *
+                      0.02).astype(jnp.float32)}
+
+
+def embed_apply(p, ids: jnp.ndarray, compute_dtype=jnp.bfloat16):
+    out = jnp.take(p["table"].astype(compute_dtype), ids, axis=0)
+    return constrain(out, "batch", "seq", "embed")
+
+
+def unembed_apply(p, x, compute_dtype=jnp.bfloat16):
+    logits = jnp.einsum("...d,vd->...v", x.astype(compute_dtype),
+                        p["table"].astype(compute_dtype))
+    return constrain(logits, "batch", None, "vocab")

@@ -1,0 +1,207 @@
+"""RWKV6 "Finch" token mixer: linear recurrence with *data-dependent
+per-channel decay*, computed in MXU-friendly chunks (TPU adaptation of the
+CUDA wkv6 kernel - DESIGN.md section 3).
+
+Per head (key dim N, value dim N):
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          w_t = exp(-exp(d_t))
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+
+Chunked evaluation (chunk length L): with a_t = log w_t = -exp(d_t) and
+inclusive cumsums A_t = sum_{i<=t} a_i, every exponent that appears is a
+*difference A_x - A_y with x >= y*, hence <= 0 - unconditionally stable in
+f32 (this is why we materialize the [L, L, N] intra-chunk tensor rather
+than the classic unstable factored form; the Pallas kernel tiles it in
+VMEM).
+
+Faithfulness note (DESIGN.md section 6): data-dependent decay (the RWKV6
+signature) is kept, with a LoRA on the decay; the ddlerp token-shift of the
+reference implementation is simplified to static per-projection lerp
+(RWKV5-style). Channel mixing uses the squared-ReLU RWKV form.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.sharding.api import constrain
+
+CHUNK = 32
+DECAY_LORA = 64
+
+
+def rwkv_mixer_init(key, cfg):
+    d = cfg.d_model
+    n_heads = d // cfg.head_dim if cfg.n_heads == 0 else cfg.n_heads
+    dh = d // n_heads
+    ks = jax.random.split(key, 10)
+    scale = 1.0 / d ** 0.5
+    return {
+        "mu": {name: jnp.full((d,), 0.5, jnp.float32)
+               for name in ("r", "k", "v", "g", "d")},
+        "wr": layers.dense_init(ks[0], d, (n_heads, dh)),
+        "wk": layers.dense_init(ks[1], d, (n_heads, dh)),
+        "wv": layers.dense_init(ks[2], d, (n_heads, dh)),
+        "wg": layers.dense_init(ks[3], d, (n_heads, dh)),
+        "decay_base": jnp.full((n_heads, dh), -1.0, jnp.float32),
+        "decay_lora_a": (jax.random.normal(ks[4], (d, DECAY_LORA)) *
+                         scale).astype(jnp.float32),
+        "decay_lora_b": jnp.zeros((DECAY_LORA, n_heads, dh), jnp.float32),
+        "bonus_u": jnp.full((n_heads, dh), 0.5, jnp.float32),
+        "ln_out": layers.layernorm_init(d),
+        "wo": layers.dense_init(ks[5], d, d),
+    }
+
+
+def _token_shift(x, mu):
+    """lerp(prev_token, x, mu) - RWKV's 1-step temporal mix."""
+    prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return x + (prev - x) * (1.0 - mu)
+
+
+def _projections(p, x, compute_dtype):
+    xs = {name: _token_shift(x, p["mu"][name]) for name in p["mu"]}
+    r = layers.dense(p["wr"], xs["r"], compute_dtype)
+    k = layers.dense(p["wk"], xs["k"], compute_dtype)
+    v = layers.dense(p["wv"], xs["v"], compute_dtype)
+    g = layers.dense(p["wg"], xs["g"], compute_dtype)
+    # Data-dependent decay (f32: it goes through exp twice).
+    lora = jnp.tanh(xs["d"].astype(jnp.float32) @ p["decay_lora_a"])
+    dd = jnp.einsum("bsl,lhd->bshd", lora, p["decay_lora_b"])
+    d_t = p["decay_base"] + dd
+    log_w = -jnp.exp(jnp.clip(d_t, -8.0, 4.0))  # a_t = log w_t <= 0
+    return r, k, v, g, log_w
+
+
+def _chunk_scan(r, k, v, log_w, u, compute_dtype):
+    """Chunked WKV6. r/k/v [B, S, H, N] (S % CHUNK == 0), log_w f32 same
+    shape, u [H, N]. Returns y [B, S, H, N]."""
+    b, s, h, n = r.shape
+    l = min(CHUNK, s)
+    nc = s // l
+
+    def reshape_chunks(x):
+        return x.reshape(b, nc, l, h, n).transpose(1, 0, 3, 2, 4)
+
+    # -> [nc, B, H, L, N]
+    rc, kc, vc = map(reshape_chunks, (r, k, v))
+    ac = reshape_chunks(log_w.astype(jnp.float32))
+    s0 = jnp.zeros((b, h, n, n), jnp.float32)
+
+    def body(s_prev, inp):
+        rcc, kcc, vcc, acc = inp          # [B, H, L, N]
+        cum = jnp.cumsum(acc, axis=2)     # inclusive A_t
+        cum_prev = cum - acc              # exclusive A_{t-1}
+        # Cross-chunk: y_cross[t] = (r_t * exp(A_{t-1}))^T S_prev.
+        r_dec = rcc.astype(jnp.float32) * jnp.exp(cum_prev)
+        y = jnp.einsum("bhtn,bhnm->bhtm", r_dec, s_prev)
+        # Intra-chunk: att[t, i, c] = r_t[c] k_i[c] exp(A_{t-1,c} - A_{i,c})
+        # for i < t; diagonal uses the bonus u instead.
+        expo = cum_prev[:, :, :, None, :] - cum[:, :, None, :, :]
+        tri = jnp.tril(jnp.ones((l, l), bool), k=-1)[None, None, :, :, None]
+        w_ti = jnp.where(tri, jnp.exp(jnp.minimum(expo, 0.0)), 0.0)
+        att = jnp.einsum("bhtc,bhic,bhtic->bhti",
+                         rcc.astype(jnp.float32),
+                         kcc.astype(jnp.float32), w_ti)
+        y = y + jnp.einsum("bhti,bhin->bhtn", att,
+                           vcc.astype(jnp.float32))
+        # Diagonal bonus term: (r_t . (u * k_t)) v_t.
+        diag = jnp.sum(
+            rcc.astype(jnp.float32) * kcc.astype(jnp.float32) *
+            u.astype(jnp.float32)[None, :, None, :], axis=-1)
+        y = y + diag[..., None] * vcc.astype(jnp.float32)
+        # State to chunk end: S' = diag(exp(A_L)) S + sum_i exp(A_L - A_i)
+        # k_i v_i^T.
+        a_last = cum[:, :, -1:, :]                      # [B, H, 1, N]
+        k_dec = kcc.astype(jnp.float32) * jnp.exp(a_last - cum)
+        s_new = s_prev * jnp.exp(a_last.squeeze(2))[..., None] + \
+            jnp.einsum("bhtn,bhtm->bhnm", k_dec, vcc.astype(jnp.float32))
+        return s_new, y
+
+    s_final, ys = jax.lax.scan(body, s0, (rc, kc, vc, ac))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, s, h, n)
+    return y.astype(compute_dtype), s_final
+
+
+def rwkv_mixer_apply(p, x, cfg, compute_dtype=jnp.bfloat16,
+                     return_state: bool = False):
+    """Full-sequence WKV6 mixer. x [B, S, D] -> [B, S, D] (optionally also
+    the final recurrent state for prefill->decode handoff)."""
+    b, s, d = x.shape
+    r, k, v, g, log_w = _projections(p, x, compute_dtype)
+    pad = (-s) % CHUNK
+    if pad:
+        padf = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = padf(r), padf(k), padf(v)
+        log_w = padf(log_w)  # pad log_w = 0 -> decay 1, k = 0 -> no update
+    y, s_final = _chunk_scan(r, k, v, log_w, p["bonus_u"], compute_dtype)
+    if pad:
+        y = y[:, :s]
+    y = y.reshape(b, s, d)
+    y = layers.layernorm(p["ln_out"], y)
+    y = y * jax.nn.silu(g.reshape(b, s, d))
+    y = constrain(y, "batch", None, "embed")
+    out = layers.dense(p["wo"], y, compute_dtype)
+    if return_state:
+        return out, s_final
+    return out
+
+
+def rwkv_decode_step(p, x_t, cfg, state, compute_dtype=jnp.bfloat16):
+    """One-token recurrent step.
+
+    x_t [B, 1, D]; state dict with 'S' [B, H, N, N] f32 and 'prev_x'
+    [B, 1, D] (token-shift memory). Returns (y [B, 1, D], new state).
+    """
+    b, _, d = x_t.shape
+    prev = state["prev_x"]
+    xs = {name: x_t + (prev - x_t) * (1.0 - p["mu"][name])
+          for name in p["mu"]}
+    r = layers.dense(p["wr"], xs["r"], compute_dtype)[:, 0]
+    k = layers.dense(p["wk"], xs["k"], compute_dtype)[:, 0]
+    v = layers.dense(p["wv"], xs["v"], compute_dtype)[:, 0]
+    g = layers.dense(p["wg"], xs["g"], compute_dtype)[:, 0]
+    lora = jnp.tanh(xs["d"][:, 0].astype(jnp.float32) @ p["decay_lora_a"])
+    dd = jnp.einsum("bl,lhd->bhd", lora, p["decay_lora_b"])
+    w = jnp.exp(-jnp.exp(jnp.clip(p["decay_base"] + dd, -8.0, 4.0)))
+    s_prev = state["S"]
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    u = p["bonus_u"][None]
+    y = jnp.einsum("bhn,bhnm->bhm", rf, s_prev) + \
+        jnp.sum(rf * u * kf, -1, keepdims=True) * vf
+    s_new = s_prev * w[..., None] + kf[..., None] * vf[..., None, :]
+    y = y.reshape(b, 1, d).astype(compute_dtype)
+    y = layers.layernorm(p["ln_out"], y)
+    y = y * jax.nn.silu(g.reshape(b, 1, d))
+    return (layers.dense(p["wo"], y, compute_dtype),
+            {"S": s_new, "prev_x": x_t})
+
+
+def rwkv_channel_mix_init(key, cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "wk": layers.dense_init(ks[0], d, f),
+        "wr": layers.dense_init(ks[1], d, d),
+        "wv": layers.dense_init(ks[2], f, d),
+    }
+
+
+def rwkv_channel_mix_apply(p, x, compute_dtype=jnp.bfloat16,
+                           prev_x: Optional[jnp.ndarray] = None):
+    if prev_x is None:
+        xk = _token_shift(x, p["mu_k"])
+        xr = _token_shift(x, p["mu_r"])
+    else:
+        xk = x + (prev_x - x) * (1.0 - p["mu_k"])
+        xr = x + (prev_x - x) * (1.0 - p["mu_r"])
+    k = jnp.square(jax.nn.relu(layers.dense(p["wk"], xk, compute_dtype)))
+    k = constrain(k, "batch", None, "ff")
+    return jax.nn.sigmoid(layers.dense(p["wr"], xr, compute_dtype)) * \
+        layers.dense(p["wv"], k, compute_dtype)

@@ -1,0 +1,144 @@
+"""Mamba2/SSD-style selective SSM head (used by hymba's parallel heads).
+
+Per head (head dim P, state dim N, scalar decay per head - the SSD
+structure that makes the chunked "dual" form a plain matmul):
+
+    dt_t   = softplus(x W_dt + b)                  [B, S, H]
+    decay  = exp(-dt_t * exp(A_log_h))             scalar per (t, head)
+    h_t    = decay_t h_{t-1} + dt_t (u_t  B_t^T)   h [B, H, P, N]
+    y_t    = h_t C_t + D u_t                       [B, S, H, P]
+
+Chunked evaluation: within a chunk the scalar-decay recurrence collapses to
+a masked [L, L] attention-like matrix (exact SSD duality), computed with
+two einsums on the MXU; the carried state crosses chunks in a lax.scan.
+All exponents are differences of monotone cumsums -> <= 0, stable in f32.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.sharding.api import constrain
+
+CHUNK = 64
+
+
+def ssm_head_dims(cfg):
+    n_heads = max(cfg.n_heads, 1)
+    p = cfg.d_model // n_heads
+    return n_heads, p, cfg.ssm_state
+
+
+def ssm_init(key, cfg):
+    h, p, n = ssm_head_dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": layers.dense_init(ks[0], d, (h, p)),
+        "w_z": layers.dense_init(ks[1], d, (h, p)),
+        "w_B": layers.dense_init(ks[2], d, n),
+        "w_C": layers.dense_init(ks[3], d, n),
+        "w_dt": layers.dense_init(ks[4], d, h, bias=True),
+        "A_log": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h, p), jnp.float32),
+        "w_out": layers.dense_init(ks[5], d, d),
+    }
+
+
+def _inputs(p, x, compute_dtype):
+    u = layers.dense(p["w_in"], x, compute_dtype)      # [B, S, H, P]
+    z = layers.dense(p["w_z"], x, compute_dtype)       # gate
+    bmat = layers.dense(p["w_B"], x, compute_dtype)    # [B, S, N]
+    cmat = layers.dense(p["w_C"], x, compute_dtype)
+    dt = jax.nn.softplus(
+        layers.dense(p["w_dt"], x, jnp.float32))       # [B, S, H]
+    log_decay = -dt * jnp.exp(p["A_log"])              # <= 0
+    return u, z, bmat, cmat, dt, log_decay
+
+
+def _chunk_scan(u, bmat, cmat, dt, log_decay):
+    """SSD chunked scan. u [B,S,H,P]; b/c [B,S,N]; dt/log_decay [B,S,H].
+    Returns y [B,S,H,P] (f32)."""
+    b, s, h, p = u.shape
+    n = bmat.shape[-1]
+    l = min(CHUNK, s)
+    nc = s // l
+
+    uc = u.astype(jnp.float32).reshape(b, nc, l, h, p)
+    bc = bmat.astype(jnp.float32).reshape(b, nc, l, n)
+    cc = cmat.astype(jnp.float32).reshape(b, nc, l, n)
+    dtc = dt.reshape(b, nc, l, h)
+    ac = log_decay.reshape(b, nc, l, h)
+    # scan over chunks: move chunk axis first.
+    swap = lambda t: jnp.moveaxis(t, 1, 0)
+    uc, bc, cc, dtc, ac = map(swap, (uc, bc, cc, dtc, ac))
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def body(h_prev, inp):
+        u_, b_, c_, dt_, a_ = inp         # [B, L, ...]
+        cum = jnp.cumsum(a_, axis=1)      # inclusive [B, L, H]
+        # Cross-chunk: y_t = exp(A_t) C_t . h_prev (state before chunk).
+        y_cross = jnp.einsum("bln,bhpn->blhp", c_, h_prev) * \
+            jnp.exp(cum)[..., None]
+        # Intra-chunk dual form: att[t, i] = exp(A_t - A_i) (C_t . B_i)
+        # dt_i for i <= t.
+        expo = cum[:, :, None, :] - cum[:, None, :, :]   # [B, L, L, H]
+        tri = jnp.tril(jnp.ones((l, l), bool))[None, :, :, None]
+        w_ti = jnp.where(tri, jnp.exp(jnp.minimum(expo, 0.0)), 0.0)
+        cb = jnp.einsum("bln,bmn->blm", c_, b_)          # [B, L, L]
+        att = cb[..., None] * w_ti * dt_[:, None, :, :]  # [B, L, L, H]
+        y_intra = jnp.einsum("blmh,bmhp->blhp", att, u_)
+        # State to chunk end.
+        a_last = cum[:, -1:, :]                          # [B, 1, H]
+        k_dec = jnp.exp(a_last - cum) * dt_              # [B, L, H]
+        h_new = h_prev * jnp.exp(a_last[:, 0])[:, :, None, None] + \
+            jnp.einsum("blh,blhp,bln->bhpn", k_dec, u_, b_)
+        return h_new, y_cross + y_intra
+
+    h_final, ys = jax.lax.scan(body, h0, (uc, bc, cc, dtc, ac))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p)
+    return y, h_final
+
+
+def ssm_apply(p, x, cfg, compute_dtype=jnp.bfloat16,
+              return_state: bool = False):
+    """Full-sequence SSM head. x [B, S, D] -> [B, S, D] (optionally also the
+    final state for prefill->decode handoff)."""
+    b, s, d = x.shape
+    u, z, bmat, cmat, dt, log_decay = _inputs(p, x, compute_dtype)
+    pad = (-s) % CHUNK
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        log_decay = jnp.pad(log_decay, ((0, 0), (0, pad), (0, 0)))
+    y, h_final = _chunk_scan(u, bmat, cmat, dt, log_decay)
+    if pad:
+        y = y[:, :s]
+    y = y + p["D"][None, None] * u[:, :s].astype(jnp.float32)
+    y = (y.astype(compute_dtype) * jax.nn.silu(z)).reshape(b, s, d)
+    y = constrain(y, "batch", None, "embed")
+    out = layers.dense(p["w_out"], y, compute_dtype)
+    if return_state:
+        return out, h_final
+    return out
+
+
+def ssm_decode_step(p, x_t, cfg, state, compute_dtype=jnp.bfloat16):
+    """One-token step. state {'h': [B, H, P, N] f32}."""
+    b, _, d = x_t.shape
+    u, z, bmat, cmat, dt, log_decay = _inputs(p, x_t, compute_dtype)
+    u_, b_, c_ = (t.astype(jnp.float32)[:, 0] for t in (u, bmat, cmat))
+    dt_, a_ = dt[:, 0], log_decay[:, 0]
+    h_prev = state["h"]
+    h_new = h_prev * jnp.exp(a_)[..., None, None] + \
+        jnp.einsum("bh,bhp,bn->bhpn", dt_, u_, b_)
+    y = jnp.einsum("bhpn,bn->bhp", h_new, c_) + p["D"][None] * u_
+    y = (y.astype(compute_dtype) * jax.nn.silu(z[:, 0])).reshape(b, 1, d)
+    return layers.dense(p["w_out"], y, compute_dtype), {"h": h_new}

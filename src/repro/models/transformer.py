@@ -1,0 +1,531 @@
+"""Unified transformer backbone for all assigned architectures.
+
+One parameterized block family covers: dense GQA decoders (stablelm,
+mistral-nemo, qwen2, smollm), MoE decoders (llama4-scout, arctic), M-RoPE
+VLM (qwen2-vl), enc-dec (whisper), hybrid attention+SSM (hymba) and
+attention-free RWKV6. Layers are *stacked* ([L, ...] leaves) and applied
+with ``lax.scan`` - essential to keep HLO size flat for the 512-device
+dry-run compiles.
+
+Entry points:
+  init(key, cfg)                          -> params
+  forward(params, cfg, tokens|embeds)     -> logits           (train/prefill)
+  loss_fn(params, cfg, batch)             -> (loss, metrics)
+  init_decode_state(cfg, batch, max_len)  -> state             (KV/SSM)
+  decode_step(params, cfg, tok, state, t) -> (logits, state)   (serving)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, moe, rwkv6, ssm
+from repro.sharding.api import constrain
+
+BIG_WINDOW = 1 << 30
+
+
+def _compute_dtype(cfg):
+    return jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _block_init(key, cfg, *, cross: bool = False, causal: bool = True):
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {"ln1": layers.norm_init(cfg.norm, cfg.d_model),
+                         "ln2": layers.norm_init(cfg.norm, cfg.d_model)}
+    if cfg.mixer == "rwkv6":
+        p["rwkv"] = rwkv6.rwkv_mixer_init(ks[0], cfg)
+        p["cmix"] = rwkv6.rwkv_channel_mix_init(ks[1], cfg)
+        return p
+    p["attn"] = attention.attn_init(ks[0], cfg)
+    if cfg.mixer == "hymba":
+        p["ssm"] = ssm.ssm_init(ks[1], cfg)
+        p["ln_attn_out"] = layers.norm_init(cfg.norm, cfg.d_model)
+        p["ln_ssm_out"] = layers.norm_init(cfg.norm, cfg.d_model)
+    if cross:
+        p["xattn"] = attention.cross_attn_init(ks[2], cfg)
+        p["ln_x"] = layers.norm_init(cfg.norm, cfg.d_model)
+    if cfg.n_experts:
+        p["moe"] = moe.moe_init(ks[3], cfg)
+    else:
+        p["mlp"] = layers.mlp_init(ks[3], cfg.d_model, cfg.d_ff, cfg.act)
+    return p
+
+
+def _stacked_blocks(key, cfg, n: int, **kw):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: _block_init(k, cfg, **kw))(keys)
+
+
+def init(key: jax.Array, cfg) -> Dict[str, Any]:
+    ks = jax.random.split(key, 6)
+    params: Dict[str, Any] = {
+        "embed": layers.embed_init(ks[0], cfg.vocab, cfg.d_model),
+        "ln_f": layers.norm_init(cfg.norm, cfg.d_model),
+        "blocks": _stacked_blocks(ks[1], cfg, cfg.n_layers,
+                                  cross=cfg.enc_dec, causal=True),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = layers.embed_init(ks[2], cfg.vocab, cfg.d_model)
+    if cfg.enc_dec:
+        params["enc_blocks"] = _stacked_blocks(
+            ks[3], cfg, cfg.n_enc_layers, cross=False, causal=False)
+        params["ln_enc"] = layers.norm_init(cfg.norm, cfg.d_model)
+    if cfg.param_dtype != "float32":
+        pd = jnp.dtype(cfg.param_dtype)
+        params = jax.tree_util.tree_map(lambda p: p.astype(pd), params)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Per-layer static-ish schedules (traced per-layer scalars inside scan)
+# ---------------------------------------------------------------------------
+
+def layer_windows(cfg, n_layers: int) -> jnp.ndarray:
+    """Sliding-window size per layer (BIG_WINDOW = global attention)."""
+    if cfg.sliding_window is None:
+        return jnp.full((n_layers,), BIG_WINDOW, jnp.int32)
+    idx = jnp.arange(n_layers)
+    if cfg.global_attn_every:
+        is_global = (idx % cfg.global_attn_every == 0) | \
+            (idx == n_layers - 1)
+        return jnp.where(is_global, BIG_WINDOW,
+                         cfg.sliding_window).astype(jnp.int32)
+    return jnp.full((n_layers,), cfg.sliding_window, jnp.int32)
+
+
+def _dyn_mask(s_q, s_k, window, causal=True):
+    qi = jnp.arange(s_q)[:, None]
+    ki = jnp.arange(s_k)[None, :]
+    m = (ki <= qi) if causal else jnp.ones((s_q, s_k), bool)
+    return m & (ki > qi - window)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _attn_with_window(p, x, cfg, positions, window, enc_out, dt):
+    q, k, v = attention._qkv(p["attn"], x, cfg, positions, dt)
+    s = x.shape[1]
+    if s >= attention.BLOCKWISE_THRESHOLD:
+        out = attention.sdpa_blockwise(q, k, v, causal=True, window=window)
+    else:
+        mask = _dyn_mask(s, s, window, causal=True)
+        out = attention.sdpa(q, k, v, mask)
+    out = out.reshape(*out.shape[:2], -1)
+    return layers.dense(p["attn"]["wo"], out, dt)
+
+
+def _mixer(p, x, cfg, positions, window, enc_out, dt):
+    h = layers.norm_apply(cfg.norm, p["ln1"], x)
+    if cfg.mixer == "rwkv6":
+        return rwkv6.rwkv_mixer_apply(p["rwkv"], h, cfg, dt)
+    if cfg.mixer == "hymba":
+        a = _attn_with_window(p, h, cfg, positions, window, enc_out, dt)
+        s = ssm.ssm_apply(p["ssm"], h, cfg, dt)
+        a = layers.norm_apply(cfg.norm, p["ln_attn_out"], a)
+        s = layers.norm_apply(cfg.norm, p["ln_ssm_out"], s)
+        return 0.5 * (a + s)
+    return _attn_with_window(p, h, cfg, positions, window, enc_out, dt)
+
+
+def _ffn(p, x, cfg, dt):
+    h = layers.norm_apply(cfg.norm, p["ln2"], x)
+    if cfg.mixer == "rwkv6":
+        return rwkv6.rwkv_channel_mix_apply(p["cmix"], h, dt), 0.0
+    if cfg.n_experts:
+        out, aux = moe.moe_apply(p["moe"], h, cfg, dt)
+        return out, aux
+    return layers.mlp_apply(p["mlp"], h, cfg.act, dt), 0.0
+
+
+def _block_apply(p, x, cfg, positions, window, enc_out, dt):
+    x = x + _mixer(p, x, cfg, positions, window, enc_out, dt)
+    if enc_out is not None and "xattn" in p:
+        h = layers.norm_apply(cfg.norm, p["ln_x"], x)
+        x = x + attention.cross_attention(p["xattn"], h, enc_out, cfg, dt)
+    f, aux = _ffn(p, x, cfg, dt)
+    x = x + f
+    x = constrain(x, "batch", "seq", "embed")
+    return x, aux
+
+
+def _remat_wrap(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    policy = (jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+              if cfg.remat == "dots" else
+              jax.checkpoint_policies.nothing_saveable)
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _run_stack(blocks, x, cfg, positions, windows, enc_out, dt):
+    block_fn = _remat_wrap(
+        functools.partial(_block_apply, cfg=cfg, dt=dt), cfg)
+
+    def body(carry, inp):
+        x, aux = carry
+        p, w = inp
+        x, aux_i = block_fn(p, x, positions=positions, window=w,
+                            enc_out=enc_out)
+        return (x, aux + aux_i), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, 0.0), (blocks, windows))
+    return x, aux
+
+
+def _positions(cfg, b, s):
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    if cfg.rope_kind == "mrope":
+        # Text-stream default: t = h = w = position (Qwen2-VL collapses to
+        # standard RoPE for pure text; vision patches get true 3D ids).
+        pos = jnp.broadcast_to(pos[..., None], (b, s, 3))
+    return pos
+
+
+def encode(params, cfg, enc_embeds):
+    """Encoder stack over stub frontend embeddings [B, S_enc, D]."""
+    dt = _compute_dtype(cfg)
+    b, s, _ = enc_embeds.shape
+    x = enc_embeds.astype(dt) + \
+        layers.sinusoidal_positions(s, cfg.d_model).astype(dt)[None]
+    x = constrain(x, "batch", None, "embed")
+    windows = layer_windows(cfg, cfg.n_enc_layers)
+
+    def body(carry, inp):
+        p, w = inp
+        h = layers.norm_apply(cfg.norm, p["ln1"], carry)
+        q, k, v = attention._qkv(p["attn"], h, cfg,
+                                 _positions(cfg, b, s), dt)
+        if s >= attention.BLOCKWISE_THRESHOLD:
+            out = attention.sdpa_blockwise(q, k, v, causal=False)
+        else:
+            out = attention.sdpa(q, k, v, None)
+        carry = carry + layers.dense(
+            p["attn"]["wo"], out.reshape(b, s, -1), dt)
+        f, _ = _ffn(p, carry, cfg, dt)
+        carry = constrain(carry + f, "batch", "seq", "embed")
+        return carry, None
+
+    x, _ = jax.lax.scan(body, x, (params["enc_blocks"], windows))
+    return layers.norm_apply(cfg.norm, params["ln_enc"], x)
+
+
+def forward(params, cfg, tokens: Optional[jnp.ndarray] = None, *,
+            embeds: Optional[jnp.ndarray] = None,
+            enc_out: Optional[jnp.ndarray] = None,
+            positions: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray,
+                                                              jnp.ndarray]:
+    """Decoder-side forward -> (logits [B, S, V], moe aux loss)."""
+    dt = _compute_dtype(cfg)
+    if embeds is None:
+        x = layers.embed_apply(params["embed"], tokens, dt)
+    else:
+        x = embeds.astype(dt)
+    b, s = x.shape[:2]
+    if cfg.enc_dec:  # absolute positions only for the enc-dec family;
+        # RWKV6 is position-free by construction, RoPE archs rotate in-attn.
+        x = x + layers.sinusoidal_positions(s, cfg.d_model).astype(dt)[None]
+    if positions is None:
+        positions = _positions(cfg, b, s)
+    windows = layer_windows(cfg, cfg.n_layers)
+    x, aux = _run_stack(params["blocks"], x, cfg, positions, windows,
+                        enc_out, dt)
+    x = layers.norm_apply(cfg.norm, params["ln_f"], x)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = layers.unembed_apply(table, x, dt)
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# Loss (chunked over sequence to bound the f32 logits footprint)
+# ---------------------------------------------------------------------------
+
+def loss_fn(params, cfg, batch: Dict[str, jnp.ndarray]
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """batch: tokens [B, S] (+ optional 'enc_embeds' / 'embeds').
+
+    Next-token CE in nats/token + MoE aux. The unembed+CE runs in
+    ``loss_chunk``-sized sequence chunks under scan.
+    """
+    dt = _compute_dtype(cfg)
+    tokens = batch["tokens"]
+    enc_out = None
+    if cfg.enc_dec:
+        enc_out = encode(params, cfg, batch["enc_embeds"])
+    if "embeds" in batch:
+        x = batch["embeds"].astype(dt)
+    else:
+        x = layers.embed_apply(params["embed"], tokens, dt)
+    b, s = tokens.shape
+    if cfg.enc_dec:
+        x = x + layers.sinusoidal_positions(s, cfg.d_model).astype(dt)[None]
+    positions = _positions(cfg, b, s)
+    windows = layer_windows(cfg, cfg.n_layers)
+    x, aux = _run_stack(params["blocks"], x, cfg, positions, windows,
+                        enc_out, dt)
+    x = layers.norm_apply(cfg.norm, params["ln_f"], x)
+
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    targets = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    valid = jnp.concatenate(
+        [jnp.ones((b, s - 1), bool), jnp.zeros((b, 1), bool)], axis=1)
+
+    chunk = min(cfg.loss_chunk, s)
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        valid = jnp.pad(valid, ((0, 0), (0, pad)))
+    xc = x.reshape(b, n_chunks, chunk, -1).swapaxes(0, 1)
+    tc = targets.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+    vc = valid.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint  # recompute the V-wide logits in bwd: never keep
+    # per-chunk logits alive across the loss scan.
+    def ce_chunk_inner(xx, tt, vv):
+        logits = layers.unembed_apply(table, xx, dt).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # One-hot einsum instead of take_along_axis: contracts over the
+        # vocab-sharded dim (partial sums + all-reduce) instead of forcing
+        # SPMD to gather/replicate the full-vocab logits.
+        onehot = jax.nn.one_hot(tt, cfg.vocab, dtype=logits.dtype)
+        onehot = constrain(onehot, "batch", None, "vocab")
+        tgt = jnp.einsum("bsv,bsv->bs", logits, onehot)
+        nll = jnp.where(vv, lse - tgt, 0.0)
+        return jnp.sum(nll)
+
+    def ce_chunk(carry, inp):
+        xx, tt, vv = inp
+        return carry + ce_chunk_inner(xx, tt, vv), None
+
+    total, _ = jax.lax.scan(ce_chunk, jnp.zeros((), jnp.float32),
+                            (xc, tc, vc))
+    n_valid = jnp.maximum(jnp.sum(valid.astype(jnp.float32)), 1.0)
+    ce = total / n_valid
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux,
+                  "bits_per_token": ce / jnp.log(2.0)}
+
+
+# ---------------------------------------------------------------------------
+# Prefill (serving): full-prefix pass that also fills per-layer caches
+# ---------------------------------------------------------------------------
+
+def prefill(params, cfg, batch: Dict[str, jnp.ndarray], max_len: int
+            ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Run the prefix in parallel, returning (last-token logits [B, 1, V],
+    decode state with caches filled at cache_len = S)."""
+    dt = _compute_dtype(cfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    enc_out = None
+    if cfg.enc_dec:
+        enc_out = encode(params, cfg, batch["enc_embeds"])
+    if "embeds" in batch:
+        x = batch["embeds"].astype(dt)
+    else:
+        x = layers.embed_apply(params["embed"], tokens, dt)
+    if cfg.enc_dec:
+        x = x + layers.sinusoidal_positions(s, cfg.d_model).astype(dt)[None]
+    positions = _positions(cfg, b, s)
+    windows = layer_windows(cfg, cfg.n_layers)
+
+    def body(x, inp):
+        p, w = inp
+        h = layers.norm_apply(cfg.norm, p["ln1"], x)
+        collected = {}
+        if cfg.mixer == "rwkv6":
+            y, s_final = rwkv6.rwkv_mixer_apply(p["rwkv"], h, cfg, dt,
+                                                return_state=True)
+            x = x + y
+            h2 = layers.norm_apply(cfg.norm, p["ln2"], x)
+            x = x + rwkv6.rwkv_channel_mix_apply(p["cmix"], h2, dt)
+            collected = {"S": s_final, "prev_x": h[:, -1:],
+                         "prev_x_ffn": h2[:, -1:]}
+            return x, collected
+        q, k, v = attention._qkv(p["attn"], h, cfg, positions, dt)
+        if s >= attention.BLOCKWISE_THRESHOLD:
+            a = attention.sdpa_blockwise(q, k, v, causal=True, window=w)
+        else:
+            a = attention.sdpa(q, k, v, _dyn_mask(s, s, w, causal=True))
+        a = a.reshape(b, s, -1)
+        a = layers.dense(p["attn"]["wo"], a, dt)
+        pad_t = max_len - s
+        k_pad = jnp.pad(k, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+        v_pad = jnp.pad(v, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+        if cfg.kv_cache_dtype == "int8":
+            kq, ks = attention.quantize_kv(k_pad)
+            vq, vs = attention.quantize_kv(v_pad)
+            collected["k"], collected["v"] = kq, vq
+            collected["kv_scales"] = jnp.concatenate([ks, vs], axis=-1)
+        else:
+            collected["k"], collected["v"] = k_pad, v_pad
+        if cfg.mixer == "hymba":
+            y_s, h_final = ssm.ssm_apply(p["ssm"], h, cfg, dt,
+                                         return_state=True)
+            a = 0.5 * (layers.norm_apply(cfg.norm, p["ln_attn_out"], a)
+                       + layers.norm_apply(cfg.norm, p["ln_ssm_out"], y_s))
+            collected["ssm_h"] = h_final
+        x = x + a
+        if enc_out is not None and "xattn" in p:
+            hx = layers.norm_apply(cfg.norm, p["ln_x"], x)
+            x = x + attention.cross_attention(p["xattn"], hx, enc_out,
+                                              cfg, dt)
+        f, _ = _ffn(p, x, cfg, dt)
+        x = x + f
+        return x, collected
+
+    x, collected = jax.lax.scan(body, x, (params["blocks"], windows))
+    x = layers.norm_apply(cfg.norm, params["ln_f"], x[:, -1:])
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = layers.unembed_apply(table, x, dt)
+
+    state: Dict[str, Any] = dict(collected)
+    state["cache_len"] = jnp.asarray(s, jnp.int32)
+    if enc_out is not None:
+        state["enc_out"] = enc_out
+    return logits, state
+
+
+# ---------------------------------------------------------------------------
+# Decode (serving): one token against per-layer KV caches / SSM states
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg, batch: int, max_len: int,
+                      enc_out: Optional[jnp.ndarray] = None,
+                      dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Allocate per-layer caches, stacked on a leading [L] axis."""
+    l, dh, hkv = cfg.n_layers, cfg.head_dim, cfg.n_kv_heads
+    n_heads = max(cfg.n_heads, 1)
+    state: Dict[str, Any] = {"cache_len": jnp.zeros((), jnp.int32)}
+    if cfg.mixer == "rwkv6":
+        h = cfg.d_model // cfg.head_dim
+        state["S"] = jnp.zeros((l, batch, h, cfg.head_dim, cfg.head_dim),
+                               jnp.float32)
+        state["prev_x"] = jnp.zeros((l, batch, 1, cfg.d_model), dtype)
+        state["prev_x_ffn"] = jnp.zeros((l, batch, 1, cfg.d_model), dtype)
+        return state
+    kv_shape = (l, batch, max_len, hkv, dh)
+    if cfg.kv_cache_dtype == "int8":
+        state["k"] = jnp.zeros(kv_shape, jnp.int8)
+        state["v"] = jnp.zeros(kv_shape, jnp.int8)
+        state["kv_scales"] = jnp.zeros((l, batch, max_len, hkv, 2),
+                                       jnp.float32)
+    else:
+        state["k"] = jnp.zeros(kv_shape, dtype)
+        state["v"] = jnp.zeros(kv_shape, dtype)
+    if cfg.mixer == "hymba":
+        hh, pp, nn = ssm.ssm_head_dims(cfg)
+        state["ssm_h"] = jnp.zeros((l, batch, hh, pp, nn), jnp.float32)
+    if cfg.enc_dec and enc_out is not None:
+        state["enc_out"] = enc_out
+    return state
+
+
+def decode_step(params, cfg, tok: jnp.ndarray, state: Dict[str, Any]
+                ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """tok [B, 1] -> (logits [B, 1, V], new state). cache_len advances."""
+    dt = _compute_dtype(cfg)
+    x = layers.embed_apply(params["embed"], tok, dt)
+    return decode_step_embeds(params, cfg, x, state)
+
+
+def decode_step_embeds(params, cfg, x: jnp.ndarray, state: Dict[str, Any]
+                       ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Like ``decode_step`` but from a provided embedding [B, 1, D]
+    (soft-prompt / latent-prefix feeding; used by LatentLM)."""
+    dt = _compute_dtype(cfg)
+    x = x.astype(dt)
+    b = x.shape[0]
+    t = state["cache_len"]
+    if cfg.enc_dec:
+        ang = (t.astype(jnp.float32) /
+               (10000.0 ** (jnp.arange(0, cfg.d_model, 2,
+                                       dtype=jnp.float32) / cfg.d_model)))
+        x = x + jnp.concatenate([jnp.sin(ang), jnp.cos(ang)]
+                                ).astype(dt)[None, None, :]
+    windows = layer_windows(cfg, cfg.n_layers)
+    enc_out = state.get("enc_out")
+
+    if cfg.mixer == "rwkv6":
+        def body(x, inp):
+            p, s_l, prev, prev_f = inp
+            h = layers.norm_apply(cfg.norm, p["ln1"], x)
+            y, new = rwkv6.rwkv_decode_step(
+                p["rwkv"], h, cfg, {"S": s_l, "prev_x": prev}, dt)
+            x = x + y
+            h2 = layers.norm_apply(cfg.norm, p["ln2"], x)
+            x = x + rwkv6.rwkv_channel_mix_apply(p["cmix"], h2, dt,
+                                                 prev_x=prev_f)
+            return x, (new["S"], h, h2)
+
+        x, (new_s, new_prev, new_prev_f) = jax.lax.scan(
+            body, x, (params["blocks"], state["S"], state["prev_x"],
+                      state["prev_x_ffn"]))
+        state = dict(state, S=new_s, prev_x=new_prev,
+                     prev_x_ffn=new_prev_f, cache_len=t + 1)
+    else:
+        int8_kv = cfg.kv_cache_dtype == "int8"
+
+        def body(x, inp):
+            inp = list(inp)
+            p, k_l, v_l, w = inp[:4]
+            rest = inp[4:]
+            scales_l = rest.pop(0) if int8_kv else None
+            hs = rest.pop(0) if cfg.mixer == "hymba" else None
+            h = layers.norm_apply(cfg.norm, p["ln1"], x)
+            att_out = attention.decode_attention(
+                p["attn"], h, cfg, k_l, v_l, t, dt, window=w,
+                kv_scales=scales_l)
+            if int8_kv:
+                a, k_l, v_l, scales_l = att_out
+            else:
+                a, k_l, v_l = att_out
+            if cfg.mixer == "hymba":
+                y_s, new_h = ssm.ssm_decode_step(p["ssm"], h, cfg,
+                                                 {"h": hs}, dt)
+                a = 0.5 * (layers.norm_apply(cfg.norm, p["ln_attn_out"], a)
+                           + layers.norm_apply(cfg.norm, p["ln_ssm_out"],
+                                               y_s))
+            x = x + a
+            if enc_out is not None and "xattn" in p:
+                hx = layers.norm_apply(cfg.norm, p["ln_x"], x)
+                x = x + attention.cross_attention(p["xattn"], hx, enc_out,
+                                                  cfg, dt)
+            f, _ = _ffn(p, x, cfg, dt)
+            x = x + f
+            outs = (k_l, v_l)
+            if int8_kv:
+                outs = outs + (scales_l,)
+            if cfg.mixer == "hymba":
+                outs = outs + (new_h["h"],)
+            return x, outs
+
+        ins = (params["blocks"], state["k"], state["v"], windows)
+        if int8_kv:
+            ins = ins + (state["kv_scales"],)
+        if cfg.mixer == "hymba":
+            ins = ins + (state["ssm_h"],)
+        x, outs = jax.lax.scan(body, x, ins)
+        outs = list(outs)
+        state = dict(state, k=outs.pop(0), v=outs.pop(0), cache_len=t + 1)
+        if int8_kv:
+            state["kv_scales"] = outs.pop(0)
+        if cfg.mixer == "hymba":
+            state["ssm_h"] = outs.pop(0)
+
+    x = layers.norm_apply(cfg.norm, params["ln_f"], x)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = layers.unembed_apply(table, x, dt)
+    return logits, state

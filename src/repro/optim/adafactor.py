@@ -1,0 +1,141 @@
+"""Adafactor (Shazeer & Stern, 2018) - factored second moments.
+
+The memory-frugal optimizer used for the largest MoE configs (DESIGN.md
+section 5): second-moment statistics are factored into row/column running
+means for every rank>=2 leaf, so optimizer state is O(rows + cols) instead
+of O(rows * cols). No first moment by default (beta1=0), relative step
+sizes, update clipping - the production T5/PaLM recipe.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    vr: Any   # row stats   (leaf.shape[:-1]) for rank>=2 else full
+    vc: Any   # col stats   (leaf.shape[:-2] + (last,)) for rank>=2 else ()
+    mu: Any   # first moment if beta1 else ()
+
+
+class Adafactor(NamedTuple):
+    learning_rate: Callable[[jnp.ndarray], jnp.ndarray]
+    beta1: float = 0.0
+    decay_exponent: float = 0.8
+    eps1: float = 1e-30
+    eps2: float = 1e-3
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+
+    def init(self, params: Any) -> AdafactorState:
+        def vr_like(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32) if p.ndim >= 2 \
+                else jnp.zeros(p.shape, jnp.float32)
+
+        def vc_like(p):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32) \
+                if p.ndim >= 2 else jnp.zeros((1,), jnp.float32)
+
+        mu = jax.tree_util.tree_map(jnp.zeros_like, params) \
+            if self.beta1 else jax.tree_util.tree_map(
+                lambda p: jnp.zeros((1,), jnp.float32), params)
+        return AdafactorState(
+            step=jnp.zeros((), jnp.int32),
+            vr=jax.tree_util.tree_map(vr_like, params),
+            vc=jax.tree_util.tree_map(vc_like, params),
+            mu=mu)
+
+    #: Leaves above this many elements get the chunked (two-pass) update:
+    #: f32 temporaries per chunk instead of per leaf. Exact same math.
+    CHUNK_THRESHOLD = 1 << 24
+
+    def update(self, grads: Any, state: AdafactorState,
+               params: Any) -> Tuple[Any, AdafactorState]:
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        beta2 = 1.0 - t ** -self.decay_exponent
+        lr = self.learning_rate(step)
+
+        def stats_and_u(g, vr, vc):
+            g = g.astype(jnp.float32)
+            g2 = g * g + self.eps1
+            vr_new = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc_new = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+            row = vr_new / jnp.mean(vr_new, axis=-1, keepdims=True)
+            u = g * jax.lax.rsqrt(row)[..., None] * \
+                jax.lax.rsqrt(vc_new)[..., None, :]
+            return vr_new, vc_new, u
+
+        def finish(p, u, rms_u, m):
+            u = u / jnp.maximum(1.0, rms_u / self.clip_threshold)
+            if self.beta1:
+                m = self.beta1 * m + (1 - self.beta1) * u
+                u = m
+            scale = lr * jnp.maximum(
+                self.eps2,
+                jnp.sqrt(jnp.mean(p.astype(jnp.float32) ** 2)))
+            new_p = p.astype(jnp.float32) - scale * u
+            if self.weight_decay:
+                new_p = new_p - lr * self.weight_decay * \
+                    p.astype(jnp.float32)
+            return new_p.astype(p.dtype), m
+
+        def upd(p, g, vr, vc, m):
+            if p.ndim < 2:
+                g32 = g.astype(jnp.float32)
+                vr_new = beta2 * vr + (1 - beta2) * (g32 * g32 + self.eps1)
+                u = g32 * jax.lax.rsqrt(vr_new)
+                rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+                new_p, m = finish(p, u, rms_u, m)
+                return new_p, vr_new, vc, m
+            if p.ndim >= 3 and p.size > self.CHUNK_THRESHOLD \
+                    and not self.beta1:  # chunked path assumes no momentum
+                # Two-pass chunked update over axis 0 (layer/expert stack):
+                # pass 1 computes the factored stats + sum(u^2) per chunk,
+                # pass 2 recomputes u and applies clip/step. Identical math
+                # to the unchunked path (all reductions are over the last
+                # two axes or global), f32 peak shrinks by the stack size.
+                vr_new, vc_new, u2 = jax.lax.map(
+                    lambda args: (lambda v: (v[0], v[1],
+                                             jnp.sum(v[2] * v[2])))(
+                        stats_and_u(*args)), (g, vr, vc))
+                rms_u = jnp.sqrt(jnp.sum(u2) / float(p.size) + 1e-30)
+                scale = lr * jnp.maximum(
+                    self.eps2,
+                    jnp.sqrt(jnp.mean(p.astype(jnp.float32) ** 2)))
+
+                def apply_chunk(args):
+                    p_i, g_i, vr_i, vc_i = args
+                    _, _, u = stats_and_u(g_i, vr_i, vc_i)
+                    u = u / jnp.maximum(1.0, rms_u / self.clip_threshold)
+                    new_p = p_i.astype(jnp.float32) - scale * u
+                    if self.weight_decay:
+                        new_p = new_p - lr * self.weight_decay * \
+                            p_i.astype(jnp.float32)
+                    return new_p.astype(p_i.dtype)
+
+                new_p = jax.lax.map(apply_chunk, (p, g, vr, vc))
+                return new_p, vr_new, vc_new, m
+            vr_new, vc_new, u = stats_and_u(g, vr, vc)
+            rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            new_p, m = finish(p, u, rms_u, m)
+            return new_p, vr_new, vc_new, m
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_vr = tdef.flatten_up_to(state.vr)
+        flat_vc = tdef.flatten_up_to(state.vc)
+        flat_mu = tdef.flatten_up_to(state.mu)
+        outs = [upd(p, g, vr, vc, m) for p, g, vr, vc, m in
+                zip(flat_p, flat_g, flat_vr, flat_vc, flat_mu)]
+        new_p = tdef.unflatten([o[0] for o in outs])
+        new_vr = tdef.unflatten([o[1] for o in outs])
+        new_vc = tdef.unflatten([o[2] for o in outs])
+        new_mu = tdef.unflatten([o[3] for o in outs]) if self.beta1 \
+            else state.mu
+        return new_p, AdafactorState(step=step, vr=new_vr, vc=new_vc,
+                                     mu=new_mu)

@@ -1,0 +1,84 @@
+"""Native AdamW with gradient clipping - pytree-based, pjit-friendly.
+
+No optax in this environment; this is a minimal-but-complete production
+optimizer: bias-corrected Adam moments, decoupled weight decay, global-norm
+clipping, and a state layout that shards identically to the params (so FSDP
+policies apply transparently to optimizer state).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray  # int32 scalar
+    mu: Any            # first moment, like params
+    nu: Any            # second moment, like params
+
+
+class AdamW(NamedTuple):
+    learning_rate: Callable[[jnp.ndarray], jnp.ndarray]
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: Optional[float] = 1.0
+
+    def init(self, params: Any) -> AdamWState:
+        zeros = lambda p: jnp.zeros_like(p)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree_util.tree_map(zeros, params),
+                          nu=jax.tree_util.tree_map(zeros, params))
+
+    def update(self, grads: Any, state: AdamWState,
+               params: Any) -> Tuple[Any, AdamWState]:
+        step = state.step + 1
+        if self.clip_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * (g * g), state.nu, grads)
+        t = step.astype(jnp.float32)
+        mu_hat_scale = 1.0 / (1 - b1 ** t)
+        nu_hat_scale = 1.0 / (1 - b2 ** t)
+        lr = self.learning_rate(step)
+
+        def upd(p, m, v):
+            u = (m * mu_hat_scale) / (
+                jnp.sqrt(v * nu_hat_scale) + self.eps)
+            if self.weight_decay:
+                u = u + self.weight_decay * p
+            return (p - lr * u).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+        return new_params, AdamWState(step=step, mu=mu, nu=nu)
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def constant_lr(value: float) -> Callable:
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def cosine_lr(peak: float, warmup: int, total: int,
+              floor: float = 0.0) -> Callable:
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / max(warmup, 1)
+        frac = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(s < warmup, warm, cos)
+
+    return fn

@@ -1,0 +1,77 @@
+"""Serving engine: prefill/decode session management, greedy generation,
+and the neural-compression service entry points.
+
+The engine is the jit boundary for serving: ``prefill_step`` and
+``serve_step`` are the two lowered programs (the dry-run lowers exactly
+these for the decode/prefill cells). State is donated across ``serve_step``
+calls so KV caches update in place.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ans, lm_codec
+from repro.models import transformer
+
+
+class Engine:
+    def __init__(self, params, cfg, max_len: int = 2048,
+                 jit: bool = True):
+        self.params = params
+        self.cfg = cfg
+        self.max_len = max_len
+        self._prefill = jax.jit(
+            functools.partial(transformer.prefill, cfg=self.cfg,
+                              max_len=max_len)) if jit else \
+            functools.partial(transformer.prefill, cfg=self.cfg,
+                              max_len=max_len)
+        self._step = jax.jit(
+            functools.partial(transformer.decode_step, cfg=self.cfg),
+            donate_argnames=("state",)) if jit else \
+            functools.partial(transformer.decode_step, cfg=self.cfg)
+
+    # -- session ------------------------------------------------------------
+    def start(self, batch: Dict[str, jnp.ndarray]
+              ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+        """Prefill the prompt; returns (last logits [B,1,V], session)."""
+        return self._prefill(self.params, batch=batch)
+
+    def step(self, tok: jnp.ndarray, session: Dict[str, Any]):
+        return self._step(self.params, tok=tok, state=session)
+
+    def generate(self, batch: Dict[str, jnp.ndarray], n_tokens: int
+                 ) -> jnp.ndarray:
+        """Greedy continuation of the prompt; [B, n_tokens]."""
+        logits, session = self.start(batch)
+        toks = []
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        for _ in range(n_tokens):
+            toks.append(tok[:, 0])
+            logits, session = self.step(tok, session)
+            tok = jnp.argmax(logits[:, 0], -1)[:, None].astype(jnp.int32)
+        return jnp.stack(toks, axis=1)
+
+    # -- compression service --------------------------------------------------
+    def compress(self, tokens: jnp.ndarray, capacity_factor: float = 1.5
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, int]:
+        """Losslessly compress token streams [lanes, N] with the LM.
+
+        Returns (message uint16[lanes, cap+2], lengths, total_bits).
+        """
+        lanes, n = tokens.shape
+        cap = int(n * capacity_factor) + 8
+        stack = ans.make_stack(lanes, cap)
+        stack = lm_codec.encode_tokens(self.params, self.cfg, tokens, stack)
+        msg, lengths = ans.flatten(stack)
+        return msg, lengths, int(ans.stack_bits(stack))
+
+    def decompress(self, msg: jnp.ndarray, lengths: jnp.ndarray,
+                   n: int) -> jnp.ndarray:
+        stack = ans.unflatten(msg, lengths)
+        _, out = lm_codec.decode_tokens(self.params, self.cfg, stack, n)
+        return out

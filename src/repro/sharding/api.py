@@ -1,0 +1,118 @@
+"""Logical-axis sharding API: models constrain activations by *logical*
+names; launch code binds logical names to mesh axes.
+
+Keeps model code mesh-agnostic (the 1000-node posture): the same forward
+runs unsharded in unit tests, on a (data, model) pod, or on a
+(pod, data, model) multi-pod mesh, with only the rule binding changing.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Union[None, str, Tuple[str, ...]]
+
+#: Default logical->mesh binding for the production meshes (DESIGN.md 5).
+DEFAULT_RULES: Dict[str, Axes] = {
+    "batch": ("pod", "data"),
+    "seq": None,            # sequence usually replicated; SP binds to model
+    "kv_seq": None,         # decode KV sequence; SP binds leftover model
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "vocab": "model",
+    "experts": "model",
+    "fsdp": ("pod", "data"),  # parameter dim sharded ZeRO-3 style
+    "lanes": ("pod", "data"),  # ANS coder lanes (embarrassingly parallel)
+}
+
+
+class _Env(threading.local):
+    mesh: Optional[Mesh] = None
+    rules: Optional[Dict[str, Axes]] = None
+
+
+_ENV = _Env()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[Dict[str, Axes]] = None):
+    """Bind a mesh + logical rules for ``constrain`` within the context."""
+    prev = (_ENV.mesh, _ENV.rules)
+    _ENV.mesh = mesh
+    _ENV.rules = dict(DEFAULT_RULES, **(rules or {})) if mesh else None
+    try:
+        if mesh is not None:
+            with mesh:
+                yield
+        else:
+            yield
+    finally:
+        _ENV.mesh, _ENV.rules = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _ENV.mesh
+
+
+def resolve(*logical: Optional[str]) -> P:
+    """Map logical axis names to a PartitionSpec under the active rules.
+
+    Names that are unbound (or when no mesh is active) resolve to None.
+    Mesh axes that don't exist on the active mesh are dropped - this is what
+    lets the same rules serve the single-pod mesh (no 'pod' axis).
+    """
+    rules = _ENV.rules or {}
+    mesh_axes = set(_ENV.mesh.axis_names) if _ENV.mesh is not None else set()
+
+    def one(name):
+        if name is None:
+            return None
+        ax = rules.get(name)
+        if ax is None:
+            return None
+        if isinstance(ax, str):
+            return ax if ax in mesh_axes else None
+        kept = tuple(a for a in ax if a in mesh_axes)
+        return kept if kept else None
+
+    # A mesh axis may appear at most once in a spec: first logical name
+    # wins (e.g. with SP bound, "seq" takes 'model' and later names that
+    # also resolve to 'model' fall back to replicated).
+    used = set()
+    out = []
+    for n in logical:
+        entry = one(n)
+        if isinstance(entry, str):
+            entry = None if entry in used else entry
+            if entry:
+                used.add(entry)
+        elif isinstance(entry, tuple):
+            kept = tuple(a for a in entry if a not in used)
+            used.update(kept)
+            entry = kept if kept else None
+        out.append(entry)
+    return P(*out)
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op without a mesh."""
+    mesh = _ENV.mesh
+    if mesh is None:
+        return x
+    spec = resolve(*logical)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec))
+
+
+def named_sharding(*logical: Optional[str]) -> Optional[NamedSharding]:
+    mesh = _ENV.mesh
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, resolve(*logical))

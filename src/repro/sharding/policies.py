@@ -1,0 +1,240 @@
+"""Parameter / state / batch sharding policies for the production meshes.
+
+2-D sharding (DESIGN.md section 5): tensor-parallel on ``model`` (heads,
+ffn inner, vocab, experts), FSDP/ZeRO-3 on ``("pod", "data")`` over a large
+remaining dim. Optimizer state follows parameters (AdamW moments share the
+param spec; Adafactor row/col stats get the reduced spec). Policies are
+*path-based*: they match pytree leaf paths, so any model built from the
+shared layers gets covered; a test asserts total coverage per arch.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+FSDP = ("pod", "data")
+TP = "model"
+
+# (path-suffix patterns, spec builder by leaf ndim-after-stack)
+# Specs are written for the *unstacked* leaf; a leading layer-stack axis
+# (blocks/enc_blocks) gets None prepended automatically.
+
+
+def _param_spec(path: str, ndim: int, stacked: bool) -> P:
+    """Spec for one parameter leaf. ``path`` is '/'-joined key names."""
+    base_ndim = ndim - (1 if stacked else 0)
+
+    def out(*axes):
+        axes = tuple(axes)
+        assert len(axes) == base_ndim, (path, axes, base_ndim)
+        return P(*(((None,) if stacked else ()) + axes))
+
+    p = path.lower()
+    # --- embeddings ---
+    if "embed/table" in p or "unembed/table" in p:
+        return out(TP, FSDP)
+    # --- attention ---
+    if "attn/wq/w" in p or "attn/wk/w" in p or "attn/wv/w" in p:
+        return out(FSDP, TP, None)          # [D, H, Dh]
+    if "attn/wq/b" in p or "attn/wk/b" in p or "attn/wv/b" in p:
+        return out(TP, None)                # [H, Dh]
+    if "attn/wo/w" in p or "xattn/wo/w" in p:
+        return out(TP, FSDP)                # [H*Dh, D]
+    if "xattn/wq/w" in p or "xattn/wk/w" in p or "xattn/wv/w" in p:
+        return out(FSDP, TP, None)
+    if "xattn/wq/b" in p or "xattn/wk/b" in p or "xattn/wv/b" in p:
+        return out(TP, None)
+    if "wo/b" in p:
+        return out(FSDP)
+    # --- MoE ---
+    if "moe/router/w" in p:
+        return out(FSDP, None)              # [D, E]
+    if "moe/wi" in p or "moe/wg" in p:
+        return out(TP, FSDP, None)          # [E, D, F]
+    if "moe/wo" in p:
+        return out(TP, None, FSDP)          # [E, F, D]
+    if ("shared/" in p or "dense_mlp/" in p or "mlp/" in p
+            or "cmix/" in p):
+        if p.endswith("wi/w") or p.endswith("wg/w") or p.endswith("wk/w"):
+            return out(FSDP, TP)            # [D, F]
+        if p.endswith("wo/w") or p.endswith("wv/w"):
+            return out(TP, FSDP)            # [F, D]
+        if p.endswith("wr/w"):
+            return out(FSDP, TP)            # [D, D] (rwkv cmix receptance)
+        if p.endswith("/b"):
+            return out(None) if base_ndim == 1 else out(*(None,) * base_ndim)
+        if base_ndim == 1:
+            return out(None)
+    # --- RWKV mixer ---
+    if "rwkv/" in p:
+        if p.endswith(("wr/w", "wk/w", "wv/w", "wg/w")):
+            return out(FSDP, TP, None)      # [D, H, Dh]
+        if p.endswith("wo/w"):
+            return out(TP, FSDP)            # [D, D]
+        if "decay_lora_a" in p:
+            return out(FSDP, None)          # [D, R]
+        if "decay_lora_b" in p:
+            return out(None, TP, None)      # [R, H, Dh]
+        if "decay_base" in p or "bonus_u" in p:
+            return out(TP, None)            # [H, Dh]
+        if "mu/" in p or "ln_out" in p:
+            return out(*(None,) * base_ndim)
+    # --- SSM head (hymba) ---
+    if "ssm/" in p:
+        if p.endswith(("w_in/w", "w_z/w")):
+            return out(FSDP, TP, None)      # [D, H, P]
+        if p.endswith(("w_b/w", "w_c/w")):
+            return out(FSDP, None)          # [D, N]
+        if p.endswith("w_dt/w"):
+            return out(FSDP, TP)            # [D, H]
+        if p.endswith("w_dt/b") or "a_log" in p:
+            return out(TP)                  # [H]
+        if p.endswith("/d"):
+            return out(TP, None)            # [H, P]
+        if p.endswith("w_out/w"):
+            return out(TP, FSDP)            # [D, D]
+    # --- norms, scalars, small vectors: replicate ---
+    return out(*(None,) * base_ndim)
+
+
+def param_pspecs(params: Any) -> Any:
+    """PartitionSpec pytree for a parameter pytree."""
+
+    def one(path_tuple, leaf):
+        names = [str(getattr(k, "key", getattr(k, "idx", k)))
+                 for k in path_tuple]
+        path = "/".join(names)
+        stacked = names and names[0] in ("blocks", "enc_blocks")
+        return _param_spec(path, np.ndim(leaf), stacked)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def _drop_last(spec: P) -> P:
+    return P(*spec[:-1]) if len(spec) else P()
+
+
+def _drop_second_last(spec: P) -> P:
+    if len(spec) < 2:
+        return P()
+    return P(*(spec[:-2] + (spec[-1],)))
+
+
+def opt_state_pspecs(opt_state: Any, params: Any, param_specs: Any) -> Any:
+    """Shard optimizer state congruently with the params."""
+    from repro.optim.adafactor import AdafactorState
+    from repro.optim.adamw import AdamWState
+    if isinstance(opt_state, AdamWState):
+        return AdamWState(step=P(), mu=param_specs, nu=param_specs)
+    if isinstance(opt_state, AdafactorState):
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_s = tdef.flatten_up_to(param_specs)
+        vr = tdef.unflatten([
+            _drop_last(s) if np.ndim(p) >= 2 else s
+            for p, s in zip(flat_p, flat_s)])
+        vc = tdef.unflatten([
+            _drop_second_last(s) if np.ndim(p) >= 2 else P()
+            for p, s in zip(flat_p, flat_s)])
+        mu = jax.tree_util.tree_map(lambda _: P(), opt_state.mu)
+        return AdafactorState(step=P(), vr=vr, vc=vc, mu=mu)
+    raise TypeError(type(opt_state))
+
+
+def batch_pspecs(batch_shapes: Any) -> Any:
+    """Batch inputs: leading axis data-parallel, rest replicated."""
+    return jax.tree_util.tree_map(
+        lambda leaf: P(FSDP, *(None,) * (len(leaf.shape) - 1)),
+        batch_shapes)
+
+
+def decode_state_pspecs(state_shapes: Any) -> Any:
+    """Decode state: KV caches [L, B, T, H, Dh] -> batch on data, sequence
+    on model (flash-decoding); recurrent states [L, B, H, ...] -> batch on
+    data, heads on model; enc_out [B, S, D] -> batch on data."""
+
+    def one(path_tuple, leaf):
+        name = str(getattr(path_tuple[-1], "key", path_tuple[-1]))
+        nd = len(leaf.shape)
+        if name in ("k", "v", "kv_scales"):
+            return P(None, FSDP, TP, None, None)
+        if name == "S":                      # rwkv [L, B, H, N, N]
+            return P(None, FSDP, TP, None, None)
+        if name == "ssm_h":                  # [L, B, H, P, N]
+            return P(None, FSDP, TP, None, None)
+        if name in ("prev_x", "prev_x_ffn"):  # [L, B, 1, D]
+            return P(None, FSDP, None, None)
+        if name == "enc_out":                # [B, S, D]
+            return P(FSDP, None, None)
+        return P(*(None,) * nd)
+
+    return jax.tree_util.tree_map_with_path(one, state_shapes)
+
+
+def drop_fsdp(spec_tree: Any) -> Any:
+    """Param specs with the FSDP (data) axes removed - the target layout
+    for the regather-once optimization (TP-sharded, data-replicated)."""
+    fsdp_axes = set(FSDP)
+
+    def fix(spec: P) -> P:
+        out = []
+        for entry in spec:
+            if entry is None:
+                out.append(None)
+            elif isinstance(entry, str):
+                out.append(None if entry in fsdp_axes else entry)
+            else:
+                kept = tuple(a for a in entry if a not in fsdp_axes)
+                out.append(kept if kept else None)
+        return P(*out)
+
+    return jax.tree_util.tree_map(
+        fix, spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def to_named(mesh: Mesh, spec_tree: Any, shapes_tree: Any = None) -> Any:
+    """PartitionSpec pytree -> NamedSharding pytree.
+
+    Two normalizations (both required for `jit(in_shardings=...)`, which
+    demands exact divisibility, unlike with_sharding_constraint):
+      * mesh axes the mesh doesn't have are dropped (single-pod reuse of
+        multi-pod specs);
+      * axes that don't divide the dimension are dropped => replicate
+        (e.g. GQA kv_heads=8 under 16-way TP). The standard pragmatic
+        rule; revisit per-arch in the perf pass.
+    """
+    names = set(mesh.axis_names)
+
+    def axis_size(entry) -> int:
+        if entry is None:
+            return 1
+        if isinstance(entry, str):
+            return mesh.shape[entry]
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+
+    def fix(spec: P, shape=None) -> NamedSharding:
+        fixed = []
+        for i, entry in enumerate(spec):
+            if entry is None or isinstance(entry, str):
+                keep = entry if (entry is None or entry in names) else None
+            else:
+                kept = tuple(a for a in entry if a in names)
+                keep = kept if kept else None
+            if keep is not None and shape is not None:
+                if shape[i] % axis_size(keep) != 0:
+                    keep = None
+            fixed.append(keep)
+        return NamedSharding(mesh, P(*fixed))
+
+    if shapes_tree is None:
+        return jax.tree_util.tree_map(
+            fix, spec_tree, is_leaf=lambda x: isinstance(x, P))
+    return jax.tree_util.tree_map(
+        lambda s, leaf: fix(s, tuple(leaf.shape)), spec_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, P))

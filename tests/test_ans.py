@@ -1,0 +1,151 @@
+"""Property and unit tests for the lane-vectorized rANS coder."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ans
+
+
+def _random_starts_table(rng, lanes, alphabet, precision):
+    """Random valid fixed-point CDF tables (freq >= 1, total = 2^p)."""
+    probs = rng.dirichlet(np.ones(alphabet) * 0.5, size=lanes)
+    return ans.probs_to_starts(jnp.asarray(probs, jnp.float32), precision)
+
+
+def test_push_pop_single_symbol_roundtrip():
+    lanes = 8
+    stack = ans.make_stack(lanes, capacity=16,
+                           key=jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    table = _random_starts_table(rng, lanes, alphabet=5, precision=12)
+    sym = jnp.asarray(rng.integers(0, 5, size=lanes), jnp.int32)
+    h0 = stack.head
+    stack2 = ans.push_with_table(stack, table, sym, precision=12)
+    stack3, sym_out = ans.pop_with_table(stack2, table, precision=12)
+    np.testing.assert_array_equal(np.asarray(sym_out), np.asarray(sym))
+    np.testing.assert_array_equal(np.asarray(stack3.head), np.asarray(h0))
+    np.testing.assert_array_equal(np.asarray(stack3.ptr), np.asarray(stack.ptr))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    alphabet=st.integers(2, 40),
+    precision=st.integers(6, 16),
+    n_symbols=st.integers(1, 60),
+    lanes=st.integers(1, 9),
+)
+def test_sequence_roundtrip_property(seed, alphabet, precision, n_symbols,
+                                     lanes):
+    """LIFO invertibility: pushing N symbols then popping N recovers them
+    in reverse, restoring the stack exactly."""
+    if alphabet >= (1 << precision) - alphabet:
+        alphabet = max(2, (1 << precision) // 4)
+    rng = np.random.default_rng(seed)
+    stack = ans.make_stack(lanes, capacity=n_symbols + 8,
+                           key=jax.random.PRNGKey(seed))
+    tables = [
+        _random_starts_table(rng, lanes, alphabet, precision)
+        for _ in range(n_symbols)
+    ]
+    syms = [jnp.asarray(rng.integers(0, alphabet, size=lanes), jnp.int32)
+            for _ in range(n_symbols)]
+
+    h0, p0 = np.asarray(stack.head), np.asarray(stack.ptr)
+    s = stack
+    for t in range(n_symbols):
+        s = ans.push_with_table(s, tables[t], syms[t], precision)
+    for t in reversed(range(n_symbols)):
+        s, out = ans.pop_with_table(s, tables[t], precision)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(syms[t]))
+    np.testing.assert_array_equal(np.asarray(s.head), h0)
+    np.testing.assert_array_equal(np.asarray(s.ptr), p0)
+    assert int(jnp.sum(s.underflows)) == 0
+
+
+def test_rate_matches_entropy():
+    """Coding i.i.d. symbols approaches the source entropy (within ~1%)."""
+    lanes, n, precision = 4, 4000, 14
+    rng = np.random.default_rng(1)
+    probs = np.array([0.5, 0.25, 0.125, 0.0625, 0.0625], np.float32)
+    entropy = -np.sum(probs * np.log2(probs))
+    table = ans.probs_to_starts(
+        jnp.tile(jnp.asarray(probs), (lanes, 1)), precision)
+    syms = rng.choice(len(probs), size=(n, lanes), p=probs)
+
+    stack = ans.make_stack(lanes, capacity=n + 8)
+    bits0 = int(ans.stack_bits(stack))
+
+    def body(i, s):
+        return ans.push_with_table(s, table, syms_j[i], precision)
+
+    syms_j = jnp.asarray(syms, jnp.int32)
+    stack = jax.lax.fori_loop(0, n, body, stack)
+    bits = int(ans.stack_bits(stack)) - bits0
+    rate = bits / (n * lanes)
+    assert rate == pytest.approx(entropy, rel=0.02), (rate, entropy)
+
+
+def test_flatten_unflatten_roundtrip():
+    lanes = 3
+    rng = np.random.default_rng(2)
+    stack = ans.make_stack(lanes, capacity=32, key=jax.random.PRNGKey(3))
+    table = _random_starts_table(rng, lanes, 17, 12)
+    for _ in range(20):
+        sym = jnp.asarray(rng.integers(0, 17, lanes), jnp.int32)
+        stack = ans.push_with_table(stack, table, sym, 12)
+    msg, lengths = ans.flatten(stack)
+    stack2 = ans.unflatten(msg, lengths, capacity=32)
+    np.testing.assert_array_equal(np.asarray(stack2.head),
+                                  np.asarray(stack.head))
+    np.testing.assert_array_equal(np.asarray(stack2.ptr),
+                                  np.asarray(stack.ptr))
+    np.testing.assert_array_equal(np.asarray(stack2.buf),
+                                  np.asarray(stack.buf))
+
+
+def test_pop_underflow_is_counted():
+    stack = ans.make_stack(2, capacity=4)  # head == L, empty buffer
+    table = ans.probs_to_starts(
+        jnp.tile(jnp.asarray([0.5, 0.5], jnp.float32), (2, 1)), 8)
+    stack2, _ = ans.pop_with_table(stack, table, 8)
+    assert int(jnp.sum(stack2.underflows)) >= 0  # may or may not renorm
+    # Pop enough times to force underflow.
+    s = stack2
+    for _ in range(8):
+        s, _ = ans.pop_with_table(s, table, 8)
+    assert int(jnp.sum(s.underflows)) > 0
+
+
+def test_starts_table_invariants():
+    rng = np.random.default_rng(4)
+    for precision in (8, 12, 16):
+        for alphabet in (2, 3, 100, 257):
+            if alphabet >= (1 << precision) - alphabet:
+                continue
+            t = np.asarray(_random_starts_table(rng, 5, alphabet, precision))
+            assert (t[:, 0] == 0).all()
+            assert (t[:, -1] == (1 << precision)).all()
+            assert (np.diff(t.astype(np.int64), axis=1) >= 1).all()
+
+
+def test_jit_push_pop():
+    """The coder must be jittable end to end."""
+    lanes, precision = 4, 12
+    table = ans.probs_to_starts(
+        jnp.tile(jnp.asarray([0.7, 0.2, 0.1], jnp.float32), (lanes, 1)),
+        precision)
+
+    @jax.jit
+    def roundtrip(stack, sym):
+        s = ans.push_with_table(stack, table, sym, precision)
+        s, out = ans.pop_with_table(s, table, precision)
+        return s, out
+
+    stack = ans.make_stack(lanes, 8, key=jax.random.PRNGKey(7))
+    sym = jnp.asarray([0, 1, 2, 0], jnp.int32)
+    _, out = roundtrip(stack, sym)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(sym))

@@ -1,0 +1,185 @@
+"""BB-ANS end-to-end: exact roundtrip and rate ~= -ELBO (paper's key claims)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ans, bbans, discretize
+from repro.models import vae as vae_lib
+
+
+@pytest.fixture(scope="module")
+def small_cfg():
+    return vae_lib.VAEConfig(input_dim=36, hidden=24, latent=6,
+                             likelihood="bernoulli", lat_bits=10)
+
+
+@pytest.fixture(scope="module")
+def small_params(small_cfg):
+    return vae_lib.init(jax.random.PRNGKey(0), small_cfg)
+
+
+def test_discretize_prior_roundtrip():
+    lanes, lat_bits, prec = 8, 10, 16
+    stack = ans.make_stack(lanes, 64, key=jax.random.PRNGKey(1))
+    idx = jnp.asarray(
+        np.random.default_rng(0).integers(0, 1 << lat_bits, lanes), jnp.int32)
+    h0 = stack.head
+    s2 = discretize.push_prior(stack, idx, lat_bits, prec)
+    s3, out = discretize.pop_prior(s2, lat_bits, prec)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(idx))
+    np.testing.assert_array_equal(np.asarray(s3.head), np.asarray(h0))
+
+
+def test_discretize_posterior_roundtrip():
+    lanes, lat_bits, prec = 8, 12, 16
+    rng = np.random.default_rng(1)
+    mu = jnp.asarray(rng.normal(0, 1, lanes), jnp.float32)
+    sigma = jnp.asarray(rng.uniform(0.05, 2.0, lanes), jnp.float32)
+    stack = ans.make_stack(lanes, 64, key=jax.random.PRNGKey(2))
+    stack = ans.seed_stack(stack, jax.random.PRNGKey(3), 8)
+    # Pop (sample) then push must restore the stack exactly.
+    h0, p0 = np.asarray(stack.head), np.asarray(stack.ptr)
+    s2, idx = discretize.pop_posterior(stack, mu, sigma, lat_bits, prec)
+    assert (np.asarray(idx) >= 0).all()
+    assert (np.asarray(idx) < (1 << lat_bits)).all()
+    s3 = discretize.push_posterior(s2, idx, mu, sigma, lat_bits, prec)
+    np.testing.assert_array_equal(np.asarray(s3.head), h0)
+    np.testing.assert_array_equal(np.asarray(s3.ptr), p0)
+    assert int(jnp.sum(s3.underflows)) == 0
+
+
+def test_posterior_sampling_statistics():
+    """Popping clean bits through Q must produce samples distributed ~Q'.
+
+    The fixed-point CDF codes Q' = (1-eps) Q + eps P with eps =
+    2^(lat_bits - precision) (see discretize.py docstring), so the expected
+    sample std is sqrt((1-eps) sigma^2 + eps * 1) for a N(0,1) prior.
+    """
+    lanes, lat_bits, prec = 512, 10, 16
+    eps = 2.0 ** (lat_bits - prec)
+    mu_v, sig_v = 0.7, 0.31
+    mu = jnp.full((lanes,), mu_v, jnp.float32)
+    sigma = jnp.full((lanes,), sig_v, jnp.float32)
+    stack = ans.make_stack(lanes, 16, key=jax.random.PRNGKey(4))
+    stack = ans.seed_stack(stack, jax.random.PRNGKey(5), 8)
+    _, idx = discretize.pop_posterior(stack, mu, sigma, lat_bits, prec)
+    y = discretize.bucket_centre(idx, lat_bits)
+    exp_mean = (1 - eps) * mu_v
+    exp_std = float(np.sqrt((1 - eps) * sig_v ** 2 + eps *
+                            (1 + (1 - eps) * mu_v ** 2 - exp_mean ** 2)))
+    assert float(jnp.mean(y)) == pytest.approx(exp_mean, abs=0.06)
+    assert float(jnp.std(y)) == pytest.approx(exp_std, abs=0.05)
+
+
+def test_bbans_single_roundtrip(small_cfg, small_params):
+    lanes = 4
+    codec = vae_lib.make_codec(small_params, small_cfg)
+    rng = np.random.default_rng(2)
+    s = jnp.asarray(rng.integers(0, 2, (lanes, small_cfg.input_dim)),
+                    jnp.int32)
+    stack = ans.make_stack(lanes, 512, key=jax.random.PRNGKey(6))
+    stack = ans.seed_stack(stack, jax.random.PRNGKey(7), 64)
+    h0, p0 = np.asarray(stack.head), np.asarray(stack.ptr)
+    buf0 = np.asarray(stack.buf)
+
+    stack2 = bbans.append(codec, stack, s)
+    stack3, s_out = bbans.pop(codec, stack2)
+
+    np.testing.assert_array_equal(np.asarray(s_out), np.asarray(s))
+    # Full stack restoration (head, depth, and content below the watermark).
+    np.testing.assert_array_equal(np.asarray(stack3.head), h0)
+    np.testing.assert_array_equal(np.asarray(stack3.ptr), p0)
+    for l in range(lanes):
+        np.testing.assert_array_equal(np.asarray(stack3.buf)[l, :p0[l]],
+                                      buf0[l, :p0[l]])
+    assert int(jnp.sum(stack3.underflows)) == 0
+
+
+def test_bbans_chain_roundtrip(small_cfg, small_params):
+    """Chained encode of N datapoints then chained decode recovers all."""
+    lanes, n = 3, 5
+    codec = vae_lib.make_codec(small_params, small_cfg)
+    rng = np.random.default_rng(3)
+    data = jnp.asarray(rng.integers(0, 2, (n, lanes, small_cfg.input_dim)),
+                       jnp.int32)
+    stack = ans.make_stack(lanes, 2048, key=jax.random.PRNGKey(8))
+    stack = ans.seed_stack(stack, jax.random.PRNGKey(9), 64)
+
+    stack2 = bbans.append_batch(codec, stack, data)
+    assert int(jnp.sum(stack2.underflows)) == 0
+    stack3, out = bbans.pop_batch(codec, stack2, n)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(data))
+
+
+def _analytic_append_bits(cfg, params, s, y):
+    """Exact fixed-point cost of appending s given the sampled buckets y:
+    -log2 Q'(y|s) recovered, log2 P(y) + log2 p'(s|y) paid."""
+    mu, sigma = vae_lib.encode(params, cfg, s)
+    post_bits = 0.0
+    for d in range(cfg.latent):
+        f = discretize.posterior_starts_fn(
+            mu[:, d], sigma[:, d], cfg.lat_bits, cfg.precision)
+        freq = np.asarray(f(y[:, d] + 1) - f(y[:, d])).astype(np.float64)
+        post_bits += float(np.sum(cfg.precision - np.log2(freq)))
+    lik_bits = 0.0
+    yv = discretize.bucket_centre(y, cfg.lat_bits)
+    obs = vae_lib.decode(params, cfg, yv)
+    from repro.core.distributions import Bernoulli
+    total = 1 << cfg.obs_precision
+    for d in range(cfg.input_dim):
+        f1 = np.asarray(Bernoulli(obs[:, d], cfg.obs_precision)._freq1(),
+                        np.float64)
+        sd = np.asarray(s[:, d])
+        freq = np.where(sd == 1, f1, total - f1)
+        lik_bits += float(np.sum(cfg.obs_precision - np.log2(freq)))
+    prior_bits = s.shape[0] * cfg.latent * cfg.lat_bits
+    return lik_bits + prior_bits - post_bits
+
+
+def test_bbans_rate_matches_analytic_exactly(small_cfg, small_params):
+    """The coder's achieved length equals the fixed-point information
+    content to within ~1 bit/lane (ANS redundancy). This is the precise
+    form of the paper's 'rate ~= -ELBO' claim; the statistical form (over a
+    trained model + many images) is exercised by benchmarks/table2_rates."""
+    cfg, params = small_cfg, small_params
+    lanes = 8
+    codec = vae_lib.make_codec(params, cfg)
+    rng = np.random.default_rng(4)
+    s = jnp.asarray(rng.integers(0, 2, (lanes, cfg.input_dim)), jnp.int32)
+    stack = ans.make_stack(lanes, 4096, key=jax.random.PRNGKey(10))
+    stack = ans.seed_stack(stack, jax.random.PRNGKey(11), 64)
+
+    b0 = float(ans.stack_content_bits(stack))
+    st, y = codec.posterior_pop(stack, s)
+    st = codec.likelihood_push(st, y, s)
+    st = codec.prior_push(st, y)
+    achieved = float(ans.stack_content_bits(st)) - b0
+    expected = _analytic_append_bits(cfg, params, s, np.asarray(y))
+    assert achieved == pytest.approx(expected, abs=1.0 * lanes)
+
+
+def test_bbans_chain_rate_near_elbo(small_cfg, small_params):
+    """Chained rate lands near the continuous -ELBO (loose: untrained
+    model, finite chain; the trained-model ~1% check lives in benchmarks)."""
+    cfg, params = small_cfg, small_params
+    lanes, n = 8, 24
+    codec = vae_lib.make_codec(params, cfg)
+    rng = np.random.default_rng(4)
+    data = jnp.asarray(rng.integers(0, 2, (n, lanes, cfg.input_dim)),
+                       jnp.int32)
+    stack = ans.make_stack(lanes, 8192, key=jax.random.PRNGKey(10))
+    stack = ans.seed_stack(stack, jax.random.PRNGKey(11), 64)
+    bits_before = float(ans.stack_content_bits(stack))
+    stack2 = bbans.append_batch(codec, stack, data)
+    bits_after = float(ans.stack_content_bits(stack2))
+    rate = (bits_after - bits_before) / (n * lanes * cfg.input_dim)
+
+    keys = jax.random.split(jax.random.PRNGKey(12), 16)
+    elbos = jnp.stack([
+        vae_lib.elbo_bits_per_dim(params, cfg, k,
+                                  data.reshape(-1, cfg.input_dim))
+        for k in keys])
+    neg_elbo = float(jnp.mean(elbos))
+    assert rate == pytest.approx(neg_elbo, rel=0.15), (rate, neg_elbo)

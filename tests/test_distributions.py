@@ -1,0 +1,98 @@
+"""Coder tests for observation-model distributions."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ans
+from repro.core.distributions import (Bernoulli, BetaBinomial, Categorical,
+                                      FactoredCategorical,
+                                      beta_binomial_log_pmf)
+
+
+def _fresh(lanes, cap=64, seed=0):
+    s = ans.make_stack(lanes, cap, key=jax.random.PRNGKey(seed))
+    return ans.seed_stack(s, jax.random.PRNGKey(seed + 1), 8)
+
+
+def test_bernoulli_roundtrip():
+    lanes = 16
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(0, 3, lanes), jnp.float32)
+    sym = jnp.asarray(rng.integers(0, 2, lanes), jnp.int32)
+    d = Bernoulli(logits)
+    st0 = _fresh(lanes)
+    st1 = d.push(st0, sym)
+    st2, out = d.pop(st1)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(sym))
+    np.testing.assert_array_equal(np.asarray(st2.head), np.asarray(st0.head))
+
+
+def test_beta_binomial_roundtrip_and_pmf():
+    lanes = 8
+    rng = np.random.default_rng(1)
+    alpha = jnp.asarray(rng.uniform(0.3, 5.0, lanes), jnp.float32)
+    beta = jnp.asarray(rng.uniform(0.3, 5.0, lanes), jnp.float32)
+    d = BetaBinomial(alpha, beta, n=255)
+    sym = jnp.asarray(rng.integers(0, 256, lanes), jnp.int32)
+    st0 = _fresh(lanes)
+    st1 = d.push(st0, sym)
+    st2, out = d.pop(st1)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(sym))
+    np.testing.assert_array_equal(np.asarray(st2.head), np.asarray(st0.head))
+    # pmf sums to 1
+    ks = jnp.arange(256, dtype=jnp.float32)
+    lp = beta_binomial_log_pmf(ks[None], 255, alpha[:, None], beta[:, None])
+    total = jnp.exp(lp).sum(-1)
+    np.testing.assert_allclose(np.asarray(total), 1.0, rtol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), vocab=st.integers(300, 4000))
+def test_factored_categorical_roundtrip(seed, vocab):
+    """Large-vocab token coder: exact roundtrip through (chunk, offset)."""
+    lanes = 4
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(0, 2, (lanes, vocab)), jnp.float32)
+    sym = jnp.asarray(rng.integers(0, vocab, lanes), jnp.int32)
+    d = FactoredCategorical(logits, chunk_size=256)
+    st0 = _fresh(lanes, cap=64, seed=seed % 97)
+    st1 = d.push(st0, sym)
+    st2, out = d.pop(st1)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(sym))
+    np.testing.assert_array_equal(np.asarray(st2.head), np.asarray(st0.head))
+    np.testing.assert_array_equal(np.asarray(st2.ptr), np.asarray(st0.ptr))
+
+
+def test_factored_categorical_rate_matches_entropy():
+    """Factoring costs ~nothing: coded length ~ -log2 p(token)."""
+    lanes, vocab, n = 8, 1000, 150
+    rng = np.random.default_rng(3)
+    logits_np = rng.normal(0, 1.5, (lanes, vocab)).astype(np.float32)
+    logits = jnp.asarray(logits_np)
+    d = FactoredCategorical(logits, chunk_size=256)
+    logp = jax.nn.log_softmax(logits, -1)
+    st = _fresh(lanes, cap=n * 4 + 16, seed=5)
+    bits0 = float(ans.stack_content_bits(st))
+    expected = 0.0
+    for t in range(n):
+        sym_np = np.array([rng.choice(vocab, p=np.exp(np.asarray(logp)[l]))
+                           for l in range(lanes)])
+        sym = jnp.asarray(sym_np, jnp.int32)
+        expected += float(-jnp.sum(
+            jnp.take_along_axis(logp, sym[:, None], 1)) / jnp.log(2.0))
+        st = d.push(st, sym)
+    achieved = float(ans.stack_content_bits(st)) - bits0
+    assert achieved == pytest.approx(expected, rel=0.02), (achieved, expected)
+
+
+def test_categorical_large_alphabet_guard():
+    """Alphabets beyond the fixed-point budget must hard-fail (the
+    FactoredCategorical is the supported path)."""
+    lanes = 2
+    logits = jnp.zeros((lanes, 70000), jnp.float32)
+    d = Categorical(logits, precision=16)
+    with pytest.raises(ValueError):
+        d.push(_fresh(lanes), jnp.zeros(lanes, jnp.int32))

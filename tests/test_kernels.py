@@ -1,0 +1,149 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype/precision sweeps in
+interpret mode (deliverable c)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ans, discretize
+from repro.kernels.ans import ops as ans_ops, ref as ans_ref
+from repro.kernels.bucketize import ops as bk_ops, ref as bk_ref
+from repro.kernels.flash import ops as fl_ops, ref as fl_ref
+
+
+# ---------------------------------------------------------------------------
+# ANS push kernel
+# ---------------------------------------------------------------------------
+
+def _rand_symbol_stream(rng, steps, lanes, alphabet, precision):
+    starts = np.zeros((steps, lanes), np.uint32)
+    freqs = np.zeros((steps, lanes), np.uint32)
+    for t in range(steps):
+        probs = rng.dirichlet(np.ones(alphabet), size=lanes)
+        table = np.asarray(ans.probs_to_starts(
+            jnp.asarray(probs, jnp.float32), precision))
+        sym = rng.integers(0, alphabet, lanes)
+        starts[t] = table[np.arange(lanes), sym]
+        freqs[t] = table[np.arange(lanes), sym + 1] - starts[t]
+    return jnp.asarray(starts), jnp.asarray(freqs)
+
+
+@pytest.mark.parametrize("steps,lanes,alphabet,precision", [
+    (4, 8, 4, 12),
+    (16, 64, 17, 16),
+    (9, 130, 3, 8),     # lanes not a multiple of the tile
+    (32, 128, 256, 16),
+])
+def test_ans_push_kernel_matches_core(steps, lanes, alphabet, precision):
+    rng = np.random.default_rng(steps * 1000 + lanes)
+    starts, freqs = _rand_symbol_stream(rng, steps, lanes, alphabet,
+                                        precision)
+    stack = ans.make_stack(lanes, capacity=steps + 8,
+                           key=jax.random.PRNGKey(lanes))
+    out_kernel = ans_ops.push_many(stack, starts, freqs, precision)
+    out_ref = ans_ref.push_many_ref(stack, starts, freqs, precision)
+    np.testing.assert_array_equal(np.asarray(out_kernel.head),
+                                  np.asarray(out_ref.head))
+    np.testing.assert_array_equal(np.asarray(out_kernel.ptr),
+                                  np.asarray(out_ref.ptr))
+    np.testing.assert_array_equal(np.asarray(out_kernel.buf),
+                                  np.asarray(out_ref.buf))
+
+
+def test_ans_push_kernel_then_core_pop_roundtrip():
+    """Kernel-encoded stream decodes with the core library."""
+    rng = np.random.default_rng(7)
+    lanes, steps, alphabet, precision = 8, 12, 5, 12
+    probs = rng.dirichlet(np.ones(alphabet), size=lanes)
+    table = ans.probs_to_starts(jnp.asarray(probs, jnp.float32), precision)
+    syms = rng.integers(0, alphabet, (steps, lanes))
+    tab_np = np.asarray(table)
+    starts = jnp.asarray(tab_np[np.arange(lanes)[None], syms], jnp.uint32)
+    freqs = jnp.asarray(
+        tab_np[np.arange(lanes)[None], syms + 1] -
+        tab_np[np.arange(lanes)[None], syms], jnp.uint32)
+
+    stack = ans.make_stack(lanes, 32, key=jax.random.PRNGKey(3))
+    stack = ans_ops.push_many(stack, starts, freqs, precision)
+    for t in reversed(range(steps)):
+        stack, out = ans.pop_with_table(stack, table, precision)
+        np.testing.assert_array_equal(np.asarray(out), syms[t])
+
+
+# ---------------------------------------------------------------------------
+# Bucketize kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("lanes,lat_bits,precision", [
+    (8, 8, 16), (64, 10, 16), (200, 12, 16), (128, 6, 12),
+])
+def test_bucketize_kernel_matches_ref(lanes, lat_bits, precision):
+    rng = np.random.default_rng(lanes)
+    slot = jnp.asarray(rng.integers(0, 1 << precision, lanes), jnp.uint32)
+    mu = jnp.asarray(rng.normal(0, 1.2, lanes), jnp.float32)
+    sigma = jnp.asarray(rng.uniform(0.05, 2.0, lanes), jnp.float32)
+    idx_k, st_k, fr_k = bk_ops.bucketize(slot, mu, sigma, lat_bits,
+                                         precision)
+    idx_r, st_r, fr_r = bk_ref.bucketize_ref(slot, mu, sigma, lat_bits,
+                                             precision)
+    np.testing.assert_array_equal(np.asarray(idx_k), np.asarray(idx_r))
+    np.testing.assert_array_equal(np.asarray(st_k), np.asarray(st_r))
+    np.testing.assert_array_equal(np.asarray(fr_k), np.asarray(fr_r))
+
+
+def test_bucketize_kernel_matches_discretize_pop():
+    """Kernel output == what core.discretize.pop_posterior decodes."""
+    lanes, lat_bits, prec = 16, 10, 16
+    rng = np.random.default_rng(5)
+    mu = jnp.asarray(rng.normal(0, 1, lanes), jnp.float32)
+    sigma = jnp.asarray(rng.uniform(0.1, 1.5, lanes), jnp.float32)
+    stack = ans.make_stack(lanes, 16, key=jax.random.PRNGKey(9))
+    slot = ans.peek(stack, prec)
+    idx_k, _, _ = bk_ops.bucketize(slot, mu, sigma, lat_bits, prec)
+    _, idx_core = discretize.pop_posterior(stack, mu, sigma, lat_bits,
+                                           prec)
+    np.testing.assert_array_equal(np.asarray(idx_k), np.asarray(idx_core))
+
+
+# ---------------------------------------------------------------------------
+# Flash attention kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sq,sk,d,causal,window,dtype", [
+    (64, 64, 16, True, 0, jnp.float32),
+    (128, 128, 32, True, 40, jnp.float32),
+    (96, 160, 16, False, 0, jnp.float32),
+    (100, 84, 8, True, 0, jnp.float32),     # non-multiples of block
+    (64, 64, 16, True, 0, jnp.bfloat16),
+])
+def test_flash_kernel_matches_sdpa(sq, sk, d, causal, window, dtype):
+    rng = np.random.default_rng(sq + sk)
+    bh = 3
+    q = jnp.asarray(rng.normal(0, 1, (bh, sq, d)), dtype)
+    k = jnp.asarray(rng.normal(0, 1, (bh, sk, d)), dtype)
+    v = jnp.asarray(rng.normal(0, 1, (bh, sk, d)), dtype)
+    from repro.kernels.flash import kernel as K
+    out = K.flash_fwd(q, k, v, causal=causal, window=window,
+                      block_q=32, block_k=32)
+    ref = fl_ref.flash_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_ops_gqa_layout():
+    """Model-layout wrapper (GQA expand) vs the model's exact sdpa."""
+    from repro.models import attention
+    rng = np.random.default_rng(11)
+    b, s, hq, hkv, dh = 2, 64, 4, 2, 16
+    q = jnp.asarray(rng.normal(0, 1, (b, s, hq, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (b, s, hkv, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (b, s, hkv, dh)), jnp.float32)
+    out = fl_ops.flash_attention(q, k, v, causal=True, block_q=32,
+                                 block_k=32)
+    mask = attention._mask(s, s, True, None)
+    ref = attention.sdpa(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)

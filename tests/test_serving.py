@@ -1,0 +1,172 @@
+"""Serving + LM compression: prefill==forward, engine roundtrips,
+LM-ANS exact lossless roundtrip, LatentLM bits-back roundtrip."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base as cfg_base
+from repro.core import ans, bbans, lm_codec
+from repro.models import latent_lm, transformer
+from repro.serve.engine import Engine
+
+
+def _cfg(arch="qwen2-0.5b", vocab=300):
+    return dataclasses.replace(
+        cfg_base.reduced(cfg_base.get(arch)), vocab=vocab)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "rwkv6-3b", "hymba-1.5b"])
+def test_prefill_matches_forward_and_decode_continues(arch):
+    """prefill logits == forward logits at the last position, and decoding
+    after prefill == decoding from scratch."""
+    cfg = _cfg(arch)
+    params = transformer.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    b, s, extra = 2, 6, 3
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (b, s + extra)),
+                       jnp.int32)
+
+    logits_pre, state = transformer.prefill(
+        params, cfg, {"tokens": toks[:, :s]}, max_len=s + extra)
+    full, _ = transformer.forward(params, cfg, toks[:, :s])
+    np.testing.assert_allclose(np.asarray(logits_pre[:, 0], np.float32),
+                               np.asarray(full[:, -1], np.float32),
+                               rtol=0.1, atol=0.1)
+    assert int(state["cache_len"]) == s
+
+    # Continue decoding; compare against teacher-forced forward.
+    fullx, _ = transformer.forward(params, cfg, toks)
+    for t in range(s, s + extra):
+        logits_t, state = transformer.decode_step(
+            params, cfg, toks[:, t:t + 1], state)
+        np.testing.assert_allclose(
+            np.asarray(logits_t[:, 0], np.float32),
+            np.asarray(fullx[:, t], np.float32), rtol=0.15, atol=0.15)
+
+
+def test_engine_generate_deterministic():
+    cfg = _cfg()
+    params = transformer.init(jax.random.PRNGKey(1), cfg)
+    eng = Engine(params, cfg, max_len=32, jit=False)
+    prompt = {"tokens": jnp.asarray([[1, 2, 3, 4]], jnp.int32)}
+    out1 = eng.generate(prompt, 5)
+    out2 = eng.generate(prompt, 5)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    assert out1.shape == (1, 5)
+
+
+def test_lm_ans_roundtrip_exact():
+    """Compress token streams with the LM; decompression is bit-exact."""
+    cfg = _cfg(vocab=300)
+    params = transformer.init(jax.random.PRNGKey(2), cfg)
+    rng = np.random.default_rng(2)
+    lanes, n = 3, 12
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (lanes, n)), jnp.int32)
+
+    eng = Engine(params, cfg, max_len=n, jit=False)
+    msg, lengths, bits = eng.compress(toks)
+    out = eng.decompress(msg, lengths, n)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(toks))
+    assert bits > 0
+
+
+def test_lm_ans_rate_matches_cross_entropy():
+    """Achieved bits == model cross-entropy (within ~2% + constant)."""
+    cfg = _cfg(vocab=300)
+    params = transformer.init(jax.random.PRNGKey(3), cfg)
+    rng = np.random.default_rng(3)
+    lanes, n = 4, 40
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (lanes, n)), jnp.int32)
+    stack = ans.make_stack(lanes, 4 * n + 16, key=jax.random.PRNGKey(4))
+    b0 = float(ans.stack_content_bits(stack))
+    stack = lm_codec.encode_tokens(params, cfg, toks, stack)
+    achieved = float(ans.stack_content_bits(stack)) - b0
+    expected = lm_codec.expected_bits(params, cfg, toks)
+    assert achieved == pytest.approx(expected, rel=0.02), (achieved,
+                                                           expected)
+
+
+def test_latent_lm_bits_back_roundtrip():
+    """BB-ANS over sequences with a transformer backbone: exact roundtrip
+    and stack restoration (the paper's scheme on an assigned arch)."""
+    bb = _cfg("smollm-360m", vocab=200)
+    cfg = latent_lm.LatentLMConfig(backbone=bb, latent_dim=4, n_prefix=1,
+                                   lat_bits=8)
+    params = latent_lm.init(jax.random.PRNGKey(5), cfg)
+    rng = np.random.default_rng(5)
+    lanes, n, n_seqs = 2, 10, 3
+    data = jnp.asarray(rng.integers(0, bb.vocab, (n_seqs, lanes, n)),
+                       jnp.int32)
+    codec = latent_lm.make_codec(params, cfg, seq_len=n)
+    stack = ans.make_stack(lanes, 4096, key=jax.random.PRNGKey(6))
+    stack = ans.seed_stack(stack, jax.random.PRNGKey(7), 64)
+
+    stack2 = bbans.append_batch(codec, stack, data, scan=False)
+    assert int(jnp.sum(stack2.underflows)) == 0
+    stack3, out = bbans.pop_batch(codec, stack2, n_seqs, scan=False)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(data))
+    np.testing.assert_array_equal(np.asarray(stack3.head),
+                                  np.asarray(stack.head))
+
+
+def test_latent_lm_elbo_finite_and_trainable():
+    bb = _cfg("smollm-360m", vocab=64)
+    cfg = latent_lm.LatentLMConfig(backbone=bb, latent_dim=4, n_prefix=1)
+    params = latent_lm.init(jax.random.PRNGKey(8), cfg)
+    toks = jnp.asarray(
+        np.random.default_rng(8).integers(0, 64, (4, 12)), jnp.int32)
+    l, m = latent_lm.loss(params, cfg, jax.random.PRNGKey(9), toks)
+    assert jnp.isfinite(l)
+    grads = jax.grad(lambda p: latent_lm.loss(p, cfg,
+                                              jax.random.PRNGKey(9),
+                                              toks)[0])(params)
+    gn = sum(float(jnp.sum(jnp.abs(g)))
+             for g in jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+
+
+def test_int8_kv_decode_close_to_bf16():
+    """int8 KV cache (hillclimb 3): decode logits within quantization
+    tolerance of the bf16 path, exact same control flow."""
+    cfg16 = _cfg("qwen2-0.5b")
+    cfg8 = dataclasses.replace(cfg16, kv_cache_dtype="int8")
+    params = transformer.init(jax.random.PRNGKey(11), cfg16)
+    rng = np.random.default_rng(11)
+    b, s = 2, 10
+    toks = jnp.asarray(rng.integers(0, cfg16.vocab, (b, s)), jnp.int32)
+
+    def run(cfg):
+        state = transformer.init_decode_state(cfg, b, max_len=s)
+        outs = []
+        for t in range(s):
+            logits, state = transformer.decode_step(
+                params, cfg, toks[:, t:t + 1], state)
+            outs.append(logits[:, 0])
+        return jnp.stack(outs, 1)
+
+    l16 = np.asarray(run(cfg16), np.float32)
+    l8 = np.asarray(run(cfg8), np.float32)
+    # int8 KV error is small relative to logit scale
+    scale = np.abs(l16).max()
+    assert np.abs(l8 - l16).max() < 0.08 * scale, np.abs(l8 - l16).max()
+
+
+def test_int8_kv_prefill_then_decode():
+    """Prefill fills a quantized cache that decode continues from."""
+    cfg = dataclasses.replace(_cfg("qwen2-0.5b"), kv_cache_dtype="int8")
+    params = transformer.init(jax.random.PRNGKey(12), cfg)
+    rng = np.random.default_rng(12)
+    b, s = 2, 6
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (b, s + 2)), jnp.int32)
+    logits, state = transformer.prefill(params, cfg,
+                                        {"tokens": toks[:, :s]},
+                                        max_len=s + 2)
+    assert state["k"].dtype == jnp.int8
+    for t in range(s, s + 2):
+        logits, state = transformer.decode_step(params, cfg,
+                                                toks[:, t:t + 1], state)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
