@@ -6,12 +6,12 @@ amortized). Emits CSV rows: image_index, cumulative_bpd, window_bpd.
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
-from repro.core import ans, bbans
+from repro import codecs
+from repro.core import ans
 from repro.data import synthetic_mnist
 from repro.models import vae as vae_lib
 
@@ -25,17 +25,16 @@ def run(n_images: int = 480, lanes: int = 16, train_steps: int = 1200,
     n_chain = n_images // lanes
     data = jnp.asarray(imgs[:n_chain * lanes].reshape(n_chain, lanes, -1),
                        jnp.int32)
-    codec = vae_lib.make_codec(params, cfg)
-    stack = ans.make_stack(lanes, n_chain * 256 + 512,
-                           key=jax.random.PRNGKey(5))
-    stack = ans.seed_stack(stack, jax.random.PRNGKey(6), 32)
+    codec = vae_lib.make_bb_codec(params, cfg)
+    stack = codecs.fresh_stack(lanes, n_chain * 256 + 512, seed=5,
+                               init_chunks=32)
 
     rows = []
     bits_prev = float(ans.stack_content_bits(stack))
     bits0 = bits_prev
     per_step = []
     for i in range(n_chain):
-        stack = bbans.append(codec, stack, data[i])
+        stack = codec.push(stack, data[i])
         bits_now = float(ans.stack_content_bits(stack))
         step_bpd = (bits_now - bits_prev) / (lanes * cfg.input_dim)
         per_step.append(step_bpd)

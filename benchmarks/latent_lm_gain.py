@@ -18,8 +18,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import codecs
 from repro.configs import base as cfg_base
-from repro.core import ans, bbans, lm_codec
+from repro.core import lm_codec
 from repro.data import tokens as tok_data
 from repro.models import latent_lm, transformer
 from repro.optim import adamw
@@ -94,13 +95,14 @@ def run(train_steps: int = 300, seq_len: int = 32, seed: int = 0):
     lanes, n_chain = 4, 4
     chain = jnp.asarray(test[:lanes * n_chain].reshape(n_chain, lanes,
                                                        seq_len))
-    codec = latent_lm.make_codec(lparams, lcfg, seq_len=seq_len)
-    stack = ans.make_stack(lanes, 8192, key=jax.random.PRNGKey(9))
-    stack = ans.seed_stack(stack, jax.random.PRNGKey(10), 64)
-    b0 = float(ans.stack_content_bits(stack))
-    stack = bbans.append_batch(codec, stack, chain, scan=False)
-    bb_rate = (float(ans.stack_content_bits(stack)) - b0) / chain.size
-    stack, out = bbans.pop_batch(codec, stack, n_chain, scan=False)
+    codec = codecs.Chained(
+        latent_lm.make_bb_codec(lparams, lcfg, seq_len=seq_len),
+        n_chain, scan=False)
+    blob, info = codecs.compress(codec, chain, lanes=lanes, seed=9,
+                                 init_chunks=64, capacity=8192,
+                                 with_info=True)
+    bb_rate = info["net_bits"] / chain.size
+    out = codecs.decompress(codec, blob)
     exact = bool(jnp.array_equal(out, chain))
 
     return [{

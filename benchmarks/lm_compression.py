@@ -17,8 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import codecs
 from repro.configs import base as cfg_base
-from repro.core import ans, lm_codec
 from repro.data import pipeline, tokens as tok_data
 from repro.serve.engine import Engine
 from repro.train import trainer
@@ -47,10 +47,10 @@ def run(train_steps: int = 250, seed: int = 0):
     toks = jnp.asarray(np.stack([corpus[s:s + n] for s in start]),
                        jnp.int32)
     eng = Engine(state.params, cfg, max_len=n, jit=False)
-    msg, lengths, bits = eng.compress(toks)
-    out = eng.decompress(msg, lengths, n)
+    blob = eng.compress(toks)
+    out = eng.decompress(blob, n)
     assert bool(jnp.array_equal(out, toks)), "lossless violated"
-    achieved_bpt = bits / toks.size
+    achieved_bpt = codecs.blob_info(blob)["payload_bits"] / toks.size
 
     payload = np.asarray(toks, np.uint8).tobytes()
     gzip_bpt = len(gzip.compress(payload, 9)) * 8 / toks.size

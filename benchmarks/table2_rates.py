@@ -10,12 +10,11 @@ from __future__ import annotations
 
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
-from repro.core import ans, bbans
+from repro import codecs
 from repro.data import synthetic_mnist
 from repro.models import vae as vae_lib
 
@@ -42,23 +41,19 @@ def run(n_images: int = 512, lanes: int = 32, train_steps: int = 1500,
             test_imgs[:n_chain * lanes].reshape(n_chain, lanes, -1),
             jnp.int32)
 
-        codec = vae_lib.make_codec(params, cfg)
+        codec = codecs.Chained(vae_lib.make_bb_codec(params, cfg), n_chain)
         bits_per_img = 4096 if likelihood == "bernoulli" else 16384
         cap = int(n_chain * bits_per_img / 16) + 256
-        stack = ans.make_stack(lanes, cap, key=jax.random.PRNGKey(9))
-        stack = ans.seed_stack(stack, jax.random.PRNGKey(10), 32)
 
         t0 = time.perf_counter()
-        bits0 = float(ans.stack_content_bits(stack))
-        stack2 = bbans.append_batch(codec, stack, data)
+        blob, info = codecs.compress(codec, data, lanes=lanes, seed=9,
+                                     capacity=cap, with_info=True)
         enc_s = time.perf_counter() - t0
-        assert int(jnp.sum(stack2.underflows)) == 0, "dirty bits consumed"
-        bits1 = float(ans.stack_content_bits(stack2))
-        rate = (bits1 - bits0) / data.size * lanes / lanes
+        rate = info["net_bits"] / data.size
 
         # verify losslessness on the chain
         t1 = time.perf_counter()
-        _, decoded = bbans.pop_batch(codec, stack2, n_chain)
+        decoded = codecs.decompress(codec, blob)
         dec_s = time.perf_counter() - t1
         exact = bool(jnp.array_equal(decoded, data))
 

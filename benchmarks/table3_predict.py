@@ -11,11 +11,10 @@ from __future__ import annotations
 
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 
 from benchmarks import common
-from repro.core import ans, bbans
+from repro import codecs
 from repro.data import synthetic_mnist
 from repro.models import vae as vae_lib
 
@@ -33,13 +32,11 @@ def run(train_steps: int = 1500, n_images: int = 256, lanes: int = 16,
         n_chain = n_images // lanes
         data = jnp.asarray(
             imgs[:n_chain * lanes].reshape(n_chain, lanes, -1), jnp.int32)
-        codec = vae_lib.make_codec(params, cfg)
-        stack = ans.make_stack(lanes, n_chain * 256 + 512,
-                               key=jax.random.PRNGKey(2))
-        stack = ans.seed_stack(stack, jax.random.PRNGKey(3), 32)
-        b0 = float(ans.stack_content_bits(stack))
-        stack = bbans.append_batch(codec, stack, data)
-        measured = (float(ans.stack_content_bits(stack)) - b0) / data.size
+        codec = codecs.Chained(vae_lib.make_bb_codec(params, cfg), n_chain)
+        _, info = codecs.compress(codec, data, lanes=lanes, seed=2,
+                                  capacity=n_chain * 256 + 512,
+                                  with_info=True)
+        measured = info["net_bits"] / data.size
         out.append({"model": name, "predicted_bpd": neg_elbo,
                     "measured_bpd": measured,
                     "gap_pct": 100 * (measured - neg_elbo) /

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import train_vae
-from repro.core import ans, bbans
+from repro import codecs
 from repro.data import synthetic_mnist
 from repro.models import vae as vae_lib
 from repro.optim import adamw
@@ -63,20 +63,18 @@ def main():
         print(f"trained 400 steps with {restarts} simulated node failures"
               f" (restart/restore exercised)")
 
-    # Deploy: compress a fresh stream.
+    # Deploy: compress a fresh stream through the one-call container.
     test, _ = synthetic_mnist.load("test", 64, 0)
     test = synthetic_mnist.binarize(test, 1)
     data = jnp.asarray(test.reshape(4, 16, -1), jnp.int32)
-    codec = vae_lib.make_codec(state["params"], cfg)
-    stack = ans.seed_stack(ans.make_stack(16, 4096,
-                                          key=jax.random.PRNGKey(2)),
-                           jax.random.PRNGKey(3), 32)
-    b0 = float(ans.stack_content_bits(stack))
-    stack = bbans.append_batch(codec, stack, data)
-    rate = (float(ans.stack_content_bits(stack)) - b0) / data.size
-    stack, out = bbans.pop_batch(codec, stack, 4)
+    codec = codecs.Chained(vae_lib.make_bb_codec(state["params"], cfg), 4)
+    blob, info = codecs.compress(codec, data, lanes=16, seed=2,
+                                 with_info=True)
+    rate = info["net_bits"] / data.size
+    out = codecs.decompress(codec, blob)
     assert bool(jnp.array_equal(out, data))
-    print(f"deployed codec: {rate:.4f} bits/dim, lossless verified")
+    print(f"deployed codec: {rate:.4f} bits/dim "
+          f"({len(blob)} wire bytes), lossless verified")
 
 if __name__ == "__main__":
     main()

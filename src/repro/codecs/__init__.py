@@ -1,0 +1,38 @@
+"""``repro.codecs`` - the composable coding API.
+
+One abstraction (``Codec``: push/pop exact inverses over an ANS stack),
+leaf codecs wrapping ``core.distributions`` / ``core.discretize``,
+combinators that build structured codecs out of smaller ones, and a
+one-call container format:
+
+    blob = codecs.compress(codec, data, lanes=16, seed=0)
+    data = codecs.decompress(codec, blob)
+
+The container owns stack sizing (grow-and-retry on overflow), clean-bit
+seeding, and flatten/unflatten framing, so callers never touch
+``make_stack``/``seed_stack`` directly.
+
+Any latent-variable model plugs in via ``BBANS(prior, likelihood,
+posterior)`` (paper Table 1); hierarchical models via ``BitSwap``.
+"""
+
+from repro.core.codec import Codec, FnCodec
+from repro.core.distributions import (Bernoulli, BetaBinomial, Categorical,
+                                      FactoredCategorical)
+from repro.codecs.leaves import (DiscretizedGaussian, DiscretizedLogistic,
+                                 PointwiseCDF, Uniform)
+from repro.codecs.combinators import (BBANS, BitSwap, Chained, Repeat,
+                                      Serial, Shaped, TreeCodec)
+from repro.codecs.container import (blob_info, compress, decompress,
+                                    fresh_stack)
+
+__all__ = [
+    "Codec", "FnCodec",
+    # leaves
+    "Bernoulli", "BetaBinomial", "Categorical", "FactoredCategorical",
+    "DiscretizedGaussian", "DiscretizedLogistic", "PointwiseCDF", "Uniform",
+    # combinators
+    "BBANS", "BitSwap", "Chained", "Repeat", "Serial", "Shaped", "TreeCodec",
+    # container
+    "compress", "decompress", "blob_info", "fresh_stack",
+]

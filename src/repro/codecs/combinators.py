@@ -1,0 +1,268 @@
+"""Codec combinators: structured codecs out of smaller ones.
+
+Every combinator preserves the push/pop exact-inverse contract by
+construction: a composite push is a sequence of component pushes, and
+the composite pop runs the component pops in exactly the reverse order
+(LIFO discipline - the property BB-ANS chaining rests on).
+
+  * ``Serial``    - a fixed tuple of heterogeneous codecs.
+  * ``Repeat``    - one codec per position of a [lanes, n] array
+                    (``lax.fori_loop``-driven, jittable).
+  * ``Shaped``    - present a flat [lanes, k] codec as [lanes, *shape].
+  * ``TreeCodec`` - a pytree of codecs coding a matching pytree symbol.
+  * ``Chained``   - the BB-ANS *chain* (paper section 2.3): datapoint
+                    t's compressed stack is datapoint t+1's extra
+                    information.
+  * ``BBANS``     - the paper's Table 1 as a combinator over (prior,
+                    likelihood, posterior); subsumes the legacy six-hook
+                    ``core.bbans.BBANSCodec``.
+  * ``BitSwap``   - hierarchical multi-layer latents with interleaved
+                    pop/push (Kingma et al., 2019), so initial clean
+                    bits are needed for one layer only.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ans
+from repro.core.codec import Codec
+
+
+@dataclasses.dataclass(frozen=True)
+class Serial(Codec):
+    """Code a tuple of symbols with a tuple of codecs.
+
+    ``push`` runs components in *reverse* so that ``pop`` yields them in
+    natural order.
+    """
+
+    codecs: Tuple[Codec, ...]
+
+    def __init__(self, codecs: Sequence[Codec]):
+        object.__setattr__(self, "codecs", tuple(codecs))
+
+    def push(self, stack: ans.ANSStack, x: Sequence[Any]) -> ans.ANSStack:
+        if len(x) != len(self.codecs):
+            raise ValueError(f"Serial: {len(self.codecs)} codecs, "
+                             f"{len(x)} symbols")
+        for codec, xi in reversed(list(zip(self.codecs, x))):
+            stack = codec.push(stack, xi)
+        return stack
+
+    def pop(self, stack: ans.ANSStack) -> Tuple[ans.ANSStack, Tuple]:
+        out = []
+        for codec in self.codecs:
+            stack, xi = codec.pop(stack)
+            out.append(xi)
+        return stack, tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class Repeat(Codec):
+    """Code a [lanes, n] array one position at a time.
+
+    ``codec_fn(d)`` returns the leaf codec for position ``d`` (it may
+    close over per-position parameters, e.g. ``mu[:, d]``); with
+    ``scan=True`` the loop is a ``lax.fori_loop`` and ``codec_fn`` must
+    be traceable with a traced index. ``scan=False`` runs a Python loop
+    for codec_fns that drive jitted network steps from Python.
+    """
+
+    codec_fn: Callable[[Any], Codec]
+    n: int
+    out_dtype: Any = jnp.int32
+    scan: bool = True
+
+    def push(self, stack: ans.ANSStack, x: jnp.ndarray) -> ans.ANSStack:
+        n, fn = self.n, self.codec_fn
+        if not self.scan:
+            for d in reversed(range(n)):
+                stack = fn(d).push(stack, x[:, d])
+            return stack
+
+        def body(k, stack):
+            d = n - 1 - k
+            return fn(d).push(stack, x[:, d])
+
+        return jax.lax.fori_loop(0, n, body, stack)
+
+    def pop(self, stack: ans.ANSStack) -> Tuple[ans.ANSStack, jnp.ndarray]:
+        n, fn = self.n, self.codec_fn
+        if not self.scan:
+            cols = []
+            for d in range(n):
+                stack, v = fn(d).pop(stack)
+                cols.append(v)
+            return stack, jnp.stack(cols, axis=1).astype(self.out_dtype)
+
+        def body(d, carry):
+            stack, out = carry
+            stack, v = fn(d).pop(stack)
+            return stack, out.at[:, d].set(v.astype(self.out_dtype))
+
+        out0 = jnp.zeros((stack.lanes, n), self.out_dtype)
+        return jax.lax.fori_loop(0, n, body, (stack, out0))
+
+
+@dataclasses.dataclass(frozen=True)
+class Shaped(Codec):
+    """View a codec over flat [lanes, k] symbols as [lanes, *shape]."""
+
+    inner: Codec
+    shape: Tuple[int, ...]
+
+    def push(self, stack: ans.ANSStack, x: jnp.ndarray) -> ans.ANSStack:
+        return self.inner.push(stack, x.reshape(x.shape[0], -1))
+
+    def pop(self, stack: ans.ANSStack) -> Tuple[ans.ANSStack, jnp.ndarray]:
+        stack, flat = self.inner.pop(stack)
+        return stack, flat.reshape((flat.shape[0],) + tuple(self.shape))
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeCodec(Codec):
+    """Code a pytree symbol with a matching pytree of codecs."""
+
+    tree: Any  # pytree whose leaves are Codecs
+
+    def _parts(self, x: Any):
+        leaves, treedef = jax.tree_util.tree_flatten(
+            self.tree, is_leaf=lambda c: isinstance(c, Codec))
+        xs = treedef.flatten_up_to(x) if x is not None else None
+        return leaves, treedef, xs
+
+    def push(self, stack: ans.ANSStack, x: Any) -> ans.ANSStack:
+        leaves, _, xs = self._parts(x)
+        for codec, xi in reversed(list(zip(leaves, xs))):
+            stack = codec.push(stack, xi)
+        return stack
+
+    def pop(self, stack: ans.ANSStack) -> Tuple[ans.ANSStack, Any]:
+        leaves, treedef, _ = self._parts(None)
+        out = []
+        for codec in leaves:
+            stack, xi = codec.pop(stack)
+            out.append(xi)
+        return stack, treedef.unflatten(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class Chained(Codec):
+    """Chain ``inner`` over a leading [n, ...] axis (paper section 2.3).
+
+    Each datapoint's compressed stack is the next one's extra
+    information; decode pops in reverse and returns natural order.
+    ``scan=False`` uses Python loops (required for codecs that drive
+    jit-compiled network steps from Python - the lm_codec determinism
+    contract).
+    """
+
+    inner: Codec
+    n: int
+    scan: bool = True
+
+    def push(self, stack: ans.ANSStack, data: Any) -> ans.ANSStack:
+        inner = self.inner
+        for leaf in jax.tree_util.tree_leaves(data):
+            if leaf.shape[0] != self.n:
+                raise ValueError(
+                    f"Chained(n={self.n}): data leading axis is "
+                    f"{leaf.shape[0]} - a mismatch would silently code "
+                    "the wrong number of datapoints")
+        if self.scan:
+            def body(stack, s):
+                return inner.push(stack, s), None
+
+            stack, _ = jax.lax.scan(body, stack, data)
+            return stack
+        for i in range(self.n):
+            s_i = jax.tree_util.tree_map(lambda x: x[i], data)
+            stack = inner.push(stack, s_i)
+        return stack
+
+    def pop(self, stack: ans.ANSStack) -> Tuple[ans.ANSStack, Any]:
+        inner, n = self.inner, self.n
+        if self.scan:
+            def body(stack, _):
+                stack, s = inner.pop(stack)
+                return stack, s
+
+            stack, rev = jax.lax.scan(body, stack, None, length=n)
+            return stack, jax.tree_util.tree_map(
+                lambda x: jnp.flip(x, axis=0), rev)
+        outs = []
+        for _ in range(n):
+            stack, s = inner.pop(stack)
+            outs.append(s)
+        return stack, jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs, axis=0), *reversed(outs))
+
+
+@dataclasses.dataclass(frozen=True)
+class BBANS(Codec):
+    """Bits back with ANS (paper Table 1) as a codec combinator.
+
+    ``prior`` is a Codec over the latent ``y``; ``likelihood(y)`` and
+    ``posterior(s)`` are functions returning Codecs over the data ``s``
+    and latent ``y`` respectively. ``push`` nets -ELBO(s) bits:
+
+        pop  y ~ Q(y|s)      (get bits back)
+        push s ~ p(s|y)      (pay -log p(s|y))
+        push y ~ p(y)        (pay -log p(y))
+    """
+
+    prior: Codec
+    likelihood: Callable[[Any], Codec]
+    posterior: Callable[[Any], Codec]
+
+    def push(self, stack: ans.ANSStack, s: Any) -> ans.ANSStack:
+        stack, y = self.posterior(s).pop(stack)
+        stack = self.likelihood(y).push(stack, s)
+        return self.prior.push(stack, y)
+
+    def pop(self, stack: ans.ANSStack) -> Tuple[ans.ANSStack, Any]:
+        stack, y = self.prior.pop(stack)
+        stack, s = self.likelihood(y).pop(stack)
+        stack = self.posterior(s).push(stack, y)
+        return stack, s
+
+
+@dataclasses.dataclass(frozen=True)
+class BitSwap(Codec):
+    """Hierarchical bits-back with interleaved pop/push (Bit-Swap).
+
+    For a Markov latent hierarchy s <- z_1 <- ... <- z_L, ``layers`` is
+    a bottom-up tuple of ``(posterior_fn, likelihood_fn)`` pairs where
+    layer l's context is the variable below it (``s`` for l=1, else
+    ``z_{l-1}``): ``posterior_fn(ctx)`` is a Codec over ``z_l`` and
+    ``likelihood_fn(z_l)`` a Codec over the context. ``prior`` codes
+    ``z_L``. Interleaving (pop z_l, immediately push the level below)
+    bounds the transient clean-bit demand by *one* layer's posterior
+    instead of the sum over layers - the Bit-Swap advantage (Kingma,
+    Abbeel & Ho, 2019). With one layer this is exactly ``BBANS``.
+    """
+
+    prior: Codec
+    layers: Tuple[Tuple[Callable[[Any], Codec],
+                        Callable[[Any], Codec]], ...]
+
+    def push(self, stack: ans.ANSStack, s: Any) -> ans.ANSStack:
+        ctx = s
+        for posterior_fn, likelihood_fn in self.layers:
+            stack, z = posterior_fn(ctx).pop(stack)
+            stack = likelihood_fn(z).push(stack, ctx)
+            ctx = z
+        return self.prior.push(stack, ctx)
+
+    def pop(self, stack: ans.ANSStack) -> Tuple[ans.ANSStack, Any]:
+        stack, z = self.prior.pop(stack)
+        for posterior_fn, likelihood_fn in reversed(self.layers):
+            stack, ctx = likelihood_fn(z).pop(stack)
+            stack = posterior_fn(ctx).push(stack, z)
+            z = ctx
+        return stack, z

@@ -1,0 +1,197 @@
+"""One-call container format: ``compress(codec, data) -> bytes``.
+
+The container owns everything callers used to hand-thread:
+
+  * stack sizing      - starts from a heuristic capacity and
+                        grows-and-retries on overflow (detected via the
+                        ``ANSStack.overflows`` counter, never silent);
+  * clean-bit seeding - deterministic from ``seed`` (paper section 3.2:
+                        the first posterior pops consume seeded bits
+                        instead of underflowing); on underflow the
+                        supply is grown and the encode retried;
+  * framing           - a self-describing header (magic, version,
+                        precision, lanes, per-lane lengths) followed by
+                        the concatenated per-lane 16-bit chunk streams,
+                        so ``decompress`` needs only the codec and the
+                        blob.
+
+Wire layout (little-endian):
+
+    offset  size        field
+    0       4           magic  b"BBX1"
+    4       1           version (=1)
+    5       1           precision (informational)
+    6       2           flags (reserved, 0)
+    8       4           lanes (u32)
+    12      4*lanes     lengths (u32 each, in 16-bit chunks, >= 2)
+    ...     2*sum(len)  payload: lane l's [head_hi, head_lo, chunks...]
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ans
+from repro.core.codec import Codec
+
+_MAGIC = b"BBX1"
+_VERSION = 1
+_HEADER = struct.Struct("<4sBBHI")
+
+
+def fresh_stack(lanes: int, capacity: int, seed: Optional[int] = 0,
+                init_chunks: int = 0) -> ans.ANSStack:
+    """A ready-to-code stack: random heads + ``init_chunks`` clean
+    16-bit chunks per lane, all derived deterministically from ``seed``.
+
+    ``seed=None`` gives the deterministic cold stack (head = 2^16, no
+    clean bits) - right for latent-free direct coding.
+    """
+    if seed is None:
+        if init_chunks:
+            raise ValueError(
+                "fresh_stack: init_chunks requires a seed - clean bits "
+                "are derived from it (pass seed=<int> or init_chunks=0)")
+        stack = ans.make_stack(lanes, capacity)
+    else:
+        key = jax.random.PRNGKey(seed)
+        k_head, k_bits = jax.random.split(key)
+        stack = ans.make_stack(lanes, capacity, key=k_head)
+        if init_chunks:
+            stack = ans.seed_stack(stack, k_bits, init_chunks)
+    return stack
+
+
+def _default_capacity(data: Any, lanes: int, init_chunks: int) -> int:
+    n_elems = sum(int(np.prod(x.shape))
+                  for x in jax.tree_util.tree_leaves(data))
+    # One 16-bit chunk per element per lane is a generous starting guess
+    # for typical sub-16-bit/symbol sources; overflow-retry doubles it.
+    return max(256, n_elems // max(lanes, 1) + init_chunks + 64)
+
+
+def compress(codec: Codec, data: Any, *, lanes: int,
+             seed: Optional[int] = 0, init_chunks: int = 32,
+             capacity: Optional[int] = None, max_retries: int = 6,
+             precision: int = ans.DEFAULT_PRECISION,
+             with_info: bool = False):
+    """Encode ``data`` with ``codec`` into a self-contained blob.
+
+    ``data`` is a pytree whose leaves carry a leading ``lanes`` axis
+    (wrap with ``Chained`` for a [n, lanes, ...] chain). The encode is
+    verified clean (no under/overflow) before the blob is emitted; on
+    overflow the capacity doubles and on underflow the clean-bit supply
+    quadruples, then the encode reruns - a corrupt blob is impossible.
+
+    With ``with_info=True`` returns ``(blob, info)`` where
+    ``info["net_bits"]`` is the information *added* by the encode
+    (content bits after minus before - the quantity that matches -ELBO,
+    free of clean-bit and flush constants).
+    """
+    cap = capacity or _default_capacity(data, lanes, init_chunks)
+    # A cold stack (seed=None) has no clean-bit source; direct-coding
+    # codecs don't need one, so the supply is simply 0 there.
+    chunks = 0 if seed is None else init_chunks
+    for attempt in range(max_retries):
+        stack0 = fresh_stack(lanes, cap, seed, chunks)
+        stack = codec.push(stack0, data)
+        over = int(jnp.sum(stack.overflows))
+        under = int(jnp.sum(stack.underflows))
+        if not over and not under:
+            blob = _pack(stack, precision)
+            if not with_info:
+                return blob
+            info = {
+                "capacity": cap, "init_chunks": chunks, "seed": seed,
+                "net_bits": float(ans.stack_content_bits(stack)
+                                  - ans.stack_content_bits(stack0)),
+                "retries": attempt,
+                **blob_info(blob),
+            }
+            return blob, info
+        if over:
+            cap *= 2
+        if under:
+            if seed is None:
+                raise RuntimeError(
+                    "codecs.compress: stack underflow with seed=None - "
+                    "this codec pops initial bits (bits-back); pass a "
+                    "seed so clean bits can be supplied")
+            chunks = max(32, chunks * 4)
+    raise RuntimeError(
+        f"codecs.compress: could not encode cleanly after {max_retries} "
+        f"attempts (last capacity={cap}, init_chunks={chunks})")
+
+
+def decompress(codec: Codec, blob: bytes) -> Any:
+    """Decode a ``compress`` blob back to the original data, bit-exactly."""
+    msg, lengths, _ = _unpack(blob)
+    stack = ans.unflatten(jnp.asarray(msg), jnp.asarray(lengths))
+    stack, data = codec.pop(stack)
+    ans.check_clean(stack, "codecs.decompress")
+    return data
+
+
+def blob_info(blob: bytes) -> Dict[str, Any]:
+    """Parse a blob header: lanes, lengths, payload/header sizes in bits.
+
+    ``payload_bits`` equals ``ans.stack_bits`` of the encoded stack -
+    the message proper; ``header_bits`` is the framing overhead.
+    """
+    msg, lengths, precision = _unpack(blob)
+    payload_bits = int(np.sum(lengths)) * 16
+    return {
+        "lanes": int(msg.shape[0]),
+        "lengths": lengths,
+        "precision": precision,
+        "payload_bits": payload_bits,
+        "header_bits": (len(blob) - payload_bits // 8) * 8,
+        "total_bits": len(blob) * 8,
+    }
+
+
+def _pack(stack: ans.ANSStack, precision: int) -> bytes:
+    msg, lengths = ans.flatten(stack)
+    msg_np = np.asarray(msg)
+    lengths_np = np.asarray(lengths)
+    lanes = msg_np.shape[0]
+    parts = [
+        _HEADER.pack(_MAGIC, _VERSION, precision, 0, lanes),
+        lengths_np.astype("<u4").tobytes(),
+    ]
+    for l in range(lanes):
+        parts.append(msg_np[l, :lengths_np[l]].astype("<u2").tobytes())
+    return b"".join(parts)
+
+
+def _unpack(blob: bytes) -> Tuple[np.ndarray, np.ndarray, int]:
+    if len(blob) < _HEADER.size:
+        raise ValueError("codecs: truncated blob (no header)")
+    magic, version, precision, _flags, lanes = _HEADER.unpack_from(blob, 0)
+    if magic != _MAGIC:
+        raise ValueError(f"codecs: bad magic {magic!r} (not a BBX1 blob)")
+    if version != _VERSION:
+        raise ValueError(f"codecs: unsupported container version {version}")
+    off = _HEADER.size
+    lengths = np.frombuffer(blob, dtype="<u4", count=lanes,
+                            offset=off).astype(np.int32)
+    if (lengths < 2).any():
+        raise ValueError("codecs: corrupt header (lane length < 2)")
+    off += 4 * lanes
+    total = int(lengths.sum())
+    if len(blob) < off + 2 * total:
+        raise ValueError("codecs: truncated blob (payload short)")
+    flat = np.frombuffer(blob, dtype="<u2", count=total, offset=off)
+    width = int(lengths.max())
+    msg = np.zeros((lanes, width), np.uint16)
+    pos = 0
+    for l in range(lanes):
+        n = int(lengths[l])
+        msg[l, :n] = flat[pos:pos + n]
+        pos += n
+    return msg, lengths, precision

@@ -1,0 +1,146 @@
+"""Leaf codecs: one symbol per lane per push/pop.
+
+The discrete observation models (``Bernoulli``, ``Categorical``,
+``FactoredCategorical``, ``BetaBinomial``) live in
+``core.distributions`` and already implement the ``Codec`` contract;
+``repro.codecs`` re-exports them. This module adds the latent-side
+leaves:
+
+  * ``Uniform``      - exact ``bits``-bit uniform code (the max-entropy
+                       prior over equal-mass buckets, paper App. B).
+  * ``PointwiseCDF`` - generic codec from a pointwise-evaluable
+                       fixed-point CDF with bisection decode (O(1)
+                       memory; no alphabet-sized tables).
+  * ``DiscretizedGaussian`` - diag-Gaussian posterior over the
+                       max-entropy prior buckets (paper App. B); a
+                       direct delegate of ``core.discretize.push/
+                       pop_posterior`` (bit-identical by construction).
+  * ``DiscretizedLogistic`` - logistic CDF over the same bucket grid
+                       (PixelCNN-style likelihood, usable as posterior).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ans, discretize
+from repro.core.codec import Codec
+
+
+@dataclasses.dataclass(frozen=True)
+class Uniform(Codec):
+    """Exact ``bits``-bit uniform code over {0 .. 2^bits - 1} per lane."""
+
+    bits: int
+    precision: int = ans.DEFAULT_PRECISION
+
+    def push(self, stack: ans.ANSStack, x: jnp.ndarray) -> ans.ANSStack:
+        return discretize.push_prior(stack, x, self.bits, self.precision)
+
+    def pop(self, stack: ans.ANSStack) -> Tuple[ans.ANSStack, jnp.ndarray]:
+        return discretize.pop_prior(stack, self.bits, self.precision)
+
+
+@dataclasses.dataclass(frozen=True)
+class PointwiseCDF(Codec):
+    """Codec over {0 .. 2^bits - 1} from a pointwise float CDF.
+
+    ``cdf_fn(i)`` maps int32[lanes] bucket indices to float[lanes]
+    cumulative mass in [0, 1] (must saturate to exactly 0 at i <= 0 and
+    1 at i >= 2^bits). The fixed-point table is
+
+        F(i) = floor((2^precision - 2^bits) * cdf_fn(i)) + i
+
+    - strictly increasing with exact total, evaluated on demand (no
+    K-sized tables); decode inverts it with a ``bits``-step bisection.
+    Encoder and decoder evaluate the identical function, so roundtrips
+    are bit-exact (the determinism contract of ``core.lm_codec``).
+    """
+
+    cdf_fn: Callable[[jnp.ndarray], jnp.ndarray]
+    bits: int
+    precision: int = ans.DEFAULT_PRECISION
+
+    def _starts(self) -> Callable[[jnp.ndarray], jnp.ndarray]:
+        k = 1 << self.bits
+        scale = float((1 << self.precision) - k)
+        if scale <= 0:
+            raise ValueError("need precision > bits")
+        cdf_fn = self.cdf_fn
+
+        def f(i):
+            c = jnp.clip(cdf_fn(i), 0.0, 1.0)
+            c = jnp.where(i <= 0, 0.0, c)
+            c = jnp.where(i >= k, 1.0, c)
+            return jnp.floor(c * scale).astype(jnp.uint32) \
+                + i.astype(jnp.uint32)
+
+        return f
+
+    def push(self, stack: ans.ANSStack, x: jnp.ndarray) -> ans.ANSStack:
+        f = self._starts()
+        x = x.astype(jnp.int32)
+        start = f(x)
+        freq = f(x + 1) - start
+        return ans.push(stack, start, freq, self.precision)
+
+    def pop(self, stack: ans.ANSStack) -> Tuple[ans.ANSStack, jnp.ndarray]:
+        f = self._starts()
+        slot = ans.peek(stack, self.precision)
+        lo = jnp.zeros_like(slot, dtype=jnp.int32)
+        hi = jnp.full_like(lo, 1 << self.bits)  # exclusive
+
+        def body(_, lohi):
+            lo, hi = lohi
+            mid = (lo + hi + 1) // 2
+            go_up = f(mid) <= slot
+            return jnp.where(go_up, mid, lo), jnp.where(go_up, hi, mid)
+
+        lo, hi = jax.lax.fori_loop(0, self.bits + 1, body, (lo, hi))
+        start = f(lo)
+        freq = f(lo + 1) - start
+        return ans.pop_update(stack, start, freq, self.precision), lo
+
+
+@dataclasses.dataclass(frozen=True)
+class DiscretizedGaussian(Codec):
+    """N(mu, sigma^2) over the max-entropy N(0,1)-prior buckets.
+
+    Delegates to ``core.discretize.push_posterior``/``pop_posterior``
+    (the paper-App.-B coder), so it is bit-identical to the pre-codecs
+    coding path by construction; this is the posterior leaf of every
+    diag-Gaussian bits-back model here.
+    """
+
+    mu: jnp.ndarray     # float[lanes]
+    sigma: jnp.ndarray  # float[lanes]
+    bits: int
+    precision: int = ans.DEFAULT_PRECISION
+
+    def push(self, stack: ans.ANSStack, x: jnp.ndarray) -> ans.ANSStack:
+        return discretize.push_posterior(stack, x, self.mu, self.sigma,
+                                         self.bits, self.precision)
+
+    def pop(self, stack: ans.ANSStack) -> Tuple[ans.ANSStack, jnp.ndarray]:
+        return discretize.pop_posterior(stack, self.mu, self.sigma,
+                                        self.bits, self.precision)
+
+
+def DiscretizedLogistic(mu: jnp.ndarray, scale: jnp.ndarray, bits: int,
+                        precision: int = ans.DEFAULT_PRECISION
+                        ) -> PointwiseCDF:
+    """Logistic(mu, scale) over the max-entropy N(0,1)-prior buckets."""
+    k = 1 << bits
+
+    def cdf(i):
+        z = discretize.bucket_edge(i, bits)
+        c = jax.nn.sigmoid((z - mu) / scale)
+        c = jnp.where(i <= 0, 0.0, c)
+        c = jnp.where(i >= k, 1.0, c)
+        return c
+
+    return PointwiseCDF(cdf, bits, precision)

@@ -54,12 +54,18 @@ class ANSStack(NamedTuple):
       underflows: int32[lanes] - count of pops that tried to read past the
         bottom of the stack. Always 0 in a correctly seeded chain; exposed
         so tests and the BB-ANS driver can assert cleanliness.
+      overflows: int32[lanes] - count of renormalization chunks silently
+        dropped because the stack was full (scatter past ``capacity``).
+        Always 0 in a correctly sized stack; any nonzero value means the
+        message is corrupt. ``codecs.compress`` uses this to grow the
+        stack and retry instead of producing a broken blob.
     """
 
     head: jnp.ndarray
     buf: jnp.ndarray
     ptr: jnp.ndarray
     underflows: jnp.ndarray
+    overflows: jnp.ndarray
 
     @property
     def lanes(self) -> int:
@@ -90,6 +96,7 @@ def make_stack(lanes: int, capacity: int,
         buf=jnp.zeros((lanes, capacity), dtype=jnp.uint16),
         ptr=jnp.zeros((lanes,), dtype=jnp.int32),
         underflows=jnp.zeros((lanes,), dtype=jnp.int32),
+        overflows=jnp.zeros((lanes,), dtype=jnp.int32),
     )
 
 
@@ -106,7 +113,9 @@ def seed_stack(stack: ANSStack, key: jax.Array, n_chunks: int) -> ANSStack:
     rows = jnp.arange(stack.lanes)[:, None]
     cols = stack.ptr[:, None] + jnp.arange(n_chunks)[None, :]
     buf = stack.buf.at[rows, cols].set(chunks, mode="drop")
-    return stack._replace(buf=buf, ptr=stack.ptr + n_chunks)
+    dropped = jnp.clip(stack.ptr + n_chunks - stack.capacity, 0, n_chunks)
+    return stack._replace(buf=buf, ptr=stack.ptr + n_chunks,
+                          overflows=stack.overflows + dropped)
 
 
 def _as_u32(x: jnp.ndarray) -> jnp.ndarray:
@@ -132,11 +141,13 @@ def push(stack: ANSStack, start: jnp.ndarray, freq: jnp.ndarray,
     idx = jnp.where(need, ptr, stack.capacity)
     buf = buf.at[rows, idx].set((head & _MASK16).astype(jnp.uint16),
                                 mode="drop")
+    over = need & (ptr >= stack.capacity)  # a *real* chunk was dropped
     ptr = ptr + need.astype(jnp.int32)
     head = jnp.where(need, head >> 16, head)
 
     head = ((head // freq) << precision) + (head % freq) + start
-    return stack._replace(head=head, buf=buf, ptr=ptr)
+    return stack._replace(head=head, buf=buf, ptr=ptr,
+                          overflows=stack.overflows + over.astype(jnp.int32))
 
 
 def peek(stack: ANSStack, precision: int = DEFAULT_PRECISION) -> jnp.ndarray:
@@ -245,7 +256,29 @@ def unflatten(msg: jnp.ndarray, lengths: jnp.ndarray,
         buf = jnp.pad(buf, ((0, 0), (0, cap - buf.shape[1])))
     return ANSStack(head=head, buf=buf.astype(jnp.uint16),
                     ptr=lengths - 2,
-                    underflows=jnp.zeros((lanes,), dtype=jnp.int32))
+                    underflows=jnp.zeros((lanes,), dtype=jnp.int32),
+                    overflows=jnp.zeros((lanes,), dtype=jnp.int32))
+
+
+def check_clean(stack: ANSStack, context: str = "ANS") -> ANSStack:
+    """Raise if the stack ever under- or overflowed; returns it unchanged.
+
+    Underflow means pops consumed past the clean-bit supply (seed more
+    initial bits); overflow means pushes silently dropped chunks (grow
+    ``capacity``). Either way the message is corrupt - drivers call this
+    at Python level after every encode.
+    """
+    under = int(jnp.sum(stack.underflows))
+    over = int(jnp.sum(stack.overflows))
+    if under:
+        raise RuntimeError(
+            f"{context}: {under} stack underflow(s) - pops consumed past "
+            "the bottom of the stack; seed more clean bits (init_chunks)")
+    if over:
+        raise RuntimeError(
+            f"{context}: {over} chunk(s) dropped on overflow - stack "
+            "capacity too small for this message; increase capacity")
+    return stack
 
 
 # ---------------------------------------------------------------------------

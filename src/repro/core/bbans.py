@@ -1,14 +1,11 @@
-"""Bits Back with ANS (BB-ANS) - the paper's core contribution.
+"""Bits Back with ANS (BB-ANS) - legacy six-hook interface.
 
-Implements Table 1 / Appendix C of Townsend, Bird & Barber (ICLR 2019) as a
-generic codec over any latent-variable model, plus the *chaining* driver
-(section 2.3): the ANS stack left by one datapoint is the "extra
-information" consumed by the next, with zero per-datapoint overhead - the
-property that makes ANS (LIFO) work where arithmetic coding (FIFO) fails.
-
-A model plugs in six lane-vectorized coder callables (see ``BBANSCodec``).
-``append``/``pop`` are exact inverses; ``append_batch``/``pop_batch`` chain
-across a dataset under ``lax.scan``.
+The implementation now lives in ``repro.codecs`` (the composable
+``BBANS``/``Chained`` combinators - see paper Table 1 / section 2.3);
+this module is kept as a thin compatibility shim so existing call sites
+and model hooks keep working. New code should build a
+``repro.codecs.BBANS`` directly (e.g. ``models.vae.make_bb_codec``) and
+go through ``codecs.compress``/``decompress``.
 """
 
 from __future__ import annotations
@@ -19,14 +16,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import ans
+from repro.core.codec import FnCodec
+from repro.codecs import combinators
 
 
 class BBANSCodec(NamedTuple):
     """The six coder hooks of a bits-back model.
 
     Symbols ``s`` and latents ``y`` are pytrees with a leading ``lanes``
-    axis. Every *_push must exactly invert the corresponding *_pop (and vice
-    versa) - this is the only requirement (paper App. C).
+    axis. Every *_push must exactly invert the corresponding *_pop (and
+    vice versa) - this is the only requirement (paper App. C).
     """
 
     posterior_pop: Callable   # (stack, s) -> (stack, y)      decode y~Q(y|s)
@@ -37,23 +36,33 @@ class BBANSCodec(NamedTuple):
     prior_pop: Callable        # (stack) -> (stack, y)        inverse
 
 
+def as_codec(codec: BBANSCodec) -> combinators.BBANS:
+    """Adapt the six hooks into the composable ``codecs.BBANS``."""
+    return combinators.BBANS(
+        prior=FnCodec(codec.prior_push, codec.prior_pop),
+        likelihood=lambda y: FnCodec(
+            lambda stack, s: codec.likelihood_push(stack, y, s),
+            lambda stack: codec.likelihood_pop(stack, y)),
+        posterior=lambda s: FnCodec(
+            lambda stack, y: codec.posterior_push(stack, s, y),
+            lambda stack: codec.posterior_pop(stack, s)))
+
+
 def append(codec: BBANSCodec, stack: ans.ANSStack, s) -> ans.ANSStack:
     """Encode one datapoint per lane (paper Table 1).
 
     Net expected stack growth = -ELBO(s) bits.
     """
-    stack, y = codec.posterior_pop(stack, s)      # get bits back
-    stack = codec.likelihood_push(stack, y, s)    # pay -log p(s|y)
-    stack = codec.prior_push(stack, y)            # pay -log p(y)
-    return stack
+    return as_codec(codec).push(stack, s)
 
 
 def pop(codec: BBANSCodec, stack: ans.ANSStack) -> Tuple[ans.ANSStack, object]:
     """Decode one datapoint per lane - exact inverse of ``append``."""
-    stack, y = codec.prior_pop(stack)
-    stack, s = codec.likelihood_pop(stack, y)
-    stack = codec.posterior_push(stack, s, y)     # return the bits
-    return stack, s
+    return as_codec(codec).pop(stack)
+
+
+def _chain_len(data) -> int:
+    return jax.tree_util.tree_leaves(data)[0].shape[0]
 
 
 def append_batch(codec: BBANSCodec, stack: ans.ANSStack,
@@ -62,44 +71,30 @@ def append_batch(codec: BBANSCodec, stack: ans.ANSStack,
 
     Datapoint ``t``'s compressed stack is datapoint ``t+1``'s extra
     information (section 2.3). Decoding must pop in reverse order, which
-    ``pop_batch`` does.
+    ``pop_batch`` does. The encode asserts no chunk was dropped on
+    overflow (silent data loss -> raise instead of a corrupt message);
+    underflow stays observable via ``stack.underflows`` since running
+    without clean bits is a legitimate (measured) ablation.
 
     ``scan=False`` runs a Python-level loop instead of ``lax.scan``:
     required for codecs whose hooks internally drive jit-compiled network
     steps from Python (LatentLM - see lm_codec's determinism contract).
     """
-    if scan:
-        def body(stack, s):
-            return append(codec, stack, s), None
-
-        stack, _ = jax.lax.scan(body, stack, data)
-        return stack
-    n = jax.tree_util.tree_leaves(data)[0].shape[0]
-    for i in range(n):
-        s_i = jax.tree_util.tree_map(lambda x: x[i], data)
-        stack = append(codec, stack, s_i)
-    return stack
+    chained = combinators.Chained(as_codec(codec), _chain_len(data),
+                                  scan=scan)
+    out = chained.push(stack, data)
+    new_over = int(jnp.sum(out.overflows)) - int(jnp.sum(stack.overflows))
+    if new_over:
+        raise RuntimeError(
+            f"bbans.append_batch: {new_over} chunk(s) dropped on overflow "
+            "- stack capacity too small for this chain")
+    return out
 
 
 def pop_batch(codec: BBANSCodec, stack: ans.ANSStack, n: int,
               scan: bool = True) -> Tuple[ans.ANSStack, object]:
     """Chain-decode ``n`` datapoints; returns them in original order."""
-    if scan:
-        def body(stack, _):
-            stack, s = pop(codec, stack)
-            return stack, s
-
-        stack, data_rev = jax.lax.scan(body, stack, None, length=n)
-        data = jax.tree_util.tree_map(lambda x: jnp.flip(x, axis=0),
-                                      data_rev)
-        return stack, data
-    outs = []
-    for _ in range(n):
-        stack, s = pop(codec, stack)
-        outs.append(s)
-    data = jax.tree_util.tree_map(
-        lambda *xs: jnp.stack(xs, axis=0), *reversed(outs))
-    return stack, data
+    return combinators.Chained(as_codec(codec), n, scan=scan).pop(stack)
 
 
 def chain_rate_bits_per_dim(stack_before: ans.ANSStack,

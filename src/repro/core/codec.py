@@ -1,0 +1,58 @@
+"""The ``Codec`` abstraction: the composable unit of the coding API.
+
+A codec is a pair of exact LIFO inverses over an ``ans.ANSStack``:
+
+    push(stack, x) -> stack          encode one symbol (per lane)
+    pop(stack)     -> (stack, x)     decode it back
+
+``pop(push(stack, x)) == (stack, x)`` bit-for-bit - this is the only
+contract, and it is what makes bits-back composition work (Townsend,
+Bird & Barber, ICLR 2019, App. C): any codec can serve as a prior,
+likelihood, or posterior inside ``repro.codecs.BBANS``, and combinators
+(``Serial``, ``Repeat``, ``TreeCodec``, ``Chained``, ``BitSwap``)
+preserve the contract by construction.
+
+The class lives in ``repro.core`` (not ``repro.codecs``) so that leaf
+distributions in ``core.distributions`` can subclass it without a
+circular import; ``repro.codecs`` re-exports it as the public name.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+from repro.core import ans
+
+
+class Codec:
+    """Base class for composable push/pop coders.
+
+    Subclasses implement ``push`` and ``pop``; dataclass subclasses get
+    value semantics for free. Symbols ``x`` are pytrees with a leading
+    ``lanes`` axis on every leaf.
+    """
+
+    def push(self, stack: ans.ANSStack, x: Any) -> ans.ANSStack:
+        raise NotImplementedError
+
+    def pop(self, stack: ans.ANSStack) -> Tuple[ans.ANSStack, Any]:
+        raise NotImplementedError
+
+
+class FnCodec(Codec):
+    """Adapter: wrap a raw (push_fn, pop_fn) pair as a Codec.
+
+    The escape hatch for codecs whose hooks are closures over model
+    state (e.g. the legacy six-hook ``BBANSCodec``) or that drive
+    Python-level jitted-step loops (the LM likelihoods).
+    """
+
+    def __init__(self, push_fn: Callable, pop_fn: Callable):
+        self._push = push_fn
+        self._pop = pop_fn
+
+    def push(self, stack: ans.ANSStack, x: Any) -> ans.ANSStack:
+        return self._push(stack, x)
+
+    def pop(self, stack: ans.ANSStack) -> Tuple[ans.ANSStack, Any]:
+        return self._pop(stack)

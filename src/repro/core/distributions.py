@@ -1,9 +1,11 @@
 """Observation-model coders: fixed-point (start, freq) interfaces over ANS.
 
-Each coder exposes ``push(stack, symbol) -> stack`` and ``pop(stack) ->
-(stack, symbol)`` operating lane-wise (one symbol per lane per call), plus
-log-probability helpers used by the ELBO/rate tests. All are exact LIFO
-inverses of each other - the property the whole of BB-ANS rests on.
+Each coder is a ``repro.core.codec.Codec``: ``push(stack, symbol) ->
+stack`` and ``pop(stack) -> (stack, symbol)`` operating lane-wise (one
+symbol per lane per call), plus log-probability helpers used by the
+ELBO/rate tests. All are exact LIFO inverses of each other - the
+property the whole of BB-ANS rests on - so they compose directly as
+leaves under the ``repro.codecs`` combinators.
 """
 
 from __future__ import annotations
@@ -16,6 +18,7 @@ import jax.numpy as jnp
 from jax.scipy.special import gammaln
 
 from repro.core import ans
+from repro.core.codec import Codec
 
 
 # ---------------------------------------------------------------------------
@@ -23,7 +26,7 @@ from repro.core import ans
 # ---------------------------------------------------------------------------
 
 @dataclass(frozen=True)
-class Bernoulli:
+class Bernoulli(Codec):
     """Per-lane Bernoulli with success probability sigmoid(logit)."""
 
     logits: jnp.ndarray  # float[lanes]
@@ -76,7 +79,7 @@ def beta_binomial_log_pmf(k: jnp.ndarray, n: int, alpha: jnp.ndarray,
 
 
 @dataclass(frozen=True)
-class BetaBinomial:
+class BetaBinomial(Codec):
     """Per-lane beta-binomial on {0..n}; two positive params per lane."""
 
     alpha: jnp.ndarray  # float[lanes]
@@ -109,7 +112,7 @@ class BetaBinomial:
 # ---------------------------------------------------------------------------
 
 @dataclass(frozen=True)
-class Categorical:
+class Categorical(Codec):
     """Per-lane categorical over an alphabet of size logits.shape[-1]."""
 
     logits: jnp.ndarray  # float[lanes, A]
@@ -136,7 +139,7 @@ class Categorical:
 # ---------------------------------------------------------------------------
 
 @dataclass(frozen=True)
-class FactoredCategorical:
+class FactoredCategorical(Codec):
     """Categorical over a large vocabulary, coded as (chunk, offset).
 
     The vocabulary is split into chunks of ``chunk_size``; a token ``v`` is

@@ -25,13 +25,15 @@ so any assigned vocabulary (up to 202k) fits the 16-bit fixed-point budget.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import ans
+from repro.core.codec import Codec
 from repro.core.distributions import FactoredCategorical
 from repro.models import transformer
 
@@ -115,6 +117,33 @@ def decode_tokens(params, cfg, stack: ans.ANSStack, n: int,
         out.append(sym)
         tok = sym[:, None].astype(jnp.int32)
     return stack, jnp.stack(out, axis=1)
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenStream(Codec):
+    """Token-stream coding as a ``Codec``: the latent-free special case
+    of BB-ANS (direct ANS with the LM's next-token distribution).
+
+    The symbol is int32[lanes, n]. Composes under the ``repro.codecs``
+    combinators and the one-call container:
+
+        blob = codecs.compress(TokenStream(params, cfg, n), tokens,
+                               lanes=lanes, seed=None, init_chunks=0)
+    """
+
+    params: Any
+    cfg: Any
+    n: int
+    precision: int = ans.DEFAULT_PRECISION
+
+    def push(self, stack: ans.ANSStack, tokens: jnp.ndarray
+             ) -> ans.ANSStack:
+        return encode_tokens(self.params, self.cfg, tokens, stack,
+                             self.precision)
+
+    def pop(self, stack: ans.ANSStack) -> Tuple[ans.ANSStack, jnp.ndarray]:
+        return decode_tokens(self.params, self.cfg, stack, self.n,
+                             self.precision)
 
 
 def expected_bits(params, cfg, tokens: jnp.ndarray) -> float:

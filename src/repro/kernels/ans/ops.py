@@ -41,4 +41,7 @@ def push_many(stack: ans.ANSStack, starts: jnp.ndarray, freqs: jnp.ndarray,
     buf = stack.buf.at[rows, cols].set(chunks.astype(jnp.uint16),
                                        mode="drop")
     ptr = stack.ptr + jnp.sum(need, axis=0).astype(jnp.int32)
-    return stack._replace(head=new_head, buf=buf, ptr=ptr)
+    over = jnp.sum(need.astype(bool) & (pos >= stack.capacity),
+                   axis=0).astype(jnp.int32)
+    return stack._replace(head=new_head, buf=buf, ptr=ptr,
+                          overflows=stack.overflows + over)

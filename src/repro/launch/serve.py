@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import codecs
 from repro.configs import base as cfg_base
 from repro.data import tokens as tok_data
 from repro.models import transformer
@@ -58,9 +59,10 @@ def main():
     toks = jnp.asarray(
         np.stack([corpus[s:s + args.tokens] for s in starts]), jnp.int32)
     t0 = time.perf_counter()
-    msg, lengths, bits = eng.compress(toks)
+    blob = eng.compress(toks)
     enc = time.perf_counter() - t0
-    out = eng.decompress(msg, lengths, args.tokens)
+    bits = codecs.blob_info(blob)["payload_bits"]
+    out = eng.decompress(blob, args.tokens)
     ok = bool(jnp.array_equal(out, toks))
     print(f"corpus entropy {entropy:.3f} bits/tok; achieved "
           f"{bits / toks.size:.3f} bits/tok (untrained model: ~log2 V); "

@@ -28,7 +28,9 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import codecs
 from repro.core import ans, bbans, discretize, lm_codec
+from repro.core.codec import FnCodec
 from repro.core.distributions import FactoredCategorical
 from repro.models import layers, transformer
 
@@ -128,32 +130,23 @@ def loss(params, cfg: LatentLMConfig, key: jax.Array,
 # BB-ANS codec over sequences (paper Table 1, with s = a whole sequence)
 # ---------------------------------------------------------------------------
 
-def make_codec(params, cfg: LatentLMConfig, seq_len: int
-               ) -> bbans.BBANSCodec:
+def make_bb_codec(params, cfg: LatentLMConfig, seq_len: int
+                  ) -> codecs.BBANS:
+    """The LatentLM as a composable ``codecs.BBANS`` combinator.
+
+    Prior and posterior over the per-sequence latent are jittable
+    ``Repeat`` chains of leaf codecs; the likelihood drives the shared
+    compiled decode step from Python (lm_codec determinism contract), so
+    chain this codec with ``codecs.Chained(..., scan=False)``.
+    """
     z = cfg.latent_dim
 
-    def posterior_pop(stack, s):
+    def posterior(s):
         mu, sigma = encode_posterior(params, cfg, s)
-
-        def body(d, carry):
-            stack, idx = carry
-            stack, i = discretize.pop_posterior(
-                stack, mu[:, d], sigma[:, d], cfg.lat_bits, cfg.precision)
-            return stack, idx.at[:, d].set(i)
-
-        idx0 = jnp.zeros(mu.shape, jnp.int32)
-        return jax.lax.fori_loop(0, z, body, (stack, idx0))
-
-    def posterior_push(stack, s, idx):
-        mu, sigma = encode_posterior(params, cfg, s)
-
-        def body(k, stack):
-            d = z - 1 - k
-            return discretize.push_posterior(
-                stack, idx[:, d], mu[:, d], sigma[:, d], cfg.lat_bits,
-                cfg.precision)
-
-        return jax.lax.fori_loop(0, z, body, stack)
+        return codecs.Repeat(
+            lambda d: codecs.DiscretizedGaussian(
+                mu[:, d], sigma[:, d], cfg.lat_bits, cfg.precision),
+            z)
 
     def _collect_logits(y, s):
         """Step the shared compiled decoder graph (lm_codec determinism
@@ -181,7 +174,7 @@ def make_codec(params, cfg: LatentLMConfig, seq_len: int
             collected.append(logits[:, 0].astype(jnp.float32))
         return collected
 
-    def likelihood_push(stack, idx, s):
+    def _likelihood_push(stack, idx, s):
         y = discretize.bucket_centre(idx, cfg.lat_bits)
         logits = _collect_logits(y, s)
         push = lm_codec._jitted_push(cfg.precision)
@@ -189,7 +182,7 @@ def make_codec(params, cfg: LatentLMConfig, seq_len: int
             stack = push(stack, logits[t], s[:, t])
         return stack
 
-    def likelihood_pop(stack, idx):
+    def _likelihood_pop(stack, idx):
         y = discretize.bucket_centre(idx, cfg.lat_bits)
         b = idx.shape[0]
         bb_cfg = cfg.backbone
@@ -219,27 +212,28 @@ def make_codec(params, cfg: LatentLMConfig, seq_len: int
                                      state=state)
         return stack, jnp.stack(out, axis=1)
 
-    def prior_push(stack, idx):
-        def body(k, stack):
-            d = z - 1 - k
-            return discretize.push_prior(stack, idx[:, d], cfg.lat_bits,
-                                         cfg.precision)
+    def likelihood(idx):
+        return FnCodec(
+            lambda stack, s: _likelihood_push(stack, idx, s),
+            lambda stack: _likelihood_pop(stack, idx))
 
-        return jax.lax.fori_loop(0, z, body, stack)
+    prior = codecs.Repeat(
+        lambda d: codecs.Uniform(cfg.lat_bits, cfg.precision), z)
+    return codecs.BBANS(prior=prior, likelihood=likelihood,
+                        posterior=posterior)
 
-    def prior_pop(stack):
-        def body(d, carry):
-            stack, idx = carry
-            stack, i = discretize.pop_prior(stack, cfg.lat_bits,
-                                            cfg.precision)
-            return stack, idx.at[:, d].set(i)
 
-        idx0 = jnp.zeros((stack.lanes, z), jnp.int32)
-        return jax.lax.fori_loop(0, z, body, (stack, idx0))
-
+def make_codec(params, cfg: LatentLMConfig, seq_len: int
+               ) -> bbans.BBANSCodec:
+    """Legacy six-hook view of ``make_bb_codec`` (kept for old call
+    sites; bit-identical coding)."""
+    bb = make_bb_codec(params, cfg, seq_len)
     return bbans.BBANSCodec(
-        posterior_pop=posterior_pop, posterior_push=posterior_push,
-        likelihood_push=likelihood_push, likelihood_pop=likelihood_pop,
-        prior_push=prior_push, prior_pop=prior_pop)
+        posterior_pop=lambda stack, s: bb.posterior(s).pop(stack),
+        posterior_push=lambda stack, s, y: bb.posterior(s).push(stack, y),
+        likelihood_push=lambda stack, y, s: bb.likelihood(y).push(stack, s),
+        likelihood_pop=lambda stack, y: bb.likelihood(y).pop(stack),
+        prior_push=lambda stack, y: bb.prior.push(stack, y),
+        prior_pop=lambda stack: bb.prior.pop(stack))
 
 

@@ -19,6 +19,7 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import codecs
 from repro.core import ans, bbans, discretize
 from repro.core.distributions import Bernoulli, BetaBinomial
 
@@ -143,93 +144,55 @@ def loss(params: Params, cfg: VAEConfig, key: jax.Array,
 
 
 # ---------------------------------------------------------------------------
-# BB-ANS codec hooks (paper Table 1, App. C)
+# BB-ANS codec (paper Table 1, App. C) via the composable codecs API
 # ---------------------------------------------------------------------------
 
-def make_codec(params: Params, cfg: VAEConfig) -> bbans.BBANSCodec:
-    """Build the six BB-ANS coder hooks for this VAE.
+def make_bb_codec(params: Params, cfg: VAEConfig) -> codecs.BBANS:
+    """The VAE as a composable ``codecs.BBANS`` combinator.
 
     The latent symbol ``y`` is carried as *bucket indices* int32[lanes,
     latent] under the max-entropy discretization of the prior; the network
     consumes bucket centres. Pixels are coded conditionally-independently
-    given y, so intra-datapoint order is free; we push in reverse so pops
-    stream in natural order.
+    given y, so intra-datapoint order is free; ``Repeat`` pushes in
+    reverse so pops stream in natural order.
+
+    Use directly with the container:
+        blob = codecs.compress(codecs.Chained(make_bb_codec(p, cfg), n),
+                               data, lanes=lanes, seed=0)
     """
-    lat_d, obs_d = cfg.latent, cfg.input_dim
+    def posterior(s):
+        mu, sigma = encode(params, cfg, s)
+        return codecs.Repeat(
+            lambda d: codecs.DiscretizedGaussian(
+                mu[:, d], sigma[:, d], cfg.lat_bits, cfg.precision),
+            cfg.latent)
 
-    def obs_dist(obs_params, d):
+    def likelihood(idx):
+        y = discretize.bucket_centre(idx, cfg.lat_bits)
+        obs_params = decode(params, cfg, y)
         if cfg.likelihood == "bernoulli":
-            return Bernoulli(obs_params[:, d], cfg.obs_precision)
-        return BetaBinomial(obs_params[:, d, 0], obs_params[:, d, 1],
-                            255, cfg.obs_precision)
+            return codecs.Repeat(
+                lambda d: Bernoulli(obs_params[:, d], cfg.obs_precision),
+                cfg.input_dim)
+        return codecs.Repeat(
+            lambda d: BetaBinomial(obs_params[:, d, 0], obs_params[:, d, 1],
+                                   255, cfg.obs_precision),
+            cfg.input_dim)
 
-    def posterior_pop(stack, s):
-        mu, sigma = encode(params, cfg, s)
+    prior = codecs.Repeat(
+        lambda d: codecs.Uniform(cfg.lat_bits, cfg.precision), cfg.latent)
+    return codecs.BBANS(prior=prior, likelihood=likelihood,
+                        posterior=posterior)
 
-        def body(d, carry):
-            stack, idx = carry
-            stack, i = discretize.pop_posterior(
-                stack, mu[:, d], sigma[:, d], cfg.lat_bits, cfg.precision)
-            return stack, idx.at[:, d].set(i)
 
-        idx0 = jnp.zeros(mu.shape, jnp.int32)
-        stack, idx = jax.lax.fori_loop(0, lat_d, body, (stack, idx0))
-        return stack, idx
-
-    def posterior_push(stack, s, idx):
-        mu, sigma = encode(params, cfg, s)
-
-        def body(k, stack):
-            d = lat_d - 1 - k
-            return discretize.push_posterior(
-                stack, idx[:, d], mu[:, d], sigma[:, d],
-                cfg.lat_bits, cfg.precision)
-
-        return jax.lax.fori_loop(0, lat_d, body, stack)
-
-    def likelihood_push(stack, idx, s):
-        y = discretize.bucket_centre(idx, cfg.lat_bits)
-        obs_params = decode(params, cfg, y)
-
-        def body(k, stack):
-            d = obs_d - 1 - k
-            return obs_dist(obs_params, d).push(stack, s[:, d])
-
-        return jax.lax.fori_loop(0, obs_d, body, stack)
-
-    def likelihood_pop(stack, idx):
-        y = discretize.bucket_centre(idx, cfg.lat_bits)
-        obs_params = decode(params, cfg, y)
-
-        def body(d, carry):
-            stack, s = carry
-            stack, v = obs_dist(obs_params, d).pop(stack)
-            return stack, s.at[:, d].set(v)
-
-        s0 = jnp.zeros((idx.shape[0], obs_d), jnp.int32)
-        stack, s = jax.lax.fori_loop(0, obs_d, body, (stack, s0))
-        return stack, s
-
-    def prior_push(stack, idx):
-        def body(k, stack):
-            d = lat_d - 1 - k
-            return discretize.push_prior(stack, idx[:, d], cfg.lat_bits,
-                                         cfg.precision)
-
-        return jax.lax.fori_loop(0, lat_d, body, stack)
-
-    def prior_pop(stack):
-        def body(d, carry):
-            stack, idx = carry
-            stack, i = discretize.pop_prior(stack, cfg.lat_bits,
-                                            cfg.precision)
-            return stack, idx.at[:, d].set(i)
-
-        idx0 = jnp.zeros((stack.lanes, lat_d), jnp.int32)
-        stack, idx = jax.lax.fori_loop(0, lat_d, body, (stack, idx0))
-        return stack, idx
-
+def make_codec(params: Params, cfg: VAEConfig) -> bbans.BBANSCodec:
+    """Legacy six-hook view of ``make_bb_codec`` (kept for old call
+    sites; bit-identical coding)."""
+    bb = make_bb_codec(params, cfg)
     return bbans.BBANSCodec(
-        posterior_pop=posterior_pop, posterior_push=posterior_push,
-        likelihood_push=likelihood_push, likelihood_pop=likelihood_pop,
-        prior_push=prior_push, prior_pop=prior_pop)
+        posterior_pop=lambda stack, s: bb.posterior(s).pop(stack),
+        posterior_push=lambda stack, s, y: bb.posterior(s).push(stack, y),
+        likelihood_push=lambda stack, y, s: bb.likelihood(y).push(stack, s),
+        likelihood_pop=lambda stack, y: bb.likelihood(y).pop(stack),
+        prior_push=lambda stack, y: bb.prior.push(stack, y),
+        prior_pop=lambda stack: bb.prior.pop(stack))

@@ -15,7 +15,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import ans, lm_codec
+from repro import codecs
+from repro.core import lm_codec
 from repro.models import transformer
 
 
@@ -58,20 +59,20 @@ class Engine:
 
     # -- compression service --------------------------------------------------
     def compress(self, tokens: jnp.ndarray, capacity_factor: float = 1.5
-                 ) -> Tuple[jnp.ndarray, jnp.ndarray, int]:
+                 ) -> bytes:
         """Losslessly compress token streams [lanes, N] with the LM.
 
-        Returns (message uint16[lanes, cap+2], lengths, total_bits).
+        Returns a self-contained ``repro.codecs`` container blob
+        (header + per-lane ANS message); ``codecs.blob_info`` exposes
+        the payload size. Direct coding needs no clean bits, so the
+        stack starts cold (``seed=None``) and the blob is deterministic.
         """
         lanes, n = tokens.shape
-        cap = int(n * capacity_factor) + 8
-        stack = ans.make_stack(lanes, cap)
-        stack = lm_codec.encode_tokens(self.params, self.cfg, tokens, stack)
-        msg, lengths = ans.flatten(stack)
-        return msg, lengths, int(ans.stack_bits(stack))
+        codec = lm_codec.TokenStream(self.params, self.cfg, n)
+        return codecs.compress(
+            codec, tokens, lanes=lanes, seed=None, init_chunks=0,
+            capacity=int(n * capacity_factor) + 8)
 
-    def decompress(self, msg: jnp.ndarray, lengths: jnp.ndarray,
-                   n: int) -> jnp.ndarray:
-        stack = ans.unflatten(msg, lengths)
-        _, out = lm_codec.decode_tokens(self.params, self.cfg, stack, n)
-        return out
+    def decompress(self, blob: bytes, n: int) -> jnp.ndarray:
+        codec = lm_codec.TokenStream(self.params, self.cfg, n)
+        return codecs.decompress(codec, blob)

@@ -107,6 +107,64 @@ def test_flatten_unflatten_roundtrip():
                                   np.asarray(stack.buf))
 
 
+def test_flatten_unflatten_ragged_lengths():
+    """Lanes renormalize at different rates -> ragged ptrs; the wire
+    format must carry each lane's true length and restore it."""
+    lanes, precision, n = 2, 14, 40
+    # Lane 0 codes a near-certain symbol (~0 bits), lane 1 a rare one
+    # (~7 bits): their chunk stacks diverge.
+    probs = jnp.asarray([[0.99, 0.01], [0.01, 0.99]], jnp.float32)
+    table = ans.probs_to_starts(probs, precision)
+    stack = ans.make_stack(lanes, capacity=64, key=jax.random.PRNGKey(11))
+    for _ in range(n):
+        stack = ans.push_with_table(
+            stack, table, jnp.zeros((lanes,), jnp.int32), precision)
+    ptrs = np.asarray(stack.ptr)
+    assert ptrs[0] != ptrs[1], "expected ragged stacks"
+
+    msg, lengths = ans.flatten(stack)
+    np.testing.assert_array_equal(np.asarray(lengths), ptrs + 2)
+    stack2 = ans.unflatten(msg, lengths, capacity=64)
+    s = stack2
+    for _ in range(n):
+        s, out = ans.pop_with_table(s, table, precision)
+        np.testing.assert_array_equal(np.asarray(out), [0, 0])
+    assert int(jnp.sum(s.underflows)) == 0
+
+
+def test_unflatten_capacity_reexpansion():
+    """A message narrower than the requested capacity must re-expand to
+    a working stack (pushes beyond the wire width succeed)."""
+    lanes, precision = 3, 12
+    rng = np.random.default_rng(12)
+    stack = ans.make_stack(lanes, capacity=8, key=jax.random.PRNGKey(13))
+    table = _random_starts_table(rng, lanes, 17, precision)
+    syms = [jnp.asarray(rng.integers(0, 17, lanes), jnp.int32)
+            for _ in range(5)]
+    for sym in syms:
+        stack = ans.push_with_table(stack, table, sym, precision)
+    msg, lengths = ans.flatten(stack)
+    assert msg.shape[1] == 8 + 2
+
+    big = ans.unflatten(msg, lengths, capacity=64)
+    assert big.capacity == 64
+    np.testing.assert_array_equal(np.asarray(big.head),
+                                  np.asarray(stack.head))
+    np.testing.assert_array_equal(np.asarray(big.ptr),
+                                  np.asarray(stack.ptr))
+    # Keep coding in the re-expanded stack, then drain everything.
+    more = [jnp.asarray(rng.integers(0, 17, lanes), jnp.int32)
+            for _ in range(30)]
+    s = big
+    for sym in more:
+        s = ans.push_with_table(s, table, sym, precision)
+    assert int(jnp.sum(s.overflows)) == 0
+    for sym in reversed(syms + more):
+        s, out = ans.pop_with_table(s, table, precision)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(sym))
+    assert int(jnp.sum(s.underflows)) == 0
+
+
 def test_pop_underflow_is_counted():
     stack = ans.make_stack(2, capacity=4)  # head == L, empty buffer
     table = ans.probs_to_starts(

@@ -1,0 +1,450 @@
+"""The composable ``repro.codecs`` API: leaves, combinators, container.
+
+Covers the PR-level acceptance criteria: bit-exact roundtrips through
+``codecs.compress``/``decompress`` for the MNIST VAE (via the ``BBANS``
+combinator) and a token stream (via the LM codec), equivalence of the
+combinator with the legacy six-hook path, the ``BitSwap`` hierarchical
+combinator, container header framing, and the overflow/underflow
+self-healing of the container.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import codecs
+from repro.core import ans, bbans, discretize
+from repro.core.distributions import Bernoulli, Categorical
+from repro.models import vae as vae_lib
+
+
+@pytest.fixture(scope="module")
+def small_cfg():
+    return vae_lib.VAEConfig(input_dim=36, hidden=24, latent=6,
+                             likelihood="bernoulli", lat_bits=10)
+
+
+@pytest.fixture(scope="module")
+def small_params(small_cfg):
+    return vae_lib.init(jax.random.PRNGKey(0), small_cfg)
+
+
+def _fresh(lanes, cap=256, seed=0, chunks=16):
+    return codecs.fresh_stack(lanes, cap, seed=seed, init_chunks=chunks)
+
+
+# ---------------------------------------------------------------------------
+# leaves
+# ---------------------------------------------------------------------------
+
+def test_uniform_leaf_roundtrip():
+    lanes, bits = 8, 9
+    stack = _fresh(lanes)
+    x = jnp.asarray(np.random.default_rng(0).integers(0, 1 << bits, lanes),
+                    jnp.int32)
+    c = codecs.Uniform(bits)
+    s2 = c.push(stack, x)
+    s3, out = c.pop(s2)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+    np.testing.assert_array_equal(np.asarray(s3.head),
+                                  np.asarray(stack.head))
+
+
+def test_discretized_gaussian_matches_discretize():
+    """The leaf must be bit-identical to core.discretize's posterior
+    coder (same fixed-point formula, same bisection)."""
+    lanes, bits, prec = 8, 10, 16
+    rng = np.random.default_rng(1)
+    mu = jnp.asarray(rng.normal(0, 1, lanes), jnp.float32)
+    sigma = jnp.asarray(rng.uniform(0.05, 2.0, lanes), jnp.float32)
+    stack = _fresh(lanes)
+    leaf = codecs.DiscretizedGaussian(mu, sigma, bits, prec)
+
+    s_leaf, idx_leaf = leaf.pop(stack)
+    s_disc, idx_disc = discretize.pop_posterior(stack, mu, sigma, bits,
+                                                prec)
+    np.testing.assert_array_equal(np.asarray(idx_leaf),
+                                  np.asarray(idx_disc))
+    np.testing.assert_array_equal(np.asarray(s_leaf.head),
+                                  np.asarray(s_disc.head))
+
+    s_back = leaf.push(s_leaf, idx_leaf)
+    np.testing.assert_array_equal(np.asarray(s_back.head),
+                                  np.asarray(stack.head))
+    np.testing.assert_array_equal(np.asarray(s_back.ptr),
+                                  np.asarray(stack.ptr))
+
+
+def test_discretized_logistic_roundtrip():
+    lanes, bits = 8, 8
+    rng = np.random.default_rng(2)
+    mu = jnp.asarray(rng.normal(0, 1, lanes), jnp.float32)
+    scale = jnp.asarray(rng.uniform(0.2, 1.5, lanes), jnp.float32)
+    leaf = codecs.DiscretizedLogistic(mu, scale, bits)
+    stack = _fresh(lanes)
+    s2, idx = leaf.pop(stack)
+    assert (np.asarray(idx) >= 0).all()
+    assert (np.asarray(idx) < (1 << bits)).all()
+    s3 = leaf.push(s2, idx)
+    np.testing.assert_array_equal(np.asarray(s3.head),
+                                  np.asarray(stack.head))
+
+
+# ---------------------------------------------------------------------------
+# combinators
+# ---------------------------------------------------------------------------
+
+def test_serial_and_shaped_roundtrip():
+    lanes = 4
+    rng = np.random.default_rng(3)
+    logits = jnp.asarray(rng.normal(0, 1, (lanes, 5)), jnp.float32)
+    codec = codecs.Serial([
+        codecs.Uniform(6),
+        Categorical(logits),
+        codecs.Shaped(
+            codecs.Repeat(lambda d: codecs.Uniform(4), 6), (2, 3)),
+    ])
+    x = (jnp.asarray(rng.integers(0, 64, lanes), jnp.int32),
+         jnp.asarray(rng.integers(0, 5, lanes), jnp.int32),
+         jnp.asarray(rng.integers(0, 16, (lanes, 2, 3)), jnp.int32))
+    stack = _fresh(lanes)
+    s2 = codec.push(stack, x)
+    s3, out = codec.pop(s2)
+    for a, b in zip(out, x):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(s3.head),
+                                  np.asarray(stack.head))
+
+
+def test_tree_codec_roundtrip():
+    lanes = 4
+    rng = np.random.default_rng(4)
+    tree = {"a": codecs.Uniform(5),
+            "b": [codecs.Uniform(3),
+                  codecs.Repeat(lambda d: codecs.Uniform(7), 2)]}
+    x = {"a": jnp.asarray(rng.integers(0, 32, lanes), jnp.int32),
+         "b": [jnp.asarray(rng.integers(0, 8, lanes), jnp.int32),
+               jnp.asarray(rng.integers(0, 128, (lanes, 2)), jnp.int32)]}
+    codec = codecs.TreeCodec(tree)
+    stack = _fresh(lanes)
+    s2 = codec.push(stack, x)
+    s3, out = codec.pop(s2)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(x["a"]))
+    np.testing.assert_array_equal(np.asarray(out["b"][0]),
+                                  np.asarray(x["b"][0]))
+    np.testing.assert_array_equal(np.asarray(out["b"][1]),
+                                  np.asarray(x["b"][1]))
+    np.testing.assert_array_equal(np.asarray(s3.head),
+                                  np.asarray(stack.head))
+
+
+def test_repeat_is_jittable():
+    lanes, n = 4, 5
+    codec = codecs.Repeat(lambda d: codecs.Uniform(6), n)
+    x = jnp.asarray(np.random.default_rng(5).integers(0, 64, (lanes, n)),
+                    jnp.int32)
+
+    @jax.jit
+    def roundtrip(stack, x):
+        s = codec.push(stack, x)
+        return codec.pop(s)
+
+    _, out = roundtrip(_fresh(lanes), x)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+
+def test_bbans_combinator_matches_legacy_hooks(small_cfg, small_params):
+    """The composable BBANS and the six-hook shim must produce
+    bit-identical stacks (same pushes in the same order)."""
+    lanes = 4
+    rng = np.random.default_rng(6)
+    s = jnp.asarray(rng.integers(0, 2, (lanes, small_cfg.input_dim)),
+                    jnp.int32)
+    bb = vae_lib.make_bb_codec(small_params, small_cfg)
+    hooks = vae_lib.make_codec(small_params, small_cfg)
+
+    st0 = _fresh(lanes, cap=512, chunks=64)
+    st_new = bb.push(st0, s)
+    st_old = bbans.append(hooks, st0, s)
+    np.testing.assert_array_equal(np.asarray(st_new.head),
+                                  np.asarray(st_old.head))
+    np.testing.assert_array_equal(np.asarray(st_new.ptr),
+                                  np.asarray(st_old.ptr))
+    np.testing.assert_array_equal(np.asarray(st_new.buf),
+                                  np.asarray(st_old.buf))
+
+    st_back, s_out = bb.pop(st_new)
+    np.testing.assert_array_equal(np.asarray(s_out), np.asarray(s))
+    np.testing.assert_array_equal(np.asarray(st_back.head),
+                                  np.asarray(st0.head))
+
+
+def _toy_hierarchy(lanes, seed=7):
+    """A 2-layer Markov latent toy model: s <- z1 <- z2, all leaves."""
+    rng = np.random.default_rng(seed)
+    obs_d, z1_d, z2_d, bits = 8, 4, 2, 6
+    w_post1 = jnp.asarray(rng.normal(0, 0.5, (obs_d, z1_d)), jnp.float32)
+    w_lik1 = jnp.asarray(rng.normal(0, 0.8, (z1_d, obs_d)), jnp.float32)
+    w_post2 = jnp.asarray(rng.normal(0, 0.5, (z1_d, z2_d)), jnp.float32)
+    w_lik2 = jnp.asarray(rng.normal(0, 0.5, (z2_d, z1_d)), jnp.float32)
+
+    def centre(idx):
+        return discretize.bucket_centre(idx, bits)
+
+    def posterior1(s):
+        mu = jnp.tanh(s.astype(jnp.float32) @ w_post1)
+        return codecs.Repeat(
+            lambda d: codecs.DiscretizedGaussian(
+                mu[:, d], jnp.full_like(mu[:, d], 0.5), bits), z1_d)
+
+    def likelihood1(z1):
+        logits = centre(z1) @ w_lik1
+        return codecs.Repeat(
+            lambda d: Bernoulli(logits[:, d]), obs_d)
+
+    def posterior2(z1):
+        mu = jnp.tanh(centre(z1) @ w_post2)
+        return codecs.Repeat(
+            lambda d: codecs.DiscretizedGaussian(
+                mu[:, d], jnp.full_like(mu[:, d], 0.6), bits), z2_d)
+
+    def likelihood2(z2):
+        mu = jnp.tanh(centre(z2) @ w_lik2)
+        return codecs.Repeat(
+            lambda d: codecs.DiscretizedGaussian(
+                mu[:, d], jnp.full_like(mu[:, d], 0.7), bits), z1_d)
+
+    prior = codecs.Repeat(lambda d: codecs.Uniform(bits), z2_d)
+    return codecs.BitSwap(
+        prior=prior,
+        layers=((posterior1, likelihood1), (posterior2, likelihood2)),
+    ), obs_d
+
+
+def test_bitswap_hierarchical_roundtrip():
+    lanes = 4
+    codec, obs_d = _toy_hierarchy(lanes)
+    rng = np.random.default_rng(8)
+    s = jnp.asarray(rng.integers(0, 2, (lanes, obs_d)), jnp.int32)
+    st0 = _fresh(lanes, cap=512, chunks=64)
+    st1 = codec.push(st0, s)
+    assert int(jnp.sum(st1.underflows)) == 0
+    st2, out = codec.pop(st1)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(s))
+    np.testing.assert_array_equal(np.asarray(st2.head),
+                                  np.asarray(st0.head))
+    np.testing.assert_array_equal(np.asarray(st2.ptr), np.asarray(st0.ptr))
+
+
+def test_bitswap_single_layer_equals_bbans(small_cfg, small_params):
+    """BitSwap with one layer is definitionally BBANS."""
+    lanes = 3
+    rng = np.random.default_rng(9)
+    s = jnp.asarray(rng.integers(0, 2, (lanes, small_cfg.input_dim)),
+                    jnp.int32)
+    bb = vae_lib.make_bb_codec(small_params, small_cfg)
+    swap = codecs.BitSwap(prior=bb.prior,
+                          layers=((bb.posterior, bb.likelihood),))
+    st0 = _fresh(lanes, cap=512, chunks=64)
+    st_a = bb.push(st0, s)
+    st_b = swap.push(st0, s)
+    np.testing.assert_array_equal(np.asarray(st_a.head),
+                                  np.asarray(st_b.head))
+    np.testing.assert_array_equal(np.asarray(st_a.buf),
+                                  np.asarray(st_b.buf))
+
+
+def test_chained_scan_and_python_agree(small_cfg, small_params):
+    lanes, n = 3, 4
+    rng = np.random.default_rng(10)
+    data = jnp.asarray(rng.integers(0, 2, (n, lanes, small_cfg.input_dim)),
+                       jnp.int32)
+    bb = vae_lib.make_bb_codec(small_params, small_cfg)
+    st0 = _fresh(lanes, cap=2048, chunks=64)
+    st_scan = codecs.Chained(bb, n, scan=True).push(st0, data)
+    st_py = codecs.Chained(bb, n, scan=False).push(st0, data)
+    np.testing.assert_array_equal(np.asarray(st_scan.head),
+                                  np.asarray(st_py.head))
+    np.testing.assert_array_equal(np.asarray(st_scan.ptr),
+                                  np.asarray(st_py.ptr))
+
+
+def test_chained_leading_axis_mismatch_raises(small_cfg, small_params):
+    """A chain-length/data mismatch must raise, not silently code the
+    wrong number of datapoints."""
+    lanes, n = 2, 3
+    rng = np.random.default_rng(19)
+    data = jnp.asarray(rng.integers(0, 2, (n, lanes, small_cfg.input_dim)),
+                       jnp.int32)
+    bb = vae_lib.make_bb_codec(small_params, small_cfg)
+    with pytest.raises(ValueError, match="leading axis"):
+        codecs.Chained(bb, n + 1).push(_fresh(lanes, cap=2048), data)
+
+
+# ---------------------------------------------------------------------------
+# container
+# ---------------------------------------------------------------------------
+
+def test_fresh_stack_seedless_chunks_raises():
+    with pytest.raises(ValueError, match="seed"):
+        codecs.fresh_stack(2, 64, seed=None, init_chunks=8)
+
+def test_container_vae_roundtrip_bit_exact(small_cfg, small_params):
+    """Acceptance: the MNIST-style VAE through the one-call API."""
+    lanes, n = 4, 5
+    rng = np.random.default_rng(11)
+    data = jnp.asarray(rng.integers(0, 2, (n, lanes, small_cfg.input_dim)),
+                       jnp.int32)
+    codec = codecs.Chained(vae_lib.make_bb_codec(small_params, small_cfg),
+                           n)
+    blob, info = codecs.compress(codec, data, lanes=lanes, seed=0,
+                                 with_info=True)
+    assert isinstance(blob, bytes)
+    assert info["net_bits"] > 0
+    out = codecs.decompress(codec, blob)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(data))
+
+
+def test_container_header_framing(small_cfg, small_params):
+    lanes, n = 4, 2
+    rng = np.random.default_rng(12)
+    data = jnp.asarray(rng.integers(0, 2, (n, lanes, small_cfg.input_dim)),
+                       jnp.int32)
+    codec = codecs.Chained(vae_lib.make_bb_codec(small_params, small_cfg),
+                           n)
+    blob = codecs.compress(codec, data, lanes=lanes, seed=3)
+
+    info = codecs.blob_info(blob)
+    assert info["lanes"] == lanes
+    assert len(info["lengths"]) == lanes
+    assert (info["lengths"] >= 2).all()
+    assert info["payload_bits"] == int(info["lengths"].sum()) * 16
+    assert info["total_bits"] == len(blob) * 8
+    # Header = magic/version/precision/flags/lanes + u32 lengths.
+    assert info["header_bits"] == (12 + 4 * lanes) * 8
+
+    with pytest.raises(ValueError, match="magic"):
+        codecs.blob_info(b"XXXX" + blob[4:])
+    with pytest.raises(ValueError, match="truncated"):
+        codecs.blob_info(blob[:8])
+    with pytest.raises(ValueError, match="truncated"):
+        codecs.blob_info(blob[:-2])
+
+
+def test_container_determinism(small_cfg, small_params):
+    """Same codec, data, and seed -> byte-identical blob."""
+    lanes, n = 3, 2
+    rng = np.random.default_rng(13)
+    data = jnp.asarray(rng.integers(0, 2, (n, lanes, small_cfg.input_dim)),
+                       jnp.int32)
+    codec = codecs.Chained(vae_lib.make_bb_codec(small_params, small_cfg),
+                           n)
+    b1 = codecs.compress(codec, data, lanes=lanes, seed=42)
+    b2 = codecs.compress(codec, data, lanes=lanes, seed=42)
+    assert b1 == b2
+
+
+def test_container_overflow_grow_and_retry(small_cfg, small_params):
+    """A hopelessly undersized capacity must not corrupt the message -
+    the container grows the stack and retries."""
+    lanes, n = 2, 3
+    rng = np.random.default_rng(14)
+    data = jnp.asarray(rng.integers(0, 2, (n, lanes, small_cfg.input_dim)),
+                       jnp.int32)
+    codec = codecs.Chained(vae_lib.make_bb_codec(small_params, small_cfg),
+                           n)
+    blob, info = codecs.compress(codec, data, lanes=lanes, seed=1,
+                                 capacity=40, with_info=True)
+    assert info["retries"] > 0
+    out = codecs.decompress(codec, blob)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(data))
+
+
+def test_container_underflow_grow_and_retry(small_cfg, small_params):
+    """Too few clean bits -> dirty pops; the container reseeds with a
+    larger supply instead of emitting a corrupt blob."""
+    lanes, n = 2, 2
+    rng = np.random.default_rng(15)
+    data = jnp.asarray(rng.integers(0, 2, (n, lanes, small_cfg.input_dim)),
+                       jnp.int32)
+    codec = codecs.Chained(vae_lib.make_bb_codec(small_params, small_cfg),
+                           n)
+    blob, info = codecs.compress(codec, data, lanes=lanes, seed=1,
+                                 init_chunks=0, with_info=True)
+    assert info["init_chunks"] > 0
+    out = codecs.decompress(codec, blob)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(data))
+
+
+def test_container_seedless_bitsback_raises(small_cfg, small_params):
+    """seed=None (deterministic cold stack) cannot supply clean bits, so
+    a bits-back codec that underflows must raise, not corrupt."""
+    lanes, n = 2, 2
+    rng = np.random.default_rng(16)
+    data = jnp.asarray(rng.integers(0, 2, (n, lanes, small_cfg.input_dim)),
+                       jnp.int32)
+    codec = codecs.Chained(vae_lib.make_bb_codec(small_params, small_cfg),
+                           n)
+    with pytest.raises(RuntimeError, match="seed"):
+        codecs.compress(codec, data, lanes=lanes, seed=None, init_chunks=0)
+
+
+def test_container_token_stream_roundtrip():
+    """Acceptance: a token stream via the LM codec through the same
+    public API (reduced backbone for test speed)."""
+    from repro.configs import base as cfg_base
+    from repro.core import lm_codec
+    from repro.models import transformer
+
+    cfg = dataclasses.replace(
+        cfg_base.reduced(cfg_base.get("qwen2-0.5b")), vocab=120)
+    params = transformer.init(jax.random.PRNGKey(17), cfg)
+    rng = np.random.default_rng(17)
+    lanes, n = 2, 9
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (lanes, n)), jnp.int32)
+
+    codec = lm_codec.TokenStream(params, cfg, n)
+    blob = codecs.compress(codec, toks, lanes=lanes, seed=None,
+                           init_chunks=0)
+    out = codecs.decompress(codec, blob)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(toks))
+
+
+# ---------------------------------------------------------------------------
+# overflow counter (satellite: no more silent data loss)
+# ---------------------------------------------------------------------------
+
+def test_push_overflow_is_counted():
+    lanes, cap = 2, 2
+    stack = ans.make_stack(lanes, cap)
+    table = ans.probs_to_starts(
+        jnp.tile(jnp.asarray([0.01, 0.99], jnp.float32), (lanes, 1)), 14)
+    # Keep pushing the improbable symbol (~7 bits each, so a 16-bit
+    # chunk is emitted roughly every other push) until well past cap.
+    s = stack
+    for _ in range(4 * cap + 16):
+        s = ans.push_with_table(s, table, jnp.zeros((lanes,), jnp.int32),
+                                14)
+    assert int(jnp.sum(s.overflows)) > 0
+    with pytest.raises(RuntimeError, match="overflow"):
+        ans.check_clean(s)
+
+
+def test_seed_stack_overflow_is_counted():
+    stack = ans.make_stack(2, capacity=4)
+    stack = ans.seed_stack(stack, jax.random.PRNGKey(0), 7)
+    np.testing.assert_array_equal(np.asarray(stack.overflows), [3, 3])
+
+
+def test_append_batch_raises_on_overflow(small_cfg, small_params):
+    lanes, n = 2, 3
+    rng = np.random.default_rng(18)
+    data = jnp.asarray(rng.integers(0, 2, (n, lanes, small_cfg.input_dim)),
+                       jnp.int32)
+    hooks = vae_lib.make_codec(small_params, small_cfg)
+    stack = _fresh(lanes, cap=8, chunks=2)  # far too small
+    with pytest.raises(RuntimeError, match="overflow"):
+        bbans.append_batch(hooks, stack, data)

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import codecs
 from repro.configs import base as cfg_base
 from repro.core import ans, bbans, lm_codec
 from repro.models import latent_lm, transformer
@@ -68,10 +69,10 @@ def test_lm_ans_roundtrip_exact():
     toks = jnp.asarray(rng.integers(0, cfg.vocab, (lanes, n)), jnp.int32)
 
     eng = Engine(params, cfg, max_len=n, jit=False)
-    msg, lengths, bits = eng.compress(toks)
-    out = eng.decompress(msg, lengths, n)
+    blob = eng.compress(toks)
+    out = eng.decompress(blob, n)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(toks))
-    assert bits > 0
+    assert codecs.blob_info(blob)["payload_bits"] > 0
 
 
 def test_lm_ans_rate_matches_cross_entropy():
