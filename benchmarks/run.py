@@ -1,16 +1,29 @@
 """Benchmark harness entry point - one function per paper table/figure
-plus the framework's own perf benches. Prints ``name,...`` CSV lines.
+plus the framework's own perf benches. Prints ``name,...`` CSV lines
+and, next to them, writes a machine-readable ``BENCH_<name>.json`` per
+bench (rows + wall time) so the perf trajectory can be tracked across
+commits; CI uploads the JSON files as artifacts.
 
 Full runs: PYTHONPATH=src python -m benchmarks.run
 Quick run: PYTHONPATH=src python -m benchmarks.run --quick
+One bench: PYTHONPATH=src python -m benchmarks.run --only stream_throughput
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
+
+
+def _write_json(out_dir: str, name: str, payload: dict) -> str:
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True, default=str)
+    return path
 
 
 def main() -> None:
@@ -18,11 +31,13 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="reduced image counts / training steps")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json-dir", default=".",
+                    help="directory for the BENCH_<name>.json files")
     args = ap.parse_args()
 
     from benchmarks import (ablation_cleanbits, ans_throughput, fig3_chain,
-                            latent_lm_gain, lm_compression, table2_rates,
-                            table3_predict)
+                            latent_lm_gain, lm_compression,
+                            stream_throughput, table2_rates, table3_predict)
 
     q = args.quick
     benches = {
@@ -40,10 +55,24 @@ def main() -> None:
             train_steps=120 if q else 250),
         "latent_lm_gain": lambda: latent_lm_gain.run(
             train_steps=120 if q else 300),
+        "stream": lambda: stream_throughput.run(
+            lanes=64 if q else 128, n_symbols=1024 if q else 4096,
+            block=128 if q else 512, n_images=64 if q else 256,
+            vae_lanes=16 if q else 32,
+            train_steps=300 if q else 1500),
     }
+    # historical/module aliases for --only (e.g. CI's stream_throughput)
+    aliases = {"stream_throughput": "stream", "table2_rates": "table2",
+               "table3_predict": "table3"}
+    only = aliases.get(args.only, args.only)
+    if only and only not in benches:
+        print(f"unknown bench {args.only!r}; choose from "
+              f"{sorted(benches)}", file=sys.stderr)
+        sys.exit(2)
+
     failures = 0
     for name, fn in benches.items():
-        if args.only and name != args.only:
+        if only and name != only:
             continue
         t0 = time.time()
         try:
@@ -60,10 +89,21 @@ def main() -> None:
                         f"{v:.4f}" if isinstance(v, float) else str(v)
                         for v in row)
                 print(f"{name},{us:.0f},{payload}", flush=True)
+            path = _write_json(args.json_dir, name, {
+                "bench": name, "quick": q, "elapsed_s": dt,
+                "rows": [row if isinstance(row, dict)
+                         else {"values": list(row)} for row in rows],
+            })
+            print(f"{name},json,{path}", flush=True)
         except Exception:
             failures += 1
+            dt = time.time() - t0
             print(f"{name},FAILED", flush=True)
             traceback.print_exc()
+            _write_json(args.json_dir, name, {
+                "bench": name, "quick": q, "elapsed_s": dt,
+                "failed": True, "error": traceback.format_exc(),
+            })
     sys.exit(1 if failures else 0)
 
 

@@ -1,0 +1,131 @@
+"""Streaming codec throughput + rate parity vs one-shot compression.
+
+Two parts:
+
+  * ``categorical`` - raw coder throughput (MB/s of produced wire,
+    Msym/s) for the one-shot container vs the chunked ``repro.stream``
+    path, python block coder and kernel (``push_many_table``/
+    ``pop_many``) fast path. Run on CPU with the Pallas interpreter
+    this is correctness-representative, not perf-representative.
+  * ``vae_rate`` - the acceptance check for chunked streaming: the
+    table2 VAE workload coded one-shot (``codecs.Chained`` +
+    ``codecs.compress``) and streamed in >= 3 blocks with carried
+    heads; reports both net rates (the -ELBO-comparable metric table2
+    uses) and honest wire bits/dim including framing. The streamed
+    net rate must track one-shot within ~1%.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro import codecs, stream
+from repro.core.distributions import Categorical
+from repro.data import synthetic_mnist
+from repro.models import vae as vae_lib
+
+
+def _categorical_rows(lanes: int, n_symbols: int, block: int, seed: int):
+    rng = np.random.default_rng(seed)
+    probs = np.tile(rng.dirichlet(np.ones(32))[None], (lanes, 1))
+    logits = jnp.asarray(np.log(probs + 1e-9), jnp.float32)
+    codec = Categorical(logits, precision=14)
+    syms = jnp.asarray(
+        rng.choice(32, size=(n_symbols, lanes), p=probs[0]), jnp.int32)
+    entropy = float(-np.sum(probs[0] * np.log2(probs[0])))
+
+    rows = []
+
+    def measure(name, fn):
+        us, blob = common.timer(fn, repeats=3)
+        wire_bits = len(blob) * 8
+        rows.append({
+            "bench": "categorical", "path": name,
+            "mb_per_s": len(blob) / 1e6 / (us / 1e6),
+            "msym_per_s": syms.size / us,
+            "bits_per_sym": wire_bits / syms.size,
+            "entropy": entropy,
+        })
+        return blob
+
+    one = measure("oneshot", lambda: codecs.compress(
+        stream.BlockChain(codec, n_symbols), syms, lanes=lanes,
+        seed=None, init_chunks=0, capacity=n_symbols + 64))
+    b_py = measure("stream-py", lambda: stream.encode_stream(
+        codec, syms, lanes=lanes, block_symbols=block, seed=None,
+        use_kernel=False))
+    b_k = measure("stream-kernel", lambda: stream.encode_stream(
+        codec, syms, lanes=lanes, block_symbols=block, seed=None,
+        use_kernel=True))
+    assert b_py == b_k, "kernel fast path must be byte-identical"
+
+    out = stream.decode_stream(codec, b_k)
+    assert bool(jnp.array_equal(out, syms)), "stream decode mismatch"
+    out1 = codecs.decompress(stream.BlockChain(codec, n_symbols), one)
+    assert bool(jnp.array_equal(out1, syms)), "one-shot decode mismatch"
+    return rows
+
+
+def _vae_rate_rows(n_images: int, lanes: int, train_steps: int,
+                   seed: int):
+    cfg = vae_lib.paper_config("beta_binomial")
+    params, neg_elbo = common.train_vae(cfg, steps=train_steps, seed=seed)
+    test_imgs, _ = synthetic_mnist.load("test", n_images, seed)
+    n_chain = n_images // lanes
+    data = jnp.asarray(
+        test_imgs[:n_chain * lanes].reshape(n_chain, lanes, -1),
+        jnp.int32)
+    codec = vae_lib.make_bb_codec(params, cfg)
+    cap = int(n_chain * 16384 / 16) + 256
+
+    t0 = time.perf_counter()
+    blob, info = codecs.compress(codecs.Chained(codec, n_chain), data,
+                                 lanes=lanes, seed=9, capacity=cap,
+                                 with_info=True)
+    one_s = time.perf_counter() - t0
+    one_rate = info["net_bits"] / data.size
+
+    block = max(1, n_chain // 4)   # >= 3 block boundaries
+    t0 = time.perf_counter()
+    enc = stream.StreamEncoder(codec, lanes=lanes, block_symbols=block,
+                               seed=9, init_chunks=32)
+    wire = enc.write(data) + enc.flush()
+    stream_s = time.perf_counter() - t0
+    stream_rate = enc.net_bits / data.size
+
+    out = stream.decode_stream(codec, wire)
+    assert bool(jnp.array_equal(out, data)), "streamed decode mismatch"
+
+    return [{
+        "bench": "vae_rate", "neg_elbo_bpd": neg_elbo,
+        "oneshot_bpd": one_rate, "stream_bpd": stream_rate,
+        "ratio": stream_rate / one_rate,
+        "blocks": enc.n_blocks,
+        "stream_wire_bpd": len(wire) * 8 / data.size,
+        "oneshot_wire_bpd": len(blob) * 8 / data.size,
+        "oneshot_s": one_s, "stream_s": stream_s,
+        "images": n_chain * lanes,
+    }]
+
+
+def run(lanes: int = 64, n_symbols: int = 2048, block: int = 256,
+        n_images: int = 128, vae_lanes: int = 16,
+        train_steps: int = 400, seed: int = 0):
+    rows = _categorical_rows(lanes, n_symbols, block, seed)
+    rows += _vae_rate_rows(n_images, vae_lanes, train_steps, seed)
+    return rows
+
+
+def main():
+    for r in run():
+        print(",".join(f"{k}={v:.4f}" if isinstance(v, float) else
+                       f"{k}={v}" for k, v in r.items()))
+
+
+if __name__ == "__main__":
+    main()

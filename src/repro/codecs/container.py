@@ -155,18 +155,47 @@ def blob_info(blob: bytes) -> Dict[str, Any]:
     }
 
 
+def pack_lane_rows(msg: np.ndarray, lengths: np.ndarray) -> bytes:
+    """Concatenate per-lane ``msg[l, :lengths[l]]`` rows into wire bytes.
+
+    The shared payload primitive of the BBX1 one-shot container and the
+    ``repro.stream`` BBX2 block format (little-endian u16 chunks).
+    """
+    msg = np.asarray(msg)
+    lengths = np.asarray(lengths)
+    return b"".join(msg[l, :lengths[l]].astype("<u2").tobytes()
+                    for l in range(msg.shape[0]))
+
+
+def unpack_lane_rows(buf: bytes, offset: int,
+                     lengths: np.ndarray) -> np.ndarray:
+    """Inverse of ``pack_lane_rows``: rebuild the padded [lanes, width]
+    uint16 message from concatenated rows at ``offset`` in ``buf``."""
+    lengths = np.asarray(lengths)
+    total = int(lengths.sum())
+    if len(buf) < offset + 2 * total:
+        raise ValueError("codecs: truncated payload (lane rows short)")
+    flat = np.frombuffer(buf, dtype="<u2", count=total, offset=offset)
+    width = int(lengths.max()) if lengths.size else 0
+    msg = np.zeros((lengths.shape[0], width), np.uint16)
+    pos = 0
+    for l in range(lengths.shape[0]):
+        n = int(lengths[l])
+        msg[l, :n] = flat[pos:pos + n]
+        pos += n
+    return msg
+
+
 def _pack(stack: ans.ANSStack, precision: int) -> bytes:
     msg, lengths = ans.flatten(stack)
     msg_np = np.asarray(msg)
     lengths_np = np.asarray(lengths)
     lanes = msg_np.shape[0]
-    parts = [
+    return b"".join([
         _HEADER.pack(_MAGIC, _VERSION, precision, 0, lanes),
         lengths_np.astype("<u4").tobytes(),
-    ]
-    for l in range(lanes):
-        parts.append(msg_np[l, :lengths_np[l]].astype("<u2").tobytes())
-    return b"".join(parts)
+        pack_lane_rows(msg_np, lengths_np),
+    ])
 
 
 def _unpack(blob: bytes) -> Tuple[np.ndarray, np.ndarray, int]:
@@ -183,15 +212,5 @@ def _unpack(blob: bytes) -> Tuple[np.ndarray, np.ndarray, int]:
     if (lengths < 2).any():
         raise ValueError("codecs: corrupt header (lane length < 2)")
     off += 4 * lanes
-    total = int(lengths.sum())
-    if len(blob) < off + 2 * total:
-        raise ValueError("codecs: truncated blob (payload short)")
-    flat = np.frombuffer(blob, dtype="<u2", count=total, offset=off)
-    width = int(lengths.max())
-    msg = np.zeros((lanes, width), np.uint16)
-    pos = 0
-    for l in range(lanes):
-        n = int(lengths[l])
-        msg[l, :n] = flat[pos:pos + n]
-        pos += n
+    msg = unpack_lane_rows(blob, off, lengths)
     return msg, lengths, precision

@@ -81,16 +81,22 @@ def make_stack(lanes: int, capacity: int,
     """Create an empty stack; if ``key`` given, heads are random (clean bits).
 
     A fresh head carries ``log2(head) - 16`` bits of recoverable randomness;
-    seeding with random heads in ``[2^16, 2^32)`` provides ~16 bits/lane of
-    "extra information" for the first bits-back pop. Use ``seed_stack`` to
-    add more.
+    seeding with random heads drawn *uniformly* over the full normalized
+    interval ``[2^16, 2^32)`` provides up to 16 bits/lane (~14.6 in
+    expectation) of "extra information" for the first bits-back pop. Use
+    ``seed_stack`` to add more. The draw is exactly uniform: a 15-bit-ish
+    high half ``hi ~ U[1, 2^16)`` and a low half ``lo ~ U[0, 2^16)``
+    compose to ``(hi << 16) | lo ~ U[2^16, 2^32)``.
     """
     if key is None:
         head = jnp.full((lanes,), RANS_L, dtype=jnp.uint32)
     else:
-        head = jax.random.randint(
-            key, (lanes,), minval=1 << 16, maxval=(1 << 31) - 1,
-            dtype=jnp.int32).astype(jnp.uint32) | jnp.uint32(1 << 31)
+        k_hi, k_lo = jax.random.split(key)
+        hi = jax.random.randint(k_hi, (lanes,), 1, 1 << 16,
+                                dtype=jnp.int32).astype(jnp.uint32)
+        lo = jax.random.randint(k_lo, (lanes,), 0, 1 << 16,
+                                dtype=jnp.int32).astype(jnp.uint32)
+        head = (hi << 16) | lo
     return ANSStack(
         head=head,
         buf=jnp.zeros((lanes, capacity), dtype=jnp.uint16),
@@ -279,6 +285,27 @@ def check_clean(stack: ANSStack, context: str = "ANS") -> ANSStack:
             f"{context}: {over} chunk(s) dropped on overflow - stack "
             "capacity too small for this message; increase capacity")
     return stack
+
+
+def select_lanes(mask: jnp.ndarray, on_true: ANSStack,
+                 on_false: ANSStack) -> ANSStack:
+    """Per-lane select between two stacks of identical shape.
+
+    Lane ``l`` of the result is ``on_true``'s lane where ``mask[l]`` and
+    ``on_false``'s lane otherwise. Because lanes are fully independent
+    coders, this turns any unmasked codec operation into a masked one:
+    run ``codec.push``/``pop`` on the whole stack, then keep the old
+    state in the lanes that should not advance. ``repro.stream`` uses
+    this to admit/retire streams mid-batch and to code ragged final
+    blocks without padding symbols.
+    """
+    m = mask.astype(bool)
+    return ANSStack(
+        head=jnp.where(m, on_true.head, on_false.head),
+        buf=jnp.where(m[:, None], on_true.buf, on_false.buf),
+        ptr=jnp.where(m, on_true.ptr, on_false.ptr),
+        underflows=jnp.where(m, on_true.underflows, on_false.underflows),
+        overflows=jnp.where(m, on_true.overflows, on_false.overflows))
 
 
 # ---------------------------------------------------------------------------

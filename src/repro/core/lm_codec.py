@@ -71,6 +71,26 @@ def _jitted_pop(precision: int):
     return jax.jit(pop)
 
 
+@functools.lru_cache(maxsize=None)
+def _jitted_push_masked(precision: int):
+    def push(stack, logits_t, toks_t, mask):
+        dist = FactoredCategorical(logits_t, precision=precision)
+        return ans.select_lanes(mask, dist.push(stack, toks_t), stack)
+
+    return jax.jit(push)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_pop_masked(precision: int):
+    def pop(stack, logits_t, mask):
+        dist = FactoredCategorical(logits_t, precision=precision)
+        popped, sym = dist.pop(stack)
+        return (ans.select_lanes(mask, popped, stack),
+                jnp.where(mask, sym, 0))
+
+    return jax.jit(pop)
+
+
 def collect_decoder_logits(params, cfg, tokens: jnp.ndarray) -> list:
     """Teacher-forced logits via the decoder's own compiled step."""
     lanes, n = tokens.shape
@@ -114,6 +134,49 @@ def decode_tokens(params, cfg, stack: ans.ANSStack, n: int,
     for _ in range(n):
         logits, state = step(params, tok=tok, state=state)
         stack, sym = pop(stack, logits[:, 0].astype(jnp.float32))
+        out.append(sym)
+        tok = sym[:, None].astype(jnp.int32)
+    return stack, jnp.stack(out, axis=1)
+
+
+def encode_tokens_masked(params, cfg, tokens: jnp.ndarray,
+                         n_valid: jnp.ndarray, stack: ans.ANSStack,
+                         precision: int = ans.DEFAULT_PRECISION
+                         ) -> ans.ANSStack:
+    """Ragged batch encode: lane ``l`` pushes only ``tokens[l,
+    :n_valid[l]]``; its stack state beyond that is bit-identical to
+    never having coded at all (``ans.select_lanes`` freeze).
+
+    Callers pad ``tokens`` with zeros past ``n_valid`` so the network
+    inputs on masked lanes match what the masked decoder feeds (the
+    logits there are computed but never coded; lanes are independent,
+    so they do not perturb valid lanes either way). This is the LM leg
+    of the ``repro.stream`` dynamic batcher.
+    """
+    lanes, n = tokens.shape
+    logits = collect_decoder_logits(params, cfg, tokens)
+    push = _jitted_push_masked(precision)
+    for t in reversed(range(n)):
+        stack = push(stack, logits[t], tokens[:, t], t < n_valid)
+    return stack
+
+
+def decode_tokens_masked(params, cfg, stack: ans.ANSStack, n: int,
+                         n_valid: jnp.ndarray,
+                         precision: int = ans.DEFAULT_PRECISION
+                         ) -> Tuple[ans.ANSStack, jnp.ndarray]:
+    """Inverse of ``encode_tokens_masked``; masked positions decode to
+    0 (the same padding the encoder fed its network)."""
+    lanes = stack.lanes
+    step = jitted_decode_step(cfg)
+    pop = _jitted_pop_masked(precision)
+    state = transformer.init_decode_state(cfg, lanes, max_len=n)
+    tok = jnp.full((lanes, 1), BOS, jnp.int32)
+    out = []
+    for t in range(n):
+        logits, state = step(params, tok=tok, state=state)
+        stack, sym = pop(stack, logits[:, 0].astype(jnp.float32),
+                         t < n_valid)
         out.append(sym)
         tok = sym[:, None].astype(jnp.int32)
     return stack, jnp.stack(out, axis=1)

@@ -79,16 +79,14 @@ def push_emit(head: jnp.ndarray, starts: jnp.ndarray, freqs: jnp.ndarray,
     )(head, starts, freqs)
 
 
-def _pop_kernel(head_ref, slots_out_ref, *, precision: int, steps: int):
-    """Decode-side helper: emit the slot stream for ``steps`` pops when the
-    per-step (start, freq) is resolved outside (table lookup); included to
-    demonstrate the decode loop shape. Used by ops.pop_slots."""
-    mask = (1 << precision) - 1
-    head = head_ref[...]
-    for t in range(steps):
-        slots_out_ref[t, :] = (head & mask).astype(jnp.uint32)
-        # state update happens outside (needs symbol resolution)
-        break  # single-step variant; the multi-step path lives in ops.py
+def _peek_kernel(head_ref, slots_out_ref, *, precision: int):
+    """Single-step vector peek: the decode slot per lane.
+
+    The honest single-step kernel: one masked AND per lane, no loop. The
+    real multi-step decode path is ``_pop_table_kernel`` below.
+    """
+    mask = jnp.uint32((1 << precision) - 1)
+    slots_out_ref[0, :] = head_ref[...] & mask
 
 
 def pop_slots(head: jnp.ndarray, precision: int,
@@ -96,7 +94,7 @@ def pop_slots(head: jnp.ndarray, precision: int,
     """Vector peek: slot = head mod 2^precision per lane."""
     lanes = head.shape[0]
     assert lanes % LANE_TILE == 0
-    kernel = functools.partial(_pop_kernel, precision=precision, steps=1)
+    kernel = functools.partial(_peek_kernel, precision=precision)
     out = pl.pallas_call(
         kernel,
         grid=(lanes // LANE_TILE,),
@@ -106,3 +104,79 @@ def pop_slots(head: jnp.ndarray, precision: int,
         interpret=interpret,
     )(head)
     return out[0]
+
+
+def _pop_table_kernel(head_ref, table_ref, feed_ref,
+                      out_head_ref, syms_ref, reads_ref, *, precision: int):
+    """Multi-step table-driven pop for one lane tile.
+
+    Decodes ``steps`` symbols per lane against a static per-lane
+    cumulative-starts table (uint32[LANE_TILE, A+1]). The data-dependent
+    renormalization *read* is fed from ``feed_ref`` - the next ``steps``
+    chunks of each lane's stack pre-gathered outside the kernel in pop
+    order (each pop reads at most one chunk, so ``steps`` rows suffice) -
+    indexed by a per-lane read counter. The symbol search is branchless:
+    ``sym = #(F <= slot) - 1``, ``start = max F <= slot``, ``next = min
+    F > slot``, all lane-parallel reductions over the table axis.
+    """
+    steps = feed_ref.shape[0]
+    total = jnp.uint32(1 << precision)
+    mask = jnp.uint32((1 << precision) - 1)
+    table = table_ref[...]   # uint32[LANE_TILE, A+1]
+    feed = feed_ref[...]     # uint32[steps, LANE_TILE]
+
+    def body(t, carry):
+        head, r = carry
+        slot = head & mask
+        le = table <= slot[:, None]
+        syms_ref[t, :] = jnp.sum(le, axis=1).astype(jnp.uint32) - 1
+        start = jnp.max(jnp.where(le, table, jnp.uint32(0)), axis=1)
+        nxt = jnp.min(jnp.where(le, total, table), axis=1)
+        head = (nxt - start) * (head >> precision) + slot - start
+        need = head < jnp.uint32(1 << 16)
+        chunk = jnp.take_along_axis(feed, r[None, :], axis=0)[0]
+        head = jnp.where(need, (head << 16) | chunk, head)
+        return head, r + need.astype(jnp.int32)
+
+    head0 = head_ref[...]
+    reads0 = jnp.zeros(head0.shape, jnp.int32)
+    head, reads = jax.lax.fori_loop(0, steps, body, (head0, reads0))
+    out_head_ref[...] = head
+    reads_ref[...] = reads.astype(jnp.uint32)
+
+
+def pop_table_emit(head: jnp.ndarray, table: jnp.ndarray,
+                   feed: jnp.ndarray, precision: int,
+                   interpret: bool = True):
+    """head uint32[lanes]; table uint32[lanes, A+1]; feed uint32[steps,
+    lanes] -> (new_head, syms uint32[steps, lanes], reads uint32[lanes]).
+
+    ``feed[r, l]`` must hold the ``r``-th chunk lane ``l``'s stack would
+    serve (top first, clamped at the bottom - see ops.pop_many). lanes
+    must be a multiple of LANE_TILE (ops.py pads).
+    """
+    steps, lanes = feed.shape
+    assert lanes % LANE_TILE == 0, lanes
+    grid = (lanes // LANE_TILE,)
+    a1 = table.shape[1]
+    kernel = functools.partial(_pop_table_kernel, precision=precision)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((LANE_TILE,), lambda i: (i,)),
+            pl.BlockSpec((LANE_TILE, a1), lambda i: (i, 0)),
+            pl.BlockSpec((steps, LANE_TILE), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((LANE_TILE,), lambda i: (i,)),
+            pl.BlockSpec((steps, LANE_TILE), lambda i: (0, i)),
+            pl.BlockSpec((LANE_TILE,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((lanes,), jnp.uint32),
+            jax.ShapeDtypeStruct((steps, lanes), jnp.uint32),
+            jax.ShapeDtypeStruct((lanes,), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(head, table, feed)

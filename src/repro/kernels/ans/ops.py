@@ -1,11 +1,20 @@
-"""jit wrapper: Pallas emission kernel + XLA compaction -> ANSStack push.
+"""jit wrappers: Pallas coder kernels + XLA gather/scatter -> ANSStack ops.
 
 ``push_many`` is the production batch-encode path: the ALU-bound coder
 loop runs in the Pallas kernel (VPU lanes), the irregular per-lane stack
-append becomes one vectorized cumsum + scatter.
+append becomes one vectorized cumsum + scatter. ``pop_many`` is its
+decode twin: the table search and state updates run in the kernel
+against a pre-gathered chunk feed (each pop reads at most one chunk, in
+stack order, so the feed is a dense [steps, lanes] slice), and the
+per-lane pointer/underflow bookkeeping happens outside. Both are
+bit-exact equivalents of the sequential ``repro.core.ans`` calls,
+validated against the ``ref.py`` oracle; ``repro.stream`` uses them as
+the block coder's fast path.
 """
 
 from __future__ import annotations
+
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,3 +54,63 @@ def push_many(stack: ans.ANSStack, starts: jnp.ndarray, freqs: jnp.ndarray,
                    axis=0).astype(jnp.int32)
     return stack._replace(head=new_head, buf=buf, ptr=ptr,
                           overflows=stack.overflows + over)
+
+
+def push_many_table(stack: ans.ANSStack, starts_table: jnp.ndarray,
+                    symbols: jnp.ndarray,
+                    precision: int = ans.DEFAULT_PRECISION,
+                    interpret: bool = True) -> ans.ANSStack:
+    """Push ``steps`` symbols per lane from a static per-lane table.
+
+    ``starts_table``: uint32[lanes, A+1] cumulative starts (as in
+    ``ans.push_with_table``); ``symbols``: int[steps, lanes]. Bit-exact
+    equivalent of ``steps`` sequential ``ans.push_with_table`` calls.
+    """
+    sym = symbols.astype(jnp.int32)
+    rows = jnp.arange(stack.lanes)[None, :]
+    starts = starts_table[rows, sym]
+    freqs = starts_table[rows, sym + 1] - starts
+    return push_many(stack, starts.astype(jnp.uint32),
+                     freqs.astype(jnp.uint32), precision, interpret)
+
+
+def pop_many(stack: ans.ANSStack, starts_table: jnp.ndarray, steps: int,
+             precision: int = ans.DEFAULT_PRECISION,
+             interpret: bool = True
+             ) -> Tuple[ans.ANSStack, jnp.ndarray]:
+    """Pop ``steps`` symbols per lane from a static per-lane table.
+
+    Bit-exact equivalent of ``steps`` sequential ``ans.pop_with_table``
+    calls, including the underflow accounting (reads past the stack
+    bottom re-serve the bottom chunk, exactly as ``ans.pop_update``
+    does). Returns ``(stack, symbols int32[steps, lanes])`` with symbols
+    in pop order.
+    """
+    lanes = stack.lanes
+    # Pre-gather the chunk feed: the r-th renormalization read of lane l
+    # serves buf[l, ptr-1-r], clamped at the bottom (the core reads
+    # buf[l, 0] on underflow - replicated here for bit-exactness).
+    if stack.capacity:
+        t = jnp.arange(steps)
+        cols = jnp.clip(stack.ptr[None, :] - 1 - t[:, None], 0,
+                        stack.capacity - 1)
+        feed = stack.buf[jnp.arange(lanes)[None, :],
+                         cols].astype(jnp.uint32)
+    else:   # chunk-less stack: every read underflows and serves 0
+        feed = jnp.zeros((steps, lanes), jnp.uint32)
+
+    head, table = stack.head, starts_table.astype(jnp.uint32)
+    pad = (-lanes) % K.LANE_TILE
+    if pad:
+        head = jnp.pad(head, (0, pad), constant_values=1 << 16)
+        table = jnp.pad(table, ((0, pad), (0, 0)))
+        feed = jnp.pad(feed, ((0, 0), (0, pad)))
+    new_head, syms, reads = K.pop_table_emit(head, table, feed, precision,
+                                             interpret=interpret)
+    new_head = new_head[:lanes]
+    syms = syms[:, :lanes].astype(jnp.int32)
+    reads = reads[:lanes].astype(jnp.int32)
+    under = jnp.maximum(reads - stack.ptr, 0)
+    ptr = jnp.maximum(stack.ptr - reads, 0)
+    return stack._replace(head=new_head, ptr=ptr,
+                          underflows=stack.underflows + under), syms

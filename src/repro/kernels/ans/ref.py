@@ -39,3 +39,30 @@ def push_many_ref(stack: ans.ANSStack, starts, freqs,
         return ans.push(st, starts[t], freqs[t], precision)
 
     return jax.lax.fori_loop(0, steps, body, stack)
+
+
+def push_many_table_ref(stack: ans.ANSStack, starts_table, symbols,
+                        precision) -> ans.ANSStack:
+    """Reference for ops.push_many_table: sequential table pushes."""
+    steps = symbols.shape[0]
+
+    def body(t, st):
+        return ans.push_with_table(st, starts_table, symbols[t], precision)
+
+    return jax.lax.fori_loop(0, steps, body, stack)
+
+
+def pop_many_ref(stack: ans.ANSStack, starts_table, steps: int,
+                 precision):
+    """Reference for ops.pop_many: sequential core-library table pops.
+
+    Returns (stack, symbols int32[steps, lanes]) in pop order.
+    """
+    syms0 = jnp.zeros((steps, stack.lanes), jnp.int32)
+
+    def body(t, carry):
+        st, syms = carry
+        st, sym = ans.pop_with_table(st, starts_table, precision)
+        return st, syms.at[t].set(sym)
+
+    return jax.lax.fori_loop(0, steps, body, (stack, syms0))

@@ -9,15 +9,43 @@ calls so KV caches update in place.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro import codecs
-from repro.core import lm_codec
+from repro import codecs, stream
+from repro.core import ans, lm_codec
+from repro.core.codec import FnCodec
 from repro.models import transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class _LMMaskedBlock(stream.MaskedBlockCodec):
+    """LM token coding as a masked block codec for the dynamic batcher.
+
+    The batcher's block symbols are time-major int[k, lanes]; the LM
+    codes [lanes, k] with block-local context (the decode state resets
+    at block boundaries - the price of independently-decodable blocks).
+    """
+
+    params: Any
+    cfg: Any
+    precision: int = ans.DEFAULT_PRECISION
+
+    def push(self, stack: ans.ANSStack, xs: jnp.ndarray,
+             n_valid: jnp.ndarray) -> ans.ANSStack:
+        return lm_codec.encode_tokens_masked(
+            self.params, self.cfg, xs.T.astype(jnp.int32), n_valid,
+            stack, self.precision)
+
+    def pop(self, stack: ans.ANSStack, k: int,
+            n_valid: jnp.ndarray) -> Tuple[ans.ANSStack, jnp.ndarray]:
+        stack, toks = lm_codec.decode_tokens_masked(
+            self.params, self.cfg, stack, k, n_valid, self.precision)
+        return stack, toks.T
 
 
 class Engine:
@@ -76,3 +104,86 @@ class Engine:
     def decompress(self, blob: bytes, n: int) -> jnp.ndarray:
         codec = lm_codec.TokenStream(self.params, self.cfg, n)
         return codecs.decompress(codec, blob)
+
+    # -- streaming service ----------------------------------------------------
+
+    def _block_codec_fn(self):
+        """BBX2 block codec: TokenStream over one block, transposed to
+        the stream layer's time-major [k, lanes] layout."""
+        def fn(k: int):
+            inner = lm_codec.TokenStream(self.params, self.cfg, k)
+
+            def push(stack, xs):
+                return inner.push(stack, xs.T.astype(jnp.int32))
+
+            def pop(stack):
+                stack, toks = inner.pop(stack)
+                return stack, toks.T
+
+            return FnCodec(push, pop)
+        return fn
+
+    def compress_stream(self, tokens: jnp.ndarray, *,
+                        block_symbols: int = 64,
+                        capacity_factor: float = 1.5) -> bytes:
+        """Chunked-streaming compress of token streams [lanes, N].
+
+        Returns a ``BBX2`` blob: every ``block_symbols`` tokens/lane
+        become an independently-decodable block (clean bits carried
+        across boundaries encoder-side), so a consumer can start
+        decoding - or resume from a mid-stream byte offset via
+        ``stream.decode_from_offset`` - long before the stream ends.
+        The LM context is block-local: prediction resets at block
+        boundaries, trading a little rate for random access.
+        """
+        lanes, n = tokens.shape
+        enc = stream.StreamEncoder(
+            block_codec_fn=self._block_codec_fn(),
+            lanes=lanes, block_symbols=block_symbols, seed=None,
+            capacity=int(block_symbols * capacity_factor) + 8)
+        return enc.write(tokens.T) + enc.flush()
+
+    def decompress_stream(self, blob: bytes) -> jnp.ndarray:
+        """Decode a ``compress_stream`` blob back to [lanes, N]."""
+        out = stream.decode_stream(None, blob,
+                                   block_codec_fn=self._block_codec_fn())
+        return out.T if out is not None else out
+
+    def serve_many(self, requests: Sequence[jnp.ndarray], *,
+                   max_lanes: int = 8, block_symbols: int = 32,
+                   capacity_factor: float = 1.5) -> List[bytes]:
+        """Compress many independent token streams of different lengths
+        through one ``ANSStack`` (the multi-request service path).
+
+        The dynamic batcher packs up to ``max_lanes`` requests into the
+        lane axis per block round, admitting queued requests as lanes
+        free up; every network call runs at width ``max_lanes`` (free
+        lanes masked) so encode and decode share one compiled
+        executable - the ``lm_codec`` determinism contract at batch
+        level. Returns one 1-lane BBX2 blob per request, in order.
+        """
+        bat = stream.StreamBatcher(
+            _LMMaskedBlock(self.params, self.cfg),
+            max_lanes=max_lanes, block_symbols=block_symbols, seed=None,
+            capacity=int(block_symbols * capacity_factor) + 8)
+        for i, toks in enumerate(requests):
+            bat.submit(i, toks.astype(jnp.int32))
+        blobs = bat.run()
+        return [blobs[i] for i in range(len(requests))]
+
+    def decompress_many(self, blobs: Sequence[bytes], *,
+                        max_lanes: int = 8,
+                        block_symbols: int = 32) -> List[jnp.ndarray]:
+        """Batched decode of ``serve_many`` blobs.
+
+        ``max_lanes`` must match the encoding call: the decoder drives
+        the same width-``max_lanes`` executable so logits are bitwise
+        identical to encode time.
+        """
+        outs = stream.decode_batched(
+            _LMMaskedBlock(self.params, self.cfg),
+            {i: b for i, b in enumerate(blobs)},
+            max_lanes=max_lanes, block_symbols=block_symbols)
+        empty = jnp.zeros((0,), jnp.int32)
+        return [outs[i] if outs[i] is not None else empty
+                for i in range(len(blobs))]

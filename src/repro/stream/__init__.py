@@ -1,0 +1,34 @@
+"""``repro.stream`` - chunked streaming codec + dynamic batching.
+
+The layer between the codec algebra (``repro.codecs``) and the serving
+engine (``repro.serve``): arbitrary-length symbol streams are cut into
+independently-decodable ``BBX2`` blocks (``format``), coded
+incrementally with clean bits carried across block boundaries
+(``coder``), and many concurrent client streams are packed into the
+lane axis of one ``ANSStack`` (``batcher``).
+
+    enc = stream.StreamEncoder(codec, lanes=16, block_symbols=64)
+    wire = enc.write(xs)          # bytes out as blocks complete
+    wire += enc.flush()           # ragged final block + trailer
+
+    xs2 = stream.decode_stream(codec, wire)             # full decode
+    tail = stream.decode_from_offset(codec, wire, off)  # resume
+"""
+
+from repro.stream import format  # noqa: F401  (the BBX2 wire format)
+from repro.stream.coder import (BlockChain, KernelTableBlock,  # noqa: F401
+                                StreamDecoder, StreamEncoder,
+                                decode_from_offset, decode_stream,
+                                encode_stream)
+from repro.stream.batcher import (MaskedBlockCodec,  # noqa: F401
+                                  SteppedMaskedBlock, StreamBatcher,
+                                  decode_batched)
+
+__all__ = [
+    "format",
+    "BlockChain", "KernelTableBlock",
+    "StreamEncoder", "StreamDecoder",
+    "encode_stream", "decode_stream", "decode_from_offset",
+    "MaskedBlockCodec", "SteppedMaskedBlock", "StreamBatcher",
+    "decode_batched",
+]

@@ -1,0 +1,385 @@
+"""Dynamic batching: many client streams through one ``ANSStack``.
+
+The scheduler packs concurrent streams into the *lane axis* of a single
+stack - the axis the whole substrate is vectorized over - so one model
+evaluation (VAE decode, LM step, ...) serves every active stream at
+once. The batch composition changes **between blocks**: streams are
+admitted from a FIFO queue whenever a lane frees up and retired the
+round their data runs out. Lanes are fully independent rANS coders, so
+each lane's flattened message slices out as a self-contained 1-lane
+BBX2 block for that client; a client's blob is an ordinary BBX2 stream
+(``lanes=1``) decodable by ``StreamDecoder`` - or, bit-for-bit
+identically, by the batched ``decode_batched`` below.
+
+Masking: within a round the active blocks may be ragged (a stream's
+final block is shorter) and some lanes may be free. Both cases use
+``ans.select_lanes``: the codec runs unmasked over the full lane axis
+(vector units don't care) and the lanes that must not advance simply
+keep their previous state. No padding symbols are ever coded, so
+masked lanes cost zero wire bits.
+
+Head carry works per client exactly as in ``StreamEncoder``: a client's
+next block starts from *its own* previous block's final head, whatever
+lane either block was scheduled on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ans
+from repro.core.codec import Codec
+from repro.stream import format as fmt
+
+
+class MaskedBlockCodec:
+    """Block codec with per-lane valid counts.
+
+    ``push(stack, xs, n_valid)``: ``xs`` is time-major ``[k, lanes,
+    ...]``; lane ``l`` codes only its first ``n_valid[l]`` datapoints
+    (its state must be byte-identical to never having seen the rest).
+    ``pop(stack, k, n_valid)`` is the inverse; values in invalid
+    positions of the returned ``xs`` are unspecified.
+    """
+
+    def push(self, stack: ans.ANSStack, xs: Any,
+             n_valid: jnp.ndarray) -> ans.ANSStack:
+        raise NotImplementedError
+
+    def pop(self, stack: ans.ANSStack, k: int,
+            n_valid: jnp.ndarray) -> Tuple[ans.ANSStack, Any]:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class SteppedMaskedBlock(MaskedBlockCodec):
+    """Any per-datapoint ``Codec`` as a MaskedBlockCodec.
+
+    Steps the inner codec one datapoint at a time (reversed on push so
+    pops stream forward) and freezes masked lanes with
+    ``ans.select_lanes`` after every step.
+    """
+
+    inner: Codec
+
+    def push(self, stack: ans.ANSStack, xs: Any,
+             n_valid: jnp.ndarray) -> ans.ANSStack:
+        k = jax.tree_util.tree_leaves(xs)[0].shape[0]
+        for t in reversed(range(k)):
+            x_t = jax.tree_util.tree_map(lambda a: a[t], xs)
+            pushed = self.inner.push(stack, x_t)
+            stack = ans.select_lanes(t < n_valid, pushed, stack)
+        return stack
+
+    def pop(self, stack: ans.ANSStack, k: int,
+            n_valid: jnp.ndarray) -> Tuple[ans.ANSStack, Any]:
+        outs = []
+        for t in range(k):
+            popped, x = self.inner.pop(stack)
+            stack = ans.select_lanes(t < n_valid, popped, stack)
+            outs.append(x)
+        return stack, jax.tree_util.tree_map(
+            lambda *ls: jnp.stack(ls, axis=0), *outs)
+
+
+class _Client:
+    def __init__(self, stream_id: Any, datapoints: List[Any]):
+        self.id = stream_id
+        self.datapoints = datapoints
+        self.pos = 0
+        self.head: Optional[jnp.ndarray] = None  # uint32[] carried head
+        self.parts: List[bytes] = []
+        self.n_blocks = 0
+
+    @property
+    def remaining(self) -> int:
+        return len(self.datapoints) - self.pos
+
+
+class StreamBatcher:
+    """Pack many submitted streams into one ``max_lanes``-wide stack.
+
+    ``codec`` is either a per-datapoint ``Codec`` built for exactly
+    ``max_lanes`` lanes (wrapped in ``SteppedMaskedBlock``) or a
+    ``MaskedBlockCodec``. Client data has **no** lane axis: leaves are
+    ``[n, ...]``; the batcher owns lane placement. ``run()`` drives
+    rounds to completion and returns ``{stream_id: blob}`` where each
+    blob is a 1-lane BBX2 stream.
+
+    Every codec call runs at the full ``max_lanes`` width (free lanes
+    are masked), so each round reuses one compiled executable - the
+    property model-backed codecs need for bitwise encode/decode
+    symmetry (see ``core.lm_codec``).
+    """
+
+    def __init__(self, codec, max_lanes: int, block_symbols: int, *,
+                 seed: Optional[int] = None, init_chunks: int = 0,
+                 precision: int = ans.DEFAULT_PRECISION,
+                 capacity: Optional[int] = None, max_retries: int = 6):
+        if max_lanes < 1 or block_symbols < 1:
+            raise ValueError("batcher: max_lanes/block_symbols must be >= 1")
+        if seed is None and init_chunks:
+            raise ValueError("batcher: init_chunks requires a seed")
+        self._block = (codec if isinstance(codec, MaskedBlockCodec)
+                       else SteppedMaskedBlock(codec))
+        self.max_lanes = max_lanes
+        self.block_symbols = block_symbols
+        self.precision = precision
+        self._seed = seed
+        self._init_chunks = init_chunks
+        self._capacity = capacity
+        self._max_retries = max_retries
+        self._queue: List[_Client] = []
+        self._lanes: List[Optional[_Client]] = [None] * max_lanes
+        self._zero_dp: Optional[Any] = None
+        self._round = 0
+        self._admitted = 0
+        self._done: Dict[Any, bytes] = {}
+
+    # -- submission ----------------------------------------------------------
+
+    def submit(self, stream_id: Any, data: Any) -> None:
+        """Enqueue a client stream; leaves are ``[n, ...]`` (no lanes)."""
+        if stream_id in self._done or any(
+                c.id == stream_id
+                for c in self._queue + [l for l in self._lanes if l]):
+            raise ValueError(f"batcher: duplicate stream id {stream_id!r}")
+        leaves = jax.tree_util.tree_leaves(data)
+        n = leaves[0].shape[0] if leaves else 0
+        datapoints = [jax.tree_util.tree_map(lambda a: a[t], data)
+                      for t in range(n)]
+        if self._zero_dp is None and datapoints:
+            self._zero_dp = jax.tree_util.tree_map(
+                jnp.zeros_like, datapoints[0])
+        self._queue.append(_Client(stream_id, datapoints))
+
+    # -- scheduling ----------------------------------------------------------
+
+    def _admit(self) -> None:
+        for l in range(self.max_lanes):
+            if self._lanes[l] is None and self._queue:
+                client = self._queue.pop(0)
+                client.parts.append(fmt.encode_header(fmt.StreamHeader(
+                    lanes=1, block_symbols=self.block_symbols,
+                    precision=self.precision)))
+                if self._seed is not None:
+                    key = jax.random.fold_in(
+                        jax.random.PRNGKey(self._seed), self._admitted)
+                    client.head = ans.make_stack(1, 1, key=key).head[0]
+                self._admitted += 1
+                self._lanes[l] = client
+
+    def _retire(self, lane: int) -> None:
+        client = self._lanes[lane]
+        client.parts.append(fmt.encode_trailer(
+            fmt.Trailer(client.n_blocks, client.pos)))
+        self._done[client.id] = b"".join(client.parts)
+        self._lanes[lane] = None
+
+    @property
+    def idle(self) -> bool:
+        return not self._queue and all(c is None for c in self._lanes)
+
+    def step(self) -> Dict[Any, bytes]:
+        """One round: admit, code one block per active stream, retire.
+
+        Returns the blobs of streams that *finished* this round.
+        """
+        self._admit()
+        active = [(l, c) for l, c in enumerate(self._lanes)
+                  if c is not None]
+        if not active:
+            return {}
+        finished_before = set(self._done)
+        counts = {l: min(self.block_symbols, c.remaining)
+                  for l, c in active}
+        n_steps = max(counts.values())
+        if n_steps > 0:
+            self._encode_round(active, counts, n_steps)
+        for l, c in active:
+            if c.remaining == 0:
+                self._retire(l)
+        self._round += 1
+        return {sid: blob for sid, blob in self._done.items()
+                if sid not in finished_before}
+
+    def run(self) -> Dict[Any, bytes]:
+        """Drive rounds until every submitted stream has its blob."""
+        while not self.idle:
+            self.step()
+        return dict(self._done)
+
+    # -- coding --------------------------------------------------------------
+
+    def _default_capacity(self) -> int:
+        per_lane = sum(int(np.prod(leaf.shape)) for leaf in
+                       jax.tree_util.tree_leaves(self._zero_dp))
+        return max(256, self.block_symbols * per_lane
+                   + self._init_chunks + 64)
+
+    def _round_stack(self, heads: jnp.ndarray, mask: jnp.ndarray,
+                     capacity: int, chunks: int) -> ans.ANSStack:
+        stack = ans.make_stack(self.max_lanes, capacity)
+        stack = stack._replace(head=heads)
+        if chunks:
+            key = jax.random.fold_in(jax.random.PRNGKey(self._seed),
+                                     1_000_003 + self._round)
+            seeded = ans.seed_stack(stack, key, chunks)
+            stack = ans.select_lanes(mask, seeded, stack)
+        return stack
+
+    def _encode_round(self, active, counts: Dict[int, int],
+                      n_steps: int) -> None:
+        # Lanes whose stream has no datapoints this round (freshly
+        # admitted empties) stay fully masked and emit no block.
+        active = [(l, c) for l, c in active if counts[l] > 0]
+        lane_mask = np.zeros((self.max_lanes,), bool)
+        n_valid_np = np.zeros((self.max_lanes,), np.int32)
+        heads_np = np.full((self.max_lanes,), int(ans.RANS_L), np.uint32)
+        for l, c in active:
+            lane_mask[l] = True
+            n_valid_np[l] = counts[l]
+            if c.head is not None:
+                heads_np[l] = int(c.head)
+        mask = jnp.asarray(lane_mask)
+        n_valid = jnp.asarray(n_valid_np)
+
+        xs_steps = []
+        by_lane = {l: c for l, c in active}
+        for t in range(n_steps):
+            per_lane = []
+            for l in range(self.max_lanes):
+                c = by_lane.get(l)
+                if c is not None and t < counts[l]:
+                    per_lane.append(c.datapoints[c.pos + t])
+                else:
+                    per_lane.append(self._zero_dp)
+            xs_steps.append(jax.tree_util.tree_map(
+                lambda *ls: jnp.stack(ls, axis=0), *per_lane))
+        xs = jax.tree_util.tree_map(
+            lambda *ls: jnp.stack(ls, axis=0), *xs_steps)
+
+        cap = self._capacity or self._default_capacity()
+        chunks = self._init_chunks
+        for _ in range(self._max_retries):
+            stack0 = self._round_stack(jnp.asarray(heads_np), mask, cap,
+                                       chunks)
+            stack = self._block.push(stack0, xs, n_valid)
+            over = int(jnp.sum(jnp.where(mask, stack.overflows, 0)))
+            under = int(jnp.sum(jnp.where(mask, stack.underflows, 0)))
+            if not over and not under:
+                self._capacity, self._init_chunks = cap, chunks
+                msg, lengths = ans.flatten(stack)
+                msg_np, lengths_np = np.asarray(msg), np.asarray(lengths)
+                head_np = np.asarray(stack.head)
+                for l, c in active:
+                    c.parts.append(fmt.encode_block(
+                        counts[l], msg_np[l:l + 1], lengths_np[l:l + 1]))
+                    c.head = jnp.asarray(head_np[l])
+                    c.pos += counts[l]
+                    c.n_blocks += 1
+                return
+            if over:
+                cap *= 2
+            if under:
+                if self._seed is None:
+                    raise RuntimeError(
+                        "batcher: stack underflow with seed=None - this "
+                        "codec pops initial bits (bits-back); pass a "
+                        "seed so per-block clean bits can be supplied")
+                chunks = max(32, chunks * 4)
+        raise RuntimeError(
+            f"batcher: could not encode round cleanly after "
+            f"{self._max_retries} attempts (capacity={cap}, "
+            f"init_chunks={chunks})")
+
+
+def decode_batched(codec, blobs: Dict[Any, bytes], max_lanes: int,
+                   block_symbols: int) -> Dict[Any, Any]:
+    """Batched decode of ``StreamBatcher`` blobs through one stack.
+
+    Mirrors the encoder's scheduling (FIFO admission in dict order,
+    sticky lanes, retire on exhaustion) so every codec call runs at the
+    same ``max_lanes`` width as encoding did - the bitwise-determinism
+    requirement for model-backed codecs. Pure-math codecs can equally
+    decode each blob separately with a 1-lane ``StreamDecoder``.
+    """
+    block = (codec if isinstance(codec, MaskedBlockCodec)
+             else SteppedMaskedBlock(codec))
+
+    class _D:
+        def __init__(self, sid, blob):
+            self.id = sid
+            header, offsets, trailer = fmt.scan(blob)
+            if header.lanes != 1:
+                raise ValueError("decode_batched expects 1-lane client "
+                                 f"blobs; got lanes={header.lanes}")
+            if trailer is None:
+                raise ValueError(
+                    f"stream {sid!r}: truncated (no trailer)")
+            self.blocks = []
+            for off in offsets:
+                frame, _ = fmt.decode_next(blob, off, 1)
+                self.blocks.append(frame)
+            if trailer.n_blocks != len(self.blocks):
+                raise ValueError(f"stream {sid!r}: trailer mismatch")
+            self.pos = 0
+            self.out: List[Any] = []
+
+    queue = [_D(sid, blob) for sid, blob in blobs.items()]
+    lanes: List[Optional[_D]] = [None] * max_lanes
+    results: Dict[Any, Any] = {}
+
+    while queue or any(lanes):
+        for l in range(max_lanes):
+            if lanes[l] is None and queue:
+                lanes[l] = queue.pop(0)
+                if not lanes[l].blocks:   # empty stream: retire at once
+                    results[lanes[l].id] = None
+                    lanes[l] = None
+        active = [(l, d) for l, d in enumerate(lanes) if d is not None]
+        if not active:
+            continue
+        blocks = {l: d.blocks[d.pos] for l, d in active}
+        n_valid_np = np.zeros((max_lanes,), np.int32)
+        for l, _ in active:
+            n_valid_np[l] = blocks[l].n_symbols
+        k = int(n_valid_np.max())
+        if k > 0:
+            width = max(int(b.lengths.max()) for b in blocks.values())
+            msg = np.zeros((max_lanes, width), np.uint16)
+            lengths = np.full((max_lanes,), 2, np.int32)
+            msg[:, 0] = 1   # free lanes: head = RANS_L, empty buffer
+            for l, _ in active:
+                b = blocks[l]
+                msg[l, :b.msg.shape[1]] = b.msg[0]
+                lengths[l] = b.lengths[0]
+            stack = ans.unflatten(jnp.asarray(msg), jnp.asarray(lengths),
+                                  capacity=max(width - 2, 8))
+            n_valid = jnp.asarray(n_valid_np)
+            stack, xs = block.pop(stack, k, n_valid)
+            under = int(jnp.sum(jnp.where(n_valid > 0,
+                                          stack.underflows, 0)))
+            over = int(jnp.sum(jnp.where(n_valid > 0,
+                                         stack.overflows, 0)))
+            if under or over:
+                raise ValueError(
+                    f"decode_batched: {under} underflow(s), {over} "
+                    "overflow(s) on valid lanes - corrupt stream")
+            for l, d in active:
+                for t in range(int(n_valid_np[l])):
+                    d.out.append(jax.tree_util.tree_map(
+                        lambda a: a[t][l], xs))
+        for l, d in active:
+            d.pos += 1
+            if d.pos == len(d.blocks):
+                results[d.id] = (jax.tree_util.tree_map(
+                    lambda *ls: jnp.stack(ls, axis=0), *d.out)
+                    if d.out else None)
+                lanes[l] = None
+    return results

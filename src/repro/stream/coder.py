@@ -1,0 +1,399 @@
+"""Incremental ``StreamEncoder``/``StreamDecoder`` over the BBX2 format.
+
+The encoder accepts arbitrary-length, time-major symbol arrays
+(``[n, lanes, ...]`` pytrees, the ``Chained`` layout), buffers them, and
+cuts the stream into fixed-size blocks of ``block_symbols`` datapoints.
+Each block is coded on a *fresh* ``ANSStack`` and flushed independently
+- that is what makes blocks separately decodable and mid-stream resume
+possible - but the stack is **not** seeded with fresh randomness:
+
+  * the initial heads of block ``b+1`` are the *final* heads of block
+    ``b`` (carried encoder-side only; the decoder recovers them as the
+    residue of block ``b+1``'s pops and simply discards them), so the
+    per-block head churn telescopes away and the streamed rate tracks
+    the one-shot ``codecs.compress`` rate;
+  * bits-back codecs still need a per-block clean-bit supply for their
+    first posterior pop (the carried head holds at most ~16 bits);
+    ``init_chunks`` seeds it deterministically per block and grows
+    automatically on underflow, exactly like the one-shot container.
+
+Within a block, datapoints are pushed in *reverse* so the decoder pops
+them in natural order - a streaming decoder yields datapoint ``t``
+before it has looked at datapoint ``t+1``.
+
+Fast path: when the per-datapoint codec is a static-table
+``Categorical``, whole blocks go through the Pallas-kernel batch coder
+(``kernels.ans.ops.push_many_table``/``pop_many``) instead of ``k``
+sequential pushes; both paths are bit-identical (tested), so the wire
+format does not know which one produced a block.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ans
+from repro.core.codec import Codec
+from repro.core.distributions import Categorical
+from repro.kernels.ans import ops as ans_ops
+from repro.stream import format as fmt
+
+BlockCodecFn = Callable[[int], Codec]
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockChain(Codec):
+    """Chain ``inner`` over a leading time axis ``[k, lanes, ...]``.
+
+    Pushes datapoints in reverse so pops stream in natural order (the
+    streaming mirror of ``codecs.Chained``). Python-driven, so inner
+    codecs may drive jit-compiled network steps (the ``lm_codec``
+    determinism contract).
+    """
+
+    inner: Codec
+    k: int
+
+    def push(self, stack: ans.ANSStack, xs: Any) -> ans.ANSStack:
+        for t in reversed(range(self.k)):
+            x_t = jax.tree_util.tree_map(lambda a: a[t], xs)
+            stack = self.inner.push(stack, x_t)
+        return stack
+
+    def pop(self, stack: ans.ANSStack) -> Tuple[ans.ANSStack, Any]:
+        outs = []
+        for _ in range(self.k):
+            stack, x = self.inner.pop(stack)
+            outs.append(x)
+        return stack, jax.tree_util.tree_map(
+            lambda *ls: jnp.stack(ls, axis=0), *outs)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelTableBlock(Codec):
+    """Kernel fast path for static-table categorical block coding.
+
+    Symbols are int[k, lanes] (time-major); push/pop are bit-identical
+    to ``BlockChain(Categorical(...), k)`` but run the whole block
+    through one ``push_many_table``/``pop_many`` kernel call.
+    """
+
+    table: jnp.ndarray   # uint32[lanes, A+1]
+    k: int
+    precision: int = ans.DEFAULT_PRECISION
+
+    def push(self, stack: ans.ANSStack, xs: jnp.ndarray) -> ans.ANSStack:
+        return ans_ops.push_many_table(stack, self.table, xs[::-1],
+                                       self.precision)
+
+    def pop(self, stack: ans.ANSStack) -> Tuple[ans.ANSStack, jnp.ndarray]:
+        return ans_ops.pop_many(stack, self.table, self.k, self.precision)
+
+
+def _resolve_block_codec(codec: Optional[Codec],
+                         block_codec_fn: Optional[BlockCodecFn],
+                         use_kernel: bool) -> BlockCodecFn:
+    if block_codec_fn is not None:
+        return block_codec_fn
+    if codec is None:
+        raise ValueError("stream: pass a per-datapoint codec or a "
+                         "block_codec_fn")
+    if use_kernel and isinstance(codec, Categorical):
+        table = codec._table()
+        prec = codec.precision
+        return lambda k: KernelTableBlock(table, k, prec)
+    return lambda k: BlockChain(codec, k)
+
+
+class StreamEncoder:
+    """Chunked streaming encoder: feed datapoints, collect wire bytes.
+
+    ``write`` returns the bytes that became final since the last call
+    (the header on first emission, then completed blocks); ``flush``
+    emits any buffered ragged final block plus the end-of-stream
+    trailer. Flushing twice is a no-op; writing after a flush raises.
+
+    ``seed=None`` starts the first block cold (deterministic, right for
+    direct coding); an integer seed enables random first heads and the
+    per-block clean-bit supply for bits-back codecs.
+    """
+
+    def __init__(self, codec: Optional[Codec] = None, *, lanes: int,
+                 block_symbols: int,
+                 block_codec_fn: Optional[BlockCodecFn] = None,
+                 seed: Optional[int] = 0, init_chunks: int = 0,
+                 precision: int = ans.DEFAULT_PRECISION,
+                 capacity: Optional[int] = None, max_retries: int = 6,
+                 use_kernel: bool = True):
+        if lanes < 1 or block_symbols < 1:
+            raise ValueError("stream: lanes and block_symbols must be >= 1")
+        if seed is None and init_chunks:
+            raise ValueError("stream: init_chunks requires a seed (clean "
+                             "bits are derived from it)")
+        self._block_codec_fn = _resolve_block_codec(codec, block_codec_fn,
+                                                    use_kernel)
+        self.lanes = lanes
+        self.block_symbols = block_symbols
+        self.precision = precision
+        self._seed = seed
+        self._init_chunks = init_chunks
+        self._capacity = capacity
+        self._max_retries = max_retries
+        self._buffer: List[Any] = []       # pending datapoint pytrees
+        self._heads: Optional[jnp.ndarray] = None   # carried across blocks
+        self._started = False
+        self._finished = False
+        self.n_blocks = 0
+        self.n_symbols = 0
+        self.net_bits = 0.0   # content added, the -ELBO-comparable rate
+        self.wire_bytes = 0
+
+    # -- input ---------------------------------------------------------------
+
+    def write(self, data: Any) -> bytes:
+        """Append time-major ``[n, lanes, ...]`` datapoints; returns any
+        bytes that became final (b"" if no block completed)."""
+        if self._finished:
+            raise RuntimeError("stream: write after flush")
+        leaves = jax.tree_util.tree_leaves(data)
+        if not leaves:
+            return b""
+        n = leaves[0].shape[0]
+        for leaf in leaves:
+            if (leaf.ndim < 2 or leaf.shape[0] != n
+                    or leaf.shape[1] != self.lanes):
+                raise ValueError(
+                    f"stream: data leaves must be [n, lanes={self.lanes}, "
+                    f"...]; got {leaf.shape}")
+        for t in range(n):
+            self._buffer.append(
+                jax.tree_util.tree_map(lambda a: a[t], data))
+        out = [self._header_bytes()]
+        while len(self._buffer) >= self.block_symbols:
+            block, self._buffer = (self._buffer[:self.block_symbols],
+                                   self._buffer[self.block_symbols:])
+            out.append(self._encode_block(block))
+        return self._emit(b"".join(out))
+
+    def flush(self) -> bytes:
+        """Emit the ragged final block (if any) and the trailer."""
+        if self._finished:
+            return b""
+        out = [self._header_bytes()]
+        if self._buffer:
+            block, self._buffer = self._buffer, []
+            out.append(self._encode_block(block))
+        out.append(fmt.encode_trailer(
+            fmt.Trailer(self.n_blocks, self.n_symbols)))
+        self._finished = True
+        return self._emit(b"".join(out))
+
+    # -- internals -----------------------------------------------------------
+
+    def _emit(self, payload: bytes) -> bytes:
+        self.wire_bytes += len(payload)
+        return payload
+
+    def _header_bytes(self) -> bytes:
+        if self._started:
+            return b""
+        self._started = True
+        return fmt.encode_header(fmt.StreamHeader(
+            lanes=self.lanes, block_symbols=self.block_symbols,
+            precision=self.precision))
+
+    def _default_capacity(self, block: List[Any]) -> int:
+        per_lane = sum(
+            int(np.prod(leaf.shape[1:]))
+            for leaf in jax.tree_util.tree_leaves(block[0]))
+        return max(256, self.block_symbols * per_lane
+                   + self._init_chunks + 64)
+
+    def _block_stack(self, capacity: int, chunks: int) -> ans.ANSStack:
+        key = (jax.random.fold_in(jax.random.PRNGKey(self._seed),
+                                  self.n_blocks)
+               if self._seed is not None else None)
+        if self._heads is not None:
+            stack = ans.make_stack(self.lanes, capacity)
+            stack = stack._replace(head=self._heads)
+        elif key is not None:
+            k_head, _ = jax.random.split(key)
+            stack = ans.make_stack(self.lanes, capacity, key=k_head)
+        else:
+            stack = ans.make_stack(self.lanes, capacity)
+        if chunks:
+            _, k_bits = jax.random.split(key)
+            stack = ans.seed_stack(stack, k_bits, chunks)
+        return stack
+
+    def _encode_block(self, block: List[Any]) -> bytes:
+        k = len(block)
+        xs = jax.tree_util.tree_map(
+            lambda *ls: jnp.stack(ls, axis=0), *block)
+        codec = self._block_codec_fn(k)
+        cap = self._capacity or self._default_capacity(block)
+        chunks = self._init_chunks
+        for _ in range(self._max_retries):
+            stack0 = self._block_stack(cap, chunks)
+            stack = codec.push(stack0, xs)
+            over = int(jnp.sum(stack.overflows))
+            under = int(jnp.sum(stack.underflows))
+            if not over and not under:
+                self.net_bits += float(ans.stack_content_bits(stack)
+                                       - ans.stack_content_bits(stack0))
+                self._heads = stack.head   # carry clean bits forward
+                self._capacity, self._init_chunks = cap, chunks
+                msg, lengths = ans.flatten(stack)
+                self.n_blocks += 1
+                self.n_symbols += k
+                return fmt.encode_block(k, np.asarray(msg),
+                                        np.asarray(lengths))
+            if over:
+                cap *= 2
+            if under:
+                if self._seed is None:
+                    raise RuntimeError(
+                        "stream: stack underflow with seed=None - this "
+                        "codec pops initial bits (bits-back); pass a seed "
+                        "so per-block clean bits can be supplied")
+                chunks = max(32, chunks * 4)
+        raise RuntimeError(
+            f"stream: could not encode block cleanly after "
+            f"{self._max_retries} attempts (capacity={cap}, "
+            f"init_chunks={chunks})")
+
+
+class StreamDecoder:
+    """Incremental BBX2 decoder: feed bytes in arbitrary pieces, collect
+    decoded blocks (time-major ``[k, lanes, ...]`` pytrees) as they
+    complete.
+
+    Construct with ``header=`` (e.g. from ``format.scan``) to resume
+    mid-stream: the byte feed may then start at any block boundary
+    instead of the stream header.
+    """
+
+    def __init__(self, codec: Optional[Codec] = None, *,
+                 block_codec_fn: Optional[BlockCodecFn] = None,
+                 header: Optional[fmt.StreamHeader] = None,
+                 use_kernel: bool = True, verify_trailer: bool = True):
+        self._block_codec_fn = _resolve_block_codec(codec, block_codec_fn,
+                                                    use_kernel)
+        self._header = header
+        self._verify_trailer = verify_trailer
+        self._buf = bytearray()
+        self._finished = False
+        self.n_blocks = 0
+        self.n_symbols = 0
+        self.trailer: Optional[fmt.Trailer] = None
+
+    @property
+    def header(self) -> Optional[fmt.StreamHeader]:
+        return self._header
+
+    @property
+    def finished(self) -> bool:
+        return self._finished
+
+    def read(self, chunk: bytes = b"") -> List[Any]:
+        """Feed bytes; returns the list of blocks completed by them."""
+        self._buf.extend(chunk)
+        out: List[Any] = []
+        if self._header is None:
+            parsed = fmt.decode_header(bytes(self._buf))
+            if parsed is None:
+                return out
+            self._header, off = parsed
+            del self._buf[:off]
+        while not self._finished:
+            res = fmt.decode_next(bytes(self._buf), 0, self._header.lanes)
+            if res is None:
+                break
+            frame, off = res
+            del self._buf[:off]
+            if isinstance(frame, fmt.Trailer):
+                self.trailer = frame
+                self._finished = True
+                if self._verify_trailer and (
+                        frame.n_blocks != self.n_blocks
+                        or frame.total_symbols != self.n_symbols):
+                    raise ValueError(
+                        f"stream: trailer mismatch (saw {self.n_blocks} "
+                        f"blocks/{self.n_symbols} symbols, trailer says "
+                        f"{frame.n_blocks}/{frame.total_symbols}) - "
+                        "stream truncated or resumed mid-way")
+                break
+            out.append(self._decode_block(frame))
+        return out
+
+    def _decode_block(self, block: fmt.Block) -> Any:
+        # Width-2 rows mean a chunk-less block; keep a few buffer slots
+        # so bits-back decode transients (posterior re-pushes) fit.
+        stack = ans.unflatten(jnp.asarray(block.msg),
+                              jnp.asarray(block.lengths),
+                              capacity=max(block.msg.shape[1] - 2, 8))
+        codec = self._block_codec_fn(block.n_symbols)
+        stack, xs = codec.pop(stack)
+        under = int(jnp.sum(stack.underflows))
+        over = int(jnp.sum(stack.overflows))
+        if under or over:
+            raise ValueError(
+                f"stream: corrupt block {self.n_blocks} "
+                f"({under} underflows, {over} overflows during decode)")
+        self.n_blocks += 1
+        self.n_symbols += block.n_symbols
+        return xs
+
+
+# ---------------------------------------------------------------------------
+# One-call conveniences
+# ---------------------------------------------------------------------------
+
+def encode_stream(codec: Optional[Codec], data: Any, *, lanes: int,
+                  block_symbols: int, **kwargs) -> bytes:
+    """One-shot helper: the whole of ``data`` through a StreamEncoder."""
+    enc = StreamEncoder(codec, lanes=lanes, block_symbols=block_symbols,
+                        **kwargs)
+    return enc.write(data) + enc.flush()
+
+
+def _concat_blocks(blocks: List[Any]) -> Any:
+    if not blocks:
+        return None
+    return jax.tree_util.tree_map(
+        lambda *ls: jnp.concatenate(ls, axis=0), *blocks)
+
+
+def decode_stream(codec: Optional[Codec], blob: bytes,
+                  **kwargs) -> Any:
+    """Decode a complete BBX2 stream to time-major ``[n, lanes, ...]``."""
+    dec = StreamDecoder(codec, **kwargs)
+    blocks = dec.read(blob)
+    if not dec.finished:
+        raise ValueError("stream: truncated (no trailer)")
+    return _concat_blocks(blocks)
+
+
+def decode_from_offset(codec: Optional[Codec], blob: bytes, offset: int,
+                       **kwargs) -> Any:
+    """Resume decoding at a block boundary byte ``offset``.
+
+    The stream header is read from the front of ``blob`` (it is 16
+    bytes and static), then decoding starts directly at ``offset`` -
+    no earlier payload byte is touched. Offsets come from
+    ``format.scan`` or from bookkeeping at encode time. The trailer
+    count check is skipped (a resumed decode legitimately sees fewer
+    blocks than the whole stream).
+    """
+    parsed = fmt.decode_header(blob)
+    if parsed is None:
+        raise ValueError("stream: truncated (no header)")
+    header, _ = parsed
+    dec = StreamDecoder(codec, header=header, verify_trailer=False,
+                        **kwargs)
+    return _concat_blocks(dec.read(blob[offset:]))

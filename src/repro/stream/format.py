@@ -1,0 +1,191 @@
+"""``BBX2`` - the chunked streaming wire format.
+
+A BBX2 stream is a framed sequence of *independent* BBX1-style blocks:
+each block carries a complete flattened ``ANSStack`` message (per-lane
+``[head_hi, head_lo, chunks...]`` rows, exactly the BBX1 payload from
+``codecs/container.py``) plus the number of datapoints it codes. Any
+block can be decoded knowing only the stream header and the codec -
+this is what buys mid-stream resume and bounded decode latency; the
+price is one head flush (32 bits/lane) plus the per-lane length frame
+per block.
+
+Wire layout (little-endian):
+
+    Stream header (16 bytes)
+    offset  size    field
+    0       4       magic  b"BBX2"
+    4       1       version (=1)
+    5       1       precision (informational)
+    6       2       flags (reserved, 0)
+    8       4       lanes (u32)
+    12      4       block_symbols (u32) - nominal datapoints per block
+                    (the final block may carry fewer; a block never
+                    carries more)
+
+    Block (repeated; 12 + 4*lanes + 2*sum(len) bytes each)
+    0       2       marker 0xB10C (u16)
+    2       2       flags (reserved, 0)
+    4       4       n_symbols coded by this block (u32)
+    8       4       total chunks = sum(lengths) (u32)
+    12      4*lanes lengths (u32 each, in 16-bit chunks, >= 2)
+    ...     2*total payload: lane l's [head_hi, head_lo, chunks...]
+
+    Trailer (16 bytes)
+    0       2       marker 0xE05D (u16)
+    2       2       flags (reserved, 0)
+    4       4       n_blocks (u32)
+    8       8       total_symbols (u64)
+
+Framing is byte-precise: ``scan`` recovers every block boundary from
+the length fields alone, so a decoder can seek to any block offset and
+resume without touching earlier payload bytes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import struct
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.codecs.container import pack_lane_rows, unpack_lane_rows
+
+MAGIC = b"BBX2"
+VERSION = 1
+BLOCK_MARKER = 0xB10C
+END_MARKER = 0xE05D
+
+_HEADER = struct.Struct("<4sBBHII")
+_BLOCK = struct.Struct("<HHII")
+_TRAILER = struct.Struct("<HHIQ")
+
+HEADER_SIZE = _HEADER.size     # 16
+BLOCK_HEADER_SIZE = _BLOCK.size   # 12
+TRAILER_SIZE = _TRAILER.size   # 16
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamHeader:
+    lanes: int
+    block_symbols: int
+    precision: int
+    version: int = VERSION
+
+
+@dataclasses.dataclass(frozen=True)
+class Block:
+    """One parsed block: ``msg``/``lengths`` feed ``ans.unflatten``."""
+    n_symbols: int
+    msg: np.ndarray       # uint16[lanes, width]
+    lengths: np.ndarray   # int32[lanes]
+
+
+@dataclasses.dataclass(frozen=True)
+class Trailer:
+    n_blocks: int
+    total_symbols: int
+
+
+def encode_header(header: StreamHeader) -> bytes:
+    return _HEADER.pack(MAGIC, header.version, header.precision, 0,
+                        header.lanes, header.block_symbols)
+
+
+def decode_header(buf: bytes, offset: int = 0
+                  ) -> Optional[Tuple[StreamHeader, int]]:
+    """Parse a stream header at ``offset``; None if more bytes needed."""
+    if len(buf) - offset < HEADER_SIZE:
+        return None
+    magic, version, precision, _flags, lanes, block_symbols = \
+        _HEADER.unpack_from(buf, offset)
+    if magic != MAGIC:
+        raise ValueError(f"stream: bad magic {magic!r} (not a BBX2 stream)")
+    if version != VERSION:
+        raise ValueError(f"stream: unsupported BBX2 version {version}")
+    if lanes < 1 or block_symbols < 1:
+        raise ValueError("stream: corrupt header (lanes/block_symbols < 1)")
+    return StreamHeader(lanes=lanes, block_symbols=block_symbols,
+                        precision=precision, version=version), \
+        offset + HEADER_SIZE
+
+
+def encode_block(n_symbols: int, msg: np.ndarray,
+                 lengths: np.ndarray) -> bytes:
+    """Frame one flattened stack message as a BBX2 block."""
+    lengths = np.asarray(lengths)
+    return b"".join([
+        _BLOCK.pack(BLOCK_MARKER, 0, n_symbols, int(lengths.sum())),
+        lengths.astype("<u4").tobytes(),
+        pack_lane_rows(np.asarray(msg), lengths),
+    ])
+
+
+def encode_trailer(trailer: Trailer) -> bytes:
+    return _TRAILER.pack(END_MARKER, 0, trailer.n_blocks,
+                         trailer.total_symbols)
+
+
+def decode_next(buf: bytes, offset: int, lanes: int):
+    """Parse the next frame at ``offset``.
+
+    Returns ``(Block, new_offset)``, ``(Trailer, new_offset)``, or
+    ``None`` when the buffer does not yet hold the complete frame
+    (incremental feeding). Raises on corrupt markers.
+    """
+    avail = len(buf) - offset
+    if avail < 2:
+        return None
+    (marker,) = struct.unpack_from("<H", buf, offset)
+    if marker == END_MARKER:
+        if avail < TRAILER_SIZE:
+            return None
+        _m, _flags, n_blocks, total_symbols = _TRAILER.unpack_from(
+            buf, offset)
+        return Trailer(n_blocks, total_symbols), offset + TRAILER_SIZE
+    if marker != BLOCK_MARKER:
+        raise ValueError(
+            f"stream: bad frame marker 0x{marker:04X} at offset {offset} "
+            "(not a block boundary)")
+    if avail < BLOCK_HEADER_SIZE + 4 * lanes:
+        return None
+    _m, _flags, n_symbols, total = _BLOCK.unpack_from(buf, offset)
+    lengths = np.frombuffer(buf, dtype="<u4", count=lanes,
+                            offset=offset + BLOCK_HEADER_SIZE
+                            ).astype(np.int32)
+    if (lengths < 2).any():
+        raise ValueError("stream: corrupt block (lane length < 2)")
+    if int(lengths.sum()) != total:
+        raise ValueError("stream: corrupt block (length sum mismatch)")
+    payload_off = offset + BLOCK_HEADER_SIZE + 4 * lanes
+    end = payload_off + 2 * total
+    if len(buf) < end:
+        return None
+    msg = unpack_lane_rows(buf, payload_off, lengths)
+    return Block(n_symbols=n_symbols, msg=msg, lengths=lengths), end
+
+
+def scan(blob: bytes) -> Tuple[StreamHeader, List[int], Optional[Trailer]]:
+    """Walk a complete stream: (header, block byte offsets, trailer).
+
+    The offsets index the first byte of each block's marker - exactly
+    what ``StreamDecoder.from_header`` + ``blob[offset:]`` needs for a
+    mid-stream resume.
+    """
+    parsed = decode_header(blob)
+    if parsed is None:
+        raise ValueError("stream: truncated (no header)")
+    header, off = parsed
+    offsets: List[int] = []
+    trailer: Optional[Trailer] = None
+    while True:
+        out = decode_next(blob, off, header.lanes)
+        if out is None:
+            break
+        frame, new_off = out
+        if isinstance(frame, Trailer):
+            trailer = frame
+            break
+        offsets.append(off)
+        off = new_off
+    return header, offsets, trailer

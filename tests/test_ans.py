@@ -15,6 +15,22 @@ def _random_starts_table(rng, lanes, alphabet, precision):
     return ans.probs_to_starts(jnp.asarray(probs, jnp.float32), precision)
 
 
+def test_make_stack_heads_uniform_over_normalized_interval():
+    """Random heads must cover the whole normalized interval [2^16,
+    2^32) - not just its top half (the old seeding OR'd in bit 31,
+    halving the clean-bit supply's support)."""
+    heads = np.asarray(ans.make_stack(
+        4096, 1, key=jax.random.PRNGKey(0)).head, np.uint64)
+    assert (heads >= (1 << 16)).all()
+    assert (heads < (1 << 32)).all()
+    # With 4096 uniform draws, each quarter of the log-range is hit.
+    assert (heads < (1 << 30)).any(), "no heads below 2^30: biased draw"
+    assert (heads >= (1 << 31)).any()
+    # ~log2(head) - 16 clean bits/lane, ~14.56 expected under uniform.
+    mean_bits = float(np.mean(np.log2(heads.astype(np.float64)))) - 16
+    assert 14.0 < mean_bits < 15.1, mean_bits
+
+
 def test_push_pop_single_symbol_roundtrip():
     lanes = 8
     stack = ans.make_stack(lanes, capacity=16,

@@ -51,6 +51,72 @@ def test_ans_push_kernel_matches_core(steps, lanes, alphabet, precision):
                                   np.asarray(out_ref.buf))
 
 
+@pytest.mark.parametrize("steps,lanes,alphabet,precision", [
+    (4, 8, 4, 12),
+    (16, 64, 17, 16),
+    (9, 130, 3, 8),     # lanes not a multiple of the tile
+    (32, 128, 200, 16),
+])
+def test_ans_pop_kernel_matches_core(steps, lanes, alphabet, precision):
+    """Table-driven pop_many == sequential ans.pop_with_table, bit for
+    bit (head, ptr, symbols, underflow counters)."""
+    rng = np.random.default_rng(steps * 977 + lanes)
+    probs = rng.dirichlet(np.ones(alphabet), size=lanes)
+    table = ans.probs_to_starts(jnp.asarray(probs, jnp.float32), precision)
+    syms = jnp.asarray(rng.integers(0, alphabet, (steps, lanes)),
+                       jnp.int32)
+    stack = ans.make_stack(lanes, steps + 8, key=jax.random.PRNGKey(7))
+    stack = ans_ops.push_many_table(stack, table, syms, precision)
+    ref_stack = ans_ref.push_many_table_ref(stack, table, syms, precision)
+
+    out_k, syms_k = ans_ops.pop_many(stack, table, steps, precision)
+    out_r, syms_r = ans_ref.pop_many_ref(stack, table, steps, precision)
+    np.testing.assert_array_equal(np.asarray(syms_k), np.asarray(syms_r))
+    np.testing.assert_array_equal(np.asarray(out_k.head),
+                                  np.asarray(out_r.head))
+    np.testing.assert_array_equal(np.asarray(out_k.ptr),
+                                  np.asarray(out_r.ptr))
+    np.testing.assert_array_equal(np.asarray(out_k.underflows),
+                                  np.asarray(out_r.underflows))
+    # and the pushed symbols come back reversed (LIFO)
+    np.testing.assert_array_equal(np.asarray(syms_k),
+                                  np.asarray(syms)[::-1])
+
+
+def test_ans_pop_kernel_underflow_matches_core():
+    """Pops past the stack bottom must count underflows and mangle the
+    head exactly as the core does (bottom chunk re-served)."""
+    rng = np.random.default_rng(3)
+    lanes, precision = 6, 10
+    probs = rng.dirichlet(np.ones(4), size=lanes)
+    table = ans.probs_to_starts(jnp.asarray(probs, jnp.float32), precision)
+    stack = ans.make_stack(lanes, 4)   # cold head, empty buffer
+    out_k, syms_k = ans_ops.pop_many(stack, table, 12, precision)
+    out_r, syms_r = ans_ref.pop_many_ref(stack, table, 12, precision)
+    np.testing.assert_array_equal(np.asarray(syms_k), np.asarray(syms_r))
+    np.testing.assert_array_equal(np.asarray(out_k.head),
+                                  np.asarray(out_r.head))
+    np.testing.assert_array_equal(np.asarray(out_k.underflows),
+                                  np.asarray(out_r.underflows))
+    assert int(jnp.sum(out_k.underflows)) > 0
+
+
+def test_peek_kernel_matches_core_peek():
+    """pop_slots is the honest single-step peek: slot = head mod 2^p."""
+    rng = np.random.default_rng(5)
+    lanes = 256
+    head = jnp.asarray(
+        rng.integers(1 << 16, 1 << 32, lanes, dtype=np.uint64)
+        .astype(np.uint32))
+    from repro.kernels.ans import kernel as ans_kernel
+    for precision in (8, 12, 16):
+        slots = ans_kernel.pop_slots(head, precision)
+        expect = ans.peek(
+            ans.make_stack(lanes, 1)._replace(head=head), precision)
+        np.testing.assert_array_equal(np.asarray(slots),
+                                      np.asarray(expect))
+
+
 def test_ans_push_kernel_then_core_pop_roundtrip():
     """Kernel-encoded stream decodes with the core library."""
     rng = np.random.default_rng(7)

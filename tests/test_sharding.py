@@ -16,6 +16,7 @@ import numpy as np
 import pytest
 
 from repro.configs import base as cfg_base
+from repro.launch.mesh import make_mesh_compat
 from repro.models import transformer
 from repro.sharding import api as shard_api
 from repro.sharding import policies
@@ -37,8 +38,7 @@ def test_param_specs_cover_every_leaf(arch):
 
 
 def test_resolve_dedups_mesh_axes():
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh_compat((1,), ("model",))
     with shard_api.use_mesh(mesh, {"seq": "model", "ff": "model"}):
         spec = shard_api.resolve("batch", "seq", "ff")
         used = [e for e in spec if e is not None]
@@ -55,8 +55,7 @@ def test_drop_fsdp():
 
 def test_to_named_drops_nondivisible():
     from jax.sharding import PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh_compat((1,), ("model",))
     sh = policies.to_named(mesh, P("model"),
                            jax.ShapeDtypeStruct((3,), np.float32))
     # 3 % 1 == 0 -> kept; now a fake 16-way mesh can't be built on CPU,
@@ -71,10 +70,10 @@ SUBPROCESS_SCRIPT = textwrap.dedent("""
     import jax
     from repro.configs import base as cfg_base
     from repro.launch import dryrun
+    from repro.launch.mesh import make_mesh_compat
     from repro.sharding import api as shard_api
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh_compat((2, 4), ("data", "model"))
     cfg = dataclasses.replace(
         cfg_base.reduced(cfg_base.get("{arch}")),
         vocab=512, grad_accum=2)
@@ -86,6 +85,8 @@ SUBPROCESS_SCRIPT = textwrap.dedent("""
             jitted, args = dryrun.build_decode(cfg, cell, mesh)
         compiled = jitted.lower(*args).compile()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # older jax: one dict per program
+        cost = cost[0] if cost else {{}}
     print(json.dumps({{"flops": float(cost.get("flops", 0.0)),
                        "ok": True}}))
 """)
@@ -104,7 +105,11 @@ def test_launch_compiles_on_8_device_mesh(arch, kind):
     out = subprocess.run(
         [sys.executable, "-c", script], capture_output=True, text=True,
         timeout=420, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                          "HOME": "/root"})
+                          "HOME": "/root",
+                          # pin the host platform: on TPU-enabled jax
+                          # builds, backend autodetection probes instance
+                          # metadata for minutes before falling back
+                          "JAX_PLATFORMS": "cpu"})
     assert out.returncode == 0, out.stderr[-2000:]
     rec = json.loads(out.stdout.strip().splitlines()[-1])
     assert rec["ok"] and rec["flops"] > 0

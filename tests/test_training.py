@@ -185,8 +185,8 @@ def test_elastic_restore_resharding(tmp_path):
     (here: host -> explicit single-device sharding)."""
     tree = {"w": jnp.arange(64.0).reshape(8, 8)}
     checkpoint.save(1, tree, str(tmp_path))
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch import mesh as mesh_lib
+    mesh = mesh_lib.make_mesh_compat((1,), ("data",))
     from jax.sharding import NamedSharding, PartitionSpec as P
     shardings = {"w": NamedSharding(mesh, P("data", None))}
     out = checkpoint.restore(jax.tree_util.tree_map(jnp.zeros_like, tree),
