@@ -36,7 +36,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (ablation_cleanbits, ans_throughput, fig3_chain,
-                            latent_lm_gain, lm_compression,
+                            hvae_rate, latent_lm_gain, lm_compression,
                             stream_throughput, table2_rates, table3_predict)
 
     q = args.quick
@@ -55,6 +55,8 @@ def main() -> None:
             train_steps=120 if q else 250),
         "latent_lm_gain": lambda: latent_lm_gain.run(
             train_steps=120 if q else 300),
+        "hvae_rate": lambda: hvae_rate.run(
+            train_steps=400 if q else 1500, n_images=32 if q else 128),
         "stream": lambda: stream_throughput.run(
             lanes=64 if q else 128, n_symbols=1024 if q else 4096,
             block=128 if q else 512, n_images=64 if q else 256,

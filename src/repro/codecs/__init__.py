@@ -13,7 +13,9 @@ seeding, and flatten/unflatten framing, so callers never touch
 ``make_stack``/``seed_stack`` directly.
 
 Any latent-variable model plugs in via ``BBANS(prior, likelihood,
-posterior)`` (paper Table 1); hierarchical models via ``BitSwap``.
+posterior)`` (paper Table 1); hierarchical models via ``BitSwap``
+(e.g. ``models.hvae.make_bitswap_codec``). Runnable examples for every
+exported name: docs/API.md; BBX1 wire layout: docs/FORMATS.md.
 """
 
 from repro.core.codec import Codec, FnCodec

@@ -39,6 +39,14 @@ class Serial(Codec):
 
     ``push`` runs components in *reverse* so that ``pop`` yields them in
     natural order.
+
+    Example::
+
+        codec = Serial([Uniform(6), Categorical(logits)])
+        stack = codec.push(stack, (a, b))      # b pushed first
+        stack, (a2, b2) = codec.pop(stack)     # natural order back
+
+    (All combinator examples run, with data, in docs/API.md.)
     """
 
     codecs: Tuple[Codec, ...]
@@ -71,6 +79,12 @@ class Repeat(Codec):
     ``scan=True`` the loop is a ``lax.fori_loop`` and ``codec_fn`` must
     be traceable with a traced index. ``scan=False`` runs a Python loop
     for codec_fns that drive jitted network steps from Python.
+
+    Example::
+
+        codec = Repeat(lambda d: DiscretizedGaussian(
+            mu[:, d], sigma[:, d], bits), n=mu.shape[1])
+        stack, idx = codec.pop(stack)          # idx int32[lanes, n]
     """
 
     codec_fn: Callable[[Any], Codec]
@@ -111,7 +125,13 @@ class Repeat(Codec):
 
 @dataclasses.dataclass(frozen=True)
 class Shaped(Codec):
-    """View a codec over flat [lanes, k] symbols as [lanes, *shape]."""
+    """View a codec over flat [lanes, k] symbols as [lanes, *shape].
+
+    Example::
+
+        codec = Shaped(Repeat(lambda d: Uniform(4), 6), (2, 3))
+        stack = codec.push(stack, x)           # x int[lanes, 2, 3]
+    """
 
     inner: Codec
     shape: Tuple[int, ...]
@@ -126,7 +146,14 @@ class Shaped(Codec):
 
 @dataclasses.dataclass(frozen=True)
 class TreeCodec(Codec):
-    """Code a pytree symbol with a matching pytree of codecs."""
+    """Code a pytree symbol with a matching pytree of codecs.
+
+    Example::
+
+        codec = TreeCodec({"z": Uniform(5), "x": Bernoulli(logits)})
+        stack = codec.push(stack, {"z": z, "x": x})
+        stack, out = codec.pop(stack)          # same dict structure
+    """
 
     tree: Any  # pytree whose leaves are Codecs
 
@@ -160,6 +187,11 @@ class Chained(Codec):
     ``scan=False`` uses Python loops (required for codecs that drive
     jit-compiled network steps from Python - the lm_codec determinism
     contract).
+
+    Example::
+
+        codec = Chained(make_bb_codec(params, cfg), n)
+        blob = compress(codec, data, lanes=16, seed=0)  # data [n, 16, D]
     """
 
     inner: Codec
@@ -214,6 +246,14 @@ class BBANS(Codec):
         pop  y ~ Q(y|s)      (get bits back)
         push s ~ p(s|y)      (pay -log p(s|y))
         push y ~ p(y)        (pay -log p(y))
+
+    Example (the VAE shape; runnable version in docs/API.md)::
+
+        codec = BBANS(prior=Uniform(bits),
+                      likelihood=lambda y: Bernoulli(dec(y)),
+                      posterior=lambda s: DiscretizedGaussian(
+                          *enc(s), bits))
+        blob = compress(codec, s, lanes=s.shape[0], seed=0)
     """
 
     prior: Codec
@@ -245,6 +285,13 @@ class BitSwap(Codec):
     bounds the transient clean-bit demand by *one* layer's posterior
     instead of the sum over layers - the Bit-Swap advantage (Kingma,
     Abbeel & Ho, 2019). With one layer this is exactly ``BBANS``.
+
+    Example (2 layers; ``models.hvae.make_bitswap_codec`` builds the
+    convolutional version of exactly this)::
+
+        codec = BitSwap(prior=Uniform(bits),
+                        layers=((post1, lik1), (post2, lik2)))
+        blob = compress(codec, s, lanes=s.shape[0], seed=0)
     """
 
     prior: Codec

@@ -15,7 +15,8 @@ The container owns everything callers used to hand-thread:
                         so ``decompress`` needs only the codec and the
                         blob.
 
-Wire layout (little-endian):
+Wire layout (little-endian; canonical spec with invariants and a
+worked example: docs/FORMATS.md):
 
     offset  size        field
     0       4           magic  b"BBX1"
@@ -51,6 +52,11 @@ def fresh_stack(lanes: int, capacity: int, seed: Optional[int] = 0,
 
     ``seed=None`` gives the deterministic cold stack (head = 2^16, no
     clean bits) - right for latent-free direct coding.
+
+    Example::
+
+        stack = fresh_stack(lanes=16, capacity=4096, seed=0,
+                            init_chunks=32)   # bits-back ready
     """
     if seed is None:
         if init_chunks:
@@ -92,6 +98,13 @@ def compress(codec: Codec, data: Any, *, lanes: int,
     ``info["net_bits"]`` is the information *added* by the encode
     (content bits after minus before - the quantity that matches -ELBO,
     free of clean-bit and flush constants).
+
+    Example::
+
+        codec = Chained(make_bb_codec(params, cfg), n)
+        blob, info = compress(codec, data, lanes=16, seed=0,
+                              with_info=True)
+        rate_bpd = info["net_bits"] / data.size
     """
     cap = capacity or _default_capacity(data, lanes, init_chunks)
     # A cold stack (seed=None) has no clean-bit source; direct-coding
@@ -129,7 +142,13 @@ def compress(codec: Codec, data: Any, *, lanes: int,
 
 
 def decompress(codec: Codec, blob: bytes) -> Any:
-    """Decode a ``compress`` blob back to the original data, bit-exactly."""
+    """Decode a ``compress`` blob back to the original data, bit-exactly.
+
+    Example::
+
+        assert (decompress(codec, compress(codec, data, lanes=16))
+                == data).all()
+    """
     msg, lengths, _ = _unpack(blob)
     stack = ans.unflatten(jnp.asarray(msg), jnp.asarray(lengths))
     stack, data = codec.pop(stack)
@@ -142,6 +161,13 @@ def blob_info(blob: bytes) -> Dict[str, Any]:
 
     ``payload_bits`` equals ``ans.stack_bits`` of the encoded stack -
     the message proper; ``header_bits`` is the framing overhead.
+
+    Example::
+
+        info = blob_info(blob)
+        overhead = info["header_bits"] / info["total_bits"]
+
+    Byte-level layout: docs/FORMATS.md.
     """
     msg, lengths, precision = _unpack(blob)
     payload_bits = int(np.sum(lengths)) * 16

@@ -33,7 +33,13 @@ from repro.core.codec import Codec
 
 @dataclasses.dataclass(frozen=True)
 class Uniform(Codec):
-    """Exact ``bits``-bit uniform code over {0 .. 2^bits - 1} per lane."""
+    """Exact ``bits``-bit uniform code over {0 .. 2^bits - 1} per lane.
+
+    Example::
+
+        stack = Uniform(8).push(stack, jnp.asarray([17, 255]))
+        stack, x = Uniform(8).pop(stack)       # exactly 8 bits/lane
+    """
 
     bits: int
     precision: int = ans.DEFAULT_PRECISION
@@ -59,6 +65,12 @@ class PointwiseCDF(Codec):
     K-sized tables); decode inverts it with a ``bits``-step bisection.
     Encoder and decoder evaluate the identical function, so roundtrips
     are bit-exact (the determinism contract of ``core.lm_codec``).
+
+    Example (a linear CDF == uniform)::
+
+        codec = PointwiseCDF(
+            lambda i: i.astype(jnp.float32) / (1 << 8), bits=8)
+        stack, idx = codec.pop(stack)
     """
 
     cdf_fn: Callable[[jnp.ndarray], jnp.ndarray]
@@ -114,6 +126,12 @@ class DiscretizedGaussian(Codec):
     (the paper-App.-B coder), so it is bit-identical to the pre-codecs
     coding path by construction; this is the posterior leaf of every
     diag-Gaussian bits-back model here.
+
+    Example::
+
+        leaf = DiscretizedGaussian(mu, sigma, bits=10)  # mu/sigma [lanes]
+        stack, idx = leaf.pop(stack)   # sample Q(y|s) from stack bits
+        stack = leaf.push(stack, idx)  # exact inverse
     """
 
     mu: jnp.ndarray     # float[lanes]
@@ -133,7 +151,13 @@ class DiscretizedGaussian(Codec):
 def DiscretizedLogistic(mu: jnp.ndarray, scale: jnp.ndarray, bits: int,
                         precision: int = ans.DEFAULT_PRECISION
                         ) -> PointwiseCDF:
-    """Logistic(mu, scale) over the max-entropy N(0,1)-prior buckets."""
+    """Logistic(mu, scale) over the max-entropy N(0,1)-prior buckets.
+
+    Example::
+
+        leaf = DiscretizedLogistic(mu, scale, bits=8)
+        stack, idx = leaf.pop(stack)           # bucket indices [lanes]
+    """
     k = 1 << bits
 
     def cdf(i):

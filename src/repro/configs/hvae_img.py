@@ -1,0 +1,43 @@
+"""Hierarchical image-VAE config family (the Bit-Swap/HiLLoC workload).
+
+Every config is a shape-free ``HVAEConfig``: the networks are fully
+convolutional, so the same parameters code any even H x W (the data
+side pads odd shapes - ``data.images``). ``small`` is the smoke/CI
+scale; ``base`` is the real training scale. Both come in 2- and
+3-level variants so the Bit-Swap clean-bit bound can be measured as a
+function of depth (``benchmarks/hvae_rate.py``).
+
+    cfg = hvae_img.get("hvae-small2")
+    PYTHONPATH=src python -m repro.launch.train --arch hvae-small2
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.models.hvae import HVAEConfig
+
+SMALL2 = HVAEConfig(levels=2, ch=16, z_ch=2, n_res=1)
+SMALL3 = dataclasses.replace(SMALL2, levels=3)
+BASE2 = HVAEConfig(levels=2, ch=48, z_ch=4, n_res=2)
+BASE3 = dataclasses.replace(BASE2, levels=3)
+
+_REGISTRY: Dict[str, HVAEConfig] = {
+    "hvae-small2": SMALL2,
+    "hvae-small3": SMALL3,
+    "hvae-base2": BASE2,
+    "hvae-base3": BASE3,
+}
+
+
+def get(name: str) -> HVAEConfig:
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown hvae config {name!r}; choose from "
+            f"{sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def all_configs() -> Dict[str, HVAEConfig]:
+    return dict(_REGISTRY)

@@ -1,11 +1,17 @@
-"""Bits Back with ANS (BB-ANS) - legacy six-hook interface.
+"""Bits Back with ANS (BB-ANS) - DEPRECATED six-hook interface.
 
-The implementation now lives in ``repro.codecs`` (the composable
-``BBANS``/``Chained`` combinators - see paper Table 1 / section 2.3);
-this module is kept as a thin compatibility shim so existing call sites
-and model hooks keep working. New code should build a
-``repro.codecs.BBANS`` directly (e.g. ``models.vae.make_bb_codec``) and
-go through ``codecs.compress``/``decompress``.
+The implementation lives in ``repro.codecs`` (the composable
+``BBANS``/``Chained``/``BitSwap`` combinators - paper Table 1 /
+section 2.3); this module is kept only as a thin compatibility shim so
+pre-codecs call sites keep working, and every function here delegates
+to the combinators (coding is bit-identical). New code should:
+
+  * build the codec with ``models.vae.make_bb_codec`` (single layer),
+    ``models.hvae.make_bitswap_codec`` (hierarchical), or a
+    ``codecs.BBANS`` of its own;
+  * ship bytes with ``codecs.compress``/``decompress`` (one-shot BBX1)
+    or ``repro.stream`` (chunked BBX2);
+  * see docs/API.md for runnable examples of every public name.
 """
 
 from __future__ import annotations
@@ -21,11 +27,16 @@ from repro.codecs import combinators
 
 
 class BBANSCodec(NamedTuple):
-    """The six coder hooks of a bits-back model.
+    """The six coder hooks of a bits-back model (DEPRECATED form).
 
     Symbols ``s`` and latents ``y`` are pytrees with a leading ``lanes``
     axis. Every *_push must exactly invert the corresponding *_pop (and
     vice versa) - this is the only requirement (paper App. C).
+
+    Prefer ``codecs.BBANS(prior, likelihood, posterior)``: it is the
+    same object with the hook pairs grouped into ``Codec`` values
+    (``as_codec`` converts; ``models.vae.make_bb_codec`` builds it
+    directly).
     """
 
     posterior_pop: Callable   # (stack, s) -> (stack, y)      decode y~Q(y|s)

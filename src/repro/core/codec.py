@@ -30,6 +30,15 @@ class Codec:
     Subclasses implement ``push`` and ``pop``; dataclass subclasses get
     value semantics for free. Symbols ``x`` are pytrees with a leading
     ``lanes`` axis on every leaf.
+
+    Example (a shift-by-7 codec; runnable in docs/API.md)::
+
+        class Add7(Codec):
+            def push(self, stack, x):
+                return Uniform(4).push(stack, x + 7)
+            def pop(self, stack):
+                stack, x = Uniform(4).pop(stack)
+                return stack, x - 7
     """
 
     def push(self, stack: ans.ANSStack, x: Any) -> ans.ANSStack:
@@ -45,6 +54,11 @@ class FnCodec(Codec):
     The escape hatch for codecs whose hooks are closures over model
     state (e.g. the legacy six-hook ``BBANSCodec``) or that drive
     Python-level jitted-step loops (the LM likelihoods).
+
+    Example::
+
+        inner = Uniform(4)
+        codec = FnCodec(inner.push, inner.pop)   # same wire bytes
     """
 
     def __init__(self, push_fn: Callable, pop_fn: Callable):

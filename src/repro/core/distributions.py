@@ -27,7 +27,13 @@ from repro.core.codec import Codec
 
 @dataclass(frozen=True)
 class Bernoulli(Codec):
-    """Per-lane Bernoulli with success probability sigmoid(logit)."""
+    """Per-lane Bernoulli with success probability sigmoid(logit).
+
+    Example::
+
+        codec = Bernoulli(logits)              # logits float[lanes]
+        stack = codec.push(stack, bits01)      # symbols in {0, 1}
+    """
 
     logits: jnp.ndarray  # float[lanes]
     precision: int = ans.DEFAULT_PRECISION
@@ -80,7 +86,13 @@ def beta_binomial_log_pmf(k: jnp.ndarray, n: int, alpha: jnp.ndarray,
 
 @dataclass(frozen=True)
 class BetaBinomial(Codec):
-    """Per-lane beta-binomial on {0..n}; two positive params per lane."""
+    """Per-lane beta-binomial on {0..n}; two positive params per lane.
+
+    Example (full-MNIST pixels)::
+
+        codec = BetaBinomial(alpha, beta, n=255)   # alpha/beta [lanes]
+        stack, pix = codec.pop(stack)              # pix in 0..255
+    """
 
     alpha: jnp.ndarray  # float[lanes]
     beta: jnp.ndarray   # float[lanes]
@@ -113,7 +125,13 @@ class BetaBinomial(Codec):
 
 @dataclass(frozen=True)
 class Categorical(Codec):
-    """Per-lane categorical over an alphabet of size logits.shape[-1]."""
+    """Per-lane categorical over an alphabet of size logits.shape[-1].
+
+    Example::
+
+        codec = Categorical(logits)            # logits float[lanes, A]
+        stack = codec.push(stack, sym)         # sym int[lanes] in 0..A-1
+    """
 
     logits: jnp.ndarray  # float[lanes, A]
     precision: int = ans.DEFAULT_PRECISION
@@ -150,6 +168,11 @@ class FactoredCategorical(Codec):
 
     LIFO discipline: ``push`` pushes *lo then hi* so that ``pop`` pops *hi
     then lo*.
+
+    Example (vocab 400 in chunks of 64)::
+
+        codec = FactoredCategorical(logits, chunk_size=64)
+        stack = codec.push(stack, token_ids)   # ids int[lanes] < 400
     """
 
     logits: jnp.ndarray  # float[lanes, V]

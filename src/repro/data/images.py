@@ -1,0 +1,92 @@
+"""Arbitrary-H x W synthetic image batches (random-crop / pad collation).
+
+The HVAE codec path is fully convolutional - one trained model codes
+images of any (even) size. This module supplies the matching data side:
+the 28 x 28 synthetic digits from ``synthetic_mnist`` are *collated* to
+any requested target shape by random cropping (target smaller than
+source) and/or zero padding at a random offset (target larger), per
+axis independently - so a single source set exercises every shape.
+
+Everything is seeded and step-indexed (pure function of ``(seed,
+step)``), matching the restart-safe contract of ``data.pipeline``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Sequence, Tuple
+
+import numpy as np
+
+from repro.data import synthetic_mnist
+
+
+def collate(images: np.ndarray, hw: Tuple[int, int],
+            rng: np.random.Generator) -> np.ndarray:
+    """Crop/pad a [n, 28, 28] (or [n, 784]) batch to [n, H, W].
+
+    Per axis: if the target is smaller, a random crop window is taken;
+    if larger, the image lands at a random offset inside a zero canvas.
+    Offsets are drawn per image, so the collation doubles as the usual
+    random-translation augmentation.
+    """
+    if images.ndim == 2:
+        images = images.reshape(-1, synthetic_mnist.H, synthetic_mnist.W)
+    n, sh, sw = images.shape
+    th, tw = hw
+    out = np.zeros((n, th, tw), images.dtype)
+    ch, cw = min(sh, th), min(sw, tw)
+    src_y = rng.integers(0, sh - ch + 1, n)
+    src_x = rng.integers(0, sw - cw + 1, n)
+    dst_y = rng.integers(0, th - ch + 1, n)
+    dst_x = rng.integers(0, tw - cw + 1, n)
+    for i in range(n):
+        out[i, dst_y[i]:dst_y[i] + ch, dst_x[i]:dst_x[i] + cw] = \
+            images[i, src_y[i]:src_y[i] + ch, src_x[i]:src_x[i] + cw]
+    return out
+
+
+def pad_to_even(images: np.ndarray) -> np.ndarray:
+    """Zero-pad [n, H, W] on the bottom/right so H and W are even (the
+    only shape constraint of the stride-2 HVAE stem)."""
+    n, h, w = images.shape
+    return np.pad(images, ((0, 0), (0, h % 2), (0, w % 2)))
+
+
+def load(split: str = "train", n: int = 8000, seed: int = 0,
+         hw: Tuple[int, int] = (28, 28),
+         binarized: bool = True) -> np.ndarray:
+    """Synthetic digits collated to ``hw``: uint8 [n, H, W] (binary or
+    0..255)."""
+    imgs, _ = synthetic_mnist.load(split, n, seed)
+    if binarized:
+        imgs = synthetic_mnist.binarize(imgs, seed)
+    salt = {"train": 0x5EED, "test": 0x7E57}[split]
+    rng = np.random.default_rng(seed * 7919 + salt)
+    return collate(imgs, hw, rng)
+
+
+def image_batch_fn(images: np.ndarray, batch: int,
+                   hw: Tuple[int, int]):
+    """Step-indexed image batches at a fixed train shape.
+
+    Returns a ``(seed, step, shard, nshards) -> {"images": [B, H, W]}``
+    pure generator (the ``data.pipeline`` contract); collation offsets
+    are re-drawn per step, so every step sees fresh crops.
+    """
+    if images.ndim == 2:
+        images = images.reshape(-1, synthetic_mnist.H, synthetic_mnist.W)
+
+    def fn(seed, step, shard, nshards):
+        rng = np.random.default_rng((seed * 1_000_003 + step) ^ shard)
+        local = batch // nshards
+        idx = rng.integers(0, len(images), local)
+        return {"images": collate(images[idx], hw, rng).astype(np.int32)}
+
+    return fn
+
+
+def shape_schedule(shapes: Sequence[Tuple[int, int]], step: int
+                   ) -> Tuple[int, int]:
+    """Deterministically cycle a set of image shapes across steps - the
+    "one model, any size" evaluation schedule."""
+    return tuple(shapes[step % len(shapes)])

@@ -1,0 +1,405 @@
+"""Hierarchical ResNet-VAE with a Bit-Swap codec path (HiLLoC-style).
+
+The model is the concrete realization of the paper's closing remark -
+that BB-ANS "could be used to achieve substantial improvements in
+compression rate" given a better generative model - along the path
+mapped by Bit-Swap (Kingma, Abbeel & Ho, 2019) and HiLLoC (Townsend,
+Bird, Kunze & Barber, 2020): an L-level *Markov* latent hierarchy
+
+    x <- z_1 <- z_2 <- ... <- z_L
+
+with fully convolutional residual encoder/decoder blocks, so one set of
+parameters codes images of **any** (even) height and width.
+
+Structure (all stages fully convolutional, SAME padding):
+
+  * inference (bottom-up):  q(z_1|x) = stem conv (stride 2) + resblocks;
+    q(z_l|z_{l-1}) for l > 1 = resblocks at the latent resolution.
+  * generative (top-down):  p(z_{l-1}|z_l) = resblocks; p(x|z_1) =
+    resblocks + stride-2 transpose conv back to pixel resolution;
+    p(z_L) = N(0, I).
+
+Every latent lives on a [H/2, W/2, z_ch] grid; all conditionals are
+diagonal Gaussians, so each level reuses the paper's max-entropy
+discretization (``core.discretize``): latents are carried as bucket
+indices under the N(0,1) grid, posteriors AND intermediate likelihoods
+are coded with ``codecs.DiscretizedGaussian`` over that same grid - the
+"dynamic discretization" of Bit-Swap, one fixed grid, per-layer dynamic
+(mu, sigma). The decode-side bucket search is the exact computation the
+``kernels/bucketize`` Pallas kernel implements (bit-parity tested in
+``tests/test_kernels.py``); pass ``use_bucketize_kernel=True`` to
+``make_bitswap_codec`` to route posterior decodes through it.
+
+``make_bitswap_codec`` assembles the whole thing into a
+``codecs.BitSwap`` combinator: the interleaved pop/push schedule bounds
+the transient clean-bit demand by ONE layer's posterior instead of the
+sum over layers (the Bit-Swap advantage; measured by
+``benchmarks/hvae_rate.py``).
+
+Pure-functional like ``models.vae``: ``init`` / ``elbo`` / ``loss`` plus
+the codec builder; params are plain dicts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import codecs
+from repro.core import discretize
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class HVAEConfig:
+    """Shape-free model spec: no image size anywhere (HiLLoC's point)."""
+
+    levels: int = 2          # L >= 1 latent levels
+    in_channels: int = 1
+    ch: int = 32             # hidden feature channels
+    z_ch: int = 4            # latent channels per level
+    n_res: int = 1           # residual blocks per stage
+    likelihood: str = "bernoulli"   # or "beta_binomial"
+    # Coding parameters (same trade as models.vae: 10-bit buckets inside
+    # 16-bit coder precision keep the prior-smearing term < 2%).
+    lat_bits: int = 10
+    precision: int = 16
+    obs_precision: int = 16
+
+    @property
+    def obs_params_per_pixel(self) -> int:
+        return 1 if self.likelihood == "bernoulli" else 2
+
+    def latent_shape(self, hw: Tuple[int, int]) -> Tuple[int, int, int]:
+        """Latent grid for an H x W image: (H/2, W/2, z_ch)."""
+        h, w = hw
+        if h % 2 or w % 2:
+            raise ValueError(
+                f"hvae: image dims must be even (got {h}x{w}); pad with "
+                "data.images.collate")
+        return h // 2, w // 2, self.z_ch
+
+
+# ---------------------------------------------------------------------------
+# layers (pure functions over param dicts)
+# ---------------------------------------------------------------------------
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    w = jax.random.normal(key, (kh, kw, cin, cout)) * jnp.sqrt(2.0 / fan_in)
+    return {"w": w.astype(jnp.float32),
+            "b": jnp.zeros((cout,), jnp.float32)}
+
+
+def _conv(p, x, stride: int = 1):
+    """NHWC 3x3 (or stored-size) conv, SAME padding."""
+    out = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out + p["b"]
+
+
+def _deconv(p, x, stride: int = 2):
+    """NHWC transpose conv, SAME padding: exact x`stride` upsample."""
+    out = jax.lax.conv_transpose(
+        x, p["w"], strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out + p["b"]
+
+
+def _resblock_init(key, ch):
+    k1, k2 = jax.random.split(key)
+    return {"c1": _conv_init(k1, 3, 3, ch, ch),
+            "c2": _conv_init(k2, 3, 3, ch, ch)}
+
+
+def _resblock(p, x):
+    h = _conv(p["c1"], jax.nn.relu(x))
+    h = _conv(p["c2"], jax.nn.relu(h))
+    return x + h
+
+
+def _stage_init(key, cin, ch, cout, n_res):
+    """conv in -> n_res resblocks -> conv head (2 params/output dim)."""
+    keys = jax.random.split(key, n_res + 2)
+    return {
+        "in": _conv_init(keys[0], 3, 3, cin, ch),
+        "res": [_resblock_init(keys[1 + i], ch) for i in range(n_res)],
+        "head": _conv_init(keys[-1], 3, 3, ch, cout),
+    }
+
+
+def _stage(p, x):
+    h = _conv(p["in"], x)
+    for rp in p["res"]:
+        h = _resblock(rp, h)
+    return _conv(p["head"], jax.nn.relu(h))
+
+
+def init(key: jax.Array, cfg: HVAEConfig) -> Params:
+    """Initialize all stages; the param tree is image-size independent."""
+    keys = jax.random.split(key, cfg.levels + 5)
+    params: Params = {
+        # q(z_1|x): stride-2 stem then a stage at latent resolution.
+        "enc_stem": _conv_init(keys[0], 3, 3, cfg.in_channels, cfg.ch),
+        "q1": _stage_init(keys[1], cfg.ch, cfg.ch, 2 * cfg.z_ch, cfg.n_res),
+        # p(x|z_1): stage + stride-2 transpose conv + obs head.
+        "p_obs": {
+            "stage": _stage_init(keys[2], cfg.z_ch, cfg.ch, cfg.ch,
+                                 cfg.n_res),
+            "up": _conv_init(keys[3], 3, 3, cfg.ch, cfg.ch),
+            "out": _conv_init(
+                keys[4], 3, 3, cfg.ch,
+                cfg.in_channels * cfg.obs_params_per_pixel),
+        },
+    }
+    for l in range(2, cfg.levels + 1):
+        kq, kp = jax.random.split(keys[3 + l])
+        # q(z_l | z_{l-1}) and p(z_{l-1} | z_l), both at latent resolution.
+        params[f"q{l}"] = _stage_init(kq, cfg.z_ch, cfg.ch, 2 * cfg.z_ch,
+                                      cfg.n_res)
+        params[f"p{l}"] = _stage_init(kp, cfg.z_ch, cfg.ch, 2 * cfg.z_ch,
+                                      cfg.n_res)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# conditionals
+# ---------------------------------------------------------------------------
+
+def _split_mu_sigma(out):
+    mu, logvar = jnp.split(out, 2, axis=-1)
+    return mu, jnp.exp(0.5 * jnp.clip(logvar, -10.0, 10.0))
+
+
+def _norm_input(cfg: HVAEConfig, x: jnp.ndarray) -> jnp.ndarray:
+    scale = 1.0 if cfg.likelihood == "bernoulli" else 255.0
+    x = x.astype(jnp.float32) / scale
+    return x[..., None] if x.ndim == 3 else x
+
+
+def infer_z1(params: Params, cfg: HVAEConfig, x: jnp.ndarray):
+    """x int[lanes, H, W] -> q(z_1|x) = (mu, sigma) [lanes, H/2, W/2, z_ch]."""
+    h = _conv(params["enc_stem"], _norm_input(cfg, x), stride=2)
+    return _split_mu_sigma(_stage(params["q1"], jax.nn.relu(h)))
+
+
+def infer_up(params: Params, cfg: HVAEConfig, level: int,
+             z_prev: jnp.ndarray):
+    """q(z_level | z_{level-1}) from z_{level-1} *values* (level >= 2)."""
+    return _split_mu_sigma(_stage(params[f"q{level}"], z_prev))
+
+
+def gen_down(params: Params, cfg: HVAEConfig, level: int, z: jnp.ndarray):
+    """p(z_{level-1} | z_level) from z_level values (level >= 2)."""
+    return _split_mu_sigma(_stage(params[f"p{level}"], z))
+
+
+def decode_obs(params: Params, cfg: HVAEConfig, z1: jnp.ndarray):
+    """z_1 values [lanes, h, w, z_ch] -> obs params [lanes, H, W, ...].
+
+    bernoulli: logits [lanes, H, W]; beta_binomial: positive (alpha,
+    beta) [lanes, H, W, 2].
+    """
+    p = params["p_obs"]
+    h = _stage(p["stage"], z1)
+    h = _deconv(p["up"], jax.nn.relu(h), stride=2)
+    out = _conv(p["out"], jax.nn.relu(h))
+    if cfg.likelihood == "bernoulli":
+        return out[..., 0]
+    return jax.nn.softplus(out) + 1e-4
+
+
+def obs_log_prob(cfg: HVAEConfig, obs_params: jnp.ndarray,
+                 x: jnp.ndarray) -> jnp.ndarray:
+    """Sum log p(x|z_1) over pixels -> float[lanes]."""
+    xf = x.astype(jnp.float32)
+    if cfg.likelihood == "bernoulli":
+        lp = xf * jax.nn.log_sigmoid(obs_params) \
+            + (1.0 - xf) * jax.nn.log_sigmoid(-obs_params)
+        return lp.sum(axis=(1, 2))
+    from repro.core.distributions import beta_binomial_log_pmf
+    lp = beta_binomial_log_pmf(xf, 255, obs_params[..., 0],
+                               obs_params[..., 1])
+    return lp.sum(axis=(1, 2))
+
+
+def _gauss_logpdf(z, mu, sigma):
+    return (-0.5 * ((z - mu) / sigma) ** 2 - jnp.log(sigma)
+            - 0.5 * jnp.log(2.0 * jnp.pi))
+
+
+# ---------------------------------------------------------------------------
+# training objective
+# ---------------------------------------------------------------------------
+
+def elbo(params: Params, cfg: HVAEConfig, key: jax.Array,
+         x: jnp.ndarray) -> jnp.ndarray:
+    """Per-example ELBO in nats, float[lanes]; -ELBO == expected Bit-Swap
+    message length (up to the bounded discretization penalty)."""
+    zs: List[jnp.ndarray] = []
+    logq = 0.0
+    mu, sigma = infer_z1(params, cfg, x)
+    for level in range(1, cfg.levels + 1):
+        key, sub = jax.random.split(key)
+        z = mu + sigma * jax.random.normal(sub, mu.shape)
+        logq = logq + _gauss_logpdf(z, mu, sigma).sum(axis=(1, 2, 3))
+        zs.append(z)
+        if level < cfg.levels:
+            mu, sigma = infer_up(params, cfg, level + 1, z)
+
+    logp = obs_log_prob(cfg, decode_obs(params, cfg, zs[0]), x)
+    for level in range(2, cfg.levels + 1):
+        mu, sigma = gen_down(params, cfg, level, zs[level - 1])
+        logp = logp + _gauss_logpdf(zs[level - 2], mu,
+                                    sigma).sum(axis=(1, 2, 3))
+    logp = logp + _gauss_logpdf(zs[-1], 0.0, 1.0).sum(axis=(1, 2, 3))
+    return logp - logq
+
+
+def elbo_bits_per_dim(params: Params, cfg: HVAEConfig, key: jax.Array,
+                      x: jnp.ndarray) -> jnp.ndarray:
+    n_dims = x.shape[1] * x.shape[2]
+    return -jnp.mean(elbo(params, cfg, key, x)) / (n_dims * jnp.log(2.0))
+
+
+def loss(params: Params, cfg: HVAEConfig, key: jax.Array,
+         x: jnp.ndarray) -> jnp.ndarray:
+    return -jnp.mean(elbo(params, cfg, key, x))
+
+
+# ---------------------------------------------------------------------------
+# Bit-Swap codec (the tentpole: hierarchy -> codecs.BitSwap)
+# ---------------------------------------------------------------------------
+
+def _gaussian_grid_codec(cfg: HVAEConfig, mu: jnp.ndarray,
+                         sigma: jnp.ndarray, use_kernel: bool):
+    """Code a whole latent grid as flat bucket indices [lanes, n].
+
+    One ``DiscretizedGaussian`` per position over the shared max-entropy
+    N(0,1) grid - the per-layer *dynamic* discretization: the grid is
+    fixed, (mu, sigma) change with the conditioning context.
+    """
+    lanes = mu.shape[0]
+    mu_f = mu.reshape(lanes, -1)
+    sg_f = sigma.reshape(lanes, -1)
+    n = mu_f.shape[1]
+    if use_kernel:
+        return codecs.Repeat(
+            lambda d: KernelDiscretizedGaussian(
+                mu_f[:, d], sg_f[:, d], cfg.lat_bits, cfg.precision), n,
+            scan=False)
+    return codecs.Repeat(
+        lambda d: codecs.DiscretizedGaussian(
+            mu_f[:, d], sg_f[:, d], cfg.lat_bits, cfg.precision), n)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelDiscretizedGaussian(codecs.DiscretizedGaussian):
+    """``DiscretizedGaussian`` with the decode-side bucket search routed
+    through the fused Pallas ``kernels/bucketize`` kernel.
+
+    Push is inherited (the ordinary pointwise-CDF encode); pop asks the
+    kernel for (idx, start, freq) in one fused pass. Kernel and
+    pure-JAX bisection are bit-identical (``tests/test_kernels.py``),
+    so the two leaves interoperate on the same wire bytes.
+    """
+
+    def pop(self, stack):
+        from repro.core import ans
+        from repro.kernels.bucketize import ops as bucketize_ops
+        slot = ans.peek(stack, self.precision)
+        idx, start, freq = bucketize_ops.bucketize(
+            slot, self.mu, self.sigma, self.bits, self.precision)
+        return ans.pop_update(stack, start, freq, self.precision), idx
+
+
+def _centres(cfg: HVAEConfig, idx: jnp.ndarray,
+             lat_hw: Tuple[int, int, int]) -> jnp.ndarray:
+    """Flat bucket indices [lanes, n] -> latent values [lanes, h, w, c]."""
+    vals = discretize.bucket_centre(idx, cfg.lat_bits)
+    return vals.reshape((idx.shape[0],) + lat_hw)
+
+
+def make_bitswap_codec(params: Params, cfg: HVAEConfig,
+                       hw: Tuple[int, int], *,
+                       use_bucketize_kernel: bool = False) -> codecs.BitSwap:
+    """The HVAE as a ``codecs.BitSwap`` combinator for H x W images.
+
+    The networks are fully convolutional, so ONE trained ``params`` set
+    yields a codec for *any* even image shape - call this once per shape
+    (``serve.CodecEngine`` memoizes that for you). Image symbols are
+    int[lanes, H, W]; latent symbols are flat bucket indices
+    int32[lanes, (H/2) * (W/2) * z_ch].
+
+    Use with the container or the BBX2 stream:
+
+        codec = make_bitswap_codec(params, cfg, (28, 28))
+        blob = codecs.compress(codecs.Chained(codec, n), data,
+                               lanes=lanes, seed=0)
+        wire = stream.encode_stream(codec, data, lanes=lanes,
+                                    block_symbols=8, init_chunks=32)
+    """
+    h, w = hw
+    lat_hw = cfg.latent_shape(hw)
+    uk = use_bucketize_kernel
+
+    def obs_codec(obs_params):
+        lanes = obs_params.shape[0]
+        if cfg.likelihood == "bernoulli":
+            logits = obs_params.reshape(lanes, -1)
+            return codecs.Shaped(
+                codecs.Repeat(
+                    lambda d: codecs.Bernoulli(logits[:, d],
+                                               cfg.obs_precision),
+                    h * w), (h, w))
+        ab = obs_params.reshape(lanes, -1, 2)
+        return codecs.Shaped(
+            codecs.Repeat(
+                lambda d: codecs.BetaBinomial(
+                    ab[:, d, 0], ab[:, d, 1], 255, cfg.obs_precision),
+                h * w), (h, w))
+
+    def posterior1(x):
+        mu, sigma = infer_z1(params, cfg, x)
+        return _gaussian_grid_codec(cfg, mu, sigma, uk)
+
+    def likelihood1(z1_idx):
+        z1 = _centres(cfg, z1_idx, lat_hw)
+        return obs_codec(decode_obs(params, cfg, z1))
+
+    layers = [(posterior1, likelihood1)]
+    for level in range(2, cfg.levels + 1):
+        def posterior_l(z_prev_idx, _level=level):
+            z_prev = _centres(cfg, z_prev_idx, lat_hw)
+            mu, sigma = infer_up(params, cfg, _level, z_prev)
+            return _gaussian_grid_codec(cfg, mu, sigma, uk)
+
+        def likelihood_l(z_idx, _level=level):
+            z = _centres(cfg, z_idx, lat_hw)
+            mu, sigma = gen_down(params, cfg, _level, z)
+            return _gaussian_grid_codec(cfg, mu, sigma, uk)
+
+        layers.append((posterior_l, likelihood_l))
+
+    n_lat = lat_hw[0] * lat_hw[1] * lat_hw[2]
+    prior = codecs.Repeat(
+        lambda d: codecs.Uniform(cfg.lat_bits, cfg.precision), n_lat)
+    return codecs.BitSwap(prior=prior, layers=tuple(layers))
+
+
+def codec_family(params: Params, cfg: HVAEConfig, **kwargs):
+    """``shape -> Codec`` factory for ``serve.CodecEngine``: the "one
+    model, any image size" entry point."""
+    def make(shape: Tuple[int, ...]) -> codecs.BitSwap:
+        if len(shape) != 2:
+            raise ValueError(
+                f"hvae: expected per-lane symbols [H, W], got shape "
+                f"{shape}")
+        return make_bitswap_codec(params, cfg, (shape[0], shape[1]),
+                                  **kwargs)
+    return make

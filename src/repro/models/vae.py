@@ -8,7 +8,12 @@ standard-normal prior. Two likelihood heads, as in the paper:
     latent 50.
 
 Pure-functional: ``init``/``encode``/``decode``/``elbo`` plus
-``make_codec`` which returns the six BB-ANS hooks (lane = batch element).
+``make_bb_codec``, which returns the model as a composable
+``codecs.BBANS`` combinator (lane = batch element) for use with
+``codecs.compress``/``decompress`` or the ``repro.stream`` BBX2 path.
+(``make_codec`` still exists as a deprecated six-hook view for
+pre-codecs call sites; it is a bit-identical wrapper over
+``make_bb_codec``.)
 """
 
 from __future__ import annotations
@@ -186,8 +191,13 @@ def make_bb_codec(params: Params, cfg: VAEConfig) -> codecs.BBANS:
 
 
 def make_codec(params: Params, cfg: VAEConfig) -> bbans.BBANSCodec:
-    """Legacy six-hook view of ``make_bb_codec`` (kept for old call
-    sites; bit-identical coding)."""
+    """DEPRECATED six-hook view of ``make_bb_codec``.
+
+    Kept only for pre-``repro.codecs`` call sites; coding is
+    bit-identical by construction (every hook delegates to the
+    combinator). New code should call ``make_bb_codec`` and go through
+    ``codecs.compress``/``decompress`` - see docs/API.md.
+    """
     bb = make_bb_codec(params, cfg)
     return bbans.BBANSCodec(
         posterior_pop=lambda stack, s: bb.posterior(s).pop(stack),

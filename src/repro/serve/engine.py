@@ -5,6 +5,15 @@ The engine is the jit boundary for serving: ``prefill_step`` and
 ``serve_step`` are the two lowered programs (the dry-run lowers exactly
 these for the decode/prefill cells). State is donated across ``serve_step``
 calls so KV caches update in place.
+
+Two services live here:
+
+  * ``Engine``      - the LM service (generation + token-stream
+    compression, one-shot and BBX2 streaming).
+  * ``CodecEngine`` - the shape-polymorphic codec service: any
+    ``shape -> Codec`` family (e.g. the fully convolutional HVAE via
+    ``models.hvae.codec_family``) served through the same one-shot
+    container and BBX2 stream paths, with per-shape codec memoization.
 """
 
 from __future__ import annotations
@@ -46,6 +55,78 @@ class _LMMaskedBlock(stream.MaskedBlockCodec):
         stack, toks = lm_codec.decode_tokens_masked(
             self.params, self.cfg, stack, k, n_valid, self.precision)
         return stack, toks.T
+
+
+class CodecEngine:
+    """Shape-polymorphic compression service over any codec family.
+
+    ``make_codec(shape) -> Codec`` builds the per-datapoint codec for
+    symbols whose per-lane shape is ``shape`` (for the HVAE: ``(H, W)``
+    images; the networks are fully convolutional so every shape shares
+    one parameter set). Codecs are memoized per shape - the service
+    pays network trace/compile cost once per distinct request shape.
+
+    Example (HVAE image service)::
+
+        eng = CodecEngine(hvae.codec_family(params, cfg), seed=0)
+        blob = eng.compress(batch)              # [n, lanes, H, W]
+        out  = eng.decompress(blob, n, (H, W))  # bit-exact
+        wire = eng.compress_stream(batch, block_symbols=8)
+        out2 = eng.decompress_stream(wire, (H, W))
+    """
+
+    def __init__(self, make_codec, *, seed: Optional[int] = 0,
+                 init_chunks: int = 32):
+        self._make_codec = make_codec
+        self._codecs: Dict[Tuple[int, ...], Any] = {}
+        self._seed = seed
+        self._init_chunks = init_chunks
+
+    def codec_for(self, shape: Sequence[int]):
+        """The memoized per-datapoint codec for one symbol shape."""
+        key = tuple(int(s) for s in shape)
+        if key not in self._codecs:
+            self._codecs[key] = self._make_codec(key)
+        return self._codecs[key]
+
+    @staticmethod
+    def _shape_of(data) -> Tuple[int, ...]:
+        leaf = jax.tree_util.tree_leaves(data)[0]
+        return tuple(leaf.shape[2:])  # [n, lanes, *shape]
+
+    def compress(self, data, **kwargs) -> bytes:
+        """One-shot compress of ``[n, lanes, *shape]`` data to a BBX1
+        blob (``codecs.compress`` semantics: grow-and-retry, never a
+        corrupt blob)."""
+        leaf = jax.tree_util.tree_leaves(data)[0]
+        n, lanes = leaf.shape[0], leaf.shape[1]
+        codec = codecs.Chained(self.codec_for(self._shape_of(data)), n)
+        kwargs.setdefault("seed", self._seed)
+        kwargs.setdefault("init_chunks", self._init_chunks)
+        return codecs.compress(codec, data, lanes=lanes, **kwargs)
+
+    def decompress(self, blob: bytes, n: int, shape: Sequence[int]):
+        """Decode a ``compress`` blob of ``n`` datapoints of ``shape``."""
+        codec = codecs.Chained(self.codec_for(shape), n)
+        return codecs.decompress(codec, blob)
+
+    def compress_stream(self, data, *, block_symbols: int = 8,
+                        **kwargs) -> bytes:
+        """Chunked-streaming compress to a BBX2 blob: blocks become
+        independently decodable as they fill (mid-stream resume via
+        ``stream.decode_from_offset``)."""
+        leaf = jax.tree_util.tree_leaves(data)[0]
+        lanes = leaf.shape[1]
+        kwargs.setdefault("seed", self._seed)
+        kwargs.setdefault("init_chunks", self._init_chunks)
+        enc = stream.StreamEncoder(
+            self.codec_for(self._shape_of(data)), lanes=lanes,
+            block_symbols=block_symbols, **kwargs)
+        return enc.write(data) + enc.flush()
+
+    def decompress_stream(self, blob: bytes, shape: Sequence[int]):
+        """Decode a ``compress_stream`` blob back to [n, lanes, *shape]."""
+        return stream.decode_stream(self.codec_for(shape), blob)
 
 
 class Engine:

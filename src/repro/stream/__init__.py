@@ -13,6 +13,9 @@ lane axis of one ``ANSStack`` (``batcher``).
 
     xs2 = stream.decode_stream(codec, wire)             # full decode
     tail = stream.decode_from_offset(codec, wire, off)  # resume
+
+Runnable examples for every exported name: docs/API.md; the BBX2 byte
+layout: docs/FORMATS.md.
 """
 
 from repro.stream import format  # noqa: F401  (the BBX2 wire format)

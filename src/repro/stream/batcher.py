@@ -45,6 +45,9 @@ class MaskedBlockCodec:
     (its state must be byte-identical to never having seen the rest).
     ``pop(stack, k, n_valid)`` is the inverse; values in invalid
     positions of the returned ``xs`` are unspecified.
+
+    Implementations: ``SteppedMaskedBlock`` (any ``Codec``),
+    ``serve.engine._LMMaskedBlock`` (LM at fixed batch width).
     """
 
     def push(self, stack: ans.ANSStack, xs: Any,
@@ -63,6 +66,11 @@ class SteppedMaskedBlock(MaskedBlockCodec):
     Steps the inner codec one datapoint at a time (reversed on push so
     pops stream forward) and freezes masked lanes with
     ``ans.select_lanes`` after every step.
+
+    Example::
+
+        block = SteppedMaskedBlock(codecs.Uniform(6))
+        stack = block.push(stack, xs, n_valid)   # ragged lanes ok
     """
 
     inner: Codec
@@ -115,6 +123,14 @@ class StreamBatcher:
     are masked), so each round reuses one compiled executable - the
     property model-backed codecs need for bitwise encode/decode
     symmetry (see ``core.lm_codec``).
+
+    Example::
+
+        bat = StreamBatcher(SteppedMaskedBlock(codec), max_lanes=8,
+                            block_symbols=32)
+        bat.submit("user-1", xs_a)    # ragged [n_a, ...], no lane axis
+        bat.submit("user-2", xs_b)
+        blobs = bat.run()             # {"user-1": BBX2 bytes, ...}
     """
 
     def __init__(self, codec, max_lanes: int, block_symbols: int, *,
@@ -308,6 +324,11 @@ def decode_batched(codec, blobs: Dict[Any, bytes], max_lanes: int,
     same ``max_lanes`` width as encoding did - the bitwise-determinism
     requirement for model-backed codecs. Pure-math codecs can equally
     decode each blob separately with a 1-lane ``StreamDecoder``.
+
+    Example::
+
+        outs = decode_batched(codec, blobs, max_lanes=8,
+                              block_symbols=32)   # {stream_id: [n, ...]}
     """
     block = (codec if isinstance(codec, MaskedBlockCodec)
              else SteppedMaskedBlock(codec))

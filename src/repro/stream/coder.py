@@ -54,6 +54,12 @@ class BlockChain(Codec):
     streaming mirror of ``codecs.Chained``). Python-driven, so inner
     codecs may drive jit-compiled network steps (the ``lm_codec``
     determinism contract).
+
+    Example::
+
+        block = BlockChain(codecs.Uniform(8), k=4)
+        stack = block.push(stack, xs)          # xs int[4, lanes]
+        stack, xs2 = block.pop(stack)
     """
 
     inner: Codec
@@ -81,6 +87,12 @@ class KernelTableBlock(Codec):
     Symbols are int[k, lanes] (time-major); push/pop are bit-identical
     to ``BlockChain(Categorical(...), k)`` but run the whole block
     through one ``push_many_table``/``pop_many`` kernel call.
+
+    Example::
+
+        cat = Categorical(logits)
+        fast = KernelTableBlock(cat._table(), k)   # same wire bytes as
+        stack = fast.push(stack, xs)               # BlockChain(cat, k)
     """
 
     table: jnp.ndarray   # uint32[lanes, A+1]
@@ -121,6 +133,12 @@ class StreamEncoder:
     ``seed=None`` starts the first block cold (deterministic, right for
     direct coding); an integer seed enables random first heads and the
     per-block clean-bit supply for bits-back codecs.
+
+    Example::
+
+        enc = StreamEncoder(codec, lanes=16, block_symbols=64, seed=0)
+        wire = enc.write(xs)      # xs [n, 16, ...]; bytes as blocks fill
+        wire += enc.flush()       # ragged final block + trailer
     """
 
     def __init__(self, codec: Optional[Codec] = None, *, lanes: int,
@@ -276,6 +294,14 @@ class StreamDecoder:
     Construct with ``header=`` (e.g. from ``format.scan``) to resume
     mid-stream: the byte feed may then start at any block boundary
     instead of the stream header.
+
+    Example::
+
+        dec = StreamDecoder(codec)
+        for piece in network_chunks:
+            for block in dec.read(piece):      # [k, lanes, ...] each
+                consume(block)
+        assert dec.finished
     """
 
     def __init__(self, codec: Optional[Codec] = None, *,
@@ -356,7 +382,13 @@ class StreamDecoder:
 
 def encode_stream(codec: Optional[Codec], data: Any, *, lanes: int,
                   block_symbols: int, **kwargs) -> bytes:
-    """One-shot helper: the whole of ``data`` through a StreamEncoder."""
+    """One-shot helper: the whole of ``data`` through a StreamEncoder.
+
+    Example::
+
+        wire = encode_stream(codec, xs, lanes=16, block_symbols=64)
+        assert (decode_stream(codec, wire) == xs).all()
+    """
     enc = StreamEncoder(codec, lanes=lanes, block_symbols=block_symbols,
                         **kwargs)
     return enc.write(data) + enc.flush()
@@ -371,7 +403,12 @@ def _concat_blocks(blocks: List[Any]) -> Any:
 
 def decode_stream(codec: Optional[Codec], blob: bytes,
                   **kwargs) -> Any:
-    """Decode a complete BBX2 stream to time-major ``[n, lanes, ...]``."""
+    """Decode a complete BBX2 stream to time-major ``[n, lanes, ...]``.
+
+    Example::
+
+        xs = decode_stream(codec, wire)        # raises if truncated
+    """
     dec = StreamDecoder(codec, **kwargs)
     blocks = dec.read(blob)
     if not dec.finished:
@@ -389,6 +426,11 @@ def decode_from_offset(codec: Optional[Codec], blob: bytes, offset: int,
     ``format.scan`` or from bookkeeping at encode time. The trailer
     count check is skipped (a resumed decode legitimately sees fewer
     blocks than the whole stream).
+
+    Example::
+
+        header, offsets, trailer = stream.format.scan(wire)
+        tail = decode_from_offset(codec, wire, offsets[2])  # block 2 on
     """
     parsed = fmt.decode_header(blob)
     if parsed is None:

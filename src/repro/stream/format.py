@@ -39,6 +39,10 @@ Wire layout (little-endian):
 Framing is byte-precise: ``scan`` recovers every block boundary from
 the length fields alone, so a decoder can seek to any block offset and
 resume without touching earlier payload bytes.
+
+The canonical spec (field tables for BBX1 + BBX2, invariants, and a
+worked scan example) is docs/FORMATS.md; this docstring is the
+implementation-side summary.
 """
 
 from __future__ import annotations

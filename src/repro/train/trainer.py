@@ -31,9 +31,16 @@ def make_optimizer(cfg, lr: float = 3e-4, total_steps: int = 10000):
     return adamw.AdamW(learning_rate=sched, weight_decay=0.01)
 
 
-def init_state(key, cfg, optimizer, use_grad_compression: bool = False
-               ) -> TrainState:
-    params = transformer.init(key, cfg)
+def init_state(key, cfg, optimizer, use_grad_compression: bool = False,
+               init_params_fn: Optional[Callable] = None) -> TrainState:
+    """Build a fresh ``TrainState``.
+
+    ``init_params_fn(key, cfg) -> params`` selects the model family;
+    the default is the LM transformer. Image models pass their own init
+    (e.g. ``models.hvae.init``) and reuse the same optimizer/train-step
+    machinery - the trainer is model-agnostic from here down.
+    """
+    params = (init_params_fn or transformer.init)(key, cfg)
     opt_state = optimizer.init(params)
     cstate = grad_compress.init_state(params) if use_grad_compression \
         else None

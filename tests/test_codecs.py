@@ -182,46 +182,48 @@ def test_bbans_combinator_matches_legacy_hooks(small_cfg, small_params):
                                   np.asarray(st0.head))
 
 
-def _toy_hierarchy(lanes, seed=7):
-    """A 2-layer Markov latent toy model: s <- z1 <- z2, all leaves."""
+def _toy_hierarchy(lanes, seed=7, z_dims=(4, 2), obs_d=8, bits=6):
+    """An L-layer Markov latent toy model: s <- z1 <- ... <- zL.
+
+    ``z_dims`` is bottom-up; every conditional is a linear map squashed
+    with tanh, every latent leaf a ``DiscretizedGaussian`` over the
+    shared max-entropy grid.
+    """
     rng = np.random.default_rng(seed)
-    obs_d, z1_d, z2_d, bits = 8, 4, 2, 6
-    w_post1 = jnp.asarray(rng.normal(0, 0.5, (obs_d, z1_d)), jnp.float32)
-    w_lik1 = jnp.asarray(rng.normal(0, 0.8, (z1_d, obs_d)), jnp.float32)
-    w_post2 = jnp.asarray(rng.normal(0, 0.5, (z1_d, z2_d)), jnp.float32)
-    w_lik2 = jnp.asarray(rng.normal(0, 0.5, (z2_d, z1_d)), jnp.float32)
+    dims = (obs_d,) + tuple(z_dims)
 
     def centre(idx):
         return discretize.bucket_centre(idx, bits)
 
-    def posterior1(s):
-        mu = jnp.tanh(s.astype(jnp.float32) @ w_post1)
+    def gauss_repeat(mu, sigma_val):
         return codecs.Repeat(
             lambda d: codecs.DiscretizedGaussian(
-                mu[:, d], jnp.full_like(mu[:, d], 0.5), bits), z1_d)
+                mu[:, d], jnp.full_like(mu[:, d], sigma_val), bits),
+            mu.shape[1])
 
-    def likelihood1(z1):
-        logits = centre(z1) @ w_lik1
-        return codecs.Repeat(
-            lambda d: Bernoulli(logits[:, d]), obs_d)
+    layers = []
+    for l in range(1, len(dims)):
+        w_post = jnp.asarray(rng.normal(0, 0.5, (dims[l - 1], dims[l])),
+                             jnp.float32)
+        w_lik = jnp.asarray(rng.normal(0, 0.8, (dims[l], dims[l - 1])),
+                            jnp.float32)
+        bottom = l == 1
 
-    def posterior2(z1):
-        mu = jnp.tanh(centre(z1) @ w_post2)
-        return codecs.Repeat(
-            lambda d: codecs.DiscretizedGaussian(
-                mu[:, d], jnp.full_like(mu[:, d], 0.6), bits), z2_d)
+        def posterior(ctx, _w=w_post, _bottom=bottom, _s=0.5 + 0.02 * l):
+            vals = ctx.astype(jnp.float32) if _bottom else centre(ctx)
+            return gauss_repeat(jnp.tanh(vals @ _w), _s)
 
-    def likelihood2(z2):
-        mu = jnp.tanh(centre(z2) @ w_lik2)
-        return codecs.Repeat(
-            lambda d: codecs.DiscretizedGaussian(
-                mu[:, d], jnp.full_like(mu[:, d], 0.7), bits), z1_d)
+        def likelihood(z, _w=w_lik, _bottom=bottom, _s=0.7):
+            out = jnp.tanh(centre(z) @ _w)
+            if _bottom:
+                return codecs.Repeat(
+                    lambda d: Bernoulli(out[:, d] * 2.0), obs_d)
+            return gauss_repeat(out, _s)
 
-    prior = codecs.Repeat(lambda d: codecs.Uniform(bits), z2_d)
-    return codecs.BitSwap(
-        prior=prior,
-        layers=((posterior1, likelihood1), (posterior2, likelihood2)),
-    ), obs_d
+        layers.append((posterior, likelihood))
+
+    prior = codecs.Repeat(lambda d: codecs.Uniform(bits), z_dims[-1])
+    return codecs.BitSwap(prior=prior, layers=tuple(layers)), obs_d
 
 
 def test_bitswap_hierarchical_roundtrip():
@@ -237,6 +239,94 @@ def test_bitswap_hierarchical_roundtrip():
     np.testing.assert_array_equal(np.asarray(st2.head),
                                   np.asarray(st0.head))
     np.testing.assert_array_equal(np.asarray(st2.ptr), np.asarray(st0.ptr))
+
+
+def test_bitswap_three_layer_roundtrip():
+    """Exact round-trip with a >= 3-level hierarchy (PR satellite)."""
+    lanes = 4
+    codec, obs_d = _toy_hierarchy(lanes, z_dims=(6, 4, 3))
+    rng = np.random.default_rng(20)
+    s = jnp.asarray(rng.integers(0, 2, (lanes, obs_d)), jnp.int32)
+    st0 = _fresh(lanes, cap=512, chunks=64)
+    st1 = codec.push(st0, s)
+    assert int(jnp.sum(st1.underflows)) == 0
+    assert int(jnp.sum(st1.overflows)) == 0
+    st2, out = codec.pop(st1)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(s))
+    np.testing.assert_array_equal(np.asarray(st2.head),
+                                  np.asarray(st0.head))
+    np.testing.assert_array_equal(np.asarray(st2.ptr), np.asarray(st0.ptr))
+
+
+def _instrumented_push(bitswap: codecs.BitSwap, stack, s):
+    """Replay ``BitSwap.push`` step by step, recording the stack content
+    after every pop/push. Returns (final stack, content trace in bits,
+    per-posterior pop costs in bits)."""
+    trace = [float(ans.stack_content_bits(stack))]
+    pop_costs = []
+    ctx = s
+    for posterior_fn, likelihood_fn in bitswap.layers:
+        stack, z = posterior_fn(ctx).pop(stack)
+        trace.append(float(ans.stack_content_bits(stack)))
+        pop_costs.append(trace[-2] - trace[-1])
+        stack = likelihood_fn(z).push(stack, ctx)
+        trace.append(float(ans.stack_content_bits(stack)))
+        ctx = z
+    stack = bitswap.prior.push(stack, ctx)
+    trace.append(float(ans.stack_content_bits(stack)))
+    return stack, trace, pop_costs
+
+
+def _naive_push(bitswap: codecs.BitSwap, stack, s):
+    """The NON-interleaved schedule: pop every posterior first, then do
+    all the pushes - transient demand is the sum over layers."""
+    trace = [float(ans.stack_content_bits(stack))]
+    zs, ctx = [], s
+    for posterior_fn, _ in bitswap.layers:
+        stack, z = posterior_fn(ctx).pop(stack)
+        trace.append(float(ans.stack_content_bits(stack)))
+        zs.append(z)
+        ctx = z
+    ctx = s
+    for (_, likelihood_fn), z in zip(bitswap.layers, zs):
+        stack = likelihood_fn(z).push(stack, ctx)
+        ctx = z
+    stack = bitswap.prior.push(stack, zs[-1])
+    trace.append(float(ans.stack_content_bits(stack)))
+    return stack, trace
+
+
+def test_bitswap_clean_bit_demand_bounded_by_one_layer():
+    """The Bit-Swap advantage, measured: the transient clean-bit demand
+    of the interleaved schedule is bounded by (about) ONE layer's
+    posterior, while the naive all-posteriors-first schedule needs the
+    sum over layers (Kingma, Abbeel & Ho, 2019)."""
+    lanes = 4
+    # Wide observation layer so each likelihood push re-banks bits
+    # before the next posterior pop - the regime Bit-Swap exploits.
+    codec, obs_d = _toy_hierarchy(lanes, z_dims=(6, 4, 3), obs_d=32)
+    rng = np.random.default_rng(21)
+    s = jnp.asarray(rng.integers(0, 2, (lanes, obs_d)), jnp.int32)
+    st0 = _fresh(lanes, cap=2048, chunks=96)
+
+    _, trace_swap, pop_costs = _instrumented_push(codec, st0, s)
+    _, trace_naive = _naive_push(codec, st0, s)
+
+    start = trace_swap[0]
+    demand_swap = start - min(trace_swap)
+    demand_naive = trace_naive[0] - min(trace_naive)
+    one_layer = max(pop_costs)
+
+    # Interleaving: bounded by one layer's posterior (+ slack for the
+    # first likelihood push not fully covering the second pop).
+    assert demand_swap <= one_layer + 32.0, \
+        (demand_swap, one_layer, pop_costs)
+    # Naive: pays every posterior before any bits come back.
+    naive_pops = [trace_naive[i] - trace_naive[i + 1]
+                  for i in range(len(codec.layers))]
+    assert demand_naive >= sum(naive_pops) - 1.0
+    # And the advantage is strict with >= 3 layers.
+    assert demand_swap < demand_naive - one_layer / 2.0
 
 
 def test_bitswap_single_layer_equals_bbans(small_cfg, small_params):
