@@ -1,6 +1,12 @@
 """ANS coder throughput (symbols/s) - core jnp path and the Pallas
 kernel path (interpret mode on CPU: correctness-representative, not
-perf-representative; the table reports both with that caveat)."""
+perf-representative; the table reports both with that caveat).
+
+Two parts: the static-table categorical coder (the original rows) and
+the *dynamic-leaf* Gaussian path - per-position ``DiscretizedGaussian``
+interpreted one symbol at a time vs the codec compiler's fused
+multi-step kernels (``push_many`` + ``pop_many_grid``), with MB/s of
+produced wire and the compiled/interpreted speedup."""
 
 from __future__ import annotations
 
@@ -9,8 +15,45 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
+from repro import codecs
 from repro.core import ans
 from repro.kernels.ans import ops as ans_ops
+
+
+def _dynamic_gauss_rows(lanes: int, steps: int, seed: int):
+    """The dynamic-leaf path: a ``Repeat`` of per-position Gaussians."""
+    rng = np.random.default_rng(seed + 1)
+    mu = jnp.asarray(rng.normal(0, 1, (lanes, steps)), jnp.float32)
+    sigma = jnp.asarray(rng.uniform(0.1, 1.5, (lanes, steps)), jnp.float32)
+    bits = 10
+    rep = codecs.Repeat(
+        lambda d: codecs.DiscretizedGaussian(mu[:, d], sigma[:, d], bits),
+        steps)
+    # donate=False: the same input stack is timed repeatedly here.
+    prog = codecs.compile(rep, donate=False)
+    x = jnp.asarray(rng.integers(0, 1 << bits, (lanes, steps)), jnp.int32)
+    stack = ans.make_stack(lanes, steps + 8, key=jax.random.PRNGKey(2))
+    stack = ans.seed_stack(stack, jax.random.PRNGKey(3), 4)
+
+    full = prog.push(stack, x)              # warm the compiled program
+    prog.pop(full)
+    us_pi, ref = common.timer(lambda: rep.push(stack, x))
+    us_pc, out = common.timer(lambda: prog.push(stack, x))
+    assert bool(jnp.array_equal(out.head, ref.head)), "push parity"
+    wire_mb = float(jnp.sum(out.ptr - stack.ptr)) * 2 / 1e6
+    us_di, _ = common.timer(lambda: rep.pop(full))
+    us_dc, _ = common.timer(lambda: prog.pop(full))
+
+    n = lanes * steps
+    return [
+        {"path": "gauss-interpreted", "us": us_pi,
+         "msym_per_s": n / us_pi, "mb_per_s": wire_mb / (us_pi / 1e6),
+         "pop_us": us_di, "pop_msym_per_s": n / us_di},
+        {"path": "gauss-compiled", "us": us_pc,
+         "msym_per_s": n / us_pc, "mb_per_s": wire_mb / (us_pc / 1e6),
+         "pop_us": us_dc, "pop_msym_per_s": n / us_dc,
+         "speedup_push": us_pi / us_pc, "speedup_pop": us_di / us_dc},
+    ]
 
 
 def run(lanes: int = 256, steps: int = 256, seed: int = 0):
@@ -39,7 +82,8 @@ def run(lanes: int = 256, steps: int = 256, seed: int = 0):
     return [{"path": "core-jnp", "us": us_core,
              "msym_per_s": n / us_core},
             {"path": "pallas-interpret", "us": us_kernel,
-             "msym_per_s": n / us_kernel}]
+             "msym_per_s": n / us_kernel}] \
+        + _dynamic_gauss_rows(lanes, steps, seed)
 
 
 def main():

@@ -1,0 +1,99 @@
+"""Compiled-vs-interpreted end-to-end codec latency (the compiler's
+acceptance bench).
+
+Two workloads, both through the one-call container so the timings are
+what a service actually pays:
+
+  * ``vae``  - the table2 MNIST VAE (BBANS over Gaussian posterior +
+    Bernoulli pixels), chained over ``n_chain`` datapoints.
+  * ``hvae`` - the 2-level Bit-Swap ResNet-VAE on HxW images (all-
+    dynamic Gaussian grids - the paper path the compiler targets).
+
+For each, the interpreted combinator tree and its ``codecs.compile``d
+program encode and decode the same data; blobs are asserted
+byte-identical, and the table reports wall time, MB/s of wire, and the
+compiled/interpreted speedups. The ISSUE-4 acceptance bar is >= 3x on
+the dynamic-leaf (Gaussian) paths at quick settings.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro import codecs
+from repro.models import hvae, vae as vae_lib
+
+
+def _roundtrip_rows(name: str, interp, prog, data, lanes: int,
+                    kwargs: dict):
+    """Time (encode, decode) x (interpreted, compiled); assert parity."""
+    enc_i = lambda: codecs.compress(interp, data, lanes=lanes, **kwargs)
+    enc_c = lambda: codecs.compress(prog, data, lanes=lanes, **kwargs)
+    blob = enc_c()   # warm the compiled program (trace + compile once)
+    assert blob == enc_i(), f"{name}: compiled wire differs"
+    us_enc_i, _ = common.timer(enc_i)
+    us_enc_c, _ = common.timer(enc_c)
+
+    dec_i = lambda: codecs.decompress(interp, blob)
+    dec_c = lambda: codecs.decompress(prog, blob)
+    out = dec_c()    # warm decode
+    assert bool(jnp.array_equal(out, data)), f"{name}: decode mismatch"
+    us_dec_i, _ = common.timer(dec_i)
+    us_dec_c, _ = common.timer(dec_c)
+
+    mb = len(blob) / 1e6
+    rows = []
+    for path, ue, ud in (("interpreted", us_enc_i, us_dec_i),
+                         ("compiled", us_enc_c, us_dec_c)):
+        rows.append({
+            "workload": name, "path": path,
+            "encode_s": ue / 1e6, "decode_s": ud / 1e6,
+            "enc_mb_per_s": mb / (ue / 1e6),
+            "dec_mb_per_s": mb / (ud / 1e6),
+        })
+    rows[-1]["speedup_encode"] = us_enc_i / us_enc_c
+    rows[-1]["speedup_decode"] = us_dec_i / us_dec_c
+    return rows
+
+
+def run(lanes: int = 4, n_chain: int = 2, hw: int = 8, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    rows = []
+
+    # table2 VAE workload (untrained params: latency only, rate is not
+    # the point here; coding is bit-identical either way).
+    cfg = vae_lib.paper_config("bernoulli")
+    params = vae_lib.init(jax.random.PRNGKey(seed), cfg)
+    data = jnp.asarray(
+        rng.integers(0, 2, (n_chain, lanes, cfg.input_dim)), jnp.int32)
+    chained = codecs.Chained(vae_lib.make_bb_codec(params, cfg), n_chain)
+    prog = codecs.compile(chained)
+    rows += _roundtrip_rows(
+        "vae", chained, prog, data, lanes,
+        dict(seed=seed, init_chunks=64, capacity=4096))
+
+    # HVAE-L2 Bit-Swap workload: every layer a dynamic Gaussian grid.
+    hcfg = hvae.HVAEConfig(levels=2, ch=8, z_ch=2, n_res=1)
+    hparams = hvae.init(jax.random.PRNGKey(seed + 1), hcfg)
+    imgs = jnp.asarray(
+        rng.integers(0, 2, (n_chain, lanes, hw, hw)), jnp.int32)
+    hcodec = codecs.Chained(
+        hvae.make_bitswap_codec(hparams, hcfg, (hw, hw)), n_chain)
+    hprog = codecs.compile(hcodec)
+    rows += _roundtrip_rows(
+        "hvae-l2", hcodec, hprog, imgs, lanes,
+        dict(seed=seed, init_chunks=64, capacity=4096))
+    return rows
+
+
+def main():
+    for r in run():
+        print(",".join(f"{k}={v:.4f}" if isinstance(v, float) else
+                       f"{k}={v}" for k, v in r.items()))
+
+
+if __name__ == "__main__":
+    main()

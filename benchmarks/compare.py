@@ -1,0 +1,130 @@
+"""Throughput-regression differ: fresh ``BENCH_<name>.json`` files vs
+the committed ``benchmarks/baselines/`` snapshot.
+
+Rows are matched by their non-numeric identity fields (``bench``,
+``path``, ``workload``, ...); numeric *throughput* fields (``mb_per_s``
+/ ``msym_per_s`` suffixes, ``speedup_*``) regress when the fresh value
+drops more than ``--tolerance`` (default 0.20 = the ISSUE-4 20% bar)
+below baseline. Exit status is nonzero on any regression, so CI can
+gate on it; CI passes a looser tolerance because hosted-runner hardware
+varies run to run (see .github/workflows/ci.yml).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.compare --json-dir .
+    PYTHONPATH=src python -m benchmarks.compare --update   # re-baseline
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import shutil
+import sys
+from typing import Dict, Tuple
+
+BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "baselines")
+
+#: numeric row fields where higher is better and a drop is a regression.
+_THROUGHPUT_SUFFIXES = ("mb_per_s", "msym_per_s")
+_THROUGHPUT_PREFIXES = ("speedup",)
+
+
+def _is_throughput_key(key: str) -> bool:
+    return key.endswith(_THROUGHPUT_SUFFIXES) or \
+        key.startswith(_THROUGHPUT_PREFIXES)
+
+
+def _row_key(row: dict) -> Tuple:
+    """Identity of a row = its non-numeric fields, sorted."""
+    return tuple(sorted((k, v) for k, v in row.items()
+                        if not isinstance(v, (int, float))
+                        or isinstance(v, bool)))
+
+
+def _index(payload: dict) -> Dict[Tuple, dict]:
+    return {_row_key(r): r for r in payload.get("rows", [])
+            if isinstance(r, dict)}
+
+
+def compare_file(fresh_path: str, base_path: str,
+                 tolerance: float) -> list:
+    """Return a list of regression strings (empty = clean)."""
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    with open(base_path) as f:
+        base = json.load(f)
+    if fresh.get("failed") or base.get("failed"):
+        return [f"{os.path.basename(fresh_path)}: bench marked failed"]
+    problems = []
+    fresh_rows = _index(fresh)
+    for key, brow in _index(base).items():
+        frow = fresh_rows.get(key)
+        if frow is None:
+            problems.append(f"row {dict(key)} missing from fresh run")
+            continue
+        for field, bval in brow.items():
+            if not _is_throughput_key(field):
+                continue
+            if not isinstance(bval, (int, float)) or bval <= 0:
+                continue
+            fval = frow.get(field)
+            if not isinstance(fval, (int, float)):
+                continue
+            if fval < bval * (1.0 - tolerance):
+                problems.append(
+                    f"{dict(key)} {field}: {fval:.4g} < baseline "
+                    f"{bval:.4g} (-{(1 - fval / bval) * 100:.1f}%, "
+                    f"tolerance {tolerance * 100:.0f}%)")
+    return problems
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json-dir", default=".",
+                    help="directory holding fresh BENCH_<name>.json")
+    ap.add_argument("--tolerance", type=float, default=0.20,
+                    help="allowed fractional throughput drop (0.20=20%%)")
+    ap.add_argument("--update", action="store_true",
+                    help="copy fresh BENCH files into baselines/ "
+                         "instead of comparing")
+    args = ap.parse_args()
+
+    fresh_files = sorted(glob.glob(
+        os.path.join(args.json_dir, "BENCH_*.json")))
+    if args.update:
+        os.makedirs(BASELINE_DIR, exist_ok=True)
+        for path in fresh_files:
+            shutil.copy(path, BASELINE_DIR)
+            print(f"baselined {os.path.basename(path)}")
+        return
+
+    failures = 0
+    compared = 0
+    for path in fresh_files:
+        base = os.path.join(BASELINE_DIR, os.path.basename(path))
+        if not os.path.exists(base):
+            print(f"{os.path.basename(path)}: no baseline, skipped")
+            continue
+        compared += 1
+        problems = compare_file(path, base, args.tolerance)
+        if problems:
+            failures += 1
+            print(f"{os.path.basename(path)}: REGRESSED")
+            for p in problems:
+                print(f"  {p}")
+        else:
+            print(f"{os.path.basename(path)}: ok")
+    if not compared:
+        # A gate that compared nothing must not pass: baseline names
+        # drifting out of sync with the bench output would otherwise
+        # silently disable the regression check in CI.
+        print("no BENCH files with baselines found", file=sys.stderr)
+        sys.exit(2)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

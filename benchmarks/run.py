@@ -35,9 +35,11 @@ def main() -> None:
                     help="directory for the BENCH_<name>.json files")
     args = ap.parse_args()
 
-    from benchmarks import (ablation_cleanbits, ans_throughput, fig3_chain,
-                            hvae_rate, latent_lm_gain, lm_compression,
-                            stream_throughput, table2_rates, table3_predict)
+    from benchmarks import (ablation_cleanbits, ans_throughput,
+                            codec_compile, fig3_chain, hvae_rate,
+                            latent_lm_gain, lm_compression,
+                            stream_throughput, table2_rates,
+                            table3_predict)
 
     q = args.quick
     benches = {
@@ -51,6 +53,9 @@ def main() -> None:
             train_steps=300 if q else 1000, n_images=64 if q else 128),
         "ans_throughput": lambda: ans_throughput.run(
             lanes=128 if q else 256, steps=64 if q else 256),
+        "codec_compile": lambda: codec_compile.run(
+            lanes=4 if q else 8, n_chain=2 if q else 4,
+            hw=8 if q else 12),
         "lm_compression": lambda: lm_compression.run(
             train_steps=120 if q else 250),
         "latent_lm_gain": lambda: latent_lm_gain.run(

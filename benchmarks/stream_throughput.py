@@ -63,6 +63,10 @@ def _categorical_rows(lanes: int, n_symbols: int, block: int, seed: int):
         codec, syms, lanes=lanes, block_symbols=block, seed=None,
         use_kernel=True))
     assert b_py == b_k, "kernel fast path must be byte-identical"
+    b_c = measure("stream-compiled", lambda: stream.encode_stream(
+        codec, syms, lanes=lanes, block_symbols=block, seed=None,
+        compile=True))
+    assert b_c == b_k, "compiled path must be byte-identical"
 
     out = stream.decode_stream(codec, b_k)
     assert bool(jnp.array_equal(out, syms)), "stream decode mismatch"
@@ -90,6 +94,16 @@ def _vae_rate_rows(n_images: int, lanes: int, train_steps: int,
     one_s = time.perf_counter() - t0
     one_rate = info["net_bits"] / data.size
 
+    # Compiled one-shot: byte-identical wire, one fused jit program
+    # (timed after a warmup encode so trace/compile cost is excluded).
+    prog = codecs.compile(codecs.Chained(codec, n_chain))
+    blob_c = codecs.compress(prog, data, lanes=lanes, seed=9,
+                             capacity=cap)
+    assert blob_c == blob, "compiled one-shot must be byte-identical"
+    t0 = time.perf_counter()
+    codecs.compress(prog, data, lanes=lanes, seed=9, capacity=cap)
+    compiled_s = time.perf_counter() - t0
+
     block = max(1, n_chain // 4)   # >= 3 block boundaries
     t0 = time.perf_counter()
     enc = stream.StreamEncoder(codec, lanes=lanes, block_symbols=block,
@@ -97,6 +111,11 @@ def _vae_rate_rows(n_images: int, lanes: int, train_steps: int,
     wire = enc.write(data) + enc.flush()
     stream_s = time.perf_counter() - t0
     stream_rate = enc.net_bits / data.size
+
+    enc_c = stream.StreamEncoder(codec, lanes=lanes, block_symbols=block,
+                                 seed=9, init_chunks=32, compile=True)
+    wire_c = enc_c.write(data) + enc_c.flush()
+    assert wire_c == wire, "compiled stream must be byte-identical"
 
     out = stream.decode_stream(codec, wire)
     assert bool(jnp.array_equal(out, data)), "streamed decode mismatch"
@@ -109,6 +128,8 @@ def _vae_rate_rows(n_images: int, lanes: int, train_steps: int,
         "stream_wire_bpd": len(wire) * 8 / data.size,
         "oneshot_wire_bpd": len(blob) * 8 / data.size,
         "oneshot_s": one_s, "stream_s": stream_s,
+        "compiled_oneshot_s": compiled_s,
+        "speedup_compiled": one_s / compiled_s,
         "images": n_chain * lanes,
     }]
 

@@ -27,6 +27,7 @@ from repro.codecs.combinators import (BBANS, BitSwap, Chained, Repeat,
                                       Serial, Shaped, TreeCodec)
 from repro.codecs.container import (blob_info, compress, decompress,
                                     fresh_stack)
+from repro.codecs.compile import CompiledCodec, compile
 
 __all__ = [
     "Codec", "FnCodec",
@@ -35,6 +36,8 @@ __all__ = [
     "DiscretizedGaussian", "DiscretizedLogistic", "PointwiseCDF", "Uniform",
     # combinators
     "BBANS", "BitSwap", "Chained", "Repeat", "Serial", "Shaped", "TreeCodec",
+    # compiler
+    "compile", "CompiledCodec",
     # container
     "compress", "decompress", "blob_info", "fresh_stack",
 ]

@@ -14,8 +14,7 @@ the composite pop runs the component pops in exactly the reverse order
                     t's compressed stack is datapoint t+1's extra
                     information.
   * ``BBANS``     - the paper's Table 1 as a combinator over (prior,
-                    likelihood, posterior); subsumes the legacy six-hook
-                    ``core.bbans.BBANSCodec``.
+                    likelihood, posterior).
   * ``BitSwap``   - hierarchical multi-layer latents with interleaved
                     pop/push (Kingma et al., 2019), so initial clean
                     bits are needed for one layer only.
@@ -184,9 +183,18 @@ class Chained(Codec):
 
     Each datapoint's compressed stack is the next one's extra
     information; decode pops in reverse and returns natural order.
-    ``scan=False`` uses Python loops (required for codecs that drive
-    jit-compiled network steps from Python - the lm_codec determinism
-    contract).
+
+    The default is the Python chain loop (``scan=False``): coding is
+    only lossless when encode and decode compute bit-identical
+    fixed-point CDFs, and a ``lax.scan`` compiles the chain body into
+    one fused program per direction, where XLA may produce float32
+    bits that differ between the two (and from the eager path) by an
+    ulp - enough to flip a ``floor`` boundary roughly once per 10^4
+    symbols (docs/PERF.md). ``scan=True`` remains available for
+    integer-only or otherwise context-stable inners; it is also what
+    codecs driving jit-compiled network steps from Python must NOT use
+    (the lm_codec determinism contract). For a fast chain over a
+    model codec, use ``codecs.compile(Chained(...))``.
 
     Example::
 
@@ -196,7 +204,7 @@ class Chained(Codec):
 
     inner: Codec
     n: int
-    scan: bool = True
+    scan: bool = False
 
     def push(self, stack: ans.ANSStack, data: Any) -> ans.ANSStack:
         inner = self.inner

@@ -1,0 +1,423 @@
+"""Codec compiler: lower ``Codec`` trees to fused kernel-backed programs.
+
+The interpreted combinators (``Repeat``/``Serial``/``BBANS``/...) run
+one ``ans.push``/``ans.pop`` per Python-level dispatch: every symbol
+pays a full-stack scatter and a host dispatch. This module removes
+that cost by *lowering* the tree (``_lower``): ``Repeat`` nodes are
+probed - ``codec_fn(d)`` is called for every position - and when the
+per-position leaves are a recognized family with stackable parameters
+they collapse into one vectorized node:
+
+  * ``Uniform`` / ``DiscretizedGaussian`` / ``DiscretizedLogistic``
+    -> ``_GridRepeat``: encode gathers all [n, lanes] (start, freq)
+    pairs in one shot and makes a single multi-step
+    ``kernels.ans.ops.push_many`` call; decode is one fused
+    bucketize+pop kernel call (``ops.pop_many_grid`` - the CDF
+    bisection of ``kernels/bucketize`` inside the ANS renorm chain).
+  * ``Bernoulli`` / ``Categorical`` / ``BetaBinomial`` ->
+    ``_TableRepeat``: per-step cumulative-starts tables, one
+    ``push_many`` / ``pop_many_dyn`` (dynamic-table kernel) call.
+
+Unrecognized or heterogeneous ``Repeat`` bodies (and plain leaves,
+``FnCodec``s, ...) fall back to their interpreted form - still
+correct, just not fused. Function-valued children (``BBANS``
+likelihood/posterior, ``BitSwap`` layers) are lowered lazily at call
+time, so closures over network outputs lower too.
+
+**The determinism contract** (why there is no single whole-tree jit):
+coding is only lossless if encoder and decoder compute bit-identical
+fixed-point CDFs, and float32 results in XLA depend on the fusion
+context - the same ``exp``/``ndtr`` chain fused into two different
+programs can differ by one ulp, which flips a ``floor`` one time in
+~10^4 and corrupts the stream. The compiler therefore keeps every
+model-float evaluation (networks, CDF starts, tables) in *canonical
+eager form* - bit-identical to the interpreted path by construction -
+and fuses the **integer** coder loops into a handful of jitted
+programs with donated ``ANSStack`` buffers (integer ops are exact in
+any context). The Gaussian/logistic CDF chain is additionally written
+in its XLA-canonical form (concrete edge tables, reciprocal-multiply
+standardization - see ``core.discretize``), which makes the fused
+in-kernel CDF inversion bit-stable too; ``tests/test_compile.py``
+enforces all of this at scale. Wire bytes are **identical** to the
+interpreted path.
+
+Example::
+
+    prog = codecs.compile(codecs.Chained(make_bb_codec(p, cfg), n))
+    blob = codecs.compress(prog, data, lanes=16, seed=0)
+    assert blob == codecs.compress(interpreted, data, lanes=16, seed=0)
+
+Import note: ``codecs.compile`` (the function re-exported by
+``repro.codecs``) shadows this module's dotted path; use
+``from repro.codecs.compile import ...`` for the internals.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Type
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ans, discretize
+from repro.core.codec import Codec
+from repro.core.distributions import (Bernoulli, BetaBinomial, Categorical,
+                                      _stable_softmax,
+                                      beta_binomial_log_pmf)
+from repro.codecs import combinators as C
+from repro.codecs import leaves as L
+from repro.kernels.ans import ops as ans_ops
+
+
+# ---------------------------------------------------------------------------
+# jitted integer coder programs (shared across all compiled codecs)
+# ---------------------------------------------------------------------------
+# The ANSStack argument is donated in the True variants so encode and
+# decode update the coder state in place; drivers never reuse an input
+# stack, tests that do should compile with donate=False.
+
+def _coder_jits(fn, static):
+    return {
+        True: jax.jit(fn, static_argnames=static, donate_argnums=(0,)),
+        False: jax.jit(fn, static_argnames=static),
+    }
+
+
+_PUSH_MANY = _coder_jits(ans_ops.push_many, ("precision", "interpret"))
+_POP_DYN = _coder_jits(ans_ops.pop_many_dyn, ("precision", "interpret"))
+_POP_GRID = _coder_jits(
+    ans_ops.pop_many_grid,
+    ("kind", "steps", "lat_bits", "precision", "interpret"))
+
+
+# ---------------------------------------------------------------------------
+# vectorized Repeat nodes (the fused leaves of a lowered tree)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _GridRepeat(Codec):
+    """A ``Repeat`` of max-entropy-grid leaves, fused.
+
+    ``kind``: "uniform" (mu/sigma unused), "gaussian" (mu, sigma) or
+    "logistic" (mu carries location, sigma the scale); parameters are
+    [n, lanes] in natural position order. Bit-exact with the
+    per-position ``Repeat``: push flips to the LIFO order (positions
+    n-1..0), pop streams positions in natural order. Starts/freqs are
+    evaluated eagerly (canonical bits); the multi-step coding runs in
+    one jitted kernel program per direction.
+    """
+
+    kind: str
+    mu: Optional[jnp.ndarray]
+    sigma: Optional[jnp.ndarray]
+    n: int
+    bits: int
+    precision: int
+    out_dtype: Any = jnp.int32
+    donate: bool = True
+
+    def _starts_fn(self):
+        if self.kind == "gaussian":
+            return discretize.posterior_starts_fn(
+                self.mu, self.sigma, self.bits, self.precision)
+        if self.kind == "logistic":
+            return L.logistic_starts_fn(self.mu, self.sigma, self.bits,
+                                        self.precision)
+        raise AssertionError(self.kind)
+
+    def push(self, stack: ans.ANSStack, x: jnp.ndarray) -> ans.ANSStack:
+        idx = x.astype(jnp.int32).T                       # [n, lanes]
+        if self.kind == "uniform":
+            shift = self.precision - self.bits
+            start = idx.astype(jnp.uint32) << shift
+            freq = jnp.full_like(start, jnp.uint32(1 << shift))
+        else:
+            f = self._starts_fn()
+            start = f(idx)
+            freq = f(idx + 1) - start
+        return _PUSH_MANY[self.donate](stack, start[::-1], freq[::-1],
+                                       precision=self.precision)
+
+    def pop(self, stack: ans.ANSStack):
+        mu = self.mu if self.mu is not None else jnp.zeros(())
+        sigma = self.sigma if self.sigma is not None else jnp.zeros(())
+        stack, syms = _POP_GRID[self.donate](
+            stack, mu=mu, sigma=sigma, kind=self.kind, steps=self.n,
+            lat_bits=self.bits, precision=self.precision)
+        return stack, syms.T.astype(self.out_dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class _TableRepeat(Codec):
+    """A ``Repeat`` of table-coded leaves, fused.
+
+    ``tables``: uint32[n, lanes, A+1] per-position cumulative starts in
+    natural order (built eagerly at lowering time - canonical bits);
+    one dynamic multi-step kernel call each way.
+    """
+
+    tables: jnp.ndarray
+    precision: int
+    out_dtype: Any = jnp.int32
+    donate: bool = True
+
+    def push(self, stack: ans.ANSStack, x: jnp.ndarray) -> ans.ANSStack:
+        sym = x.astype(jnp.int32).T[..., None]            # [n, lanes, 1]
+        start = jnp.take_along_axis(self.tables, sym, axis=2)[..., 0]
+        nxt = jnp.take_along_axis(self.tables, sym + 1, axis=2)[..., 0]
+        return _PUSH_MANY[self.donate](
+            stack, start[::-1].astype(jnp.uint32),
+            (nxt - start)[::-1].astype(jnp.uint32),
+            precision=self.precision)
+
+    def pop(self, stack: ans.ANSStack):
+        stack, syms = _POP_DYN[self.donate](stack, self.tables,
+                                            precision=self.precision)
+        return stack, syms.T.astype(self.out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# lowering
+# ---------------------------------------------------------------------------
+
+def _same(vals) -> bool:
+    return all(v == vals[0] for v in vals[1:])
+
+
+#: leaf family -> (array param fields, static fields). Order matters:
+#: most-derived classes first (isinstance is used, so e.g. the HVAE's
+#: KernelDiscretizedGaussian lowers as a Gaussian).
+_FAMILIES = (
+    (L.Uniform, (), ("bits", "precision")),
+    (L.DiscretizedGaussian, ("mu", "sigma"), ("bits", "precision")),
+    (L.DiscretizedLogistic, ("mu", "scale"), ("bits", "precision")),
+    (Bernoulli, ("logits",), ("precision",)),
+    (BetaBinomial, ("alpha", "beta"), ("n", "precision")),
+    (Categorical, ("logits",), ("precision",)),
+)
+
+
+def _statics(leaf, names) -> tuple:
+    return tuple(getattr(leaf, s) for s in names)
+
+
+def _probe_params(rep: C.Repeat, leaf0, fields, statics):
+    """Stack the per-position leaf parameters to [n, lanes, ...].
+
+    Fast path: call ``codec_fn`` ONCE with ``arange(n)`` - elementwise
+    closures (everything in this repo: ``mu[:, d]``-style slicing of a
+    [lanes, n, ...] parent) then gather the whole parameter grid in one
+    op, which is an exact copy in any compilation context. The result
+    is spot-validated against eagerly probed positions {0, n//2, n-1};
+    any surprise (shape, type, static fields, values) falls back to
+    probing all ``n`` positions one by one - always correct, just O(n)
+    dispatches.
+    """
+    n = rep.n
+    vec = None
+    try:
+        vec = rep.codec_fn(jnp.arange(n, dtype=jnp.int32))
+    except Exception:
+        vec = None
+    if vec is not None and type(vec) is type(leaf0) \
+            and _statics(vec, statics) == _statics(leaf0, statics):
+        out = []
+        for name in fields:
+            s0 = jnp.shape(getattr(leaf0, name))
+            vv = getattr(vec, name)
+            if jnp.shape(vv) != s0[:1] + (n,) + s0[1:]:
+                out = None
+                break
+            out.append(jnp.moveaxis(jnp.asarray(vv), 1, 0))
+        if out is not None:
+            for d in sorted({0, n // 2, n - 1}):
+                lf = rep.codec_fn(d)
+                if type(lf) is not type(leaf0) or \
+                        _statics(lf, statics) != _statics(leaf0, statics):
+                    out = None
+                    break
+                if not all(bool(jnp.array_equal(arr[d], getattr(lf, nm)))
+                           for nm, arr in zip(fields, out)):
+                    out = None
+                    break
+            if out is not None:
+                return out
+    # Slow path: probe every position (heterogeneity checks included).
+    leaves = [rep.codec_fn(d) for d in range(n)]
+    if not all(type(lf) is type(leaf0) for lf in leaves):
+        return None
+    if not _same([_statics(lf, statics) for lf in leaves]):
+        return None
+    return [jnp.stack([jnp.asarray(getattr(lf, nm)) for lf in leaves])
+            for nm in fields]
+
+
+def _lower_repeat(rep: C.Repeat, donate: bool) -> Optional[Codec]:
+    """Probe a ``Repeat``'s positions; fuse when the leaf family allows.
+
+    Returns ``None`` when the body is unrecognized (heterogeneous,
+    closure-opaque, degenerate) - the caller falls back to the
+    interpreted ``Repeat``, which is always correct.
+    """
+    if rep.n <= 0:
+        return None
+    try:
+        leaf0 = rep.codec_fn(0)
+    except Exception:
+        return None
+    family = next(((cls, fields, statics)
+                   for cls, fields, statics in _FAMILIES
+                   if isinstance(leaf0, cls)), None)
+    if family is None:
+        return None
+    cls, fields, statics = family
+    try:
+        params = _probe_params(rep, leaf0, fields, statics)
+    except Exception:
+        params = None
+    if params is None:
+        return None
+
+    if cls is L.Uniform:
+        return _GridRepeat("uniform", None, None, rep.n, leaf0.bits,
+                           leaf0.precision, rep.out_dtype, donate)
+    if cls is L.DiscretizedGaussian:
+        mu, sigma = (p.astype(jnp.float32) for p in params)
+        return _GridRepeat("gaussian", mu, sigma, rep.n, leaf0.bits,
+                           leaf0.precision, rep.out_dtype, donate)
+    if cls is L.DiscretizedLogistic:
+        mu, scale = (p.astype(jnp.float32) for p in params)
+        return _GridRepeat("logistic", mu, scale, rep.n, leaf0.bits,
+                           leaf0.precision, rep.out_dtype, donate)
+
+    # Table families: the fixed-point tables are built in ONE vectorized
+    # evaluation - the same elementwise arithmetic as the per-position
+    # leaf (`_freq1`/`_table`) broadcast over the position axis, so the
+    # bits are identical (eager elementwise ops are shape-independent).
+    if cls is Bernoulli:
+        total = 1 << leaf0.precision
+        p = jax.nn.sigmoid(params[0].astype(jnp.float32))  # [n, lanes]
+        f1 = jnp.round(p * (total - 2)).astype(jnp.uint32) + 1
+        tables = jnp.stack(
+            [jnp.zeros_like(f1), jnp.uint32(total) - f1,
+             jnp.full_like(f1, jnp.uint32(total))], axis=-1)
+        return _TableRepeat(tables, leaf0.precision, rep.out_dtype,
+                            donate)
+    if cls is BetaBinomial:
+        alpha, beta = params
+        ks = jnp.arange(leaf0.n + 1, dtype=jnp.float32)
+        logp = beta_binomial_log_pmf(
+            ks[None, None, :], leaf0.n,
+            alpha[..., None].astype(jnp.float32),
+            beta[..., None].astype(jnp.float32))
+        tables = ans.probs_to_starts(_stable_softmax(logp),
+                                     leaf0.precision)
+        return _TableRepeat(tables, leaf0.precision, rep.out_dtype,
+                            donate)
+    if cls is Categorical:
+        tables = ans.probs_to_starts(
+            _stable_softmax(params[0].astype(jnp.float32)),
+            leaf0.precision)
+        return _TableRepeat(tables, leaf0.precision, rep.out_dtype,
+                            donate)
+    return None
+
+
+#: type -> (codec, recurse) -> lowered codec. Extension point for
+#: combinators defined outside this package (``stream.BlockChain``
+#: registers itself at import time).
+_LOWERINGS: Dict[Type, Callable[[Any, Callable], Codec]] = {}
+
+
+def register_lowering(cls: Type,
+                      fn: Callable[[Any, Callable], Codec]) -> None:
+    """Register a structural lowering for an external combinator class.
+
+    ``fn(codec, recurse)`` must return a bit-exact rewrite of ``codec``
+    (typically the same class over ``recurse``-lowered children).
+    """
+    _LOWERINGS[cls] = fn
+
+
+def _lower(codec: Codec, donate: bool = True) -> Codec:
+    """Structurally rewrite a codec tree into its fused form."""
+    rec = lambda c: _lower(c, donate)
+    fn = _LOWERINGS.get(type(codec))
+    if fn is not None:
+        return fn(codec, rec)
+    if isinstance(codec, C.Repeat):
+        return _lower_repeat(codec, donate) or codec
+    if isinstance(codec, C.Shaped):
+        return C.Shaped(rec(codec.inner), codec.shape)
+    if isinstance(codec, C.Serial):
+        return C.Serial([rec(c) for c in codec.codecs])
+    if isinstance(codec, C.TreeCodec):
+        leaves, treedef = jax.tree_util.tree_flatten(
+            codec.tree, is_leaf=lambda c: isinstance(c, Codec))
+        return C.TreeCodec(treedef.unflatten([rec(c) for c in leaves]))
+    if isinstance(codec, C.Chained):
+        # scan=False: a lax.scan would trace the float evaluations into
+        # one fused program, breaking the canonical-eager contract; the
+        # Python chain loop is per-datapoint (cheap), not per-symbol.
+        return C.Chained(rec(codec.inner), codec.n, scan=False)
+    if isinstance(codec, C.BBANS):
+        lik, post = codec.likelihood, codec.posterior
+        return C.BBANS(prior=rec(codec.prior),
+                       likelihood=lambda y: rec(lik(y)),
+                       posterior=lambda s: rec(post(s)))
+    if isinstance(codec, C.BitSwap):
+        layers = tuple(
+            (lambda ctx, _p=p: rec(_p(ctx)),
+             lambda z, _l=lk: rec(_l(z)))
+            for p, lk in codec.layers)
+        return C.BitSwap(prior=rec(codec.prior), layers=layers)
+    return codec
+
+
+# ---------------------------------------------------------------------------
+# the compiled program
+# ---------------------------------------------------------------------------
+
+class CompiledCodec(Codec):
+    """A codec lowered into fused kernel-backed execution.
+
+    Drop-in for the source codec anywhere a ``Codec`` is accepted
+    (container, stream, engine): same wire bytes, a handful of jitted
+    integer coder programs per direction instead of one host dispatch
+    per symbol. The ``ANSStack`` flowing through those programs is
+    donated by default, so coder state updates in place on backends
+    that support donation.
+
+    Note the donation contract: after ``prog.push(stack, x)`` the
+    *input* stack's buffers may be invalid - callers must use the
+    returned stack (every driver in this repo already does; tests that
+    deliberately reuse a stack pass ``donate=False``).
+    """
+
+    def __init__(self, codec: Codec, *, donate: bool = True):
+        self.source = codec
+        self.lowered = _lower(codec, donate)
+
+    def push(self, stack: ans.ANSStack, x: Any) -> ans.ANSStack:
+        return self.lowered.push(stack, x)
+
+    def pop(self, stack: ans.ANSStack):
+        return self.lowered.pop(stack)
+
+
+def compile(codec: Codec, *, donate: bool = True) -> CompiledCodec:
+    """Compile a codec tree into a fused kernel-backed program.
+
+    Returns a ``CompiledCodec`` that codes byte-identically to
+    ``codec`` (compiling an already-compiled codec is a no-op).
+
+    Example::
+
+        prog = codecs.compile(codecs.Repeat(
+            lambda d: codecs.Uniform(8), 64))
+        stack = prog.push(stack, x)        # ONE fused kernel call
+    """
+    if isinstance(codec, CompiledCodec):
+        return codec
+    return CompiledCodec(codec, donate=donate)

@@ -112,6 +112,11 @@ def compress(codec: Codec, data: Any, *, lanes: int,
     chunks = 0 if seed is None else init_chunks
     for attempt in range(max_retries):
         stack0 = fresh_stack(lanes, cap, seed, chunks)
+        # Content bits are read *before* the push (a compiled codec
+        # donates the input stack's buffers), and only when requested
+        # (it costs a device reduction + host sync).
+        bits_before = float(ans.stack_content_bits(stack0)) \
+            if with_info else 0.0
         stack = codec.push(stack0, data)
         over = int(jnp.sum(stack.overflows))
         under = int(jnp.sum(stack.underflows))
@@ -121,8 +126,8 @@ def compress(codec: Codec, data: Any, *, lanes: int,
                 return blob
             info = {
                 "capacity": cap, "init_chunks": chunks, "seed": seed,
-                "net_bits": float(ans.stack_content_bits(stack)
-                                  - ans.stack_content_bits(stack0)),
+                "net_bits": float(ans.stack_content_bits(stack))
+                - bits_before,
                 "retries": attempt,
                 **blob_info(blob),
             }

@@ -148,23 +148,73 @@ class DiscretizedGaussian(Codec):
                                         self.bits, self.precision)
 
 
-def DiscretizedLogistic(mu: jnp.ndarray, scale: jnp.ndarray, bits: int,
-                        precision: int = ans.DEFAULT_PRECISION
-                        ) -> PointwiseCDF:
+def _logistic_cdf(i: jnp.ndarray, mu: jnp.ndarray, scale: jnp.ndarray,
+                  bits: int) -> jnp.ndarray:
+    """sigmoid((z_i - mu)/scale) with exact 0/1 at i = 0 / K.
+
+    Broadcastable over leading axes (the codec compiler evaluates it on
+    whole [n, lanes] grids; the leaf per position)."""
+    k = 1 << bits
+    z = discretize.bucket_edge(i, bits)
+    # Reciprocal-multiply form: bit-stable across compilation contexts
+    # (see discretize._posterior_cdf).
+    c = jax.nn.sigmoid((z - mu) * (1.0 / scale))
+    c = jnp.where(i <= 0, 0.0, c)
+    c = jnp.where(i >= k, 1.0, c)
+    return c
+
+
+def logistic_starts_fn(mu: jnp.ndarray, scale: jnp.ndarray, bits: int,
+                       precision: int):
+    """Pointwise fixed-point starts F(i) of ``DiscretizedLogistic``.
+
+    Exactly the arithmetic of ``PointwiseCDF._starts`` over the logistic
+    CDF (same clip, same saturation, same floor), shared between the
+    per-position leaf and the vectorized codec-compiler path so the two
+    are bit-identical by construction.
+    """
+    k = 1 << bits
+    scale_fp = float((1 << precision) - k)
+    if scale_fp <= 0:
+        raise ValueError("need precision > bits")
+
+    def f(i):
+        c = jnp.clip(_logistic_cdf(i, mu, scale, bits), 0.0, 1.0)
+        c = jnp.where(i <= 0, 0.0, c)
+        c = jnp.where(i >= k, 1.0, c)
+        return jnp.floor(c * scale_fp).astype(jnp.uint32) \
+            + i.astype(jnp.uint32)
+
+    return f
+
+
+@dataclasses.dataclass(frozen=True)
+class DiscretizedLogistic(Codec):
     """Logistic(mu, scale) over the max-entropy N(0,1)-prior buckets.
+
+    A first-class dataclass leaf (the codec compiler reads ``mu`` and
+    ``scale`` to build fused multi-step decode kernels); push/pop
+    delegate to the identical ``PointwiseCDF`` the old factory built,
+    so wire bytes are unchanged.
 
     Example::
 
         leaf = DiscretizedLogistic(mu, scale, bits=8)
         stack, idx = leaf.pop(stack)           # bucket indices [lanes]
     """
-    k = 1 << bits
 
-    def cdf(i):
-        z = discretize.bucket_edge(i, bits)
-        c = jax.nn.sigmoid((z - mu) / scale)
-        c = jnp.where(i <= 0, 0.0, c)
-        c = jnp.where(i >= k, 1.0, c)
-        return c
+    mu: jnp.ndarray     # float[lanes]
+    scale: jnp.ndarray  # float[lanes]
+    bits: int
+    precision: int = ans.DEFAULT_PRECISION
 
-    return PointwiseCDF(cdf, bits, precision)
+    def _pointwise(self) -> PointwiseCDF:
+        mu, scale, bits = self.mu, self.scale, self.bits
+        return PointwiseCDF(lambda i: _logistic_cdf(i, mu, scale, bits),
+                            bits, self.precision)
+
+    def push(self, stack: ans.ANSStack, x: jnp.ndarray) -> ans.ANSStack:
+        return self._pointwise().push(stack, x)
+
+    def pop(self, stack: ans.ANSStack) -> Tuple[ans.ANSStack, jnp.ndarray]:
+        return self._pointwise().pop(stack)

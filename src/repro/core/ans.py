@@ -344,9 +344,16 @@ def cdf_to_starts(cdf: jnp.ndarray,
 
 def probs_to_starts(probs: jnp.ndarray,
                     precision: int = DEFAULT_PRECISION) -> jnp.ndarray:
-    """Like ``cdf_to_starts`` but from a probability vector float[..., A]."""
+    """Like ``cdf_to_starts`` but from a probability vector float[..., A].
+
+    The normalization is written as a reciprocal-multiply (not a
+    division with a divisor shared across the row): that is the
+    canonical form XLA's simplifier produces, so the fixed-point table
+    comes out bit-identical whether this runs eagerly, inside a jit, or
+    inside a fused compiled-codec program (docs/PERF.md).
+    """
     cdf = jnp.cumsum(probs, axis=-1)
-    cdf = cdf / cdf[..., -1:]
+    cdf = cdf * (1.0 / cdf[..., -1:])
     zero = jnp.zeros(cdf.shape[:-1] + (1,), cdf.dtype)
     cdf = jnp.concatenate([zero, cdf], axis=-1)
     # Guard against float drift: clamp into [0, 1] monotonically.

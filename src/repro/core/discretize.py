@@ -36,32 +36,70 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.scipy.special import ndtr, ndtri
 
 from repro.core import ans
 
 
+# ndtri is a long op composition whose float32 result bits can vary
+# with the surrounding XLA fusion context (jit vs eager, push program
+# vs pop program). Coding correctness requires the *identical* bits on
+# both sides of a roundtrip, so the grid geometry - a pure function of
+# the bucket index - is computed once, eagerly, per lat_bits, and every
+# path (core pointwise coders, codec compiler, Pallas kernels) gathers
+# from the same concrete table. Gathers are exact in any context.
+_EDGE_TABLES: dict = {}
+_CENTRE_TABLES: dict = {}
+
+
+def edge_table(lat_bits: int) -> jnp.ndarray:
+    """z[i] = Phi^-1(i/K) for i = 0..K as a concrete float32[K+1]."""
+    if lat_bits not in _EDGE_TABLES:
+        with jax.ensure_compile_time_eval():   # concrete even under jit
+            k = 1 << lat_bits
+            frac = jnp.arange(k + 1, dtype=jnp.float32) / k
+            z = ndtri(jnp.clip(frac, 1e-38, 1.0 - 1e-7))
+            _EDGE_TABLES[lat_bits] = jnp.asarray(np.asarray(z))
+    return _EDGE_TABLES[lat_bits]
+
+
+def centre_table(lat_bits: int) -> jnp.ndarray:
+    """c[i] = Phi^-1((i+0.5)/K) for i = 0..K-1, concrete float32[K]."""
+    if lat_bits not in _CENTRE_TABLES:
+        with jax.ensure_compile_time_eval():
+            k = 1 << lat_bits
+            frac = (jnp.arange(k, dtype=jnp.float32) + 0.5) / k
+            _CENTRE_TABLES[lat_bits] = jnp.asarray(np.asarray(ndtri(frac)))
+    return _CENTRE_TABLES[lat_bits]
+
+
 def bucket_edge(i: jnp.ndarray, lat_bits: int) -> jnp.ndarray:
-    """z_i = Phi^-1(i / K); exact -inf/+inf at the ends."""
+    """z_i = Phi^-1(i / K); ends are special-cased by callers via ndtr
+    saturation (see _posterior_cdf)."""
     k = 1 << lat_bits
-    frac = i.astype(jnp.float32) / k
-    return ndtri(jnp.clip(frac, 1e-38, 1.0 - 1e-7))  # interior only; ends
-    # are special-cased by callers via ndtr saturation (see _posterior_cdf).
+    return jnp.take(edge_table(lat_bits), jnp.clip(i, 0, k))
 
 
 def bucket_centre(i: jnp.ndarray, lat_bits: int) -> jnp.ndarray:
     """Representative latent value for bucket i (its prior median)."""
     k = 1 << lat_bits
-    frac = (i.astype(jnp.float32) + 0.5) / k
-    return ndtri(frac)
+    return jnp.take(centre_table(lat_bits), jnp.clip(i, 0, k - 1))
 
 
 def _posterior_cdf(i: jnp.ndarray, mu: jnp.ndarray, sigma: jnp.ndarray,
                    lat_bits: int) -> jnp.ndarray:
-    """Phi((z_i - mu) / sigma) with exact 0/1 at i = 0 / K."""
+    """Phi((z_i - mu) / sigma) with exact 0/1 at i = 0 / K.
+
+    The standardization is written ``(z - mu) * (1/sigma)`` on purpose:
+    it is the canonical form XLA's simplifier rewrites shared divisions
+    into, so eager, jitted, and kernel evaluations of this CDF produce
+    the same float32 bits in every compilation context (the coder's
+    roundtrip-exactness depends on that - see docs/PERF.md).
+    """
     k = 1 << lat_bits
     z = bucket_edge(i, lat_bits)
-    c = ndtr((z - mu) / sigma)
+    c = ndtr((z - mu) * (1.0 / sigma))
     c = jnp.where(i <= 0, 0.0, c)
     c = jnp.where(i >= k, 1.0, c)
     return c

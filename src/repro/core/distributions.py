@@ -21,6 +21,22 @@ from repro.core import ans
 from repro.core.codec import Codec
 
 
+def _stable_softmax(logits: jnp.ndarray) -> jnp.ndarray:
+    """Softmax over the last axis in the compilation-context-stable
+    reciprocal-multiply form.
+
+    ``jax.nn.softmax`` divides by a row-shared sum; XLA's simplifier
+    rewrites such divisions to ``* (1/sum)`` in some fusion contexts
+    and not others, so a coding table built from it can differ by one
+    fixed-point step between the eager (interpreted codec) and jitted
+    (compiled codec) paths. Writing the canonical form directly makes
+    every context produce the same bits (see docs/PERF.md).
+    """
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    return e * (1.0 / jnp.sum(e, axis=-1, keepdims=True))
+
+
 # ---------------------------------------------------------------------------
 # Bernoulli (binarized-MNIST likelihood)
 # ---------------------------------------------------------------------------
@@ -104,7 +120,7 @@ class BetaBinomial(Codec):
         logp = beta_binomial_log_pmf(
             ks[None, :], self.n, self.alpha[:, None].astype(jnp.float32),
             self.beta[:, None].astype(jnp.float32))
-        probs = jax.nn.softmax(logp, axis=-1)  # renormalize in fp
+        probs = _stable_softmax(logp)          # renormalize in fp
         return ans.probs_to_starts(probs, self.precision)
 
     def push(self, stack: ans.ANSStack, sym: jnp.ndarray) -> ans.ANSStack:
@@ -137,7 +153,7 @@ class Categorical(Codec):
     precision: int = ans.DEFAULT_PRECISION
 
     def _table(self) -> jnp.ndarray:
-        probs = jax.nn.softmax(self.logits.astype(jnp.float32), axis=-1)
+        probs = _stable_softmax(self.logits.astype(jnp.float32))
         return ans.probs_to_starts(probs, self.precision)
 
     def push(self, stack: ans.ANSStack, sym: jnp.ndarray) -> ans.ANSStack:

@@ -180,3 +180,195 @@ def pop_table_emit(head: jnp.ndarray, table: jnp.ndarray,
         ],
         interpret=interpret,
     )(head, table, feed)
+
+
+def _pop_dyntable_kernel(head_ref, tables_ref, feed_ref,
+                         out_head_ref, syms_ref, reads_ref, *,
+                         precision: int):
+    """Multi-step pop against *per-step* dynamic tables.
+
+    Like ``_pop_table_kernel`` but the cumulative-starts table changes
+    every step (uint32[steps, LANE_TILE, A+1]) - the decode twin of the
+    dynamic ``_push_kernel``, used by the codec compiler for per-position
+    Bernoulli/Categorical/BetaBinomial leaves whose parameters vary along
+    the ``Repeat`` axis.
+    """
+    steps = feed_ref.shape[0]
+    total = jnp.uint32(1 << precision)
+    mask = jnp.uint32((1 << precision) - 1)
+    feed = feed_ref[...]     # uint32[steps, LANE_TILE]
+
+    def body(t, carry):
+        head, r = carry
+        slot = head & mask
+        table = tables_ref[t]                    # uint32[LANE_TILE, A+1]
+        le = table <= slot[:, None]
+        syms_ref[t, :] = jnp.sum(le, axis=1).astype(jnp.uint32) - 1
+        start = jnp.max(jnp.where(le, table, jnp.uint32(0)), axis=1)
+        nxt = jnp.min(jnp.where(le, total, table), axis=1)
+        head = (nxt - start) * (head >> precision) + slot - start
+        need = head < jnp.uint32(1 << 16)
+        chunk = jnp.take_along_axis(feed, r[None, :], axis=0)[0]
+        head = jnp.where(need, (head << 16) | chunk, head)
+        return head, r + need.astype(jnp.int32)
+
+    head0 = head_ref[...]
+    reads0 = jnp.zeros(head0.shape, jnp.int32)
+    head, reads = jax.lax.fori_loop(0, steps, body, (head0, reads0))
+    out_head_ref[...] = head
+    reads_ref[...] = reads.astype(jnp.uint32)
+
+
+def pop_dyntable_emit(head: jnp.ndarray, tables: jnp.ndarray,
+                      feed: jnp.ndarray, precision: int,
+                      interpret: bool = True):
+    """head uint32[lanes]; tables uint32[steps, lanes, A+1]; feed
+    uint32[steps, lanes] -> (new_head, syms uint32[steps, lanes],
+    reads uint32[lanes]). lanes must be a multiple of LANE_TILE."""
+    steps, lanes = feed.shape
+    assert lanes % LANE_TILE == 0, lanes
+    grid = (lanes // LANE_TILE,)
+    a1 = tables.shape[2]
+    kernel = functools.partial(_pop_dyntable_kernel, precision=precision)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((LANE_TILE,), lambda i: (i,)),
+            pl.BlockSpec((steps, LANE_TILE, a1), lambda i: (0, i, 0)),
+            pl.BlockSpec((steps, LANE_TILE), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((LANE_TILE,), lambda i: (i,)),
+            pl.BlockSpec((steps, LANE_TILE), lambda i: (0, i)),
+            pl.BlockSpec((LANE_TILE,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((lanes,), jnp.uint32),
+            jax.ShapeDtypeStruct((steps, lanes), jnp.uint32),
+            jax.ShapeDtypeStruct((lanes,), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(head, tables, feed)
+
+
+def _pop_grid_kernel(head_ref, mu_ref, sigma_ref, feed_ref, edges_ref,
+                     out_head_ref, idx_ref, reads_ref, *, kind: str,
+                     lat_bits: int, precision: int):
+    """Fused bucketize + pop over the max-entropy N(0,1) bucket grid.
+
+    The CDF inversion of ``DiscretizedGaussian``/``DiscretizedLogistic``
+    (the ``kernels/bucketize`` bisection) runs *inside* the ANS pop
+    renormalization chain: per step, slot -> bisection over the
+    pointwise fixed-point CDF -> state update -> masked chunk read.
+    ``kind`` selects the CDF (``gaussian`` via ndtr, ``logistic`` via
+    sigmoid, ``uniform`` closed-form, no bisection); the shared bucket
+    edge table ``z[i] = ndtri(i/K)`` sits once in VMEM. Bit-exact vs
+    the per-position leaves by construction (same edge expression, same
+    primitives, same iteration count - tested against ref.py).
+    """
+    from jax.scipy.special import ndtr
+
+    steps = feed_ref.shape[0]
+    k = 1 << lat_bits
+    scale = float((1 << precision) - k)
+    shift = precision - lat_bits
+    mask = jnp.uint32((1 << precision) - 1)
+    feed = feed_ref[...]     # uint32[steps, LANE_TILE]
+
+    def starts_fn(t):
+        mu = mu_ref[t, :]
+        sigma = sigma_ref[t, :]
+
+        def f(i):
+            # Reciprocal-multiply standardization: the canonical
+            # bit-stable form shared with core.discretize/codecs.leaves.
+            z = edges_ref[i]
+            if kind == "gaussian":
+                c = ndtr((z - mu) * (1.0 / sigma))
+            else:  # logistic: sigma carries the scale parameter
+                c = jax.nn.sigmoid((z - mu) * (1.0 / sigma))
+                c = jnp.clip(c, 0.0, 1.0)
+            c = jnp.where(i <= 0, 0.0, c)
+            c = jnp.where(i >= k, 1.0, c)
+            return jnp.floor(c * scale).astype(jnp.uint32) \
+                + i.astype(jnp.uint32)
+
+        return f
+
+    def body(t, carry):
+        head, r = carry
+        slot = head & mask
+        if kind == "uniform":
+            idx = (slot >> shift).astype(jnp.int32)
+            start = idx.astype(jnp.uint32) << shift
+            freq = jnp.full_like(start, jnp.uint32(1 << shift))
+        else:
+            f = starts_fn(t)
+            lo = jnp.zeros(slot.shape, jnp.int32)
+            hi = jnp.full(slot.shape, k, jnp.int32)
+
+            def bisect(_, lohi):
+                lo, hi = lohi
+                mid = (lo + hi + 1) // 2
+                up = f(mid) <= slot
+                return jnp.where(up, mid, lo), jnp.where(up, hi, mid)
+
+            lo, hi = jax.lax.fori_loop(0, lat_bits + 1, bisect, (lo, hi))
+            idx = lo
+            start = f(idx)
+            freq = f(idx + 1) - start
+        idx_ref[t, :] = idx.astype(jnp.uint32)
+        head = freq * (head >> precision) + slot - start
+        need = head < jnp.uint32(1 << 16)
+        chunk = jnp.take_along_axis(feed, r[None, :], axis=0)[0]
+        head = jnp.where(need, (head << 16) | chunk, head)
+        return head, r + need.astype(jnp.int32)
+
+    head0 = head_ref[...]
+    reads0 = jnp.zeros(head0.shape, jnp.int32)
+    head, reads = jax.lax.fori_loop(0, steps, body, (head0, reads0))
+    out_head_ref[...] = head
+    reads_ref[...] = reads.astype(jnp.uint32)
+
+
+def pop_grid_emit(head: jnp.ndarray, mu: jnp.ndarray, sigma: jnp.ndarray,
+                  feed: jnp.ndarray, edges: jnp.ndarray, kind: str,
+                  lat_bits: int, precision: int, interpret: bool = True):
+    """head uint32[lanes]; mu/sigma float32[steps, lanes]; feed
+    uint32[steps, lanes]; edges float32[K+1] -> (new_head, idx
+    uint32[steps, lanes], reads uint32[lanes]).
+
+    ``kind`` in {"gaussian", "logistic", "uniform"}; for uniform the
+    mu/sigma/edges contents are ignored (pass zero-size-compatible
+    dummies). lanes must be a multiple of LANE_TILE (ops.py pads).
+    """
+    assert kind in ("gaussian", "logistic", "uniform"), kind
+    steps, lanes = feed.shape
+    assert lanes % LANE_TILE == 0, lanes
+    grid = (lanes // LANE_TILE,)
+    e = edges.shape[0]
+    kernel = functools.partial(_pop_grid_kernel, kind=kind,
+                               lat_bits=lat_bits, precision=precision)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((LANE_TILE,), lambda i: (i,)),
+            pl.BlockSpec((steps, LANE_TILE), lambda i: (0, i)),
+            pl.BlockSpec((steps, LANE_TILE), lambda i: (0, i)),
+            pl.BlockSpec((steps, LANE_TILE), lambda i: (0, i)),
+            pl.BlockSpec((e,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((LANE_TILE,), lambda i: (i,)),
+            pl.BlockSpec((steps, LANE_TILE), lambda i: (0, i)),
+            pl.BlockSpec((LANE_TILE,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((lanes,), jnp.uint32),
+            jax.ShapeDtypeStruct((steps, lanes), jnp.uint32),
+            jax.ShapeDtypeStruct((lanes,), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(head, mu, sigma, feed, edges)

@@ -74,6 +74,36 @@ def push_many_table(stack: ans.ANSStack, starts_table: jnp.ndarray,
                      freqs.astype(jnp.uint32), precision, interpret)
 
 
+def _chunk_feed(stack: ans.ANSStack, steps: int) -> jnp.ndarray:
+    """Pre-gather the renormalization chunk feed for a ``steps``-pop.
+
+    ``feed[r, l]`` is the ``r``-th chunk lane ``l``'s stack would serve:
+    ``buf[l, ptr-1-r]`` clamped at the bottom (the core re-serves the
+    bottom chunk on underflow - replicated here for bit-exactness).
+    """
+    lanes = stack.lanes
+    if not stack.capacity:   # chunk-less stack: every read serves 0
+        return jnp.zeros((steps, lanes), jnp.uint32)
+    t = jnp.arange(steps)
+    cols = jnp.clip(stack.ptr[None, :] - 1 - t[:, None], 0,
+                    stack.capacity - 1)
+    return stack.buf[jnp.arange(lanes)[None, :], cols].astype(jnp.uint32)
+
+
+def _finish_pop(stack: ans.ANSStack, new_head: jnp.ndarray,
+                syms: jnp.ndarray, reads: jnp.ndarray
+                ) -> Tuple[ans.ANSStack, jnp.ndarray]:
+    """Apply the kernel's (head, reads) to the stack bookkeeping."""
+    lanes = stack.lanes
+    new_head = new_head[:lanes]
+    syms = syms[:, :lanes].astype(jnp.int32)
+    reads = reads[:lanes].astype(jnp.int32)
+    under = jnp.maximum(reads - stack.ptr, 0)
+    ptr = jnp.maximum(stack.ptr - reads, 0)
+    return stack._replace(head=new_head, ptr=ptr,
+                          underflows=stack.underflows + under), syms
+
+
 def pop_many(stack: ans.ANSStack, starts_table: jnp.ndarray, steps: int,
              precision: int = ans.DEFAULT_PRECISION,
              interpret: bool = True
@@ -87,18 +117,7 @@ def pop_many(stack: ans.ANSStack, starts_table: jnp.ndarray, steps: int,
     in pop order.
     """
     lanes = stack.lanes
-    # Pre-gather the chunk feed: the r-th renormalization read of lane l
-    # serves buf[l, ptr-1-r], clamped at the bottom (the core reads
-    # buf[l, 0] on underflow - replicated here for bit-exactness).
-    if stack.capacity:
-        t = jnp.arange(steps)
-        cols = jnp.clip(stack.ptr[None, :] - 1 - t[:, None], 0,
-                        stack.capacity - 1)
-        feed = stack.buf[jnp.arange(lanes)[None, :],
-                         cols].astype(jnp.uint32)
-    else:   # chunk-less stack: every read underflows and serves 0
-        feed = jnp.zeros((steps, lanes), jnp.uint32)
-
+    feed = _chunk_feed(stack, steps)
     head, table = stack.head, starts_table.astype(jnp.uint32)
     pad = (-lanes) % K.LANE_TILE
     if pad:
@@ -107,10 +126,71 @@ def pop_many(stack: ans.ANSStack, starts_table: jnp.ndarray, steps: int,
         feed = jnp.pad(feed, ((0, 0), (0, pad)))
     new_head, syms, reads = K.pop_table_emit(head, table, feed, precision,
                                              interpret=interpret)
-    new_head = new_head[:lanes]
-    syms = syms[:, :lanes].astype(jnp.int32)
-    reads = reads[:lanes].astype(jnp.int32)
-    under = jnp.maximum(reads - stack.ptr, 0)
-    ptr = jnp.maximum(stack.ptr - reads, 0)
-    return stack._replace(head=new_head, ptr=ptr,
-                          underflows=stack.underflows + under), syms
+    return _finish_pop(stack, new_head, syms, reads)
+
+
+def pop_many_dyn(stack: ans.ANSStack, tables: jnp.ndarray,
+                 precision: int = ans.DEFAULT_PRECISION,
+                 interpret: bool = True
+                 ) -> Tuple[ans.ANSStack, jnp.ndarray]:
+    """Pop ``steps`` symbols per lane from *per-step* dynamic tables.
+
+    ``tables``: uint32[steps, lanes, A+1] cumulative starts, one table
+    per step per lane (the decode twin of the dynamic ``push_many``).
+    Bit-exact equivalent of ``steps`` sequential ``ans.pop_with_table``
+    calls against ``tables[t]``. Returns ``(stack, symbols int32[steps,
+    lanes])`` in pop order.
+    """
+    steps, lanes = tables.shape[0], stack.lanes
+    feed = _chunk_feed(stack, steps)
+    head, tables = stack.head, tables.astype(jnp.uint32)
+    pad = (-lanes) % K.LANE_TILE
+    if pad:
+        head = jnp.pad(head, (0, pad), constant_values=1 << 16)
+        tables = jnp.pad(tables, ((0, 0), (0, pad), (0, 0)))
+        feed = jnp.pad(feed, ((0, 0), (0, pad)))
+    new_head, syms, reads = K.pop_dyntable_emit(head, tables, feed,
+                                                precision,
+                                                interpret=interpret)
+    return _finish_pop(stack, new_head, syms, reads)
+
+
+def pop_many_grid(stack: ans.ANSStack, kind: str, mu: jnp.ndarray,
+                  sigma: jnp.ndarray, steps: int, lat_bits: int,
+                  precision: int = ans.DEFAULT_PRECISION,
+                  interpret: bool = True
+                  ) -> Tuple[ans.ANSStack, jnp.ndarray]:
+    """Fused bucketize+pop over the max-entropy N(0,1) bucket grid.
+
+    Decodes ``steps`` bucket indices per lane under per-step
+    distributions on the shared grid: ``kind="gaussian"`` is bit-exact
+    vs sequential ``discretize.pop_posterior(mu[t], sigma[t])``,
+    ``"logistic"`` vs ``codecs.DiscretizedLogistic(mu[t], sigma[t])``
+    pops (``sigma`` carries the scale), ``"uniform"`` vs
+    ``discretize.pop_prior`` (mu/sigma ignored; pass zeros). The CDF
+    bisection of ``kernels/bucketize`` runs inside the pop renorm chain
+    - one kernel call for the whole [steps, lanes] grid.
+    """
+    from repro.kernels.bucketize import kernel as BK
+
+    lanes = stack.lanes
+    feed = _chunk_feed(stack, steps)
+    head = stack.head
+    if kind == "uniform":
+        mu = jnp.zeros((steps, lanes), jnp.float32)
+        sigma = jnp.ones((steps, lanes), jnp.float32)
+        edges = jnp.zeros((2,), jnp.float32)
+    else:
+        mu = mu.astype(jnp.float32)
+        sigma = sigma.astype(jnp.float32)
+        edges = BK.edge_table(lat_bits)
+    pad = (-lanes) % K.LANE_TILE
+    if pad:
+        head = jnp.pad(head, (0, pad), constant_values=1 << 16)
+        mu = jnp.pad(mu, ((0, 0), (0, pad)))
+        sigma = jnp.pad(sigma, ((0, 0), (0, pad)), constant_values=1.0)
+        feed = jnp.pad(feed, ((0, 0), (0, pad)))
+    new_head, idx, reads = K.pop_grid_emit(head, mu, sigma, feed, edges,
+                                           kind, lat_bits, precision,
+                                           interpret=interpret)
+    return _finish_pop(stack, new_head, idx, reads)

@@ -6,7 +6,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import ans
+from repro.core import ans, discretize
 
 
 def push_emit_ref(head, starts, freqs, precision):
@@ -66,3 +66,44 @@ def pop_many_ref(stack: ans.ANSStack, starts_table, steps: int,
         return st, syms.at[t].set(sym)
 
     return jax.lax.fori_loop(0, steps, body, (stack, syms0))
+
+
+def pop_many_dyn_ref(stack: ans.ANSStack, tables, precision):
+    """Reference for ops.pop_many_dyn: sequential table pops against the
+    per-step tables. Returns (stack, symbols int32[steps, lanes])."""
+    steps = tables.shape[0]
+    syms0 = jnp.zeros((steps, stack.lanes), jnp.int32)
+
+    def body(t, carry):
+        st, syms = carry
+        st, sym = ans.pop_with_table(st, tables[t], precision)
+        return st, syms.at[t].set(sym)
+
+    return jax.lax.fori_loop(0, steps, body, (stack, syms0))
+
+
+def pop_many_grid_ref(stack: ans.ANSStack, kind: str, mu, sigma,
+                      steps: int, lat_bits: int, precision):
+    """Reference for ops.pop_many_grid: sequential per-position leaf
+    pops via the core library (``discretize.pop_posterior`` /
+    ``codecs.DiscretizedLogistic`` / ``discretize.pop_prior``).
+
+    Python-driven (an oracle, not a fast path); returns (stack, symbols
+    int32[steps, lanes]) in pop order.
+    """
+    syms = []
+    for t in range(steps):
+        if kind == "gaussian":
+            stack, idx = discretize.pop_posterior(
+                stack, mu[t], sigma[t], lat_bits, precision)
+        elif kind == "logistic":
+            from repro.codecs.leaves import DiscretizedLogistic
+            leaf = DiscretizedLogistic(mu[t], sigma[t], lat_bits,
+                                       precision)
+            stack, idx = leaf.pop(stack)
+        elif kind == "uniform":
+            stack, idx = discretize.pop_prior(stack, lat_bits, precision)
+        else:
+            raise ValueError(kind)
+        syms.append(idx)
+    return stack, jnp.stack(syms, axis=0).astype(jnp.int32)

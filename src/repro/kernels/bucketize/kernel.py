@@ -26,12 +26,12 @@ LANE_TILE = 128
 
 
 def edge_table(lat_bits: int) -> jnp.ndarray:
-    """z[i] = Phi^-1(i/K) for i = 0..K, exactly as core.discretize
-    evaluates it pointwise (same clip, same ndtri)."""
-    k = 1 << lat_bits
-    i = jnp.arange(k + 1, dtype=jnp.int32)
-    frac = i.astype(jnp.float32) / k
-    return ndtri(jnp.clip(frac, 1e-38, 1.0 - 1e-7))
+    """z[i] = Phi^-1(i/K) for i = 0..K - the shared concrete table of
+    ``core.discretize.edge_table`` (one source of truth: every coding
+    path gathers the same bits, whatever the surrounding compilation
+    context)."""
+    from repro.core import discretize
+    return discretize.edge_table(lat_bits)
 
 
 def _bucketize_kernel(slot_ref, mu_ref, sigma_ref, edges_ref,
@@ -45,7 +45,7 @@ def _bucketize_kernel(slot_ref, mu_ref, sigma_ref, edges_ref,
 
     def f(i):
         z = edges_ref[i]  # gather from the shared edge table
-        c = ndtr((z - mu) / sigma)
+        c = ndtr((z - mu) * (1.0 / sigma))   # canonical form, see core
         c = jnp.where(i <= 0, 0.0, c)
         c = jnp.where(i >= k, 1.0, c)
         return jnp.floor(c * scale).astype(jnp.uint32) + i.astype(jnp.uint32)

@@ -41,6 +41,9 @@ def main():
     ap.add_argument("--requests", type=int, default=12,
                     help="number of client streams for --mode serve-many")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--compile", action="store_true",
+                    help="route codecs through codecs.compile (fused "
+                         "kernel programs; byte-identical wire)")
     ap.add_argument("--kv-dtype", default="bfloat16")
     args = ap.parse_args()
 
@@ -134,7 +137,8 @@ def main_hvae(args):
 
     cfg = hvae_img.get("hvae-small2")
     params = hvae.init(jax.random.PRNGKey(args.seed), cfg)
-    eng = CodecEngine(hvae.codec_family(params, cfg), seed=args.seed)
+    eng = CodecEngine(hvae.codec_family(params, cfg), seed=args.seed,
+                      compile=args.compile)
     lanes = args.lanes
     for shape in ((16, 16), (20, 12)):
         raw = img_data.load("test", 2 * lanes, args.seed, hw=shape)

@@ -327,7 +327,8 @@ def _centres(cfg: HVAEConfig, idx: jnp.ndarray,
 
 def make_bitswap_codec(params: Params, cfg: HVAEConfig,
                        hw: Tuple[int, int], *,
-                       use_bucketize_kernel: bool = False) -> codecs.BitSwap:
+                       use_bucketize_kernel: bool = False,
+                       compiled: bool = False) -> codecs.Codec:
     """The HVAE as a ``codecs.BitSwap`` combinator for H x W images.
 
     The networks are fully convolutional, so ONE trained ``params`` set
@@ -335,6 +336,12 @@ def make_bitswap_codec(params: Params, cfg: HVAEConfig,
     (``serve.CodecEngine`` memoizes that for you). Image symbols are
     int[lanes, H, W]; latent symbols are flat bucket indices
     int32[lanes, (H/2) * (W/2) * z_ch].
+
+    ``compiled=True`` lowers the whole Bit-Swap schedule through
+    ``codecs.compile``: every latent grid and the observation layer
+    code through fused multi-step kernels inside one jit program per
+    direction - byte-identical wire, no per-position dispatch
+    (benchmarks/codec_compile.py measures the speedup).
 
     Use with the container or the BBX2 stream:
 
@@ -389,7 +396,8 @@ def make_bitswap_codec(params: Params, cfg: HVAEConfig,
     n_lat = lat_hw[0] * lat_hw[1] * lat_hw[2]
     prior = codecs.Repeat(
         lambda d: codecs.Uniform(cfg.lat_bits, cfg.precision), n_lat)
-    return codecs.BitSwap(prior=prior, layers=tuple(layers))
+    swap = codecs.BitSwap(prior=prior, layers=tuple(layers))
+    return codecs.compile(swap) if compiled else swap
 
 
 def codec_family(params: Params, cfg: HVAEConfig, **kwargs):

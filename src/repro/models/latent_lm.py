@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import codecs
-from repro.core import ans, bbans, discretize, lm_codec
+from repro.core import ans, discretize, lm_codec
 from repro.core.codec import FnCodec
 from repro.core.distributions import FactoredCategorical
 from repro.models import layers, transformer
@@ -223,17 +223,5 @@ def make_bb_codec(params, cfg: LatentLMConfig, seq_len: int
                         posterior=posterior)
 
 
-def make_codec(params, cfg: LatentLMConfig, seq_len: int
-               ) -> bbans.BBANSCodec:
-    """Legacy six-hook view of ``make_bb_codec`` (kept for old call
-    sites; bit-identical coding)."""
-    bb = make_bb_codec(params, cfg, seq_len)
-    return bbans.BBANSCodec(
-        posterior_pop=lambda stack, s: bb.posterior(s).pop(stack),
-        posterior_push=lambda stack, s, y: bb.posterior(s).push(stack, y),
-        likelihood_push=lambda stack, y, s: bb.likelihood(y).push(stack, s),
-        likelihood_pop=lambda stack, y: bb.likelihood(y).pop(stack),
-        prior_push=lambda stack, y: bb.prior.push(stack, y),
-        prior_pop=lambda stack: bb.prior.pop(stack))
 
 

@@ -10,10 +10,9 @@ standard-normal prior. Two likelihood heads, as in the paper:
 Pure-functional: ``init``/``encode``/``decode``/``elbo`` plus
 ``make_bb_codec``, which returns the model as a composable
 ``codecs.BBANS`` combinator (lane = batch element) for use with
-``codecs.compress``/``decompress`` or the ``repro.stream`` BBX2 path.
-(``make_codec`` still exists as a deprecated six-hook view for
-pre-codecs call sites; it is a bit-identical wrapper over
-``make_bb_codec``.)
+``codecs.compress``/``decompress`` or the ``repro.stream`` BBX2 path;
+``compiled=True`` lowers it into one fused jit program
+(``codecs.compile``) with identical wire bytes.
 """
 
 from __future__ import annotations
@@ -25,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import codecs
-from repro.core import ans, bbans, discretize
+from repro.core import ans, discretize
 from repro.core.distributions import Bernoulli, BetaBinomial
 
 Params = Dict[str, Any]
@@ -152,7 +151,8 @@ def loss(params: Params, cfg: VAEConfig, key: jax.Array,
 # BB-ANS codec (paper Table 1, App. C) via the composable codecs API
 # ---------------------------------------------------------------------------
 
-def make_bb_codec(params: Params, cfg: VAEConfig) -> codecs.BBANS:
+def make_bb_codec(params: Params, cfg: VAEConfig, *,
+                  compiled: bool = False) -> codecs.Codec:
     """The VAE as a composable ``codecs.BBANS`` combinator.
 
     The latent symbol ``y`` is carried as *bucket indices* int32[lanes,
@@ -160,6 +160,14 @@ def make_bb_codec(params: Params, cfg: VAEConfig) -> codecs.BBANS:
     consumes bucket centres. Pixels are coded conditionally-independently
     given y, so intra-datapoint order is free; ``Repeat`` pushes in
     reverse so pops stream in natural order.
+
+    ``compiled=True`` runs the codec through ``codecs.compile``: the
+    whole per-datapoint encode/decode (posterior pop, likelihood push,
+    prior push, networks included) becomes one fused jit program with
+    kernel-backed multi-symbol coding - byte-identical wire, several
+    times faster (benchmarks/codec_compile.py). For chained data,
+    compiling the whole chain is better still:
+    ``codecs.compile(codecs.Chained(make_bb_codec(p, cfg), n))``.
 
     Use directly with the container:
         blob = codecs.compress(codecs.Chained(make_bb_codec(p, cfg), n),
@@ -186,23 +194,6 @@ def make_bb_codec(params: Params, cfg: VAEConfig) -> codecs.BBANS:
 
     prior = codecs.Repeat(
         lambda d: codecs.Uniform(cfg.lat_bits, cfg.precision), cfg.latent)
-    return codecs.BBANS(prior=prior, likelihood=likelihood,
-                        posterior=posterior)
-
-
-def make_codec(params: Params, cfg: VAEConfig) -> bbans.BBANSCodec:
-    """DEPRECATED six-hook view of ``make_bb_codec``.
-
-    Kept only for pre-``repro.codecs`` call sites; coding is
-    bit-identical by construction (every hook delegates to the
-    combinator). New code should call ``make_bb_codec`` and go through
-    ``codecs.compress``/``decompress`` - see docs/API.md.
-    """
-    bb = make_bb_codec(params, cfg)
-    return bbans.BBANSCodec(
-        posterior_pop=lambda stack, s: bb.posterior(s).pop(stack),
-        posterior_push=lambda stack, s, y: bb.posterior(s).push(stack, y),
-        likelihood_push=lambda stack, y, s: bb.likelihood(y).push(stack, s),
-        likelihood_pop=lambda stack, y: bb.likelihood(y).pop(stack),
-        prior_push=lambda stack, y: bb.prior.push(stack, y),
-        prior_pop=lambda stack: bb.prior.pop(stack))
+    bb = codecs.BBANS(prior=prior, likelihood=likelihood,
+                      posterior=posterior)
+    return codecs.compile(bb) if compiled else bb

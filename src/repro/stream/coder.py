@@ -21,11 +21,14 @@ Within a block, datapoints are pushed in *reverse* so the decoder pops
 them in natural order - a streaming decoder yields datapoint ``t``
 before it has looked at datapoint ``t+1``.
 
-Fast path: when the per-datapoint codec is a static-table
+Fast paths: when the per-datapoint codec is a static-table
 ``Categorical``, whole blocks go through the Pallas-kernel batch coder
 (``kernels.ans.ops.push_many_table``/``pop_many``) instead of ``k``
-sequential pushes; both paths are bit-identical (tested), so the wire
-format does not know which one produced a block.
+sequential pushes; with ``compile=True`` every block body is lowered by
+the codec compiler (``codecs.compile``) into one fused jit program per
+block size (dynamic-leaf codecs included - see docs/PERF.md). All paths
+are bit-identical (tested), so the wire format does not know which one
+produced a block.
 """
 
 from __future__ import annotations
@@ -40,6 +43,8 @@ import numpy as np
 from repro.core import ans
 from repro.core.codec import Codec
 from repro.core.distributions import Categorical
+from repro.codecs.compile import compile as compile_codec
+from repro.codecs.compile import register_lowering
 from repro.kernels.ans import ops as ans_ops
 from repro.stream import format as fmt
 
@@ -107,19 +112,38 @@ class KernelTableBlock(Codec):
         return ans_ops.pop_many(stack, self.table, self.k, self.precision)
 
 
+# The compiler lowers a BlockChain by lowering its inner codec; block
+# structure (reversed pushes, natural pops) is preserved bit-exactly.
+register_lowering(BlockChain,
+                  lambda c, rec: BlockChain(rec(c.inner), c.k))
+
+
 def _resolve_block_codec(codec: Optional[Codec],
                          block_codec_fn: Optional[BlockCodecFn],
-                         use_kernel: bool) -> BlockCodecFn:
-    if block_codec_fn is not None:
+                         use_kernel: bool,
+                         compile: bool = False) -> BlockCodecFn:
+    if block_codec_fn is None:
+        if codec is None:
+            raise ValueError("stream: pass a per-datapoint codec or a "
+                             "block_codec_fn")
+        if use_kernel and isinstance(codec, Categorical):
+            table = codec._table()
+            prec = codec.precision
+            block_codec_fn = lambda k: KernelTableBlock(table, k, prec)
+        else:
+            block_codec_fn = lambda k: BlockChain(codec, k)
+    if not compile:
         return block_codec_fn
-    if codec is None:
-        raise ValueError("stream: pass a per-datapoint codec or a "
-                         "block_codec_fn")
-    if use_kernel and isinstance(codec, Categorical):
-        table = codec._table()
-        prec = codec.precision
-        return lambda k: KernelTableBlock(table, k, prec)
-    return lambda k: BlockChain(codec, k)
+    # One fused jit program per block size (full blocks share one entry;
+    # the ragged final block compiles its own).
+    base, programs = block_codec_fn, {}
+
+    def compiled_fn(k: int) -> Codec:
+        if k not in programs:
+            programs[k] = compile_codec(base(k))
+        return programs[k]
+
+    return compiled_fn
 
 
 class StreamEncoder:
@@ -147,14 +171,14 @@ class StreamEncoder:
                  seed: Optional[int] = 0, init_chunks: int = 0,
                  precision: int = ans.DEFAULT_PRECISION,
                  capacity: Optional[int] = None, max_retries: int = 6,
-                 use_kernel: bool = True):
+                 use_kernel: bool = True, compile: bool = False):
         if lanes < 1 or block_symbols < 1:
             raise ValueError("stream: lanes and block_symbols must be >= 1")
         if seed is None and init_chunks:
             raise ValueError("stream: init_chunks requires a seed (clean "
                              "bits are derived from it)")
         self._block_codec_fn = _resolve_block_codec(codec, block_codec_fn,
-                                                    use_kernel)
+                                                    use_kernel, compile)
         self.lanes = lanes
         self.block_symbols = block_symbols
         self.precision = precision
@@ -238,7 +262,11 @@ class StreamEncoder:
                if self._seed is not None else None)
         if self._heads is not None:
             stack = ans.make_stack(self.lanes, capacity)
-            stack = stack._replace(head=self._heads)
+            # Copy: a compiled block codec donates the stack it is
+            # handed, which would delete the carried-heads buffer and
+            # break the grow-and-retry path (and the next block) on
+            # donation-honoring backends.
+            stack = stack._replace(head=jnp.copy(self._heads))
         elif key is not None:
             k_head, _ = jax.random.split(key)
             stack = ans.make_stack(self.lanes, capacity, key=k_head)
@@ -258,12 +286,14 @@ class StreamEncoder:
         chunks = self._init_chunks
         for _ in range(self._max_retries):
             stack0 = self._block_stack(cap, chunks)
+            # Read before the push: compiled codecs donate stack0.
+            bits_before = float(ans.stack_content_bits(stack0))
             stack = codec.push(stack0, xs)
             over = int(jnp.sum(stack.overflows))
             under = int(jnp.sum(stack.underflows))
             if not over and not under:
-                self.net_bits += float(ans.stack_content_bits(stack)
-                                       - ans.stack_content_bits(stack0))
+                self.net_bits += float(ans.stack_content_bits(stack)) \
+                    - bits_before
                 self._heads = stack.head   # carry clean bits forward
                 self._capacity, self._init_chunks = cap, chunks
                 msg, lengths = ans.flatten(stack)
@@ -307,9 +337,10 @@ class StreamDecoder:
     def __init__(self, codec: Optional[Codec] = None, *,
                  block_codec_fn: Optional[BlockCodecFn] = None,
                  header: Optional[fmt.StreamHeader] = None,
-                 use_kernel: bool = True, verify_trailer: bool = True):
+                 use_kernel: bool = True, verify_trailer: bool = True,
+                 compile: bool = False):
         self._block_codec_fn = _resolve_block_codec(codec, block_codec_fn,
-                                                    use_kernel)
+                                                    use_kernel, compile)
         self._header = header
         self._verify_trailer = verify_trailer
         self._buf = bytearray()

@@ -5,7 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import ans, bbans, discretize
+from repro import codecs
+from repro.core import ans, discretize
 from repro.models import vae as vae_lib
 
 
@@ -75,7 +76,7 @@ def test_posterior_sampling_statistics():
 
 def test_bbans_single_roundtrip(small_cfg, small_params):
     lanes = 4
-    codec = vae_lib.make_codec(small_params, small_cfg)
+    codec = vae_lib.make_bb_codec(small_params, small_cfg)
     rng = np.random.default_rng(2)
     s = jnp.asarray(rng.integers(0, 2, (lanes, small_cfg.input_dim)),
                     jnp.int32)
@@ -84,8 +85,8 @@ def test_bbans_single_roundtrip(small_cfg, small_params):
     h0, p0 = np.asarray(stack.head), np.asarray(stack.ptr)
     buf0 = np.asarray(stack.buf)
 
-    stack2 = bbans.append(codec, stack, s)
-    stack3, s_out = bbans.pop(codec, stack2)
+    stack2 = codec.push(stack, s)
+    stack3, s_out = codec.pop(stack2)
 
     np.testing.assert_array_equal(np.asarray(s_out), np.asarray(s))
     # Full stack restoration (head, depth, and content below the watermark).
@@ -100,16 +101,18 @@ def test_bbans_single_roundtrip(small_cfg, small_params):
 def test_bbans_chain_roundtrip(small_cfg, small_params):
     """Chained encode of N datapoints then chained decode recovers all."""
     lanes, n = 3, 5
-    codec = vae_lib.make_codec(small_params, small_cfg)
+    chained = codecs.Chained(
+        vae_lib.make_bb_codec(small_params, small_cfg), n)
     rng = np.random.default_rng(3)
     data = jnp.asarray(rng.integers(0, 2, (n, lanes, small_cfg.input_dim)),
                        jnp.int32)
     stack = ans.make_stack(lanes, 2048, key=jax.random.PRNGKey(8))
     stack = ans.seed_stack(stack, jax.random.PRNGKey(9), 64)
 
-    stack2 = bbans.append_batch(codec, stack, data)
+    stack2 = chained.push(stack, data)
     assert int(jnp.sum(stack2.underflows)) == 0
-    stack3, out = bbans.pop_batch(codec, stack2, n)
+    assert int(jnp.sum(stack2.overflows)) == 0
+    stack3, out = chained.pop(stack2)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(data))
 
 
@@ -145,16 +148,16 @@ def test_bbans_rate_matches_analytic_exactly(small_cfg, small_params):
     trained model + many images) is exercised by benchmarks/table2_rates."""
     cfg, params = small_cfg, small_params
     lanes = 8
-    codec = vae_lib.make_codec(params, cfg)
+    codec = vae_lib.make_bb_codec(params, cfg)
     rng = np.random.default_rng(4)
     s = jnp.asarray(rng.integers(0, 2, (lanes, cfg.input_dim)), jnp.int32)
     stack = ans.make_stack(lanes, 4096, key=jax.random.PRNGKey(10))
     stack = ans.seed_stack(stack, jax.random.PRNGKey(11), 64)
 
     b0 = float(ans.stack_content_bits(stack))
-    st, y = codec.posterior_pop(stack, s)
-    st = codec.likelihood_push(st, y, s)
-    st = codec.prior_push(st, y)
+    st, y = codec.posterior(s).pop(stack)
+    st = codec.likelihood(y).push(st, s)
+    st = codec.prior.push(st, y)
     achieved = float(ans.stack_content_bits(st)) - b0
     expected = _analytic_append_bits(cfg, params, s, np.asarray(y))
     assert achieved == pytest.approx(expected, abs=1.0 * lanes)
@@ -165,14 +168,14 @@ def test_bbans_chain_rate_near_elbo(small_cfg, small_params):
     model, finite chain; the trained-model ~1% check lives in benchmarks)."""
     cfg, params = small_cfg, small_params
     lanes, n = 8, 24
-    codec = vae_lib.make_codec(params, cfg)
+    chained = codecs.Chained(vae_lib.make_bb_codec(params, cfg), n)
     rng = np.random.default_rng(4)
     data = jnp.asarray(rng.integers(0, 2, (n, lanes, cfg.input_dim)),
                        jnp.int32)
     stack = ans.make_stack(lanes, 8192, key=jax.random.PRNGKey(10))
     stack = ans.seed_stack(stack, jax.random.PRNGKey(11), 64)
     bits_before = float(ans.stack_content_bits(stack))
-    stack2 = bbans.append_batch(codec, stack, data)
+    stack2 = chained.push(stack, data)
     bits_after = float(ans.stack_content_bits(stack2))
     rate = (bits_after - bits_before) / (n * lanes * cfg.input_dim)
 

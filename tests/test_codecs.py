@@ -16,7 +16,7 @@ import numpy as np
 import pytest
 
 from repro import codecs
-from repro.core import ans, bbans, discretize
+from repro.core import ans, discretize
 from repro.core.distributions import Bernoulli, Categorical
 from repro.models import vae as vae_lib
 
@@ -156,19 +156,22 @@ def test_repeat_is_jittable():
     np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
 
 
-def test_bbans_combinator_matches_legacy_hooks(small_cfg, small_params):
-    """The composable BBANS and the six-hook shim must produce
-    bit-identical stacks (same pushes in the same order)."""
+def test_bbans_combinator_matches_compiled(small_cfg, small_params):
+    """The interpreted BBANS combinator and its ``codecs.compile``d
+    program must produce bit-identical stacks (same pushes in the same
+    order - the compiled-path acceptance at stack level)."""
     lanes = 4
     rng = np.random.default_rng(6)
     s = jnp.asarray(rng.integers(0, 2, (lanes, small_cfg.input_dim)),
                     jnp.int32)
     bb = vae_lib.make_bb_codec(small_params, small_cfg)
-    hooks = vae_lib.make_codec(small_params, small_cfg)
+    # donate=False: this test reuses the input stacks after the calls
+    # (donation would invalidate them; drivers never reuse, tests do).
+    prog = codecs.compile(bb, donate=False)
 
     st0 = _fresh(lanes, cap=512, chunks=64)
     st_new = bb.push(st0, s)
-    st_old = bbans.append(hooks, st0, s)
+    st_old = prog.push(st0, s)
     np.testing.assert_array_equal(np.asarray(st_new.head),
                                   np.asarray(st_old.head))
     np.testing.assert_array_equal(np.asarray(st_new.ptr),
@@ -176,7 +179,7 @@ def test_bbans_combinator_matches_legacy_hooks(small_cfg, small_params):
     np.testing.assert_array_equal(np.asarray(st_new.buf),
                                   np.asarray(st_old.buf))
 
-    st_back, s_out = bb.pop(st_new)
+    st_back, s_out = prog.pop(st_new)
     np.testing.assert_array_equal(np.asarray(s_out), np.asarray(s))
     np.testing.assert_array_equal(np.asarray(st_back.head),
                                   np.asarray(st0.head))
@@ -529,12 +532,17 @@ def test_seed_stack_overflow_is_counted():
     np.testing.assert_array_equal(np.asarray(stack.overflows), [3, 3])
 
 
-def test_append_batch_raises_on_overflow(small_cfg, small_params):
+def test_chained_overflow_is_counted_and_checked(small_cfg, small_params):
     lanes, n = 2, 3
     rng = np.random.default_rng(18)
     data = jnp.asarray(rng.integers(0, 2, (n, lanes, small_cfg.input_dim)),
                        jnp.int32)
-    hooks = vae_lib.make_codec(small_params, small_cfg)
+    chained = codecs.Chained(
+        vae_lib.make_bb_codec(small_params, small_cfg), n)
     stack = _fresh(lanes, cap=8, chunks=2)  # far too small
-    with pytest.raises(RuntimeError, match="overflow"):
-        bbans.append_batch(hooks, stack, data)
+    out = chained.push(stack, data)
+    assert int(jnp.sum(out.overflows)) > 0
+    # The tiny stack both drops chunks (overflow) and runs out of clean
+    # bits (underflow); check_clean must refuse either way.
+    with pytest.raises(RuntimeError, match="(under|over)flow"):
+        ans.check_clean(out)

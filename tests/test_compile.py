@@ -1,0 +1,428 @@
+"""The codec compiler (``codecs.compile``): bit-exact parity of the
+compiled (fused kernel) execution vs the interpreted combinators, for
+every leaf family and combinator, including ragged shapes, BitSwap with
+three layers, container/stream byte-parity, fallback lowering, buffer
+donation, and the ``CodecEngine`` LRU + compiled-program cache."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import codecs, stream
+from repro.codecs.compile import _GridRepeat, _TableRepeat
+from repro.core import ans, discretize
+from repro.models import vae as vae_lib
+from repro.serve.engine import CodecEngine
+
+
+@pytest.fixture(scope="module")
+def small_cfg():
+    return vae_lib.VAEConfig(input_dim=36, hidden=24, latent=6,
+                             likelihood="bernoulli", lat_bits=10)
+
+
+@pytest.fixture(scope="module")
+def small_params(small_cfg):
+    return vae_lib.init(jax.random.PRNGKey(0), small_cfg)
+
+
+def _fresh(lanes, cap=512, seed=0, chunks=32):
+    return codecs.fresh_stack(lanes, cap, seed=seed, init_chunks=chunks)
+
+
+def _assert_stacks_equal(a, b):
+    for f in ("head", "ptr", "buf", "underflows", "overflows"):
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)),
+                                      err_msg=f)
+
+
+def _assert_parity(codec, prog, stack, x):
+    """push and pop must be bit-identical between the two codecs."""
+    si = codec.push(stack, x)
+    sc = prog.push(stack, x)
+    _assert_stacks_equal(si, sc)
+    s2i, xi = codec.pop(si)
+    s2c, xc = prog.pop(sc)
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        xi, xc)
+    _assert_stacks_equal(s2i, s2c)
+    return xi
+
+
+# ---------------------------------------------------------------------------
+# leaf families inside Repeat (ragged lanes: not a multiple of the tile)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("lanes,n", [(5, 9), (8, 1), (130, 3)])
+def test_uniform_repeat_parity(lanes, n):
+    rng = np.random.default_rng(lanes + n)
+    rep = codecs.Repeat(lambda d: codecs.Uniform(7), n)
+    prog = codecs.compile(rep, donate=False)
+    assert isinstance(prog.lowered, _GridRepeat)
+    x = jnp.asarray(rng.integers(0, 128, (lanes, n)), jnp.int32)
+    _assert_parity(rep, prog, _fresh(lanes), x)
+
+
+@pytest.mark.parametrize("lanes,n,bits", [(5, 9, 10), (64, 17, 8)])
+def test_gaussian_repeat_parity(lanes, n, bits):
+    rng = np.random.default_rng(lanes * 7 + n)
+    mu = jnp.asarray(rng.normal(0, 1, (lanes, n)), jnp.float32)
+    sg = jnp.asarray(rng.uniform(0.05, 2.0, (lanes, n)), jnp.float32)
+    rep = codecs.Repeat(
+        lambda d: codecs.DiscretizedGaussian(mu[:, d], sg[:, d], bits), n)
+    prog = codecs.compile(rep, donate=False)
+    assert isinstance(prog.lowered, _GridRepeat)
+    stack = _fresh(lanes)
+    si, yi = rep.pop(stack)
+    sc, yc = prog.pop(stack)
+    np.testing.assert_array_equal(np.asarray(yi), np.asarray(yc))
+    _assert_stacks_equal(si, sc)
+    _assert_stacks_equal(rep.push(si, yi), prog.push(sc, yc))
+
+
+def test_logistic_repeat_parity():
+    lanes, n, bits = 5, 11, 8
+    rng = np.random.default_rng(3)
+    mu = jnp.asarray(rng.normal(0, 1, (lanes, n)), jnp.float32)
+    sc_ = jnp.asarray(rng.uniform(0.2, 1.5, (lanes, n)), jnp.float32)
+    rep = codecs.Repeat(
+        lambda d: codecs.DiscretizedLogistic(mu[:, d], sc_[:, d], bits), n)
+    prog = codecs.compile(rep, donate=False)
+    assert isinstance(prog.lowered, _GridRepeat)
+    stack = _fresh(lanes)
+    si, yi = rep.pop(stack)
+    sc, yc = prog.pop(stack)
+    np.testing.assert_array_equal(np.asarray(yi), np.asarray(yc))
+    _assert_stacks_equal(rep.push(si, yi), prog.push(sc, yc))
+
+
+def test_bernoulli_and_categorical_repeat_parity():
+    lanes, n = 6, 13
+    rng = np.random.default_rng(4)
+    blogits = jnp.asarray(rng.normal(0, 2, (lanes, n)), jnp.float32)
+    clogits = jnp.asarray(rng.normal(0, 1, (lanes, n, 5)), jnp.float32)
+    bern = codecs.Repeat(lambda d: codecs.Bernoulli(blogits[:, d]), n)
+    cat = codecs.Repeat(
+        lambda d: codecs.Categorical(clogits[:, d]), n)
+    pb = codecs.compile(bern, donate=False)
+    pc = codecs.compile(cat, donate=False)
+    assert isinstance(pb.lowered, _TableRepeat)
+    assert isinstance(pc.lowered, _TableRepeat)
+    xb = jnp.asarray(rng.integers(0, 2, (lanes, n)), jnp.int32)
+    xc = jnp.asarray(rng.integers(0, 5, (lanes, n)), jnp.int32)
+    _assert_parity(bern, pb, _fresh(lanes), xb)
+    _assert_parity(cat, pc, _fresh(lanes), xc)
+
+
+def test_betabinomial_repeat_parity():
+    lanes, n = 4, 7
+    rng = np.random.default_rng(5)
+    al = jnp.asarray(rng.uniform(0.5, 3, (lanes, n)), jnp.float32)
+    be = jnp.asarray(rng.uniform(0.5, 3, (lanes, n)), jnp.float32)
+    rep = codecs.Repeat(
+        lambda d: codecs.BetaBinomial(al[:, d], be[:, d], 255), n)
+    prog = codecs.compile(rep, donate=False)
+    assert isinstance(prog.lowered, _TableRepeat)
+    x = jnp.asarray(rng.integers(0, 256, (lanes, n)), jnp.int32)
+    _assert_parity(rep, prog, _fresh(lanes, cap=1024), x)
+
+
+def test_repeat_out_dtype_preserved():
+    lanes, n = 4, 5
+    rep = codecs.Repeat(lambda d: codecs.Uniform(4), n,
+                        out_dtype=jnp.uint8)
+    prog = codecs.compile(rep, donate=False)
+    stack = _fresh(lanes)
+    _, x = prog.pop(stack)
+    assert x.dtype == jnp.uint8
+
+
+# ---------------------------------------------------------------------------
+# fallback lowering (unknown / heterogeneous bodies stay interpreted)
+# ---------------------------------------------------------------------------
+
+def test_unknown_leaf_falls_back_to_interpreted():
+    lanes, n = 4, 6
+    inner = codecs.Uniform(5)
+    rep = codecs.Repeat(
+        lambda d: codecs.FnCodec(inner.push, inner.pop), n, scan=False)
+    prog = codecs.compile(rep, donate=False)
+    assert isinstance(prog.lowered, codecs.Repeat)   # unchanged
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.integers(0, 32, (lanes, n)), jnp.int32)
+    _assert_parity(rep, prog, _fresh(lanes), x)
+
+
+def test_heterogeneous_repeat_falls_back():
+    lanes, n = 4, 6
+    rep = codecs.Repeat(
+        lambda d: codecs.Uniform(4 if d < 3 else 6), n, scan=False)
+    prog = codecs.compile(rep, donate=False)
+    assert isinstance(prog.lowered, codecs.Repeat)   # mixed bits: no fuse
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(
+        np.concatenate([rng.integers(0, 16, (lanes, 3)),
+                        rng.integers(0, 64, (lanes, 3))], axis=1),
+        jnp.int32)
+    _assert_parity(rep, prog, _fresh(lanes), x)
+
+
+def test_nonuniform_position_closure_is_fused_correctly():
+    """A closure whose parameters vary per position through arithmetic
+    on ``d`` must still fuse bit-exactly (the arange fast-probe)."""
+    lanes, n = 5, 8
+    rng = np.random.default_rng(8)
+    base = jnp.asarray(rng.normal(0, 1, (lanes, n)), jnp.float32)
+    rep = codecs.Repeat(
+        lambda d: codecs.DiscretizedGaussian(
+            base[:, d], jnp.full((lanes,), 0.5, jnp.float32), 10), n)
+    prog = codecs.compile(rep, donate=False)
+    assert isinstance(prog.lowered, _GridRepeat)
+    stack = _fresh(lanes)
+    si, yi = rep.pop(stack)
+    sc, yc = prog.pop(stack)
+    np.testing.assert_array_equal(np.asarray(yi), np.asarray(yc))
+    _assert_stacks_equal(si, sc)
+
+
+# ---------------------------------------------------------------------------
+# combinators
+# ---------------------------------------------------------------------------
+
+def test_serial_shaped_tree_parity():
+    lanes = 5
+    rng = np.random.default_rng(9)
+    logits = jnp.asarray(rng.normal(0, 1, (lanes, 5)), jnp.float32)
+    codec = codecs.Serial([
+        codecs.Uniform(6),
+        codecs.Categorical(logits),
+        codecs.Shaped(
+            codecs.Repeat(lambda d: codecs.Uniform(4), 6), (2, 3)),
+        codecs.TreeCodec({"a": codecs.Repeat(
+            lambda d: codecs.Uniform(3), 2)}),
+    ])
+    prog = codecs.compile(codec, donate=False)
+    x = (jnp.asarray(rng.integers(0, 64, lanes), jnp.int32),
+         jnp.asarray(rng.integers(0, 5, lanes), jnp.int32),
+         jnp.asarray(rng.integers(0, 16, (lanes, 2, 3)), jnp.int32),
+         {"a": jnp.asarray(rng.integers(0, 8, (lanes, 2)), jnp.int32)})
+    _assert_parity(codec, prog, _fresh(lanes), x)
+
+
+def test_chained_parity(small_cfg, small_params):
+    lanes, n = 3, 4
+    rng = np.random.default_rng(10)
+    data = jnp.asarray(rng.integers(0, 2, (n, lanes, small_cfg.input_dim)),
+                       jnp.int32)
+    chained = codecs.Chained(
+        vae_lib.make_bb_codec(small_params, small_cfg), n)
+    prog = codecs.compile(chained, donate=False)
+    stack = _fresh(lanes, cap=2048, chunks=64)
+    _assert_parity(chained, prog, stack, data)
+
+
+def _toy_bitswap(lanes, seed=7, z_dims=(4, 3, 2), obs_d=10, bits=6):
+    """A 3-layer Markov hierarchy over Gaussian grid leaves (mirrors
+    tests/test_codecs.py's toy, used here for compiled parity)."""
+    rng = np.random.default_rng(seed)
+    dims = (obs_d,) + tuple(z_dims)
+
+    def gauss_repeat(mu, sigma_val):
+        return codecs.Repeat(
+            lambda d: codecs.DiscretizedGaussian(
+                mu[:, d], jnp.full_like(mu[:, d], sigma_val), bits),
+            mu.shape[1])
+
+    layers = []
+    for level in range(1, len(dims)):
+        w_post = jnp.asarray(
+            rng.normal(0, 0.5, (dims[level - 1], dims[level])), jnp.float32)
+        w_lik = jnp.asarray(
+            rng.normal(0, 0.8, (dims[level], dims[level - 1])), jnp.float32)
+        bottom = level == 1
+
+        def posterior(ctx, _w=w_post, _b=bottom, _s=0.5):
+            vals = ctx.astype(jnp.float32) if _b \
+                else discretize.bucket_centre(ctx, bits)
+            return gauss_repeat(jnp.tanh(vals @ _w), _s)
+
+        def likelihood(z, _w=w_lik, _b=bottom):
+            out = jnp.tanh(discretize.bucket_centre(z, bits) @ _w)
+            if _b:
+                return codecs.Repeat(
+                    lambda d: codecs.Bernoulli(out[:, d] * 2.0), obs_d)
+            return gauss_repeat(out, 0.7)
+
+        layers.append((posterior, likelihood))
+
+    prior = codecs.Repeat(lambda d: codecs.Uniform(bits), z_dims[-1])
+    return codecs.BitSwap(prior=prior, layers=tuple(layers)), obs_d
+
+
+def test_bitswap_three_layer_parity():
+    lanes = 4
+    codec, obs_d = _toy_bitswap(lanes)
+    prog = codecs.compile(codec, donate=False)
+    rng = np.random.default_rng(11)
+    s = jnp.asarray(rng.integers(0, 2, (lanes, obs_d)), jnp.int32)
+    out = _assert_parity(codec, prog, _fresh(lanes, cap=1024, chunks=64),
+                         s)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(s))
+
+
+# ---------------------------------------------------------------------------
+# container / stream byte-parity + cross-decode
+# ---------------------------------------------------------------------------
+
+def test_container_blob_byte_identical(small_cfg, small_params):
+    lanes, n = 4, 3
+    rng = np.random.default_rng(12)
+    data = jnp.asarray(rng.integers(0, 2, (n, lanes, small_cfg.input_dim)),
+                       jnp.int32)
+    chained = codecs.Chained(
+        vae_lib.make_bb_codec(small_params, small_cfg), n)
+    prog = codecs.compile(chained)      # default donate=True: the
+    # container never reuses a pushed stack, so donation is safe here.
+    blob_i = codecs.compress(chained, data, lanes=lanes, seed=0)
+    blob_c = codecs.compress(prog, data, lanes=lanes, seed=0)
+    assert blob_i == blob_c
+    # cross-decode: compiled decodes interpreted bytes and vice versa
+    np.testing.assert_array_equal(
+        np.asarray(codecs.decompress(prog, blob_i)), np.asarray(data))
+    np.testing.assert_array_equal(
+        np.asarray(codecs.decompress(chained, blob_c)), np.asarray(data))
+
+
+def test_stream_compiled_byte_identical(small_cfg, small_params):
+    lanes, n = 3, 7
+    rng = np.random.default_rng(13)
+    data = jnp.asarray(rng.integers(0, 2, (n, lanes, small_cfg.input_dim)),
+                       jnp.int32)
+    codec = vae_lib.make_bb_codec(small_params, small_cfg)
+    wire_i = stream.encode_stream(codec, data, lanes=lanes,
+                                  block_symbols=3, seed=1, init_chunks=32)
+    wire_c = stream.encode_stream(codec, data, lanes=lanes,
+                                  block_symbols=3, seed=1, init_chunks=32,
+                                  compile=True)
+    assert wire_i == wire_c
+    out = stream.decode_stream(codec, wire_c, compile=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(data))
+
+
+# ---------------------------------------------------------------------------
+# determinism at scale (the canonical-evaluation contract)
+# ---------------------------------------------------------------------------
+
+def test_grid_roundtrip_restores_at_scale():
+    """Fused pop + eager push-back must restore the stack exactly over
+    ~50K symbols: the cross-context bit-stability the compiled path's
+    losslessness rests on (see compile.py's determinism notes)."""
+    from repro.kernels.ans import ops as ans_ops
+
+    lanes, steps, bits, prec = 256, 200, 10, 16
+    rng = np.random.default_rng(14)
+    mu = jnp.asarray(rng.normal(0, 1.5, (steps, lanes)), jnp.float32)
+    sigma = jnp.asarray(rng.uniform(0.05, 3.0, (steps, lanes)),
+                        jnp.float32)
+    stack = ans.make_stack(lanes, steps + 8, key=jax.random.PRNGKey(14))
+    stack = ans.seed_stack(stack, jax.random.PRNGKey(15), steps)
+
+    st, idx = ans_ops.pop_many_grid(stack, "gaussian", mu, sigma, steps,
+                                    bits, prec)
+    f = discretize.posterior_starts_fn(mu, sigma, bits, prec)
+    start = f(idx)
+    st_back = ans_ops.push_many(st, start[::-1], (f(idx + 1) - start)[::-1],
+                                prec)
+    _assert_stacks_equal(st_back, stack)
+
+
+# ---------------------------------------------------------------------------
+# donation
+# ---------------------------------------------------------------------------
+
+def test_donation_invalidates_input_stack(small_cfg, small_params):
+    """The documented donation contract: a donating program consumes
+    its input stack (drivers must use the returned one)."""
+    lanes, n = 2, 5
+    rep = codecs.Repeat(lambda d: codecs.Uniform(6), n)
+    prog = codecs.compile(rep)          # donate=True
+    x = jnp.asarray(np.zeros((lanes, n)), jnp.int32)
+    stack = _fresh(lanes)
+    out = prog.push(stack, x)
+    assert out.head is not None
+    with pytest.raises(RuntimeError, match="deleted"):
+        np.asarray(stack.head)
+
+
+# ---------------------------------------------------------------------------
+# CodecEngine: LRU cap + compiled program cache
+# ---------------------------------------------------------------------------
+
+def _toy_family(bits=6):
+    def make(shape):
+        n = int(np.prod(shape))
+        return codecs.Shaped(
+            codecs.Repeat(lambda d: codecs.Uniform(bits), n), tuple(shape))
+    return make
+
+
+def test_codec_engine_lru_eviction():
+    calls = []
+    base = _toy_family()
+
+    def counting(shape):
+        calls.append(shape)
+        return base(shape)
+
+    eng = CodecEngine(counting, seed=0, init_chunks=0, max_codecs=2)
+    eng.codec_for((2, 2))
+    eng.codec_for((2, 3))
+    eng.codec_for((2, 2))           # hit: most recently used now (2,2)
+    assert len(calls) == 2
+    eng.codec_for((2, 4))           # evicts (2,3)
+    assert len(calls) == 3
+    eng.codec_for((2, 2))           # still cached
+    assert len(calls) == 3
+    eng.codec_for((2, 3))           # rebuilt after eviction
+    assert len(calls) == 4
+    assert len(eng._codecs) == 2
+
+
+def test_codec_engine_lru_rejects_zero():
+    with pytest.raises(ValueError, match="max_codecs"):
+        CodecEngine(_toy_family(), max_codecs=0)
+
+
+def test_codec_engine_compiled_byte_identical():
+    rng = np.random.default_rng(15)
+    data = jnp.asarray(rng.integers(0, 64, (3, 4, 2, 3)), jnp.int32)
+    eng_i = CodecEngine(_toy_family(), seed=0, init_chunks=0)
+    eng_c = CodecEngine(_toy_family(), seed=0, init_chunks=0,
+                        compile=True)
+    blob_i = eng_i.compress(data)
+    blob_c = eng_c.compress(data)
+    assert blob_i == blob_c
+    out = eng_c.decompress(blob_i, 3, (2, 3))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(data))
+    # compiled chain programs are cached and LRU-bounded
+    assert ((2, 3), 3) in eng_c._programs
+    wire_i = eng_i.compress_stream(data, block_symbols=2)
+    wire_c = eng_c.compress_stream(data, block_symbols=2)
+    assert wire_i == wire_c
+    out2 = eng_c.decompress_stream(wire_c, (2, 3))
+    np.testing.assert_array_equal(np.asarray(out2), np.asarray(data))
+
+
+def test_codec_engine_program_cache_evicted_with_shape():
+    eng = CodecEngine(_toy_family(), seed=0, init_chunks=0,
+                      max_codecs=2, compile=True)
+    rng = np.random.default_rng(16)
+    for w in (2, 3, 4):   # three shapes through a 2-slot LRU
+        data = jnp.asarray(rng.integers(0, 64, (2, 2, 2, w)), jnp.int32)
+        eng.compress(data)
+    assert len(eng._codecs) == 2
+    assert all(key[0] in eng._codecs for key in eng._programs)

@@ -15,7 +15,7 @@ import pytest
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DOC_FILES = ["README.md", "docs/ARCHITECTURE.md", "docs/FORMATS.md",
-             "docs/API.md"]
+             "docs/API.md", "docs/PERF.md"]
 
 _FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
 _LINK = re.compile(r"(?<!!)\[[^\]]+\]\(([^)\s]+)\)")

@@ -58,6 +58,23 @@ def test_container_roundtrip_any_shape(cfg2, params2, shape):
     assert codecs.compress(chained, data, lanes=lanes, seed=0) == blob
 
 
+def test_compiled_codec_byte_identical(cfg2, params2):
+    """The HVAE-L2 workload through ``codecs.compile`` (the compiled=
+    flag) produces the exact interpreted wire and cross-decodes."""
+    shape, n, lanes = (8, 8), 2, 2
+    data = _images(shape, n, lanes, seed=3)
+    codec = hvae.make_bitswap_codec(params2, cfg2, shape)
+    prog = hvae.make_bitswap_codec(params2, cfg2, shape, compiled=True)
+    assert isinstance(prog, codecs.CompiledCodec)
+    blob_i = codecs.compress(codecs.Chained(codec, n), data, lanes=lanes,
+                             seed=0)
+    blob_c = codecs.compress(codecs.Chained(prog, n), data, lanes=lanes,
+                             seed=0)
+    assert blob_i == blob_c
+    out = codecs.decompress(codecs.Chained(prog, n), blob_i)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(data))
+
+
 @pytest.mark.parametrize("shape", [(12, 8), (8, 10)])
 def test_stream_roundtrip_any_shape(cfg2, params2, shape):
     """The same codec family through the BBX2 stream path: ragged final

@@ -138,6 +138,153 @@ def test_ans_push_kernel_then_core_pop_roundtrip():
 
 
 # ---------------------------------------------------------------------------
+# Dynamic-table pop kernel (per-step tables)
+# ---------------------------------------------------------------------------
+
+def _dyn_tables(rng, steps, lanes, alphabet, precision):
+    tabs = []
+    for _ in range(steps):
+        probs = rng.dirichlet(np.ones(alphabet), size=lanes)
+        tabs.append(np.asarray(ans.probs_to_starts(
+            jnp.asarray(probs, jnp.float32), precision)))
+    return jnp.asarray(np.stack(tabs), jnp.uint32)
+
+
+@pytest.mark.parametrize("steps,lanes,alphabet,precision", [
+    (4, 8, 4, 12),
+    (16, 64, 17, 16),
+    (9, 130, 3, 8),     # lanes not a multiple of the tile
+    (12, 128, 100, 16),
+])
+def test_ans_pop_dyn_kernel_matches_ref(steps, lanes, alphabet, precision):
+    """pop_many_dyn == sequential ans.pop_with_table against the
+    per-step tables, bit for bit."""
+    rng = np.random.default_rng(steps * 31 + lanes)
+    tables = _dyn_tables(rng, steps, lanes, alphabet, precision)
+    stack = ans.make_stack(lanes, steps + 8, key=jax.random.PRNGKey(11))
+    stack = ans.seed_stack(stack, jax.random.PRNGKey(12), steps)
+    out_k, syms_k = ans_ops.pop_many_dyn(stack, tables, precision)
+    out_r, syms_r = ans_ref.pop_many_dyn_ref(stack, tables, precision)
+    np.testing.assert_array_equal(np.asarray(syms_k), np.asarray(syms_r))
+    np.testing.assert_array_equal(np.asarray(out_k.head),
+                                  np.asarray(out_r.head))
+    np.testing.assert_array_equal(np.asarray(out_k.ptr),
+                                  np.asarray(out_r.ptr))
+    np.testing.assert_array_equal(np.asarray(out_k.underflows),
+                                  np.asarray(out_r.underflows))
+
+
+def test_ans_pop_dyn_roundtrips_dynamic_push():
+    """Dynamic push (push_many) then dynamic pop (pop_many_dyn) against
+    the same per-step tables recovers the symbols reversed (LIFO)."""
+    rng = np.random.default_rng(21)
+    steps, lanes, alphabet, precision = 10, 6, 7, 14
+    tables = _dyn_tables(rng, steps, lanes, alphabet, precision)
+    syms = jnp.asarray(rng.integers(0, alphabet, (steps, lanes)),
+                       jnp.int32)
+    tab_np = np.asarray(tables)
+    rows = np.arange(lanes)[None, :]
+    starts = jnp.asarray(
+        tab_np[np.arange(steps)[:, None], rows, np.asarray(syms)],
+        jnp.uint32)
+    freqs = jnp.asarray(
+        tab_np[np.arange(steps)[:, None], rows, np.asarray(syms) + 1],
+        jnp.uint32) - starts
+    stack = ans.make_stack(lanes, steps + 8, key=jax.random.PRNGKey(13))
+    stack = ans_ops.push_many(stack, starts, freqs, precision)
+    # pop order reverses push order, so tables are consumed flipped
+    out, decoded = ans_ops.pop_many_dyn(stack, tables[::-1], precision)
+    np.testing.assert_array_equal(np.asarray(decoded),
+                                  np.asarray(syms)[::-1])
+
+
+def test_ans_pop_dyn_underflow_matches_ref():
+    """Underflow edge: pops past the stack bottom count and mangle the
+    head exactly as the sequential core does."""
+    rng = np.random.default_rng(22)
+    steps, lanes, precision = 12, 6, 10
+    tables = _dyn_tables(rng, steps, lanes, 4, precision)
+    stack = ans.make_stack(lanes, 4)   # cold head, empty buffer
+    out_k, syms_k = ans_ops.pop_many_dyn(stack, tables, precision)
+    out_r, syms_r = ans_ref.pop_many_dyn_ref(stack, tables, precision)
+    np.testing.assert_array_equal(np.asarray(syms_k), np.asarray(syms_r))
+    np.testing.assert_array_equal(np.asarray(out_k.head),
+                                  np.asarray(out_r.head))
+    np.testing.assert_array_equal(np.asarray(out_k.underflows),
+                                  np.asarray(out_r.underflows))
+    assert int(jnp.sum(out_k.underflows)) > 0
+
+
+def test_ans_push_kernel_overflow_edge_matches_ref():
+    """Overflow edge: chunks dropped past capacity are counted
+    identically by the kernel path and the sequential core."""
+    rng = np.random.default_rng(23)
+    steps, lanes, precision = 24, 6, 12
+    starts, freqs = _rand_symbol_stream(rng, steps, lanes, 4, precision)
+    stack = ans.make_stack(lanes, 4, key=jax.random.PRNGKey(24))  # tiny
+    out_k = ans_ops.push_many(stack, starts, freqs, precision)
+    out_r = ans_ref.push_many_ref(stack, starts, freqs, precision)
+    np.testing.assert_array_equal(np.asarray(out_k.head),
+                                  np.asarray(out_r.head))
+    np.testing.assert_array_equal(np.asarray(out_k.overflows),
+                                  np.asarray(out_r.overflows))
+    assert int(jnp.sum(out_k.overflows)) > 0
+
+
+# ---------------------------------------------------------------------------
+# Fused bucketize+pop grid kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["gaussian", "logistic", "uniform"])
+@pytest.mark.parametrize("steps,lanes,lat_bits,precision", [
+    (5, 8, 8, 16),
+    (16, 64, 10, 16),
+    (7, 130, 6, 12),    # lanes not a multiple of the tile
+])
+def test_ans_pop_grid_kernel_matches_ref(kind, steps, lanes, lat_bits,
+                                         precision):
+    """pop_many_grid == sequential per-position leaf pops (the fused
+    CDF-inversion-in-renorm-chain kernel vs the core library)."""
+    rng = np.random.default_rng(steps * 13 + lanes + lat_bits)
+    mu = jnp.asarray(rng.normal(0, 1.2, (steps, lanes)), jnp.float32)
+    sigma = jnp.asarray(rng.uniform(0.05, 2.0, (steps, lanes)),
+                        jnp.float32)
+    stack = ans.make_stack(lanes, steps + 8, key=jax.random.PRNGKey(31))
+    stack = ans.seed_stack(stack, jax.random.PRNGKey(32), steps)
+    out_k, idx_k = ans_ops.pop_many_grid(stack, kind, mu, sigma, steps,
+                                         lat_bits, precision)
+    out_r, idx_r = ans_ref.pop_many_grid_ref(stack, kind, mu, sigma,
+                                             steps, lat_bits, precision)
+    np.testing.assert_array_equal(np.asarray(idx_k), np.asarray(idx_r))
+    np.testing.assert_array_equal(np.asarray(out_k.head),
+                                  np.asarray(out_r.head))
+    np.testing.assert_array_equal(np.asarray(out_k.ptr),
+                                  np.asarray(out_r.ptr))
+    np.testing.assert_array_equal(np.asarray(out_k.underflows),
+                                  np.asarray(out_r.underflows))
+
+
+def test_ans_pop_grid_underflow_matches_ref():
+    rng = np.random.default_rng(33)
+    steps, lanes, lat_bits, precision = 10, 6, 8, 16
+    mu = jnp.asarray(rng.normal(0, 1, (steps, lanes)), jnp.float32)
+    sigma = jnp.asarray(rng.uniform(0.1, 1.5, (steps, lanes)),
+                        jnp.float32)
+    stack = ans.make_stack(lanes, 4)   # cold head, empty buffer
+    out_k, idx_k = ans_ops.pop_many_grid(stack, "gaussian", mu, sigma,
+                                         steps, lat_bits, precision)
+    out_r, idx_r = ans_ref.pop_many_grid_ref(stack, "gaussian", mu,
+                                             sigma, steps, lat_bits,
+                                             precision)
+    np.testing.assert_array_equal(np.asarray(idx_k), np.asarray(idx_r))
+    np.testing.assert_array_equal(np.asarray(out_k.head),
+                                  np.asarray(out_r.head))
+    np.testing.assert_array_equal(np.asarray(out_k.underflows),
+                                  np.asarray(out_r.underflows))
+    assert int(jnp.sum(out_k.underflows)) > 0
+
+
+# ---------------------------------------------------------------------------
 # Bucketize kernel
 # ---------------------------------------------------------------------------
 

@@ -10,7 +10,7 @@ import pytest
 
 from repro import codecs
 from repro.configs import base as cfg_base
-from repro.core import ans, bbans, lm_codec
+from repro.core import ans, lm_codec
 from repro.models import latent_lm, transformer
 from repro.serve.engine import Engine
 
@@ -102,13 +102,16 @@ def test_latent_lm_bits_back_roundtrip():
     lanes, n, n_seqs = 2, 10, 3
     data = jnp.asarray(rng.integers(0, bb.vocab, (n_seqs, lanes, n)),
                        jnp.int32)
-    codec = latent_lm.make_codec(params, cfg, seq_len=n)
+    chained = codecs.Chained(
+        latent_lm.make_bb_codec(params, cfg, seq_len=n), n_seqs,
+        scan=False)
     stack = ans.make_stack(lanes, 4096, key=jax.random.PRNGKey(6))
     stack = ans.seed_stack(stack, jax.random.PRNGKey(7), 64)
 
-    stack2 = bbans.append_batch(codec, stack, data, scan=False)
+    stack2 = chained.push(stack, data)
     assert int(jnp.sum(stack2.underflows)) == 0
-    stack3, out = bbans.pop_batch(codec, stack2, n_seqs, scan=False)
+    assert int(jnp.sum(stack2.overflows)) == 0
+    stack3, out = chained.pop(stack2)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(data))
     np.testing.assert_array_equal(np.asarray(stack3.head),
                                   np.asarray(stack.head))
