@@ -3,9 +3,6 @@ compressors, timing."""
 
 from __future__ import annotations
 
-import bz2
-import gzip
-import lzma
 import time
 from typing import Callable, Dict, Tuple
 
@@ -13,11 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-try:
-    import zstandard as zstd
-except ImportError:  # pragma: no cover
-    zstd = None
-
+from repro.data import baselines as baseline_lib
 from repro.data import synthetic_mnist
 from repro.models import vae as vae_lib
 from repro.optim import adamw
@@ -60,20 +53,12 @@ def train_vae(cfg: vae_lib.VAEConfig, *, steps: int = 1500,
     return params, float(np.mean(elbos))
 
 
-def baseline_rates(images: np.ndarray, binary: bool) -> Dict[str, float]:
-    """bits/dim for generic compressors on the (bit-packed) test set."""
-    n_dims = images.size
-    payload = np.packbits(images.astype(np.uint8)).tobytes() if binary \
-        else images.astype(np.uint8).tobytes()
-    out = {
-        "gzip": len(gzip.compress(payload, 9)) * 8 / n_dims,
-        "bz2": len(bz2.compress(payload, 9)) * 8 / n_dims,
-        "lzma": len(lzma.compress(payload, preset=6)) * 8 / n_dims,
-    }
-    if zstd is not None:
-        out["zstd"] = len(zstd.ZstdCompressor(level=19).compress(payload)
-                          ) * 8 / n_dims
-    return out
+def baseline_rates(images: np.ndarray, binary: bool,
+                   **kwargs) -> Dict[str, float]:
+    """bits/dim for generic compressors on the (bit-packed) test set
+    (delegates to ``repro.data.baselines``; ``with_png=True`` adds the
+    per-image PNG rows)."""
+    return baseline_lib.baseline_rates(images, binary, **kwargs)
 
 
 def timer(fn: Callable, *args, repeats: int = 3) -> Tuple[float, object]:

@@ -36,8 +36,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (ablation_cleanbits, ans_throughput,
-                            codec_compile, fig3_chain, hvae_rate,
-                            latent_lm_gain, lm_compression,
+                            codec_compile, dataset_rate, fig3_chain,
+                            hvae_rate, latent_lm_gain, lm_compression,
                             stream_throughput, table2_rates,
                             table3_predict)
 
@@ -67,6 +67,9 @@ def main() -> None:
             block=128 if q else 512, n_images=64 if q else 256,
             vae_lanes=16 if q else 32,
             train_steps=300 if q else 1500),
+        "dataset_rate": lambda: dataset_rate.run(
+            train_steps=300 if q else 1500,
+            n_images=256 if q else 2048),
     }
     # historical/module aliases for --only (e.g. CI's stream_throughput)
     aliases = {"stream_throughput": "stream", "table2_rates": "table2",

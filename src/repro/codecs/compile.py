@@ -92,6 +92,97 @@ _POP_GRID = _coder_jits(
 
 
 # ---------------------------------------------------------------------------
+# mesh-sharded coder programs (lane-axis SPMD; see docs/SCALING.md)
+# ---------------------------------------------------------------------------
+# Under ``sharding.api.use_lane_mesh``, the fused nodes below swap the
+# shared jits for shard_map-wrapped twins: one SPMD program per
+# direction, the ANSStack lane axis (and every per-lane operand axis)
+# split across the mesh. Integer coder ops are exact in any
+# partitioning context, so the wire bytes are identical to the
+# meshless path - the PR-4 determinism contract extends to devices.
+# Programs are cached per mesh (the compiled executables are keyed by
+# the device set, so two meshes over the same devices share nothing).
+
+def _stack_spec(axis: str) -> ans.ANSStack:
+    from jax.sharding import PartitionSpec as P
+    return ans.ANSStack(head=P(axis), buf=P(axis, None), ptr=P(axis),
+                        underflows=P(axis), overflows=P(axis))
+
+
+def _mesh_coder_programs(mesh) -> Dict[str, Any]:
+    """The shard_map'd twins of the three fused coder entry points."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    (axis,) = mesh.axis_names
+    st = _stack_spec(axis)
+    lane1 = P(None, axis)          # [steps, lanes]
+
+    def push(stack, starts, freqs, *, precision, interpret=True):
+        return shard_map(
+            lambda s, a, f: ans_ops.push_many(
+                s, a, f, precision=precision, interpret=interpret),
+            mesh=mesh, in_specs=(st, lane1, lane1), out_specs=st,
+            check_rep=False)(stack, starts, freqs)
+
+    def pop_dyn(stack, tables, *, precision, interpret=True):
+        return shard_map(
+            lambda s, t: ans_ops.pop_many_dyn(
+                s, t, precision=precision, interpret=interpret),
+            mesh=mesh, in_specs=(st, P(None, axis, None)),
+            out_specs=(st, lane1), check_rep=False)(stack, tables)
+
+    def pop_grid(stack, *, mu, sigma, kind, steps, lat_bits, precision,
+                 interpret=True):
+        spec = lane1 if jnp.ndim(mu) == 2 else P()
+        return shard_map(
+            lambda s, m, g: ans_ops.pop_many_grid(
+                s, kind, m, g, steps, lat_bits, precision=precision,
+                interpret=interpret),
+            mesh=mesh, in_specs=(st, spec, spec),
+            out_specs=(st, lane1), check_rep=False)(stack, mu, sigma)
+
+    return {
+        "push": _coder_jits(push, ("precision", "interpret")),
+        "pop_dyn": _coder_jits(pop_dyn, ("precision", "interpret")),
+        "pop_grid": _coder_jits(
+            pop_grid,
+            ("kind", "steps", "lat_bits", "precision", "interpret")),
+    }
+
+
+#: program cache keyed by mesh: Mesh is hashable on (devices, axis
+#: names), exactly the identity of the lowered SPMD executables.
+_MESH_PROGRAMS: Dict[Any, Dict[str, Any]] = {}
+
+
+def coder_programs(mesh=None) -> Dict[str, Any]:
+    """The active coder programs: shared jits, or the ``mesh``-sharded
+    twins (built once per mesh and cached).
+
+    Example::
+
+        progs = coder_programs(sharding.lane_mesh())
+        stack = progs["push"][True](stack, starts, freqs, precision=16)
+    """
+    if mesh is None:
+        return {"push": _PUSH_MANY, "pop_dyn": _POP_DYN,
+                "pop_grid": _POP_GRID}
+    if mesh not in _MESH_PROGRAMS:
+        if len(mesh.axis_names) != 1:
+            raise ValueError(
+                f"codecs.compile: lane meshes are 1-D, got axes "
+                f"{mesh.axis_names} (build one with sharding.lane_mesh)")
+        _MESH_PROGRAMS[mesh] = _mesh_coder_programs(mesh)
+    return _MESH_PROGRAMS[mesh]
+
+
+def _active_programs() -> Dict[str, Any]:
+    from repro.sharding import api as shard_api
+    return coder_programs(shard_api.current_lane_mesh())
+
+
+# ---------------------------------------------------------------------------
 # vectorized Repeat nodes (the fused leaves of a lowered tree)
 # ---------------------------------------------------------------------------
 
@@ -136,13 +227,13 @@ class _GridRepeat(Codec):
             f = self._starts_fn()
             start = f(idx)
             freq = f(idx + 1) - start
-        return _PUSH_MANY[self.donate](stack, start[::-1], freq[::-1],
-                                       precision=self.precision)
+        return _active_programs()["push"][self.donate](
+            stack, start[::-1], freq[::-1], precision=self.precision)
 
     def pop(self, stack: ans.ANSStack):
         mu = self.mu if self.mu is not None else jnp.zeros(())
         sigma = self.sigma if self.sigma is not None else jnp.zeros(())
-        stack, syms = _POP_GRID[self.donate](
+        stack, syms = _active_programs()["pop_grid"][self.donate](
             stack, mu=mu, sigma=sigma, kind=self.kind, steps=self.n,
             lat_bits=self.bits, precision=self.precision)
         return stack, syms.T.astype(self.out_dtype)
@@ -166,14 +257,14 @@ class _TableRepeat(Codec):
         sym = x.astype(jnp.int32).T[..., None]            # [n, lanes, 1]
         start = jnp.take_along_axis(self.tables, sym, axis=2)[..., 0]
         nxt = jnp.take_along_axis(self.tables, sym + 1, axis=2)[..., 0]
-        return _PUSH_MANY[self.donate](
+        return _active_programs()["push"][self.donate](
             stack, start[::-1].astype(jnp.uint32),
             (nxt - start)[::-1].astype(jnp.uint32),
             precision=self.precision)
 
     def pop(self, stack: ans.ANSStack):
-        stack, syms = _POP_DYN[self.donate](stack, self.tables,
-                                            precision=self.precision)
+        stack, syms = _active_programs()["pop_dyn"][self.donate](
+            stack, self.tables, precision=self.precision)
         return stack, syms.T.astype(self.out_dtype)
 
 

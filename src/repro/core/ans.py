@@ -266,6 +266,54 @@ def unflatten(msg: jnp.ndarray, lengths: jnp.ndarray,
                     overflows=jnp.zeros((lanes,), dtype=jnp.int32))
 
 
+def split_lanes(stack: ANSStack, n_shards: int) -> Tuple[ANSStack, ...]:
+    """Cut the lane axis into ``n_shards`` contiguous, equal shards.
+
+    Lanes are fully independent coders, so each shard is a complete
+    ``ANSStack`` in its own right: coding on a shard then merging is
+    bit-identical to coding the same lanes in the full stack - the
+    invariant that makes ``repro.shard_codec``'s per-device shards
+    (which split the *data* lane axis and code on per-shard stacks)
+    byte-compatible with whole-stack coding, asserted by
+    ``tests/test_shard_codec.py``. This is the stack-level counterpart
+    of ``shard_codec.split_lane_tree``, for callers holding a live
+    stack; ``merge_lanes`` is the exact inverse.
+
+    Example::
+
+        shards = split_lanes(stack, 4)      # 4 stacks of lanes/4 lanes
+        assert merge_lanes(shards).lanes == stack.lanes
+    """
+    if n_shards < 1 or stack.lanes % n_shards:
+        raise ValueError(
+            f"ans.split_lanes: {stack.lanes} lanes do not divide into "
+            f"{n_shards} equal shards")
+    per = stack.lanes // n_shards
+    return tuple(
+        jax.tree_util.tree_map(lambda a: a[s * per:(s + 1) * per], stack)
+        for s in range(n_shards))
+
+
+def merge_lanes(stacks) -> ANSStack:
+    """Concatenate per-shard stacks back into one stack (inverse of
+    ``split_lanes``). All shards must share capacity.
+
+    Example::
+
+        full = merge_lanes(split_lanes(stack, 4))
+        assert (full.head == stack.head).all()
+    """
+    stacks = list(stacks)
+    if not stacks:
+        raise ValueError("ans.merge_lanes: no shards")
+    caps = {s.capacity for s in stacks}
+    if len(caps) != 1:
+        raise ValueError(
+            f"ans.merge_lanes: shards disagree on capacity ({caps})")
+    return jax.tree_util.tree_map(
+        lambda *ls: jnp.concatenate(ls, axis=0), *stacks)
+
+
 def check_clean(stack: ANSStack, context: str = "ANS") -> ANSStack:
     """Raise if the stack ever under- or overflowed; returns it unchanged.
 

@@ -1,0 +1,13 @@
+"""``repro.serve`` - the serving engines.
+
+``Engine`` is the LM service (generation + token compression),
+``CodecEngine`` the shape-polymorphic codec service, and
+``ShardedCodecEngine`` its lane-sharded, multi-device form (one-shot
+SPMD requests + BBX3 dataset corpora - docs/SCALING.md). Runnable
+examples for every exported name: docs/API.md.
+"""
+
+from repro.serve.engine import (CodecEngine, Engine,  # noqa: F401
+                                ShardedCodecEngine)
+
+__all__ = ["Engine", "CodecEngine", "ShardedCodecEngine"]

@@ -6,7 +6,7 @@ The engine is the jit boundary for serving: ``prefill_step`` and
 these for the decode/prefill cells). State is donated across ``serve_step``
 calls so KV caches update in place.
 
-Two services live here:
+Three services live here:
 
   * ``Engine``      - the LM service (generation + token-stream
     compression, one-shot and BBX2 streaming).
@@ -14,6 +14,11 @@ Two services live here:
     ``shape -> Codec`` family (e.g. the fully convolutional HVAE via
     ``models.hvae.codec_family``) served through the same one-shot
     container and BBX2 stream paths, with per-shape codec memoization.
+  * ``ShardedCodecEngine`` - ``CodecEngine`` across a device mesh:
+    one-shot requests run their compiled coder programs SPMD over the
+    ANS lane axis (byte-identical wire to the single-device engine),
+    and whole datasets shard into per-device BBX2 segments gathered as
+    one BBX3 corpus (``repro.shard_codec``; docs/SCALING.md).
 """
 
 from __future__ import annotations
@@ -169,7 +174,124 @@ class CodecEngine:
                                     compile=self._compile)
 
 
+class ShardedCodecEngine:
+    """Lane-sharded compression service over any codec family.
+
+    Wraps a ``CodecEngine`` with a 1-D device mesh over the ANS lane
+    axis (``sharding.lane_mesh``), adding data parallelism in both
+    request shapes while keeping wire bytes *identical* to the
+    single-device engine (the determinism contract across devices;
+    proved in ``tests/test_shard_codec.py`` under 8 simulated
+    devices):
+
+      * ``compress``/``decompress`` - one-shot BBX1 requests: the
+        compiled codec's fused integer coder programs run SPMD over
+        the mesh via ``shard_map`` (``sharding.use_lane_mesh``); the
+        request's lane count must be a multiple of the mesh size
+        (checked up front).
+      * ``compress_dataset``/``decompress_dataset``/
+        ``decompress_shard`` - dataset-scale BBX3 corpora: the lane
+        axis splits into ``n_shards`` independent BBX2 segments, one
+        per device (``repro.shard_codec``), so any shard decodes
+        alone.
+
+    Example (HVAE image service across all local devices)::
+
+        eng = ShardedCodecEngine(hvae.codec_family(params, cfg), seed=0)
+        blob = eng.compress(batch)               # SPMD; bytes == 1-dev
+        corp = eng.compress_dataset(batch)       # BBX3, lane-sharded
+        out  = eng.decompress_dataset(corp, (H, W))
+    """
+
+    def __init__(self, make_codec, *, mesh=None,
+                 n_shards: Optional[int] = None, seed: Optional[int] = 0,
+                 init_chunks: int = 32, max_codecs: int = 32,
+                 compile: bool = True):
+        from repro.sharding import api as shard_api
+        self._shard_api = shard_api
+        self.mesh = mesh if mesh is not None \
+            else shard_api.lane_mesh(min(n_shards, len(jax.devices()))
+                                     if n_shards is not None else None)
+        self.n_shards = int(n_shards if n_shards is not None
+                            else self.mesh.devices.size)
+        if self.n_shards < 1:
+            raise ValueError("ShardedCodecEngine: n_shards must be >= 1")
+        self._inner = CodecEngine(make_codec, seed=seed,
+                                  init_chunks=init_chunks,
+                                  max_codecs=max_codecs, compile=compile)
+        self._seed = seed
+        self._init_chunks = init_chunks
+        self._compile = compile
+
+    # -- one-shot path (SPMD coder programs; BBX1 wire) ---------------------
+
+    def _check_lanes(self, lanes: int) -> None:
+        mesh_size = int(self.mesh.devices.size)
+        if lanes % mesh_size:
+            raise ValueError(
+                f"ShardedCodecEngine: {lanes} lanes must be a multiple "
+                f"of the lane-mesh size {mesh_size} (size the batch's "
+                "lane axis to the device count, or build the engine "
+                "with a smaller mesh via n_shards=)")
+
+    def compress(self, data, **kwargs) -> bytes:
+        """One-shot compress of ``[n, lanes, *shape]`` data; lanes are
+        split across the mesh inside the fused coder programs. Bytes
+        are identical to ``CodecEngine.compress``."""
+        self._check_lanes(jax.tree_util.tree_leaves(data)[0].shape[1])
+        with self._shard_api.use_lane_mesh(self.mesh):
+            return self._inner.compress(data, **kwargs)
+
+    def decompress(self, blob: bytes, n: int, shape: Sequence[int]):
+        """SPMD decode of a ``compress`` blob (bit-exact)."""
+        self._check_lanes(codecs.blob_info(blob)["lanes"])
+        with self._shard_api.use_lane_mesh(self.mesh):
+            return self._inner.decompress(blob, n, shape)
+
+    # -- dataset path (per-shard segments; BBX3 wire) -----------------------
+
+    def compress_dataset(self, data, *, block_symbols: int = 8,
+                         **kwargs) -> bytes:
+        """Compress ``[n, lanes, *shape]`` data (or an iterable of such
+        chunks) into a BBX3 corpus: ``n_shards`` independently
+        decodable per-device BBX2 segments plus an index."""
+        from repro import shard_codec
+        first, data = shard_codec.peek_chunks(data)
+        codec = self._inner.codec_for(self._inner._shape_of(first))
+        kwargs.setdefault("seed", self._seed)
+        kwargs.setdefault("init_chunks", self._init_chunks)
+        kwargs.setdefault("compile", self._compile)
+        return shard_codec.compress_dataset(
+            codec, data, n_shards=self.n_shards,
+            block_symbols=block_symbols, **kwargs)
+
+    def decompress_dataset(self, blob: bytes, shape: Sequence[int]):
+        """Decode a whole BBX3 corpus back to ``[n, lanes, *shape]``."""
+        from repro import shard_codec
+        return shard_codec.decompress_dataset(
+            self._inner.codec_for(shape), blob, compile=self._compile)
+
+    def decompress_shard(self, blob: bytes, shard: int,
+                         shape: Sequence[int]):
+        """Decode ONE shard's segment - the distributed-decode unit."""
+        from repro import shard_codec
+        return shard_codec.decompress_shard(
+            self._inner.codec_for(shape), blob, shard,
+            compile=self._compile)
+
+
 class Engine:
+    """The LM serving engine: sessionful generation plus the token
+    compression service (one-shot BBX1, streamed BBX2, dynamic-batched
+    multi-request).
+
+    Example::
+
+        eng = Engine(params, cfg, max_len=128)
+        toks = eng.generate(batch, n_tokens=16)      # greedy continue
+        blob = eng.compress(token_streams)           # lossless LM-ANS
+    """
+
     def __init__(self, params, cfg, max_len: int = 2048,
                  jit: bool = True):
         self.params = params

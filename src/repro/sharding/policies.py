@@ -102,7 +102,13 @@ def _param_spec(path: str, ndim: int, stacked: bool) -> P:
 
 
 def param_pspecs(params: Any) -> Any:
-    """PartitionSpec pytree for a parameter pytree."""
+    """PartitionSpec pytree for a parameter pytree.
+
+    Example::
+
+        specs = param_pspecs(jax.eval_shape(init_fn))
+        shardings = to_named(mesh, specs, jax.eval_shape(init_fn))
+    """
 
     def one(path_tuple, leaf):
         names = [str(getattr(k, "key", getattr(k, "idx", k)))
@@ -125,7 +131,17 @@ def _drop_second_last(spec: P) -> P:
 
 
 def opt_state_pspecs(opt_state: Any, params: Any, param_specs: Any) -> Any:
-    """Shard optimizer state congruently with the params."""
+    """Shard optimizer state congruently with the params.
+
+    AdamW moments take the parameter spec verbatim; Adafactor row/col
+    statistics take the reduced specs (last / second-to-last axis
+    dropped).
+
+    Example::
+
+        ospecs = opt_state_pspecs(opt.init(params), params,
+                                  param_pspecs(params))
+    """
     from repro.optim.adafactor import AdafactorState
     from repro.optim.adamw import AdamWState
     if isinstance(opt_state, AdamWState):
@@ -145,7 +161,12 @@ def opt_state_pspecs(opt_state: Any, params: Any, param_specs: Any) -> Any:
 
 
 def batch_pspecs(batch_shapes: Any) -> Any:
-    """Batch inputs: leading axis data-parallel, rest replicated."""
+    """Batch inputs: leading axis data-parallel, rest replicated.
+
+    Example::
+
+        in_sh = to_named(mesh, batch_pspecs(batch_shapes), batch_shapes)
+    """
     return jax.tree_util.tree_map(
         lambda leaf: P(FSDP, *(None,) * (len(leaf.shape) - 1)),
         batch_shapes)
@@ -176,7 +197,12 @@ def decode_state_pspecs(state_shapes: Any) -> Any:
 
 def drop_fsdp(spec_tree: Any) -> Any:
     """Param specs with the FSDP (data) axes removed - the target layout
-    for the regather-once optimization (TP-sharded, data-replicated)."""
+    for the regather-once optimization (TP-sharded, data-replicated).
+
+    Example::
+
+        serving_specs = drop_fsdp(param_pspecs(params))
+    """
     fsdp_axes = set(FSDP)
 
     def fix(spec: P) -> P:

@@ -14,11 +14,15 @@ lane axis of one ``ANSStack`` (``batcher``).
     xs2 = stream.decode_stream(codec, wire)             # full decode
     tail = stream.decode_from_offset(codec, wire, off)  # resume
 
-Runnable examples for every exported name: docs/API.md; the BBX2 byte
-layout: docs/FORMATS.md.
+Dataset-scale corpora (``repro.shard_codec``) gather per-shard BBX2
+segments into one ``BBX3`` blob; ``scan_corpus``/``corpus_segment``
+seek into it by shard index without touching other shards' bytes.
+
+Runnable examples for every exported name: docs/API.md; the BBX2/BBX3
+byte layouts: docs/FORMATS.md; lane sharding: docs/SCALING.md.
 """
 
-from repro.stream import format  # noqa: F401  (the BBX2 wire format)
+from repro.stream import format  # noqa: F401  (BBX2 + BBX3 wire formats)
 from repro.stream.coder import (BlockChain, KernelTableBlock,  # noqa: F401
                                 StreamDecoder, StreamEncoder,
                                 decode_from_offset, decode_stream,
@@ -26,6 +30,8 @@ from repro.stream.coder import (BlockChain, KernelTableBlock,  # noqa: F401
 from repro.stream.batcher import (MaskedBlockCodec,  # noqa: F401
                                   SteppedMaskedBlock, StreamBatcher,
                                   decode_batched)
+from repro.stream.format import (corpus_segment, encode_corpus,  # noqa: F401
+                                 scan_corpus)
 
 __all__ = [
     "format",
@@ -34,4 +40,5 @@ __all__ = [
     "encode_stream", "decode_stream", "decode_from_offset",
     "MaskedBlockCodec", "SteppedMaskedBlock", "StreamBatcher",
     "decode_batched",
+    "encode_corpus", "scan_corpus", "corpus_segment",
 ]

@@ -1,4 +1,5 @@
-"""``BBX2`` - the chunked streaming wire format.
+"""``BBX2`` - the chunked streaming wire format - and ``BBX3``, the
+sharded corpus container framed on top of it.
 
 A BBX2 stream is a framed sequence of *independent* BBX1-style blocks:
 each block carries a complete flattened ``ANSStack`` message (per-lane
@@ -40,16 +41,42 @@ Framing is byte-precise: ``scan`` recovers every block boundary from
 the length fields alone, so a decoder can seek to any block offset and
 resume without touching earlier payload bytes.
 
-The canonical spec (field tables for BBX1 + BBX2, invariants, and a
-worked scan example) is docs/FORMATS.md; this docstring is the
-implementation-side summary.
+A ``BBX3`` corpus is the dataset-scale container produced by
+``repro.shard_codec``: a 16-byte corpus header, an up-front index of
+``n_shards`` fixed-size entries, then ``n_shards`` complete BBX2
+streams ("segments") concatenated. Each segment carries one lane
+shard's blocks, so any shard decodes independently of every other -
+the unit of data-parallel decode is the segment, and a reader seeks
+straight to shard ``s`` via the index without touching other shards'
+bytes:
+
+    Corpus header (16 bytes)
+    offset  size    field
+    0       4       magic  b"BBX3"
+    4       1       version (=1)
+    5       1       precision (informational)
+    6       2       flags (reserved, 0)
+    8       4       n_shards (u32)
+    12      4       lanes_per_shard (u32)
+
+    Index (n_shards entries, 24 bytes each)
+    0       8       segment byte offset, relative to index end (u64)
+    8       8       segment byte length (u64)
+    16      8       n_symbols coded by the segment (u64)
+
+    Segments: n_shards complete BBX2 streams, concatenated.
+
+The canonical spec (field tables for BBX1 + BBX2 + BBX3, invariants,
+and a worked scan example) is docs/FORMATS.md; this docstring is the
+implementation-side summary. The lane-sharding execution model that
+writes BBX3 is docs/SCALING.md.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import struct
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -67,6 +94,14 @@ _TRAILER = struct.Struct("<HHIQ")
 HEADER_SIZE = _HEADER.size     # 16
 BLOCK_HEADER_SIZE = _BLOCK.size   # 12
 TRAILER_SIZE = _TRAILER.size   # 16
+
+CORPUS_MAGIC = b"BBX3"
+CORPUS_VERSION = 1
+_CORPUS_HEADER = struct.Struct("<4sBBHII")
+_CORPUS_ENTRY = struct.Struct("<QQQ")
+
+CORPUS_HEADER_SIZE = _CORPUS_HEADER.size   # 16
+CORPUS_ENTRY_SIZE = _CORPUS_ENTRY.size     # 24
 
 
 @dataclasses.dataclass(frozen=True)
@@ -193,3 +228,101 @@ def scan(blob: bytes) -> Tuple[StreamHeader, List[int], Optional[Trailer]]:
         offsets.append(off)
         off = new_off
     return header, offsets, trailer
+
+
+# ---------------------------------------------------------------------------
+# BBX3 - the sharded corpus container
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CorpusHeader:
+    n_shards: int
+    lanes_per_shard: int
+    precision: int
+    version: int = CORPUS_VERSION
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardEntry:
+    """One index row: where shard ``s``'s BBX2 segment lives.
+
+    ``offset`` is relative to the end of the index (the first segment
+    byte); ``scan_corpus`` returns entries rebased to absolute blob
+    offsets, so ``blob[e.offset:e.offset + e.length]`` is the segment.
+    """
+    offset: int
+    length: int
+    n_symbols: int
+
+
+def encode_corpus(segments: Sequence[bytes], n_symbols: Sequence[int],
+                  lanes_per_shard: int,
+                  precision: int = 16) -> bytes:
+    """Frame per-shard BBX2 segments as one BBX3 corpus blob.
+
+    ``segments[s]`` must be a complete BBX2 stream over
+    ``lanes_per_shard`` lanes coding ``n_symbols[s]`` datapoints.
+    """
+    if len(segments) != len(n_symbols) or not segments:
+        raise ValueError("corpus: need one n_symbols per segment (>= 1)")
+    header = _CORPUS_HEADER.pack(CORPUS_MAGIC, CORPUS_VERSION, precision,
+                                 0, len(segments), lanes_per_shard)
+    entries, off = [], 0
+    for seg, n in zip(segments, n_symbols):
+        entries.append(_CORPUS_ENTRY.pack(off, len(seg), n))
+        off += len(seg)
+    return b"".join([header, *entries, *segments])
+
+
+def scan_corpus(blob: bytes) -> Tuple[CorpusHeader, List[ShardEntry]]:
+    """Parse a BBX3 corpus: (header, index with absolute offsets).
+
+    Touches only the header + index bytes - seeking to one shard of a
+    dataset-scale corpus never reads the other shards' payload.
+
+    Example::
+
+        header, entries = scan_corpus(blob)
+        seg0 = blob[entries[0].offset:entries[0].offset
+                    + entries[0].length]       # a complete BBX2 stream
+    """
+    if len(blob) < CORPUS_HEADER_SIZE:
+        raise ValueError("corpus: truncated (no header)")
+    magic, version, precision, _flags, n_shards, lanes = \
+        _CORPUS_HEADER.unpack_from(blob, 0)
+    if magic != CORPUS_MAGIC:
+        raise ValueError(
+            f"corpus: bad magic {magic!r} (not a BBX3 corpus)")
+    if version != CORPUS_VERSION:
+        raise ValueError(f"corpus: unsupported BBX3 version {version}")
+    if n_shards < 1 or lanes < 1:
+        raise ValueError("corpus: corrupt header (n_shards/lanes < 1)")
+    base = CORPUS_HEADER_SIZE + n_shards * CORPUS_ENTRY_SIZE
+    if len(blob) < base:
+        raise ValueError("corpus: truncated (index incomplete)")
+    entries: List[ShardEntry] = []
+    for s in range(n_shards):
+        off, length, n_sym = _CORPUS_ENTRY.unpack_from(
+            blob, CORPUS_HEADER_SIZE + s * CORPUS_ENTRY_SIZE)
+        if base + off + length > len(blob):
+            raise ValueError(f"corpus: truncated (shard {s} segment "
+                             "extends past the blob)")
+        entries.append(ShardEntry(base + off, length, n_sym))
+    return CorpusHeader(n_shards=n_shards, lanes_per_shard=lanes,
+                        precision=precision, version=version), entries
+
+
+def corpus_segment(blob: bytes, shard: int) -> bytes:
+    """Shard ``shard``'s complete BBX2 segment bytes (index-seeked).
+
+    Example::
+
+        seg = corpus_segment(blob, 3)
+        xs3 = stream.decode_stream(codec, seg)   # shard 3, independently
+    """
+    _, entries = scan_corpus(blob)
+    if not 0 <= shard < len(entries):
+        raise ValueError(
+            f"corpus: shard {shard} out of range [0, {len(entries)})")
+    e = entries[shard]
+    return blob[e.offset:e.offset + e.length]
