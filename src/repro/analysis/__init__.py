@@ -1,0 +1,48 @@
+"""``repro.analysis`` - static contract verification for codec trees.
+
+BB-ANS correctness rests on invariants the rest of the repo only checks
+by round-tripping data: every codec is an exact LIFO inverse pair
+(``pop(push(stack, x)) == (stack, x)`` bit-for-bit, Townsend, Bird &
+Barber, ICLR 2019, App. C), every frequency table sums to exactly
+``2^precision`` with no zero-mass symbol, and model-float evaluation
+stays in canonical eager form so compiled and interpreted wire bytes
+match (the determinism contract; docs/PERF.md). This package checks
+those invariants *without coding any user data*:
+
+  * ``verify_codec(codec)`` traverses a ``Codec`` tree down to its
+    leaves - materializing ``BBANS``/``BitSwap`` function children from
+    scratch-stack probes - and proves frequency-table soundness, traces
+    push/pop to jaxprs to catch float leaks and non-canonical float
+    division, mirror-checks every leaf's (start, freq) events, probes
+    the whole tree for bit-exact inversion, and bounds the worst-case
+    bits per datapoint against stack capacity. Returns a ``Report``;
+    ``check_codec`` raises ``ContractViolation`` instead.
+  * ``lint_paths(["src/"])`` / ``python -m repro.analysis.lint src/``
+    enforce the same rules at source level (AST) for code the tracer
+    cannot see: kernels, oracles, lowering code.
+
+The rule catalogue with a minimal offending example per rule (each one
+executed by ``tests/test_docs.py``): docs/ANALYSIS.md. The verifier is
+wired into ``serve.CodecEngine`` codec registration (on by default,
+``verify=False`` to opt out) and ``codecs.compile`` validates lowered
+tables unconditionally - a contract violation fails at build time
+naming the offending subtree, not as a hex mismatch three layers later.
+
+Example::
+
+    from repro import analysis, codecs
+    report = analysis.verify_codec(codecs.Uniform(8), lanes=2)
+    assert report.ok and not report.findings
+"""
+
+from repro.analysis.verifier import (ContractViolation, Finding,  # noqa: F401
+                                     Report, bits_bound, check_codec,
+                                     verify_codec)
+from repro.analysis.source_lint import (RULES, lint_paths,  # noqa: F401
+                                        lint_source)
+
+__all__ = [
+    "Finding", "Report", "ContractViolation",
+    "verify_codec", "check_codec", "bits_bound",
+    "lint_paths", "lint_source", "RULES",
+]

@@ -1,0 +1,39 @@
+"""CLI for the source-level contract lint.
+
+Usage::
+
+    python -m repro.analysis.lint src/ [more paths...]
+
+Prints one block per finding (rule, file:line, message, fix hint) and
+exits 1 if anything fired, 0 on a clean tree - suitable as a CI gate.
+"""
+
+from __future__ import annotations
+
+import sys
+
+from repro.analysis.source_lint import lint_paths
+
+
+def main(argv=None) -> int:
+    args = list(sys.argv[1:] if argv is None else argv)
+    if not args:
+        print("usage: python -m repro.analysis.lint <path> [path...]",
+              file=sys.stderr)
+        return 2
+    findings, n_files = lint_paths(args)
+    for f in findings:
+        print(f"{f.rule}: {f.path}")
+        print(f"    {f.message}")
+        if f.hint:
+            print(f"    fix: {f.hint}")
+    if findings:
+        print(f"contract lint: {len(findings)} finding(s) in {n_files} "
+              "file(s)")
+        return 1
+    print(f"contract lint: clean ({n_files} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,246 @@
+"""AST-level contract lint for code the jaxpr tracer cannot see.
+
+The tree verifier (``repro.analysis.verifier``) checks what a codec
+*does*; this pass checks what coder source *says*, so the rules also
+cover Pallas kernel bodies, reference oracles, and lowering code in
+``codecs/compile.py`` - none of which appear in a traced coder program
+(the verifier deliberately skips ``pallas_call`` equations).
+
+Scope: only files under the coder directories (``repro/core``,
+``repro/codecs``, ``repro/kernels``, ``repro/stream``). Model, serving,
+and training code evaluate floats by design and are not coder programs.
+
+Escapes: a finding on a line ending in ``# analysis: allow(<rule>)`` is
+suppressed, and the float-division rule exempts anything inside a
+``with jax.ensure_compile_time_eval():`` block (those divisions run
+once at build time and produce concrete tables, which the tree verifier
+checks directly).
+
+Run as ``python -m repro.analysis.lint src/``.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Iterable, List, Sequence, Tuple
+
+from repro.analysis.verifier import Finding
+
+# The shared rule catalogue: every rule either the tree verifier or the
+# source lint can report, with a one-line description. docs/ANALYSIS.md
+# documents each with a minimal offending example.
+RULES = {
+    # tree-verifier rules
+    "freq-sum": "frequency table must span exactly [0, 2^precision]",
+    "freq-zero": "no symbol may have zero frequency",
+    "starts-monotone": "cumulative starts must be non-decreasing",
+    "push-pop-mirror": "push must hand ans the mirror-image "
+                       "(start, freq, precision) events of pop",
+    "inverse-probe": "push(pop(stack)) must restore the stack "
+                     "bit-for-bit",
+    "float-leak": "float->int casts in coder programs need an explicit "
+                  "floor/round barrier",
+    "div-shared": "float division in coder code must be the canonical "
+                  "reciprocal-multiply form x * (1.0 / d)",
+    "ndtri-coder": "ndtri must not be evaluated inside coder programs; "
+                   "use the cached discretize tables",
+    "edge-cache": "bucket-geometry tables must be cached concrete "
+                  "arrays, not rebuilt per call",
+    "scan-chain": "Chained(scan=True) must not fuse model-float codecs "
+                  "into a lax.scan body",
+    "capacity-bound": "worst-case bits per datapoint should fit the "
+                      "initial stack capacity",
+    "opaque-probe": "opaque codecs are probed for inversion only",
+    "child-build": "BBANS/BitSwap child builders must accept any value "
+                   "their argument codec decodes",
+    # source-lint rules
+    "bare-assert": "coder invariants must raise explicit exceptions, "
+                   "not assert (asserts vanish under python -O)",
+    "cast-barrier": "float-math results must pass jnp.floor/round "
+                    "before .astype(int)",
+    "jit-in-table-module": "table-construction modules must stay "
+                           "eager; jit belongs to codecs.compile",
+}
+
+_CODER_DIRS = ("repro/core", "repro/codecs", "repro/kernels",
+               "repro/stream")
+_TABLE_MODULES = ("discretize.py", "distributions.py", "leaves.py")
+_NDTRI_ALLOWED = ("discretize.py",)   # the one module that owns ndtri
+_FLOAT_MATH = ("ndtr", "sigmoid", "exp", "softmax", "cdf", "erf",
+               "logistic")
+_CAST_BARRIERS = ("floor", "round", "ceil", "rint")
+_ALLOW_RE = re.compile(r"#\s*analysis:\s*allow\(([a-z-]+)\)")
+
+
+def _allow_lines(source: str) -> dict:
+    out = {}
+    for i, line in enumerate(source.splitlines(), start=1):
+        m = _ALLOW_RE.search(line)
+        if m:
+            out[i] = m.group(1)
+    return out
+
+
+def _eager_spans(tree: ast.AST) -> List[Tuple[int, int]]:
+    """Line spans of ``with jax.ensure_compile_time_eval():`` bodies."""
+    spans = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.With):
+            for item in node.items:
+                if "ensure_compile_time_eval" in ast.unparse(
+                        item.context_expr):
+                    spans.append((node.lineno,
+                                  node.end_lineno or node.lineno))
+    return spans
+
+
+def _in_spans(line: int, spans: Sequence[Tuple[int, int]]) -> bool:
+    return any(lo <= line <= hi for lo, hi in spans)
+
+
+def _is_constant_num(node: ast.expr) -> bool:
+    if isinstance(node, ast.Constant):
+        return isinstance(node.value, (int, float))
+    if isinstance(node, ast.UnaryOp) and isinstance(
+            node.op, (ast.USub, ast.UAdd)):
+        return _is_constant_num(node.operand)
+    return False
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, filename: str, eager_spans, allow):
+        self.filename = filename
+        self.base = os.path.basename(filename)
+        self.eager_spans = eager_spans
+        self.allow = allow
+        self.findings: List[Finding] = []
+
+    def _add(self, rule: str, node: ast.AST, msg: str, hint: str) -> None:
+        line = getattr(node, "lineno", 0)
+        if self.allow.get(line) == rule:
+            return
+        self.findings.append(Finding(
+            rule, "error", f"{self.filename}:{line}", msg, hint))
+
+    def visit_Assert(self, node: ast.Assert) -> None:
+        self._add(
+            "bare-assert", node,
+            "bare assert guards a coder invariant - it vanishes under "
+            "python -O, silently disabling the check",
+            "raise ValueError/TypeError with a message instead")
+        self.generic_visit(node)
+
+    def visit_BinOp(self, node: ast.BinOp) -> None:
+        if isinstance(node.op, ast.Div) \
+                and not _is_constant_num(node.left) \
+                and not _is_constant_num(node.right) \
+                and not _in_spans(node.lineno, self.eager_spans):
+            self._add(
+                "div-shared", node,
+                f"float division '{ast.unparse(node)}' is not in "
+                "canonical reciprocal form - XLA may rewrite it to "
+                "multiply-by-reciprocal in some fusion contexts and "
+                "not others",
+                "write x * (1.0 / d), or move it inside "
+                "jax.ensure_compile_time_eval() if it builds a "
+                "concrete table")
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        callee = node.func
+        name = ""
+        if isinstance(callee, ast.Name):
+            name = callee.id
+        elif isinstance(callee, ast.Attribute):
+            name = callee.attr
+
+        if name == "ndtri" and self.base not in _NDTRI_ALLOWED \
+                and not _in_spans(node.lineno, self.eager_spans):
+            self._add(
+                "ndtri-coder", node,
+                "ndtri evaluated outside core/discretize.py - its "
+                "float32 bits vary with the XLA fusion context",
+                "read bucket geometry from discretize.edge_table/"
+                "centre_table (concrete cached arrays)")
+
+        if name in ("jit", "pmap") and self.base in _TABLE_MODULES:
+            self._add(
+                "jit-in-table-module", node,
+                f"jax.{name} inside a table-construction module - "
+                "tables must be built eagerly (or under "
+                "ensure_compile_time_eval) so encode and decode share "
+                "one set of bits",
+                "keep jit at the codecs.compile layer")
+
+        if name == "astype" and isinstance(callee, ast.Attribute) \
+                and node.args:
+            dtype_src = ast.unparse(node.args[0])
+            recv_src = ast.unparse(callee.value)
+            if "int" in dtype_src and "float" not in dtype_src \
+                    and any(t in recv_src for t in _FLOAT_MATH) \
+                    and not any(b in recv_src for b in _CAST_BARRIERS):
+                self._add(
+                    "cast-barrier", node,
+                    f"float-math expression '{recv_src[:60]}' is cast "
+                    "straight to an integer dtype - the implicit "
+                    "truncation point is fusion-dependent",
+                    "wrap in jnp.floor(...) or jnp.round(...) before "
+                    ".astype")
+        self.generic_visit(node)
+
+
+def lint_source(source: str, filename: str = "<string>") -> List[Finding]:
+    """Lint one file's source text; returns a list of ``Finding``.
+
+    Example::
+
+        from repro.analysis import lint_source
+        findings = lint_source("assert x > 0", "core/foo.py")
+        assert findings[0].rule == "bare-assert"
+    """
+    try:
+        tree = ast.parse(source, filename=filename)
+    except SyntaxError as e:
+        return [Finding("bare-assert", "error", f"{filename}:{e.lineno}",
+                        f"file does not parse: {e.msg}", "fix the syntax")]
+    visitor = _Visitor(filename, _eager_spans(tree), _allow_lines(source))
+    visitor.visit(tree)
+    return visitor.findings
+
+
+def _is_coder_file(path: str) -> bool:
+    p = path.replace(os.sep, "/")
+    return p.endswith(".py") and any(d in p for d in _CODER_DIRS)
+
+
+def lint_paths(paths: Iterable[str]) -> Tuple[List[Finding], int]:
+    """Lint every coder-scope ``.py`` file under ``paths``.
+
+    Directories are walked and filtered to the coder scope
+    (``repro/core``, ``repro/codecs``, ``repro/kernels``,
+    ``repro/stream``); a path naming a ``.py`` file directly is linted
+    regardless of scope. Returns ``(findings, files_checked)``.
+
+    Example::
+
+        from repro.analysis import lint_paths
+        findings, n = lint_paths(["src/"])
+        assert findings == []
+    """
+    files: List[str] = []
+    for path in paths:
+        if os.path.isfile(path):
+            files.append(path)
+            continue
+        for root, _dirs, names in os.walk(path):
+            for name in sorted(names):
+                full = os.path.join(root, name)
+                if _is_coder_file(full):
+                    files.append(full)
+    findings: List[Finding] = []
+    for f in sorted(set(files)):
+        with open(f, "r", encoding="utf-8") as fh:
+            findings.extend(lint_source(fh.read(), f))
+    return findings, len(set(files))

@@ -25,8 +25,8 @@ from repro.codecs.leaves import (DiscretizedGaussian, DiscretizedLogistic,
                                  PointwiseCDF, Uniform)
 from repro.codecs.combinators import (BBANS, BitSwap, Chained, Repeat,
                                       Serial, Shaped, TreeCodec)
-from repro.codecs.container import (blob_info, compress, decompress,
-                                    fresh_stack)
+from repro.codecs.container import (ContainerError, blob_info, compress,
+                                    decompress, fresh_stack)
 from repro.codecs.compile import CompiledCodec, compile
 
 __all__ = [
@@ -40,4 +40,5 @@ __all__ = [
     "compile", "CompiledCodec",
     # container
     "compress", "decompress", "blob_info", "fresh_stack",
+    "ContainerError",
 ]

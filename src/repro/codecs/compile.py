@@ -59,6 +59,7 @@ from typing import Any, Callable, Dict, Optional, Type
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import ans, discretize
 from repro.core.codec import Codec
@@ -156,7 +157,7 @@ def _mesh_coder_programs(mesh) -> Dict[str, Any]:
 _MESH_PROGRAMS: Dict[Any, Dict[str, Any]] = {}
 
 
-def coder_programs(mesh=None) -> Dict[str, Any]:
+def coder_programs(mesh: Optional[Any] = None) -> Dict[str, Any]:
     """The active coder programs: shared jits, or the ``mesh``-sharded
     twins (built once per mesh and cached).
 
@@ -344,6 +345,46 @@ def _probe_params(rep: C.Repeat, leaf0, fields, statics):
             for nm in fields]
 
 
+def _validate_tables(tables: jnp.ndarray, precision: int,
+                     what: str) -> None:
+    """Frequency-soundness gate on lowered fixed-point tables: exact
+    span, monotone starts, no zero-mass symbol. Runs once per lowering
+    (the tables are already concrete), so a broken table fails here
+    naming the subtree instead of as a hex mismatch at decode time."""
+    t = np.asarray(tables).astype(np.int64)
+    total = 1 << precision
+    if (t[..., 0] != 0).any() or (t[..., -1] != total).any():
+        raise ValueError(
+            f"codecs.compile: contract violation (freq-sum) in {what}: "
+            f"table spans [{int(t[..., 0].min())}, "
+            f"{int(t[..., -1].max())}] instead of exactly "
+            f"[0, 2^{precision}]")
+    d = np.diff(t, axis=-1)
+    if (d < 0).any():
+        raise ValueError(
+            f"codecs.compile: contract violation (starts-monotone) in "
+            f"{what}: cumulative starts decrease")
+    if (d < 1).any():
+        raise ValueError(
+            f"codecs.compile: contract violation (freq-zero) in {what}: "
+            "a symbol has zero frequency and would decode to a "
+            "neighbour silently")
+
+
+def _validate_grid_params(arr: jnp.ndarray, name: str, what: str,
+                          positive: bool = False) -> None:
+    a = np.asarray(arr)
+    if not np.isfinite(a).all():
+        raise ValueError(
+            f"codecs.compile: contract violation (starts-monotone) in "
+            f"{what}: non-finite {name}")
+    if positive and (a <= 0).any():
+        raise ValueError(
+            f"codecs.compile: contract violation (starts-monotone) in "
+            f"{what}: {name} must be strictly positive (a non-positive "
+            "scale flips the CDF and breaks the decode bisection)")
+
+
 def _lower_repeat(rep: C.Repeat, donate: bool) -> Optional[Codec]:
     """Probe a ``Repeat``'s positions; fuse when the leaf family allows.
 
@@ -375,10 +416,16 @@ def _lower_repeat(rep: C.Repeat, donate: bool) -> Optional[Codec]:
                            leaf0.precision, rep.out_dtype, donate)
     if cls is L.DiscretizedGaussian:
         mu, sigma = (p.astype(jnp.float32) for p in params)
+        what = f"Repeat[DiscretizedGaussian, n={rep.n}]"
+        _validate_grid_params(mu, "mu", what)
+        _validate_grid_params(sigma, "sigma", what, positive=True)
         return _GridRepeat("gaussian", mu, sigma, rep.n, leaf0.bits,
                            leaf0.precision, rep.out_dtype, donate)
     if cls is L.DiscretizedLogistic:
         mu, scale = (p.astype(jnp.float32) for p in params)
+        what = f"Repeat[DiscretizedLogistic, n={rep.n}]"
+        _validate_grid_params(mu, "mu", what)
+        _validate_grid_params(scale, "scale", what, positive=True)
         return _GridRepeat("logistic", mu, scale, rep.n, leaf0.bits,
                            leaf0.precision, rep.out_dtype, donate)
 
@@ -393,6 +440,8 @@ def _lower_repeat(rep: C.Repeat, donate: bool) -> Optional[Codec]:
         tables = jnp.stack(
             [jnp.zeros_like(f1), jnp.uint32(total) - f1,
              jnp.full_like(f1, jnp.uint32(total))], axis=-1)
+        _validate_tables(tables, leaf0.precision,
+                         f"Repeat[Bernoulli, n={rep.n}]")
         return _TableRepeat(tables, leaf0.precision, rep.out_dtype,
                             donate)
     if cls is BetaBinomial:
@@ -404,12 +453,16 @@ def _lower_repeat(rep: C.Repeat, donate: bool) -> Optional[Codec]:
             beta[..., None].astype(jnp.float32))
         tables = ans.probs_to_starts(_stable_softmax(logp),
                                      leaf0.precision)
+        _validate_tables(tables, leaf0.precision,
+                         f"Repeat[BetaBinomial, n={rep.n}]")
         return _TableRepeat(tables, leaf0.precision, rep.out_dtype,
                             donate)
     if cls is Categorical:
         tables = ans.probs_to_starts(
             _stable_softmax(params[0].astype(jnp.float32)),
             leaf0.precision)
+        _validate_tables(tables, leaf0.precision,
+                         f"Repeat[Categorical, n={rep.n}]")
         return _TableRepeat(tables, leaf0.precision, rep.out_dtype,
                             donate)
     return None
@@ -497,11 +550,17 @@ class CompiledCodec(Codec):
         return self.lowered.pop(stack)
 
 
-def compile(codec: Codec, *, donate: bool = True) -> CompiledCodec:
+def compile(codec: Codec, *, donate: bool = True,
+            verify: bool = False) -> CompiledCodec:
     """Compile a codec tree into a fused kernel-backed program.
 
     Returns a ``CompiledCodec`` that codes byte-identically to
     ``codec`` (compiling an already-compiled codec is a no-op).
+    Lowered fixed-point tables are always validated for frequency
+    soundness (a broken table raises ``ValueError`` here, naming the
+    subtree); ``verify=True`` additionally runs the full
+    ``repro.analysis`` contract verifier over the source tree and
+    raises ``analysis.ContractViolation`` on any error finding.
 
     Example::
 
@@ -511,4 +570,7 @@ def compile(codec: Codec, *, donate: bool = True) -> CompiledCodec:
     """
     if isinstance(codec, CompiledCodec):
         return codec
+    if verify:
+        from repro.analysis import check_codec   # lazy: avoid cycle
+        check_codec(codec, context="codecs.compile")
     return CompiledCodec(codec, donate=donate)

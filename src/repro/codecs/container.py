@@ -31,7 +31,7 @@ worked example: docs/FORMATS.md):
 from __future__ import annotations
 
 import struct
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -43,6 +43,17 @@ from repro.core.codec import Codec
 _MAGIC = b"BBX1"
 _VERSION = 1
 _HEADER = struct.Struct("<4sBBHI")
+# Lanes is bounded by what a header this size can sanely describe: the
+# lengths block alone is 4 bytes per lane, so anything above this is a
+# corrupt count, not a real message.
+_MAX_LANES = 1 << 24
+
+
+class ContainerError(ValueError):
+    """A blob failed header or framing validation (corrupt, truncated,
+    or not a BBX1 container). Raised by ``decompress``/``blob_info``
+    before any coder state is built, so corruption is reported by name
+    instead of as an index error deep inside ``ans``."""
 
 
 def fresh_stack(lanes: int, capacity: int, seed: Optional[int] = 0,
@@ -85,7 +96,8 @@ def compress(codec: Codec, data: Any, *, lanes: int,
              seed: Optional[int] = 0, init_chunks: int = 32,
              capacity: Optional[int] = None, max_retries: int = 6,
              precision: int = ans.DEFAULT_PRECISION,
-             with_info: bool = False):
+             with_info: bool = False
+             ) -> Union[bytes, Tuple[bytes, Dict[str, Any]]]:
     """Encode ``data`` with ``codec`` into a self-contained blob.
 
     ``data`` is a pytree whose leaves carry a leading ``lanes`` axis
@@ -231,17 +243,37 @@ def _pack(stack: ans.ANSStack, precision: int) -> bytes:
 
 def _unpack(blob: bytes) -> Tuple[np.ndarray, np.ndarray, int]:
     if len(blob) < _HEADER.size:
-        raise ValueError("codecs: truncated blob (no header)")
+        raise ContainerError("codecs: truncated blob (no header)")
     magic, version, precision, _flags, lanes = _HEADER.unpack_from(blob, 0)
     if magic != _MAGIC:
-        raise ValueError(f"codecs: bad magic {magic!r} (not a BBX1 blob)")
+        raise ContainerError(
+            f"codecs: bad magic {magic!r} (not a BBX1 blob)")
     if version != _VERSION:
-        raise ValueError(f"codecs: unsupported container version {version}")
+        raise ContainerError(
+            f"codecs: unsupported container version {version}")
+    if not 0 < precision <= ans.MAX_PRECISION:
+        raise ContainerError(
+            f"codecs: corrupt header (precision {precision} outside "
+            f"[1, {ans.MAX_PRECISION}])")
+    if not 0 < lanes <= _MAX_LANES:
+        raise ContainerError(
+            f"codecs: corrupt header (lane count {lanes})")
     off = _HEADER.size
+    if len(blob) < off + 4 * lanes:
+        raise ContainerError(
+            f"codecs: truncated blob (header promises {lanes} lane "
+            "lengths but the lengths block is short)")
     lengths = np.frombuffer(blob, dtype="<u4", count=lanes,
-                            offset=off).astype(np.int32)
+                            offset=off).astype(np.int64)
     if (lengths < 2).any():
-        raise ValueError("codecs: corrupt header (lane length < 2)")
+        raise ContainerError("codecs: corrupt header (lane length < 2; "
+                             "every lane carries a 2-chunk head flush)")
     off += 4 * lanes
-    msg = unpack_lane_rows(blob, off, lengths)
-    return msg, lengths, precision
+    payload = len(blob) - off
+    need = 2 * int(lengths.sum())
+    if payload != need:
+        raise ContainerError(
+            f"codecs: payload is {payload} bytes but the lane lengths "
+            f"sum to {need} (truncated or trailing garbage)")
+    msg = unpack_lane_rows(blob, off, lengths.astype(np.int32))
+    return msg, lengths.astype(np.int32), precision

@@ -165,7 +165,8 @@ def _logistic_cdf(i: jnp.ndarray, mu: jnp.ndarray, scale: jnp.ndarray,
 
 
 def logistic_starts_fn(mu: jnp.ndarray, scale: jnp.ndarray, bits: int,
-                       precision: int):
+                       precision: int
+                       ) -> Callable[[jnp.ndarray], jnp.ndarray]:
     """Pointwise fixed-point starts F(i) of ``DiscretizedLogistic``.
 
     Exactly the arithmetic of ``PointwiseCDF._starts`` over the logistic

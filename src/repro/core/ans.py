@@ -31,7 +31,7 @@ All functions are jittable and differentiable-free (integer only).
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -128,6 +128,16 @@ def _as_u32(x: jnp.ndarray) -> jnp.ndarray:
     return x.astype(jnp.uint32)
 
 
+def _check_precision(precision: int) -> None:
+    # An explicit raise, not assert: python -O strips asserts, and this
+    # guard protects the coder's core invariant (precision <= 16 is what
+    # makes the single-renormalization bound hold).
+    if not 0 < precision <= MAX_PRECISION:
+        raise ValueError(
+            f"ans: precision must be in [1, {MAX_PRECISION}], got "
+            f"{precision}")
+
+
 def push(stack: ANSStack, start: jnp.ndarray, freq: jnp.ndarray,
          precision: int = DEFAULT_PRECISION) -> ANSStack:
     """Encode one symbol per lane, given its (start, freq) at ``precision``.
@@ -135,7 +145,7 @@ def push(stack: ANSStack, start: jnp.ndarray, freq: jnp.ndarray,
     ``start``/``freq`` are uint32[lanes] with ``0 < freq``, ``start + freq <=
     2**precision``. Adds ``precision - log2(freq)`` bits per lane.
     """
-    assert 0 < precision <= MAX_PRECISION
+    _check_precision(precision)
     head, buf, ptr = stack.head, stack.buf, stack.ptr
     start, freq = _as_u32(start), _as_u32(freq)
 
@@ -158,7 +168,7 @@ def push(stack: ANSStack, start: jnp.ndarray, freq: jnp.ndarray,
 
 def peek(stack: ANSStack, precision: int = DEFAULT_PRECISION) -> jnp.ndarray:
     """Return the decode slot (``head mod 2^precision``) per lane."""
-    assert 0 < precision <= MAX_PRECISION
+    _check_precision(precision)
     return stack.head & jnp.uint32((1 << precision) - 1)
 
 
@@ -168,7 +178,7 @@ def pop_update(stack: ANSStack, start: jnp.ndarray, freq: jnp.ndarray,
 
     Exactly inverts ``push(stack, start, freq, precision)``.
     """
-    assert 0 < precision <= MAX_PRECISION
+    _check_precision(precision)
     head, buf, ptr = stack.head, stack.buf, stack.ptr
     start, freq = _as_u32(start), _as_u32(freq)
     slot = peek(stack, precision)
@@ -233,7 +243,7 @@ def stack_content_bits(stack: ANSStack) -> jnp.ndarray:
     per-lane constant.
     """
     head_bits = jnp.log2(stack.head.astype(jnp.float64)
-                         if jax.config.jax_enable_x64
+                         if getattr(jax.config, "jax_enable_x64", False)
                          else stack.head.astype(jnp.float32))
     return jnp.sum(stack.ptr).astype(jnp.float32) * 16.0 + jnp.sum(head_bits)
 
@@ -294,7 +304,7 @@ def split_lanes(stack: ANSStack, n_shards: int) -> Tuple[ANSStack, ...]:
         for s in range(n_shards))
 
 
-def merge_lanes(stacks) -> ANSStack:
+def merge_lanes(stacks: Sequence[ANSStack]) -> ANSStack:
     """Concatenate per-shard stacks back into one stack (inverse of
     ``split_lanes``). All shards must share capacity.
 

@@ -41,6 +41,12 @@ class Codec:
                 return stack, x - 7
     """
 
+    #: Set True on subclasses whose float evaluation happens inside
+    #: jitted programs they manage themselves (driver codecs like the
+    #: LM ``TokenStream``). ``repro.analysis`` then probes them for
+    #: bit-exact inversion only instead of tracing their internals.
+    __analysis_opaque__ = False
+
     def push(self, stack: ans.ANSStack, x: Any) -> ans.ANSStack:
         raise NotImplementedError
 
@@ -60,6 +66,9 @@ class FnCodec(Codec):
         inner = Uniform(4)
         codec = FnCodec(inner.push, inner.pop)   # same wire bytes
     """
+
+    # Opaque to repro.analysis: the wrapped fns are arbitrary closures.
+    __analysis_opaque__ = True
 
     def __init__(self, push_fn: Callable, pop_fn: Callable):
         self._push = push_fn

@@ -32,7 +32,7 @@ in ``benchmarks/table2_rates.py``. In exchange, F stays pointwise-evaluable
 from __future__ import annotations
 
 from functools import partial
-from typing import Tuple
+from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -106,7 +106,8 @@ def _posterior_cdf(i: jnp.ndarray, mu: jnp.ndarray, sigma: jnp.ndarray,
 
 
 def posterior_starts_fn(mu: jnp.ndarray, sigma: jnp.ndarray, lat_bits: int,
-                        precision: int):
+                        precision: int
+                        ) -> Callable[[jnp.ndarray], jnp.ndarray]:
     """Return pointwise fixed-point CDF ``F(i)`` for a diag-Gaussian
     posterior over the max-entropy prior buckets.
 

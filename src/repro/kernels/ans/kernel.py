@@ -23,6 +23,15 @@ from jax.experimental import pallas as pl
 LANE_TILE = 128
 
 
+def _check_lanes(lanes: int) -> None:
+    # Explicit raise rather than assert: the invariant must survive
+    # python -O (ops.py pads to a LANE_TILE multiple before calling).
+    if lanes % LANE_TILE != 0:
+        raise ValueError(
+            f"kernels.ans: lanes ({lanes}) must be a multiple of "
+            f"LANE_TILE ({LANE_TILE}); ops.py pads before calling")
+
+
 def _push_kernel(head_ref, starts_ref, freqs_ref,
                  out_head_ref, chunks_ref, need_ref, *, precision: int):
     """One lane-tile: sequentially push ``steps`` symbols per lane.
@@ -54,7 +63,7 @@ def push_emit(head: jnp.ndarray, starts: jnp.ndarray, freqs: jnp.ndarray,
     lanes must be a multiple of LANE_TILE (ops.py pads).
     """
     steps, lanes = starts.shape
-    assert lanes % LANE_TILE == 0, lanes
+    _check_lanes(lanes)
     grid = (lanes // LANE_TILE,)
     kernel = functools.partial(_push_kernel, precision=precision)
     return pl.pallas_call(
@@ -93,7 +102,7 @@ def pop_slots(head: jnp.ndarray, precision: int,
               interpret: bool = True) -> jnp.ndarray:
     """Vector peek: slot = head mod 2^precision per lane."""
     lanes = head.shape[0]
-    assert lanes % LANE_TILE == 0
+    _check_lanes(lanes)
     kernel = functools.partial(_peek_kernel, precision=precision)
     out = pl.pallas_call(
         kernel,
@@ -156,7 +165,7 @@ def pop_table_emit(head: jnp.ndarray, table: jnp.ndarray,
     must be a multiple of LANE_TILE (ops.py pads).
     """
     steps, lanes = feed.shape
-    assert lanes % LANE_TILE == 0, lanes
+    _check_lanes(lanes)
     grid = (lanes // LANE_TILE,)
     a1 = table.shape[1]
     kernel = functools.partial(_pop_table_kernel, precision=precision)
@@ -226,7 +235,7 @@ def pop_dyntable_emit(head: jnp.ndarray, tables: jnp.ndarray,
     uint32[steps, lanes] -> (new_head, syms uint32[steps, lanes],
     reads uint32[lanes]). lanes must be a multiple of LANE_TILE."""
     steps, lanes = feed.shape
-    assert lanes % LANE_TILE == 0, lanes
+    _check_lanes(lanes)
     grid = (lanes // LANE_TILE,)
     a1 = tables.shape[2]
     kernel = functools.partial(_pop_dyntable_kernel, precision=precision)
@@ -343,9 +352,12 @@ def pop_grid_emit(head: jnp.ndarray, mu: jnp.ndarray, sigma: jnp.ndarray,
     mu/sigma/edges contents are ignored (pass zero-size-compatible
     dummies). lanes must be a multiple of LANE_TILE (ops.py pads).
     """
-    assert kind in ("gaussian", "logistic", "uniform"), kind
+    if kind not in ("gaussian", "logistic", "uniform"):
+        raise ValueError(
+            f"kernels.ans: unknown grid kind {kind!r} (expected "
+            "'gaussian', 'logistic', or 'uniform')")
     steps, lanes = feed.shape
-    assert lanes % LANE_TILE == 0, lanes
+    _check_lanes(lanes)
     grid = (lanes // LANE_TILE,)
     e = edges.shape[0]
     kernel = functools.partial(_pop_grid_kernel, kind=kind,

@@ -20,7 +20,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.scipy.special import ndtr, ndtri
+from jax.scipy.special import ndtr
 
 LANE_TILE = 128
 
@@ -71,7 +71,10 @@ def bucketize(slot: jnp.ndarray, mu: jnp.ndarray, sigma: jnp.ndarray,
     """uint32[lanes], f32[lanes], f32[lanes] -> (idx i32, start u32,
     freq u32). lanes must be a multiple of LANE_TILE (ops.py pads)."""
     lanes = slot.shape[0]
-    assert lanes % LANE_TILE == 0
+    if lanes % LANE_TILE != 0:
+        raise ValueError(
+            f"kernels.bucketize: lanes ({lanes}) must be a multiple of "
+            f"LANE_TILE ({LANE_TILE}); ops.py pads before calling")
     k = 1 << lat_bits
     edges = edge_table(lat_bits)
     kernel = functools.partial(_bucketize_kernel, lat_bits=lat_bits,

@@ -68,7 +68,9 @@ def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref,
 
     @pl.when(ki == nk - 1)
     def _finish():
-        o_ref[0] = (acc_scr[...] /
+        # Softmax normalization is model math, not coder prep: both
+        # coding directions run this same kernel, so the bits match.
+        o_ref[0] = (acc_scr[...] /  # analysis: allow(div-shared)
                     jnp.maximum(l_scr[...], 1e-30)[:, None]
                     ).astype(o_ref.dtype)
 

@@ -94,7 +94,7 @@ class CodecEngine:
 
     def __init__(self, make_codec, *, seed: Optional[int] = 0,
                  init_chunks: int = 32, max_codecs: int = 32,
-                 compile: bool = False):
+                 compile: bool = False, verify: bool = True):
         if max_codecs < 1:
             raise ValueError("CodecEngine: max_codecs must be >= 1")
         self._make_codec = make_codec
@@ -105,9 +105,17 @@ class CodecEngine:
         self._init_chunks = init_chunks
         self._max_codecs = max_codecs
         self._compile = compile
+        # Contract-verify each codec once at registration (on by
+        # default): a family bug surfaces as analysis.ContractViolation
+        # naming the subtree, before any request bytes are at stake.
+        self._verify = verify
 
     def codec_for(self, shape: Sequence[int]):
-        """The memoized per-datapoint codec for one symbol shape."""
+        """The memoized per-datapoint codec for one symbol shape.
+
+        With ``verify=True`` (the default) a newly built codec is run
+        through ``repro.analysis.check_codec`` before it is memoized;
+        a contract violation raises instead of serving requests."""
         key = tuple(int(s) for s in shape)
         if key in self._codecs:
             self._codecs.move_to_end(key)
@@ -116,7 +124,12 @@ class CodecEngine:
             evicted, _ = self._codecs.popitem(last=False)
             for pkey in [k for k in self._programs if k[0] == evicted]:
                 del self._programs[pkey]
-        self._codecs[key] = self._make_codec(key)
+        codec = self._make_codec(key)
+        if self._verify:
+            from repro.analysis import check_codec   # lazy: avoid cycle
+            check_codec(codec, lanes=2,
+                        context=f"CodecEngine.codec_for({key})")
+        self._codecs[key] = codec
         return self._codecs[key]
 
     def _chained_for(self, shape: Sequence[int], n: int):
@@ -206,7 +219,7 @@ class ShardedCodecEngine:
     def __init__(self, make_codec, *, mesh=None,
                  n_shards: Optional[int] = None, seed: Optional[int] = 0,
                  init_chunks: int = 32, max_codecs: int = 32,
-                 compile: bool = True):
+                 compile: bool = True, verify: bool = True):
         from repro.sharding import api as shard_api
         self._shard_api = shard_api
         self.mesh = mesh if mesh is not None \
@@ -218,7 +231,8 @@ class ShardedCodecEngine:
             raise ValueError("ShardedCodecEngine: n_shards must be >= 1")
         self._inner = CodecEngine(make_codec, seed=seed,
                                   init_chunks=init_chunks,
-                                  max_codecs=max_codecs, compile=compile)
+                                  max_codecs=max_codecs, compile=compile,
+                                  verify=verify)
         self._seed = seed
         self._init_chunks = init_chunks
         self._compile = compile

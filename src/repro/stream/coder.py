@@ -171,7 +171,8 @@ class StreamEncoder:
                  seed: Optional[int] = 0, init_chunks: int = 0,
                  precision: int = ans.DEFAULT_PRECISION,
                  capacity: Optional[int] = None, max_retries: int = 6,
-                 use_kernel: bool = True, compile: bool = False):
+                 use_kernel: bool = True, compile: bool = False,
+                 verify: bool = False):
         if lanes < 1 or block_symbols < 1:
             raise ValueError("stream: lanes and block_symbols must be >= 1")
         if seed is None and init_chunks:
@@ -179,6 +180,13 @@ class StreamEncoder:
                              "bits are derived from it)")
         self._block_codec_fn = _resolve_block_codec(codec, block_codec_fn,
                                                     use_kernel, compile)
+        if verify and codec is not None:
+            # Opt-in (streams are often built per connection; engines
+            # verify at registration instead): check the per-symbol
+            # codec's contract before any bytes hit the wire.
+            from repro.analysis import check_codec
+            check_codec(codec, lanes=min(lanes, 4),
+                        context="StreamEncoder")
         self.lanes = lanes
         self.block_symbols = block_symbols
         self.precision = precision
@@ -338,9 +346,12 @@ class StreamDecoder:
                  block_codec_fn: Optional[BlockCodecFn] = None,
                  header: Optional[fmt.StreamHeader] = None,
                  use_kernel: bool = True, verify_trailer: bool = True,
-                 compile: bool = False):
+                 compile: bool = False, verify: bool = False):
         self._block_codec_fn = _resolve_block_codec(codec, block_codec_fn,
                                                     use_kernel, compile)
+        if verify and codec is not None:
+            from repro.analysis import check_codec   # opt-in, as encoder
+            check_codec(codec, lanes=4, context="StreamDecoder")
         self._header = header
         self._verify_trailer = verify_trailer
         self._buf = bytearray()

@@ -1,0 +1,492 @@
+"""The contract verifier catches what we break on purpose - and stays
+silent on everything we ship.
+
+Gallery layout:
+
+  * deliberately-broken codec fixtures, one per rule: the analyzer must
+    flag every one (the PR-4 bug classes - scan-fused ``Chained``,
+    shared-divisor division, inline ndtri - are reconstructed here
+    exactly as reverting those fixes would);
+  * the shipped families (VAE both likelihoods, HVAE BitSwap, LM
+    TokenStream, stream block codecs, compiled forms) must report zero
+    findings;
+  * the wiring: ``CodecEngine`` registration, ``codecs.compile``
+    lowering, ``StreamEncoder(verify=True)``, and the BBX1 container's
+    named corruption errors;
+  * the source lint's AST rules and its escapes.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import codecs
+from repro.analysis import (ContractViolation, bits_bound, check_codec,
+                            lint_paths, lint_source, verify_codec, RULES)
+from repro.core import ans
+from repro.core.distributions import Categorical
+
+
+def rule_set(report):
+    return {f.rule for f in report.findings}
+
+
+# ---------------------------------------------------------------------------
+# broken fixtures: every rule must fire
+# ---------------------------------------------------------------------------
+
+LOGITS = jnp.asarray(np.linspace(-1.0, 1.0, 16, dtype=np.float32)
+                     * np.ones((2, 1), np.float32))
+
+
+class ZeroFreqTable(Categorical):
+    """A symbol whose mass was collapsed to zero (slot 1 == slot 2)."""
+
+    def _table(self):
+        t = super()._table()
+        return t.at[..., 1].set(t[..., 2])
+
+
+class ShortTable(Categorical):
+    """Table that sums to 2^precision - 4 instead of exactly 2^p."""
+
+    def _table(self):
+        t = super()._table()
+        return t.at[..., -1].add(-4)
+
+
+class AsymmetricUniform(codecs.Uniform):
+    """push encodes a *shifted* symbol: pop(push(x)) != x."""
+
+    def push(self, stack, x):
+        return super().push(stack, (x + 1) % (1 << self.bits))
+
+
+def test_flags_zero_freq_symbol():
+    report = verify_codec(ZeroFreqTable(LOGITS, 16), lanes=2)
+    assert "freq-zero" in rule_set(report)
+    assert not report.ok
+
+
+def test_flags_wrong_total():
+    report = verify_codec(ShortTable(LOGITS, 16), lanes=2)
+    assert "freq-sum" in rule_set(report)
+
+
+def test_flags_non_monotone_cdf():
+    wobble = codecs.PointwiseCDF(
+        lambda i: jnp.sin(i.astype(jnp.float32)) * 0.4 + 0.5, bits=4)
+    report = verify_codec(wobble, lanes=2)
+    assert "starts-monotone" in rule_set(report)
+
+
+def test_flags_asymmetric_push_pop():
+    report = verify_codec(AsymmetricUniform(4), lanes=2)
+    assert {"push-pop-mirror", "inverse-probe"} & rule_set(report)
+
+
+def test_flags_scan_fused_chained():
+    """PR-4 bug class 1: lax.scan fusing model floats into the chain
+    body. Reverting the Chained(scan=False) fix looks exactly like
+    this."""
+    inner = codecs.Shaped(codecs.Repeat(
+        lambda d: codecs.DiscretizedGaussian(
+            jnp.zeros((2,)), jnp.ones((2,)), bits=4, precision=12),
+        3), (3,))
+    report = verify_codec(codecs.Chained(inner, 2, scan=True), lanes=2)
+    assert "scan-chain" in rule_set(report)
+    # the same chain without scan is fine
+    assert verify_codec(codecs.Chained(inner, 2, scan=False), lanes=2).ok
+
+
+def test_scan_chained_over_uniform_is_clean():
+    """scan=True over a float-free codec is allowed - the rule is about
+    model floats in the fused body, not about scan itself."""
+    inner = codecs.Shaped(codecs.Repeat(
+        lambda d: codecs.Uniform(6), 3), (3,))
+    report = verify_codec(codecs.Chained(inner, 2, scan=True), lanes=2)
+    assert "scan-chain" not in rule_set(report)
+
+
+def test_flags_shared_divisor_division():
+    """PR-4 bug class 2: (z - mu) / sigma instead of the canonical
+    reciprocal-multiply form."""
+    sigma = jnp.full((2,), 2.0, jnp.float32)
+    shared = codecs.PointwiseCDF(
+        lambda i: jax.scipy.stats.norm.cdf(
+            (i.astype(jnp.float32) - 8.0) / sigma), bits=4)
+    report = verify_codec(shared, lanes=2)
+    assert "div-shared" in rule_set(report)
+
+
+def test_flags_inline_ndtri():
+    """PR-4 bug class 3: recomputing bucket geometry inline instead of
+    reading the cached concrete tables. jax's ndtri is a rational
+    approximation full of non-canonical divisions (div-shared); the
+    erfinv spelling traces to the erf_inv primitive (ndtri-coder).
+    Either way the verifier refuses it inside a coder program."""
+    from jax.scipy.special import erfinv, ndtri
+    bad = codecs.PointwiseCDF(
+        lambda i: jax.scipy.special.ndtr(
+            i.astype(jnp.float32) * 0.1 - ndtri(jnp.full((2,), 0.9))),
+        bits=4)
+    assert {"div-shared", "ndtri-coder"} & rule_set(
+        verify_codec(bad, lanes=2))
+
+    bad2 = codecs.PointwiseCDF(
+        lambda i: jax.scipy.special.ndtr(
+            i.astype(jnp.float32) * 0.1
+            - erfinv(jnp.full((2,), 0.8)) * 1.41421356),
+        bits=4)
+    assert "ndtri-coder" in rule_set(verify_codec(bad2, lanes=2))
+
+
+class LeakyCDF(codecs.PointwiseCDF):
+    """_starts without the jnp.floor barrier: the float->int truncation
+    point becomes fusion-dependent."""
+
+    def _starts(self):
+        k = 1 << self.bits
+        scale = float((1 << self.precision) - k)
+        cdf_fn = self.cdf_fn
+
+        def f(i):
+            c = jnp.clip(cdf_fn(i), 0.0, 1.0)
+            c = jnp.where(i <= 0, 0.0, c)
+            c = jnp.where(i >= k, 1.0, c)
+            return (c * scale).astype(jnp.uint32) + i.astype(jnp.uint32)
+
+        return f
+
+
+def test_flags_float_to_int_without_barrier():
+    leaky = LeakyCDF(
+        lambda i: jax.nn.sigmoid((i.astype(jnp.float32) - 8.0) * 0.5),
+        bits=4)
+    assert "float-leak" in rule_set(verify_codec(leaky, lanes=2))
+
+
+def test_capacity_bound_warns():
+    big = codecs.Shaped(
+        codecs.Repeat(lambda d: codecs.Uniform(8), 2048), (2048,))
+    report = verify_codec(big, lanes=2, capacity=64)
+    assert "capacity-bound" in {f.rule for f in report.warnings}
+    assert report.ok            # a warning, not an error
+    report2 = verify_codec(big, lanes=2, capacity=4096)
+    assert not report2.warnings
+
+
+def test_check_codec_raises_with_report():
+    with pytest.raises(ContractViolation) as exc:
+        check_codec(ZeroFreqTable(LOGITS, 16), lanes=2)
+    assert "freq-zero" in str(exc.value)
+    assert exc.value.report.errors
+
+
+# ---------------------------------------------------------------------------
+# bits bound
+# ---------------------------------------------------------------------------
+
+def test_bits_bound_composes():
+    assert bits_bound(codecs.Uniform(8), lanes=2) == 8.0
+    rep = codecs.Shaped(codecs.Repeat(lambda d: codecs.Uniform(8), 5),
+                        (5,))
+    assert bits_bound(rep, lanes=2) == 40.0
+    assert bits_bound(codecs.Chained(rep, 3), lanes=2) == 120.0
+
+
+# ---------------------------------------------------------------------------
+# zero false positives on everything we ship
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def vae_setup():
+    from repro.models import vae as vae_lib
+    cfg = vae_lib.VAEConfig(input_dim=36, hidden=24, latent=6)
+    return vae_lib, cfg, vae_lib.init(jax.random.PRNGKey(0), cfg)
+
+
+def test_shipped_vae_bernoulli_clean(vae_setup):
+    vae_lib, cfg, params = vae_setup
+    report = verify_codec(vae_lib.make_bb_codec(params, cfg), lanes=2)
+    assert report.ok and not report.findings, str(report)
+    assert report.bits_bound is not None
+
+
+def test_shipped_vae_compiled_clean(vae_setup):
+    vae_lib, cfg, params = vae_setup
+    codec = vae_lib.make_bb_codec(params, cfg, compiled=True)
+    report = verify_codec(codec, lanes=2)
+    assert report.ok and not report.findings, str(report)
+
+
+def test_shipped_vae_beta_binomial_clean(vae_setup):
+    vae_lib, cfg, _ = vae_setup
+    cfg_bb = dataclasses.replace(cfg, likelihood="beta_binomial")
+    params = vae_lib.init(jax.random.PRNGKey(1), cfg_bb)
+    report = verify_codec(vae_lib.make_bb_codec(params, cfg_bb), lanes=2)
+    assert report.ok and not report.findings, str(report)
+
+
+def test_shipped_hvae_clean():
+    from repro.models import hvae
+    cfg = hvae.HVAEConfig(levels=2, ch=8, z_ch=2, n_res=1)
+    params = hvae.init(jax.random.PRNGKey(0), cfg)
+    codec = hvae.make_bitswap_codec(params, cfg, (4, 4))
+    report = verify_codec(codec, lanes=2)
+    assert report.ok and not report.findings, str(report)
+
+
+def test_shipped_token_stream_clean():
+    from repro.configs import base as cfg_base
+    from repro.core import lm_codec
+    from repro.models import transformer
+    cfg = dataclasses.replace(
+        cfg_base.reduced(cfg_base.get("qwen2-0.5b")), vocab=120)
+    params = transformer.init(jax.random.PRNGKey(17), cfg)
+    report = verify_codec(lm_codec.TokenStream(params, cfg, 4), lanes=2)
+    assert report.ok and not report.findings, str(report)
+    # opaque driver: no static bound, and no noisy notes either
+    # (TokenStream declares itself __analysis_opaque__)
+    assert report.bits_bound is None
+    assert not report.notes
+
+
+def test_shipped_stream_codecs_clean():
+    from repro.stream import coder as stream_coder
+    inner = codecs.Shaped(
+        codecs.Repeat(lambda d: codecs.Uniform(8), 4), (4,))
+    assert verify_codec(stream_coder.BlockChain(inner, k=3), lanes=2).ok
+    table = ans.probs_to_starts(jnp.full((2, 16), 1.0 / 16), 16)
+    block = stream_coder.KernelTableBlock(table, k=3, precision=16)
+    report = verify_codec(block, lanes=2)
+    assert report.ok and not report.findings, str(report)
+
+
+# ---------------------------------------------------------------------------
+# wiring: engine registration, compile lowering, stream opt-in
+# ---------------------------------------------------------------------------
+
+def _uniform_family(shape):
+    n = int(np.prod(shape))
+    return codecs.Shaped(codecs.Repeat(lambda d: codecs.Uniform(6), n),
+                         shape)
+
+
+def _broken_family(shape):
+    return ZeroFreqTable(jnp.zeros((2, 8), jnp.float32), 16)
+
+
+def test_engine_verifies_on_registration():
+    from repro.serve import CodecEngine
+    eng = CodecEngine(_broken_family, seed=0)
+    with pytest.raises(ContractViolation, match="freq-zero"):
+        eng.codec_for((4,))
+    # opt-out serves the (broken) codec without analysis
+    eng2 = CodecEngine(_broken_family, seed=0, verify=False)
+    eng2.codec_for((4,))
+
+
+def test_engine_verifies_once_per_shape():
+    from repro.serve import CodecEngine
+    calls = []
+
+    def family(shape):
+        calls.append(shape)
+        return _uniform_family(shape)
+
+    eng = CodecEngine(family, seed=0)
+    eng.codec_for((4,))
+    eng.codec_for((4,))
+    assert calls == [(4,)]      # memo intact; verification ran once
+
+
+def test_sharded_engine_passes_verify_through():
+    from repro.serve import ShardedCodecEngine
+    eng = ShardedCodecEngine(_broken_family, n_shards=1, seed=0)
+    with pytest.raises(ContractViolation, match="freq-zero"):
+        eng._inner.codec_for((4,))
+
+
+def test_compile_validates_lowered_tables():
+    # all -inf logits collapse the softmax to zero mass: the lowered
+    # fixed-point table no longer spans 2^precision
+    rep = codecs.Repeat(
+        lambda d: Categorical(jnp.full((2, 8), -jnp.inf, jnp.float32),
+                              16), 4)
+    with pytest.raises(ValueError, match=r"freq-sum.*Categorical"):
+        codecs.compile(rep)
+
+
+def test_compile_rejects_non_positive_sigma():
+    rep = codecs.Repeat(
+        lambda d: codecs.DiscretizedGaussian(
+            jnp.zeros((2,)), jnp.zeros((2,)), bits=4, precision=12), 3)
+    with pytest.raises(ValueError, match="starts-monotone"):
+        codecs.compile(rep)
+
+
+def test_compile_verify_flag_runs_full_analysis():
+    with pytest.raises(ContractViolation):
+        codecs.compile(AsymmetricUniform(4), verify=True)
+    # clean codec passes with verify on
+    codecs.compile(codecs.Repeat(lambda d: codecs.Uniform(6), 4),
+                   verify=True)
+
+
+def test_stream_encoder_verify_opt_in():
+    from repro.stream import StreamEncoder
+    bad = codecs.Shaped(codecs.Repeat(
+        lambda d: ZeroFreqTable(jnp.zeros((2, 8), jnp.float32), 16), 2),
+        (2,))
+    with pytest.raises(ContractViolation):
+        StreamEncoder(bad, lanes=2, block_symbols=4, verify=True)
+    StreamEncoder(bad, lanes=2, block_symbols=4)   # default: no check
+
+
+# ---------------------------------------------------------------------------
+# container header validation (satellite: named corruption errors)
+# ---------------------------------------------------------------------------
+
+def _blob():
+    codec = codecs.Shaped(
+        codecs.Repeat(lambda d: codecs.Uniform(8), 6), (6,))
+    data = jnp.arange(2 * 6, dtype=jnp.int32).reshape(2, 6) % 256
+    return codec, data, codecs.compress(codec, data, lanes=2, seed=None,
+                                        init_chunks=0)
+
+
+def test_container_roundtrip_still_exact():
+    codec, data, blob = _blob()
+    assert (codecs.decompress(codec, blob) == data).all()
+
+
+@pytest.mark.parametrize("mutate, msg", [
+    (lambda b: b[:4], "no header"),
+    (lambda b: b"XXXX" + b[4:], "bad magic"),
+    (lambda b: b[:4] + bytes([99]) + b[5:], "version"),
+    (lambda b: b[:5] + bytes([61]) + b[6:], "precision"),
+    (lambda b: b[:8] + (2 ** 31).to_bytes(4, "little") + b[12:],
+     "lane count"),
+    (lambda b: b[:14], "lengths block is short"),
+    (lambda b: b[:-2], "truncated or trailing garbage"),
+    (lambda b: b + b"\x00\x00", "truncated or trailing garbage"),
+])
+def test_container_rejects_corruption_by_name(mutate, msg):
+    codec, _, blob = _blob()
+    with pytest.raises(codecs.ContainerError, match=msg):
+        codecs.decompress(codec, mutate(blob))
+
+
+def test_container_error_is_a_value_error():
+    assert issubclass(codecs.ContainerError, ValueError)
+
+
+def test_container_rejects_zero_lane_length():
+    codec, _, blob = _blob()
+    # lengths block starts at offset 12; zero out lane 0's length
+    bad = blob[:12] + b"\x00\x00\x00\x00" + blob[16:]
+    with pytest.raises(codecs.ContainerError, match="lane length"):
+        codecs.decompress(codec, bad)
+
+
+# ---------------------------------------------------------------------------
+# hot-path invariants raise (satellite: no bare asserts)
+# ---------------------------------------------------------------------------
+
+def test_precision_guard_survives_optimization():
+    stack = ans.make_stack(2, 8)
+    start = jnp.zeros((2,), jnp.uint32)
+    freq = jnp.full((2,), 4, jnp.uint32)
+    for bad in (0, 17, -1):
+        with pytest.raises(ValueError, match="precision"):
+            ans.push(stack, start, freq, precision=bad)
+        with pytest.raises(ValueError, match="precision"):
+            ans.peek(stack, precision=bad)
+        with pytest.raises(ValueError, match="precision"):
+            ans.pop_update(stack, start, freq, precision=bad)
+
+
+def test_kernel_lane_guard_raises():
+    from repro.kernels.ans import kernel as ans_kernel
+    head = jnp.full((3,), 1 << 16, jnp.uint32)   # not a LANE_TILE multiple
+    with pytest.raises(ValueError, match="LANE_TILE"):
+        ans_kernel.pop_slots(head, 16)
+
+
+# ---------------------------------------------------------------------------
+# source lint
+# ---------------------------------------------------------------------------
+
+def lint_rules(src, name="src/repro/core/x.py"):
+    return {f.rule for f in lint_source(src, name)}
+
+
+def test_lint_bare_assert():
+    assert lint_rules("assert precision <= 16") == {"bare-assert"}
+    assert lint_rules("if precision > 16:\n    raise ValueError('x')") \
+        == set()
+
+
+def test_lint_div_shared():
+    assert lint_rules("y = (z - mu) / sigma") == {"div-shared"}
+    assert lint_rules("y = (z - mu) * (1.0 / sigma)") == set()
+    assert lint_rules("y = x / 2.0") == set()        # constant divisor
+    # build-time divisions under ensure_compile_time_eval are exempt
+    src = ("import jax\n"
+           "with jax.ensure_compile_time_eval():\n"
+           "    t = a / b\n")
+    assert lint_rules(src) == set()
+
+
+def test_lint_ndtri_outside_discretize():
+    src = "from jax.scipy.special import ndtri\ny = ndtri(q)"
+    assert lint_rules(src) == {"ndtri-coder"}
+    assert lint_rules(src, "src/repro/core/discretize.py") == set()
+
+
+def test_lint_cast_barrier():
+    assert lint_rules(
+        "f = jax.nn.sigmoid(x).astype(jnp.uint32)") == {"cast-barrier"}
+    assert lint_rules(
+        "f = jnp.floor(jax.nn.sigmoid(x) * s).astype(jnp.uint32)") == set()
+
+
+def test_lint_jit_in_table_module():
+    src = "import jax\ntable = jax.jit(build)(x)"
+    assert lint_rules(src, "src/repro/core/distributions.py") \
+        == {"jit-in-table-module"}
+    assert lint_rules(src, "src/repro/core/ans.py") == set()
+
+
+def test_lint_allow_comment_escape():
+    src = "y = a / b  # analysis: allow(div-shared)"
+    assert lint_rules(src) == set()
+
+
+def test_lint_scopes_to_coder_dirs():
+    # directories outside the coder scope contribute no files
+    found, n = lint_paths(["src/repro/models"])
+    assert n == 0 and found == []
+
+
+def test_lint_shipped_tree_clean():
+    findings, n_files = lint_paths(["src/"])
+    assert n_files > 10
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_rules_catalogue_is_documented():
+    for rule, desc in RULES.items():
+        assert desc, rule
+    # every rule the verifier/lint can emit is in the catalogue
+    for emitted in ("freq-sum", "freq-zero", "starts-monotone",
+                    "push-pop-mirror", "inverse-probe", "float-leak",
+                    "div-shared", "ndtri-coder", "edge-cache",
+                    "scan-chain", "capacity-bound", "opaque-probe",
+                    "child-build", "bare-assert", "cast-barrier",
+                    "jit-in-table-module"):
+        assert emitted in RULES

@@ -18,10 +18,12 @@ import pytest
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DOC_FILES = ["README.md", "docs/ARCHITECTURE.md", "docs/FORMATS.md",
-             "docs/API.md", "docs/PERF.md", "docs/SCALING.md"]
+             "docs/API.md", "docs/PERF.md", "docs/SCALING.md",
+             "docs/ANALYSIS.md"]
 
 #: modules whose whole ``__all__`` must be documented in docs/API.md.
-COVERED_MODULES = ("repro.codecs", "repro.stream", "repro.serve")
+COVERED_MODULES = ("repro.codecs", "repro.stream", "repro.serve",
+                   "repro.analysis")
 
 _FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
 _LINK = re.compile(r"(?<!!)\[[^\]]+\]\(([^)\s]+)\)")
@@ -54,6 +56,7 @@ def _anchors(rel):
 
 _API_BLOCKS = _python_blocks("docs/API.md")
 _SCALING_BLOCKS = _python_blocks("docs/SCALING.md")
+_ANALYSIS_BLOCKS = _python_blocks("docs/ANALYSIS.md")
 
 
 def test_api_md_has_examples():
@@ -62,6 +65,10 @@ def test_api_md_has_examples():
 
 def test_scaling_md_has_examples():
     assert len(_SCALING_BLOCKS) >= 3
+
+
+def test_analysis_md_has_examples():
+    assert len(_ANALYSIS_BLOCKS) >= 10
 
 
 @pytest.mark.parametrize("i", range(len(_API_BLOCKS)))
@@ -74,6 +81,12 @@ def test_api_md_block_runs(i):
 def test_scaling_md_block_runs(i):
     code = _SCALING_BLOCKS[i]
     exec(compile(code, f"docs/SCALING.md[block {i}]", "exec"), {})
+
+
+@pytest.mark.parametrize("i", range(len(_ANALYSIS_BLOCKS)))
+def test_analysis_md_block_runs(i):
+    code = _ANALYSIS_BLOCKS[i]
+    exec(compile(code, f"docs/ANALYSIS.md[block {i}]", "exec"), {})
 
 
 def test_api_md_covers_every_export():
