@@ -1,0 +1,165 @@
+"""Concurrent ragged-client load generator for the ``repro.gateway``
+serving tier.
+
+``clients`` asyncio clients, each with a different-length corpus, open
+streaming sessions against one admission-controlled gateway and write
+their blocks concurrently; the bench reports per-write latency
+percentiles (``p50_ms``/``p99_ms``), end-to-end **goodput** (payload MB/s
+actually delivered to finished, valid wires), and the single-client
+synchronous streaming baseline on the same corpus for comparison
+(``goodput_ratio`` - the acceptance bar is >= 0.9, i.e. the gateway's
+scheduling overhead costs < 10%).
+
+Wire bytes are asserted byte-identical to the synchronous
+``CodecEngine.compress_stream`` path for every client - the gateway
+schedules, it never recodes.
+
+Fields ending in ``mb_per_s`` are gated by ``benchmarks/compare.py``
+against the committed baseline (CI's "Gateway smoke" step); latency
+fields are reported but not gated (they are not higher-is-better).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.loadgen --quick
+    PYTHONPATH=src python -m benchmarks.run --only loadgen
+"""
+
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import codecs
+from repro.gateway import Backpressure, Gateway
+from repro.serve import CodecEngine
+
+
+def _family(bits: int = 8):
+    def make(shape):
+        n = int(np.prod(shape))
+        return codecs.Shaped(
+            codecs.Repeat(lambda d: codecs.Uniform(bits), n),
+            tuple(shape))
+    return make
+
+
+def _percentile(xs, q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+
+def run(clients: int = 6, lanes: int = 2, block_symbols: int = 16,
+        shape=(8, 8), min_blocks: int = 2, max_blocks: int = 5,
+        seed: int = 0, max_workers: int = 1):
+    # One worker thread by default: CPU JAX is internally parallel, so
+    # extra gateway workers only contend and blur the goodput-vs-
+    # baseline comparison; the concurrency under test is admission.
+    rng = np.random.default_rng(seed)
+    eng = CodecEngine(_family(), seed=seed, init_chunks=0,
+                      max_inflight_lanes=max(2, clients // 2) * lanes)
+    corpora = []
+    for _ in range(clients):
+        k = int(rng.integers(min_blocks, max_blocks + 1))
+        corpora.append(jnp.asarray(
+            rng.integers(0, 256, (k * block_symbols, lanes, *shape)),
+            jnp.int32))
+    total_bytes = sum(int(d.size) for d in corpora)   # 8-bit symbols
+
+    # Warmup (trace/codec registration out of the measurement), then
+    # the single-client synchronous baseline on the same corpora.
+    eng.compress_stream(corpora[0][:block_symbols],
+                        block_symbols=block_symbols)
+    t0 = time.perf_counter()
+    base_wires = [eng.compress_stream(d, block_symbols=block_symbols)
+                  for d in corpora]
+    base_s = time.perf_counter() - t0
+
+    latencies_ms = []
+    wires = [b""] * clients
+    rejected_retries = 0
+
+    async def client(gw: Gateway, i: int):
+        nonlocal rejected_retries
+        data = corpora[i]
+        while True:
+            try:
+                sess = await gw.open_stream(
+                    shape, lanes=lanes, session_id=f"load-{i}",
+                    tenant=f"tenant-{i % 3}",
+                    block_symbols=block_symbols)
+                break
+            except Backpressure as e:   # bounded queue: back off, retry
+                rejected_retries += 1
+                await asyncio.sleep(e.retry_after)
+        wire = b""
+        for start in range(0, int(data.shape[0]), block_symbols):
+            t = time.perf_counter()
+            wire += await sess.write(data[start:start + block_symbols])
+            latencies_ms.append((time.perf_counter() - t) * 1e3)
+        wire += await sess.close()
+        wires[i] = wire
+
+    async def drive():
+        async with Gateway(eng, queue_depth=clients,
+                           max_workers=max_workers) as gw:
+            await asyncio.gather(*(client(gw, i)
+                                   for i in range(clients)))
+            return gw.stats()
+
+    t0 = time.perf_counter()
+    stats = asyncio.run(drive())
+    gw_s = time.perf_counter() - t0
+
+    for i, (w, b) in enumerate(zip(wires, base_wires)):
+        assert w == b, f"client {i}: gateway wire != synchronous wire"
+
+    goodput = total_bytes / 1e6 / gw_s
+    baseline = total_bytes / 1e6 / base_s
+    return [{
+        "bench": "loadgen", "workload": "ragged-stream",
+        "clients": clients, "lanes": lanes,
+        "blocks": sum(int(d.shape[0]) // block_symbols
+                      for d in corpora),
+        "payload_mb": total_bytes / 1e6,
+        "goodput_mb_per_s": goodput,
+        "baseline_mb_per_s": baseline,
+        "goodput_ratio": goodput / baseline,
+        "p50_ms": _percentile(latencies_ms, 50),
+        "p99_ms": _percentile(latencies_ms, 99),
+        "backpressure_retries": rejected_retries,
+        "deadline_exceeded": stats["deadline_exceeded"],
+        "lane_leak": stats["inflight_lanes"],   # must be 0
+    }]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer clients / smaller corpora (CI smoke)")
+    ap.add_argument("--json-dir", default=".",
+                    help="directory for BENCH_loadgen.json")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    t0 = time.time()
+    rows = run(clients=4 if args.quick else 8,
+               block_symbols=8 if args.quick else 16,
+               max_blocks=3 if args.quick else 5,
+               seed=args.seed)
+    payload = {"bench": "loadgen", "quick": args.quick,
+               "elapsed_s": time.time() - t0, "rows": rows}
+    path = os.path.join(args.json_dir, "BENCH_loadgen.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    for r in rows:
+        print(",".join(f"{k}={v:.4f}" if isinstance(v, float) else
+                       f"{k}={v}" for k, v in r.items()))
+    print(f"loadgen,json,{path}")
+
+
+if __name__ == "__main__":
+    main()

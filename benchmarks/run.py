@@ -38,7 +38,7 @@ def main() -> None:
     from benchmarks import (ablation_cleanbits, ans_throughput,
                             codec_compile, dataset_rate, fig3_chain,
                             hvae_rate, latent_lm_gain, lm_compression,
-                            stream_throughput, table2_rates,
+                            loadgen, stream_throughput, table2_rates,
                             table3_predict)
 
     q = args.quick
@@ -70,6 +70,9 @@ def main() -> None:
         "dataset_rate": lambda: dataset_rate.run(
             train_steps=300 if q else 1500,
             n_images=256 if q else 2048),
+        "loadgen": lambda: loadgen.run(
+            clients=4 if q else 8, block_symbols=8 if q else 16,
+            max_blocks=3 if q else 5),
     }
     # historical/module aliases for --only (e.g. CI's stream_throughput)
     aliases = {"stream_throughput": "stream", "table2_rates": "table2",

@@ -1,0 +1,31 @@
+"""repro.gateway: the async serving tier over the compression engines.
+
+Admission control with per-tenant lane quotas, bounded-queue
+backpressure (reject with ``retry_after``, never unbounded buffering),
+deadline enforcement that retires lanes cleanly, and mid-stream
+checkpoint/resume via durable recovery records. The gateway schedules;
+it never recodes - wire bytes are byte-identical to the synchronous
+engine paths. See docs/SERVING.md.
+"""
+
+from repro.gateway.frontend import DeadlineExceeded, Gateway
+from repro.gateway.quota import AdmissionController, Backpressure, \
+    TenantQuota
+from repro.gateway.recovery import RecoveryRecord, delete_record, \
+    list_sessions, load_record, save_record
+from repro.gateway.session import DecodeSession, EncodeSession
+
+__all__ = [
+    "Gateway",
+    "DeadlineExceeded",
+    "Backpressure",
+    "TenantQuota",
+    "AdmissionController",
+    "EncodeSession",
+    "DecodeSession",
+    "RecoveryRecord",
+    "save_record",
+    "load_record",
+    "delete_record",
+    "list_sessions",
+]

@@ -1,0 +1,467 @@
+"""The asyncio gateway: admission-controlled serving over the engines.
+
+``Gateway`` fronts a ``serve.CodecEngine`` (or ``ShardedCodecEngine``)
+with the three behaviours a serving tier needs and the engines
+deliberately do not have:
+
+  * **admission + backpressure** - every request claims lanes through
+    the ``AdmissionController``; when the lane axis is full the request
+    waits in a *bounded*, strictly-FIFO queue, and when the queue is
+    full the submit fails fast with ``Backpressure`` carrying a
+    ``retry_after`` hint (EMA of recent service times). The gateway
+    never buffers unboundedly.
+  * **deadlines** - any call takes ``deadline=`` seconds; on expiry the
+    caller gets ``DeadlineExceeded`` immediately, and the lane lease is
+    retired the moment the abandoned compute thread returns (JAX work
+    cannot be preempted mid-kernel, but the ledger is always cleaned -
+    no lane leak).
+  * **recovery** - stream sessions checkpoint to
+    ``gateway.recovery`` records, so a killed client resumes its exact
+    byte stream (``resume_stream`` / ``resume_decode``).
+
+The gateway schedules; it never recodes. Compression runs through the
+same engine methods (and the engine's own codec memo) as the
+synchronous path, so blobs are **byte-identical** to
+``engine.compress``/``compress_stream`` - the acceptance property
+``tests/test_gateway.py`` asserts hex-for-hex.
+
+Example::
+
+    async def main():
+        eng = serve.CodecEngine(family, max_inflight_lanes=8)
+        async with gateway.Gateway(eng, queue_depth=4) as gw:
+            blob = await gw.compress(batch, tenant="cam-fleet")
+            sess = await gw.open_stream((8, 8), lanes=4,
+                                        session_id="cam-1")
+            wire = await sess.write(xs)
+            wire += await sess.close()
+"""
+
+from __future__ import annotations
+
+import asyncio
+import time
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, Deque, Dict, Optional, Sequence, Tuple
+
+import jax
+
+from repro import codecs
+from repro.gateway import recovery
+from repro.gateway.quota import AdmissionController, Backpressure, \
+    TenantQuota
+from repro.gateway.session import DecodeSession, EncodeSession
+from repro.stream import format as fmt
+
+
+class DeadlineExceeded(TimeoutError):
+    """The request's ``deadline=`` expired before the gateway could
+    finish it. The lane lease (if one was granted) is retired cleanly
+    once the abandoned compute returns; a session op that times out
+    abandons its session (recovery record kept, lanes freed)."""
+
+
+class Gateway:
+    """Async serving front: admission, backpressure, deadlines, recovery.
+
+    One ``Gateway`` wraps one engine. Lane capacity comes from the
+    engine's ``max_inflight_lanes`` budget; per-tenant fairness from
+    ``TenantQuota``; queueing is bounded by ``queue_depth`` (globally)
+    and ``TenantQuota.max_queued`` (per tenant). ``recovery_dir``
+    enables durable session records (otherwise sessions are resumable
+    only within the process via the record objects themselves).
+
+    Use as an async context manager (or call ``stop()`` yourself -
+    it flushes open encode sessions so their wires end in a valid
+    trailer).
+    """
+
+    def __init__(self, engine: Any, *, queue_depth: int = 16,
+                 default_quota: TenantQuota = TenantQuota(),
+                 quotas: Optional[Dict[str, TenantQuota]] = None,
+                 recovery_dir: Optional[str] = None,
+                 max_workers: int = 4,
+                 clock: Callable[[], float] = time.monotonic):
+        self.engine = engine
+        self.recovery_dir = recovery_dir
+        self._clock = clock
+        self._ctl = AdmissionController(
+            engine, queue_depth=queue_depth,
+            default_quota=default_quota, quotas=quotas,
+            retry_after=self._retry_hint)
+        self._executor = ThreadPoolExecutor(
+            max_workers=max_workers, thread_name_prefix="gateway")
+        # Strict-FIFO admission queue: (future-for-lease, tenant, lanes).
+        self._waiters: Deque[Tuple[asyncio.Future, str, int]] = deque()
+        self._sessions: Dict[str, Any] = {}
+        self._ema_s: Optional[float] = None   # EMA of service time
+        self.completed = 0
+        self.deadline_exceeded = 0
+        self._stopped = False
+
+    # -- lifecycle -----------------------------------------------------------
+
+    async def __aenter__(self) -> "Gateway":
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    async def stop(self, flush_sessions: bool = True) -> Dict[str, bytes]:
+        """Shut down: flush every open encode session (so each wire
+        ends in a valid BBX2 trailer), close decode sessions, stop the
+        worker pool. Returns ``{session_id: tail_bytes}`` for the
+        flushed encoders - the bytes a client would have lost."""
+        tails: Dict[str, bytes] = {}
+        for sid, sess in list(self._sessions.items()):
+            if isinstance(sess, EncodeSession):
+                tails[sid] = await sess.close()
+            else:
+                sess.close()
+        self._stopped = True
+        self._executor.shutdown(wait=True)
+        return tails
+
+    # -- admission / execution machinery -------------------------------------
+
+    def _retry_hint(self) -> float:
+        # The EMA of recent service times is the best local estimate of
+        # when a lane will free up; floor it so clients never hot-spin.
+        return max(0.01, self._ema_s if self._ema_s is not None else 0.05)
+
+    def _observe(self, elapsed: float) -> None:
+        self._ema_s = (elapsed if self._ema_s is None
+                       else 0.8 * self._ema_s + 0.2 * elapsed)
+
+    def _pump(self) -> None:
+        """Grant freed lanes to waiters in strict FIFO order (head-of-
+        line blocking is the fairness guarantee: a small request cannot
+        starve a large one that arrived first)."""
+        while self._waiters:
+            fut, tenant, lanes = self._waiters[0]
+            if fut.done():           # cancelled/timed-out waiter
+                self._waiters.popleft()
+                continue
+            lease = self._ctl.try_acquire(tenant, lanes)
+            if lease is None:
+                break
+            self._waiters.popleft()
+            fut.set_result(lease)
+
+    async def _admit(self, tenant: str, lanes: int,
+                     deadline: Optional[float]):
+        """A lane lease, waiting (bounded, FIFO) if the axis is full.
+
+        Raises ``Backpressure`` when the queue is full and
+        ``DeadlineExceeded`` when the wait outlives ``deadline``."""
+        if self._stopped:
+            raise RuntimeError("gateway: stopped")
+        # Fast path only when nobody is already waiting (FIFO fairness).
+        if not self._waiters:
+            lease = self._ctl.try_acquire(tenant, lanes)
+            if lease is not None:
+                return lease
+        self._ctl.reserve_queue_slot(tenant)   # may raise Backpressure
+        loop = asyncio.get_running_loop()
+        fut: asyncio.Future = loop.create_future()
+        self._waiters.append((fut, tenant, lanes))
+        self._pump()   # capacity may have freed since the fast path
+        try:
+            if deadline is None:
+                return await fut
+            return await asyncio.wait_for(fut, deadline)
+        except asyncio.TimeoutError:
+            self.deadline_exceeded += 1
+            raise DeadlineExceeded(
+                f"gateway: no lanes within {deadline}s "
+                f"(tenant {tenant!r}, {lanes} lanes)") from None
+        finally:
+            # wait_for returns the lease if it was granted in the same
+            # loop tick as the timeout, so a granted lease is never
+            # dropped here; a cancelled waiter is skipped by _pump.
+            self._ctl.release_queue_slot(tenant)
+            try:
+                self._waiters.remove((fut, tenant, lanes))
+            except ValueError:
+                pass   # already popped by _pump
+
+    async def _execute(self, fn: Callable[[], Any], *,
+                       deadline: Optional[float] = None,
+                       on_timeout: Optional[Callable[[], None]] = None):
+        """Run ``fn`` on the worker pool; enforce ``deadline``.
+
+        JAX compute cannot be preempted, so on expiry the result is
+        abandoned and ``on_timeout`` runs once the thread returns -
+        that is where lane retirement happens, keeping the ledger
+        exact."""
+        loop = asyncio.get_running_loop()
+        start = self._clock()
+        fut = loop.run_in_executor(self._executor, fn)
+        try:
+            if deadline is None:
+                result = await fut
+            else:
+                result = await asyncio.wait_for(
+                    asyncio.shield(fut), deadline)
+        except asyncio.TimeoutError:
+            self.deadline_exceeded += 1
+
+            def _reap(f):
+                f.exception()        # retrieve, don't warn
+                if on_timeout is not None:
+                    on_timeout()
+            fut.add_done_callback(_reap)
+            raise DeadlineExceeded(
+                f"gateway: compute exceeded deadline {deadline}s "
+                "(lane retires when the thread returns)") from None
+        self._observe(self._clock() - start)
+        return result
+
+    async def _run(self, fn: Callable[[], Any], *, tenant: str,
+                   lanes: int, deadline: Optional[float]):
+        """Admit, execute, retire: the one-shot request path."""
+        t0 = self._clock()
+        lease = await self._admit(tenant, lanes, deadline)
+        remaining = None if deadline is None \
+            else max(0.001, deadline - (self._clock() - t0))
+        released = []
+
+        def _release():
+            if not released:
+                released.append(True)
+                self._ctl.release(tenant, lease)
+                self._pump()
+        try:
+            result = await self._execute(fn, deadline=remaining,
+                                         on_timeout=_release)
+        except DeadlineExceeded:
+            raise            # _release runs when the thread returns
+        except BaseException:
+            _release()
+            raise
+        _release()
+        self.completed += 1
+        return result
+
+    # -- one-shot requests ---------------------------------------------------
+
+    async def compress(self, data: Any, *, tenant: str = "default",
+                       deadline: Optional[float] = None,
+                       **kwargs) -> bytes:
+        """Admission-controlled ``engine.compress`` (byte-identical
+        BBX1 blob). Lanes claimed = the data's lane axis."""
+        lanes = int(jax.tree_util.tree_leaves(data)[0].shape[1])
+        return await self._run(
+            lambda: self.engine.compress(data, **kwargs),
+            tenant=tenant, lanes=lanes, deadline=deadline)
+
+    async def decompress(self, blob: bytes, n: int,
+                         shape: Sequence[int], *,
+                         tenant: str = "default",
+                         deadline: Optional[float] = None):
+        """Admission-controlled ``engine.decompress`` (bit-exact)."""
+        lanes = int(codecs.blob_info(blob)["lanes"])
+        return await self._run(
+            lambda: self.engine.decompress(blob, n, shape),
+            tenant=tenant, lanes=lanes, deadline=deadline)
+
+    async def compress_stream(self, data: Any, *,
+                              block_symbols: int = 8,
+                              tenant: str = "default",
+                              deadline: Optional[float] = None,
+                              **kwargs) -> bytes:
+        """Admission-controlled ``engine.compress_stream`` (byte-
+        identical BBX2 blob)."""
+        lanes = int(jax.tree_util.tree_leaves(data)[0].shape[1])
+        return await self._run(
+            lambda: self.engine.compress_stream(
+                data, block_symbols=block_symbols, **kwargs),
+            tenant=tenant, lanes=lanes, deadline=deadline)
+
+    async def decompress_stream(self, blob: bytes, shape: Sequence[int],
+                                *, tenant: str = "default",
+                                deadline: Optional[float] = None):
+        """Admission-controlled ``engine.decompress_stream``."""
+        parsed = fmt.decode_header(blob)
+        if parsed is None:
+            raise ValueError("gateway: truncated stream (no header)")
+        return await self._run(
+            lambda: self.engine.decompress_stream(blob, shape),
+            tenant=tenant, lanes=parsed[0].lanes, deadline=deadline)
+
+    # -- stream sessions -----------------------------------------------------
+
+    def _register(self, sess: Any, tenant: str, lease) -> Any:
+        self._sessions[sess.session_id] = sess
+        orig_on_close = sess._on_close
+
+        def on_close(s):
+            self._sessions.pop(s.session_id, None)
+            self._ctl.release(tenant, lease)
+            self._pump()
+            orig_on_close(s)
+        sess._on_close = on_close
+        return sess
+
+    def _session_execute(self, session_box: list) -> Any:
+        """The executor hook handed to sessions: deadline expiry
+        abandons the session (lanes freed when the thread returns,
+        recovery record kept)."""
+        async def execute(fn, deadline=None):
+            sess = session_box[0]
+            return await self._execute(
+                fn, deadline=deadline,
+                on_timeout=lambda: sess.abandon()
+                if hasattr(sess, "abandon") else sess.close())
+        return execute
+
+    async def open_stream(self, shape: Sequence[int], *, lanes: int,
+                          session_id: str, tenant: str = "default",
+                          block_symbols: int = 8,
+                          deadline: Optional[float] = None,
+                          **kwargs) -> EncodeSession:
+        """Open a resumable encode session (claims ``lanes`` until
+        close/abandon/timeout). The wire it produces is byte-identical
+        to ``engine.compress_stream`` on the same data."""
+        recovery.check_session_id(session_id)
+        if session_id in self._sessions:
+            raise ValueError(
+                f"gateway: session id {session_id!r} already open")
+        lease = await self._admit(tenant, lanes, deadline)
+        try:
+            enc = self.engine.stream_encoder(
+                tuple(int(s) for s in shape), lanes=lanes,
+                block_symbols=block_symbols, **kwargs)
+        except BaseException:
+            self._ctl.release(tenant, lease)
+            self._pump()
+            raise
+        box: list = [None]
+        sess = EncodeSession(
+            session_id, tenant, enc,
+            execute=self._session_execute(box),
+            on_close=lambda s: None,
+            recovery_dir=self.recovery_dir,
+            meta={"shape": [int(s) for s in shape], "lanes": int(lanes),
+                  "block_symbols": int(block_symbols)})
+        box[0] = sess
+        return self._register(sess, tenant, lease)
+
+    async def resume_stream(self, session_id: str, *,
+                            tenant: Optional[str] = None,
+                            deadline: Optional[float] = None
+                            ) -> EncodeSession:
+        """Rebuild a killed client's encode session from its recovery
+        record; the continued wire is byte-identical to an
+        uninterrupted stream. Bytes before ``sess.resumed_at`` were
+        already delivered."""
+        if self.recovery_dir is None:
+            raise RuntimeError("gateway: no recovery_dir configured")
+        record = recovery.load_record(self.recovery_dir, session_id)
+        if record is None:
+            raise KeyError(
+                f"gateway: no recovery record for {session_id!r}")
+        if record.kind != recovery.KIND_ENCODE or record.snapshot is None:
+            raise ValueError(
+                f"gateway: record {session_id!r} is not an encode "
+                "session")
+        if session_id in self._sessions:
+            raise ValueError(
+                f"gateway: session id {session_id!r} already open")
+        tenant = tenant if tenant is not None else record.tenant
+        from repro.stream import EncoderSnapshot
+        snap_dict = dict(record.snapshot)
+        if isinstance(snap_dict.get("heads"), list):
+            snap_dict["heads"] = tuple(snap_dict["heads"])
+        snap = EncoderSnapshot(**snap_dict)
+        shape = tuple(record.meta["shape"])
+        lease = await self._admit(tenant, snap.lanes, deadline)
+        try:
+            enc = self.engine.resume_encoder(shape, snap)
+        except BaseException:
+            self._ctl.release(tenant, lease)
+            self._pump()
+            raise
+        box: list = [None]
+        sess = EncodeSession(
+            session_id, tenant, enc,
+            execute=self._session_execute(box),
+            on_close=lambda s: None,
+            recovery_dir=self.recovery_dir, meta=dict(record.meta))
+        box[0] = sess
+        return self._register(sess, tenant, lease)
+
+    async def open_decode(self, blob: bytes, shape: Sequence[int], *,
+                          session_id: str, tenant: str = "default",
+                          start_block: int = 0,
+                          deadline: Optional[float] = None
+                          ) -> DecodeSession:
+        """Open a resumable decode session over a complete BBX2 blob;
+        ``ack()`` persists progress for ``resume_decode``."""
+        recovery.check_session_id(session_id)
+        if session_id in self._sessions:
+            raise ValueError(
+                f"gateway: session id {session_id!r} already open")
+        parsed = fmt.decode_header(blob)
+        if parsed is None:
+            raise ValueError("gateway: truncated stream (no header)")
+        header = parsed[0]
+        lease = await self._admit(tenant, header.lanes, deadline)
+        try:
+            dec = self.engine.stream_decoder(
+                tuple(int(s) for s in shape), header=header,
+                verify_trailer=False)
+        except BaseException:
+            self._ctl.release(tenant, lease)
+            self._pump()
+            raise
+        box: list = [None]
+        sess = DecodeSession(
+            session_id, tenant, blob, dec,
+            execute=self._session_execute(box),
+            on_close=lambda s: None,
+            recovery_dir=self.recovery_dir, start_block=start_block,
+            meta={"shape": [int(s) for s in shape]})
+        box[0] = sess
+        return self._register(sess, tenant, lease)
+
+    async def resume_decode(self, blob: bytes, session_id: str, *,
+                            tenant: Optional[str] = None,
+                            deadline: Optional[float] = None
+                            ) -> DecodeSession:
+        """Reopen a decode session at its first unacknowledged block."""
+        if self.recovery_dir is None:
+            raise RuntimeError("gateway: no recovery_dir configured")
+        record = recovery.load_record(self.recovery_dir, session_id)
+        if record is None:
+            raise KeyError(
+                f"gateway: no recovery record for {session_id!r}")
+        if record.kind != recovery.KIND_DECODE:
+            raise ValueError(
+                f"gateway: record {session_id!r} is not a decode "
+                "session")
+        sess = await self.open_decode(
+            blob, tuple(record.meta["shape"]), session_id=session_id,
+            tenant=tenant if tenant is not None else record.tenant,
+            start_block=record.block_index, deadline=deadline)
+        sess.symbols_acked = record.symbols_acked
+        return sess
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def open_sessions(self) -> Tuple[str, ...]:
+        return tuple(sorted(self._sessions))
+
+    def stats(self) -> Dict[str, Any]:
+        """One merged snapshot: admission state + gateway counters +
+        the engine's lane ledger."""
+        out = self._ctl.stats()
+        out.update(completed=self.completed,
+                   deadline_exceeded=self.deadline_exceeded,
+                   open_sessions=len(self._sessions),
+                   waiting=len(self._waiters),
+                   inflight_lanes=self.engine.inflight_lanes,
+                   retry_after_hint=self._retry_hint())
+        return out

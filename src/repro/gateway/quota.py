@@ -1,0 +1,175 @@
+"""Admission control: per-tenant lane quotas, a bounded submit queue,
+and backpressure.
+
+The controller is the gateway's gatekeeper for the engine's lane axis.
+It is deliberately *synchronous and lock-guarded* - a small amount of
+integer bookkeeping callable from the event loop and from engine
+threads alike - while all waiting happens in the asyncio layer
+(``frontend.Gateway``), so nothing here ever blocks.
+
+Three limits compose:
+
+  * the engine's global lane budget (``engine.try_admit`` /
+    ``engine.retire``, the non-blocking surface grown in
+    ``serve/engine.py``);
+  * a per-tenant lane quota (``TenantQuota.max_lanes``) - one tenant
+    cannot monopolize the lane axis;
+  * bounded queueing (global ``queue_depth`` + per-tenant
+    ``TenantQuota.max_queued``) - when the queue is full the submit is
+    rejected **immediately** with ``Backpressure`` carrying a
+    ``retry_after`` hint. The gateway never buffers unboundedly; load
+    it cannot absorb is the client's signal to back off.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Callable, Dict, Optional
+
+
+class Backpressure(RuntimeError):
+    """The gateway cannot take this submission *now*; retry after
+    ``retry_after`` seconds. Raised instead of queueing when the
+    bounded queue (global or per-tenant) is full - the
+    reject-with-retry-after contract that keeps buffering bounded."""
+
+    def __init__(self, reason: str, retry_after: float):
+        super().__init__(f"{reason} (retry after {retry_after:.3f}s)")
+        self.reason = reason
+        self.retry_after = float(retry_after)
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantQuota:
+    """Per-tenant admission limits.
+
+    ``max_lanes``: lanes the tenant may hold concurrently across its
+    in-flight requests and open sessions. ``max_queued``: submissions
+    the tenant may have waiting for lanes at once; beyond it the tenant
+    gets ``Backpressure`` even if the global queue has room.
+    """
+
+    max_lanes: int = 4
+    max_queued: int = 8
+
+    def __post_init__(self):
+        if self.max_lanes < 1 or self.max_queued < 0:
+            raise ValueError(
+                "gateway: TenantQuota needs max_lanes >= 1, "
+                "max_queued >= 0")
+
+
+class AdmissionController:
+    """Non-blocking admission over an engine's lane ledger.
+
+    ``try_acquire`` either returns an engine ``LaneLease`` (tenant
+    quota and global budget both fit) or ``None``; the caller decides
+    whether to queue. Queue *slots* are themselves admission-controlled
+    via ``reserve_queue_slot``/``release_queue_slot`` so the waiting
+    set stays bounded.
+
+    Example::
+
+        eng = serve.CodecEngine(family, max_inflight_lanes=8)
+        ctl = AdmissionController(eng, queue_depth=4)
+        lease = ctl.try_acquire("tenant-a", lanes=2)
+        if lease is not None:
+            ...  # serve the request
+            ctl.release("tenant-a", lease)
+    """
+
+    def __init__(self, engine: Any, *, queue_depth: int = 16,
+                 default_quota: TenantQuota = TenantQuota(),
+                 quotas: Optional[Dict[str, TenantQuota]] = None,
+                 retry_after: Callable[[], float] = lambda: 0.05):
+        if queue_depth < 0:
+            raise ValueError("gateway: queue_depth must be >= 0")
+        self._engine = engine
+        self.queue_depth = queue_depth
+        self._default_quota = default_quota
+        self._quotas = dict(quotas or {})
+        self._retry_after = retry_after
+        self._lock = threading.Lock()
+        self._tenant_lanes: Dict[str, int] = {}
+        self._tenant_queued: Dict[str, int] = {}
+        self._queued = 0
+        self.admitted = 0
+        self.rejected = 0
+
+    def quota_for(self, tenant: str) -> TenantQuota:
+        return self._quotas.get(tenant, self._default_quota)
+
+    # -- lanes ---------------------------------------------------------------
+
+    def try_acquire(self, tenant: str, lanes: int):
+        """A lane lease for ``tenant``, or ``None`` (quota or global
+        budget exhausted). Never blocks."""
+        quota = self.quota_for(tenant)
+        with self._lock:
+            held = self._tenant_lanes.get(tenant, 0)
+            if held + lanes > quota.max_lanes:
+                return None
+            lease = self._engine.try_admit(lanes)
+            if lease is None:
+                return None
+            self._tenant_lanes[tenant] = held + lanes
+            self.admitted += 1
+            return lease
+
+    def release(self, tenant: str, lease) -> None:
+        """Retire a lease back to the engine and the tenant's quota."""
+        with self._lock:
+            held = self._tenant_lanes.get(tenant, 0)
+            if held < lease.lanes:
+                raise ValueError(
+                    f"gateway: tenant {tenant!r} releasing {lease.lanes} "
+                    f"lanes but holds {held}")
+            self._engine.retire(lease)
+            self._tenant_lanes[tenant] = held - lease.lanes
+
+    # -- bounded queue -------------------------------------------------------
+
+    def reserve_queue_slot(self, tenant: str) -> None:
+        """Claim a waiting slot or raise ``Backpressure`` (global queue
+        full, or tenant over its ``max_queued``)."""
+        quota = self.quota_for(tenant)
+        with self._lock:
+            if self._queued >= self.queue_depth:
+                self.rejected += 1
+                raise Backpressure(
+                    f"gateway: submit queue full ({self.queue_depth} "
+                    "waiting)", self._retry_after())
+            if self._tenant_queued.get(tenant, 0) >= quota.max_queued:
+                self.rejected += 1
+                raise Backpressure(
+                    f"gateway: tenant {tenant!r} queue quota full "
+                    f"({quota.max_queued} waiting)", self._retry_after())
+            self._queued += 1
+            self._tenant_queued[tenant] = \
+                self._tenant_queued.get(tenant, 0) + 1
+
+    def release_queue_slot(self, tenant: str) -> None:
+        with self._lock:
+            if self._queued < 1 or self._tenant_queued.get(tenant, 0) < 1:
+                raise ValueError(
+                    f"gateway: queue slot release for {tenant!r} "
+                    "without a reservation")
+            self._queued -= 1
+            self._tenant_queued[tenant] -= 1
+
+    # -- introspection -------------------------------------------------------
+
+    def stats(self) -> Dict[str, Any]:
+        """A snapshot of the admission state (for logs and tests)."""
+        with self._lock:
+            return {
+                "queued": self._queued,
+                "queue_depth": self.queue_depth,
+                "admitted": self.admitted,
+                "rejected": self.rejected,
+                "tenant_lanes": {t: n for t, n in
+                                 self._tenant_lanes.items() if n},
+                "tenant_queued": {t: n for t, n in
+                                  self._tenant_queued.items() if n},
+            }

@@ -1,0 +1,166 @@
+"""Durable recovery records for gateway stream sessions.
+
+The same discipline as ``train/fault.py``: progress is a pure function
+of a small, explicitly persisted state, so a killed client (or a killed
+gateway) resumes *bitwise identically* from its last record instead of
+restarting the corpus. A record is one JSON file per session id,
+written atomically (temp file + ``os.replace``) and integrity-checked
+with a CRC32 of the canonical payload, so a crash mid-write can never
+leave a readable-but-wrong record.
+
+What gets persisted:
+
+  * encode sessions - the ``stream.EncoderSnapshot`` (carried clean-bit
+    heads, block counter that pins the per-block seeding, grow/retry
+    state) plus the wire byte offset already emitted;
+  * decode sessions - the byte offset of the next undecoded block, the
+    index of the last *acknowledged* block, and the symbols acked.
+
+Records are deliberately tiny (no payload bytes): the wire itself is
+the source of truth; the record only says where in it the session
+stands.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+import zlib
+from typing import Any, Dict, List, Optional
+
+_SESSION_ID_RE = re.compile(r"^[A-Za-z0-9][A-Za-z0-9._-]{0,120}$")
+_SUFFIX = ".recovery.json"
+
+KIND_ENCODE = "encode"
+KIND_DECODE = "decode"
+
+
+def check_session_id(session_id: str) -> str:
+    """Validate a session id (it becomes a filename): alphanumeric plus
+    ``. _ -``, at most 121 chars, no leading dot. Returns it."""
+    if not isinstance(session_id, str) or not _SESSION_ID_RE.match(
+            session_id):
+        raise ValueError(
+            f"gateway: bad session id {session_id!r} (need "
+            "[A-Za-z0-9][A-Za-z0-9._-]*, <= 121 chars)")
+    return session_id
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryRecord:
+    """One session's resumable progress.
+
+    ``byte_offset`` is the wire position the session continues from:
+    for encode sessions the number of bytes already emitted, for decode
+    sessions the blob offset of the next block to decode.
+    ``block_index`` counts blocks fully coded (encode) or acknowledged
+    (decode); ``symbols_acked`` the datapoints safely on the client's
+    side of the wire. ``snapshot`` holds the ``EncoderSnapshot`` fields
+    for encode sessions (``None`` for decode); ``meta`` carries codec
+    routing info (shape, lanes, block_symbols) the gateway needs to
+    rebuild the session.
+    """
+
+    session_id: str
+    tenant: str
+    kind: str                        # KIND_ENCODE | KIND_DECODE
+    byte_offset: int
+    block_index: int
+    symbols_acked: int
+    snapshot: Optional[Dict[str, Any]] = None
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        check_session_id(self.session_id)
+        if self.kind not in (KIND_ENCODE, KIND_DECODE):
+            raise ValueError(f"gateway: bad record kind {self.kind!r}")
+        if self.byte_offset < 0 or self.block_index < 0 \
+                or self.symbols_acked < 0:
+            raise ValueError("gateway: recovery record fields must be >= 0")
+
+
+def _canonical(payload: Dict[str, Any]) -> bytes:
+    return json.dumps(payload, sort_keys=True,
+                      separators=(",", ":")).encode()
+
+
+def record_path(directory: str, session_id: str) -> str:
+    """The file a session's record lives in."""
+    return os.path.join(directory, check_session_id(session_id) + _SUFFIX)
+
+
+def save_record(directory: str, record: RecoveryRecord) -> str:
+    """Atomically persist ``record``; returns the file path.
+
+    Example::
+
+        rec = RecoveryRecord("sess-1", "tenant-a", "decode",
+                             byte_offset=128, block_index=2,
+                             symbols_acked=16)
+        path = save_record(tmpdir, rec)
+        assert load_record(tmpdir, "sess-1") == rec
+    """
+    os.makedirs(directory, exist_ok=True)
+    payload = dataclasses.asdict(record)
+    body = {"record": payload, "crc32": zlib.crc32(_canonical(payload))}
+    path = record_path(directory, record.session_id)
+    tmp = path + ".tmp"
+    with open(tmp, "w", encoding="utf-8") as f:
+        json.dump(body, f, indent=1, sort_keys=True)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    return path
+
+
+def load_record(directory: str,
+                session_id: str) -> Optional[RecoveryRecord]:
+    """Load a session's record; ``None`` if absent, raises on a corrupt
+    (CRC-mismatched or malformed) file - a half-written record must not
+    be silently treated as progress."""
+    path = record_path(directory, session_id)
+    if not os.path.exists(path):
+        return None
+    with open(path, encoding="utf-8") as f:
+        try:
+            body = json.load(f)
+        except json.JSONDecodeError as e:
+            raise ValueError(
+                f"gateway: corrupt recovery record {path} "
+                f"(bad JSON: {e})") from e
+    payload = body.get("record")
+    if not isinstance(payload, dict) or "crc32" not in body:
+        raise ValueError(
+            f"gateway: corrupt recovery record {path} (missing fields)")
+    crc = zlib.crc32(_canonical(payload))
+    if crc != body["crc32"]:
+        raise ValueError(
+            f"gateway: corrupt recovery record {path} (CRC mismatch: "
+            f"{crc} != {body['crc32']})")
+    # Snapshot heads serialize as a JSON list; the dataclass keeps them
+    # as a tuple so records round-trip value-equal.
+    snap = payload.get("snapshot")
+    if isinstance(snap, dict) and isinstance(snap.get("heads"), list):
+        snap = dict(snap, heads=tuple(snap["heads"]))
+        payload = dict(payload, snapshot=snap)
+    return RecoveryRecord(**payload)
+
+
+def delete_record(directory: str, session_id: str) -> bool:
+    """Remove a session's record (e.g. after a clean close); returns
+    whether one existed."""
+    path = record_path(directory, session_id)
+    if os.path.exists(path):
+        os.remove(path)
+        return True
+    return False
+
+
+def list_sessions(directory: str) -> List[str]:
+    """Session ids with a record in ``directory`` (sorted)."""
+    if not os.path.isdir(directory):
+        return []
+    return sorted(name[:-len(_SUFFIX)] for name in os.listdir(directory)
+                  if name.endswith(_SUFFIX))

@@ -1,0 +1,247 @@
+"""Gateway stream sessions: resumable encode/decode over BBX2 wires.
+
+A session is a *lane lease plus a position in a wire*. The gateway
+admits it once (its lanes stay claimed until close, eviction, or
+deadline), and every coding call runs through the gateway's executor so
+the event loop never blocks on model math.
+
+Recovery contract (the mid-stream resume protocol, docs/SERVING.md):
+
+  * ``EncodeSession`` checkpoints a ``stream.EncoderSnapshot`` at every
+    block boundary - carried clean-bit heads + block counter + wire
+    byte offset. A process that dies mid-stream is rebuilt with
+    ``StreamEncoder.resume`` and continues the **byte-identical**
+    stream from its last checkpoint; bytes emitted after that
+    checkpoint are re-emitted, never re-coded differently.
+  * ``DecodeSession`` advances a cursor over the blob's block offsets
+    and persists it on ``ack()`` - the client's statement that it has
+    safely consumed everything up to a block. Reconnecting resumes at
+    the first unacknowledged block (``stream.decode_from_offset``
+    semantics), so a kill between ack and the next block never loses
+    or duplicates data.
+
+Sessions never recode: encode wire bytes equal the synchronous
+``CodecEngine.compress_stream`` path, decode consumes the same framing
+``StreamDecoder`` does.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Awaitable, Callable, Dict, List, Optional
+
+import jax
+
+from repro import stream
+from repro.gateway import recovery
+from repro.stream import format as fmt
+
+# async executor hook supplied by the gateway: (fn, deadline) -> result
+ExecuteFn = Callable[..., Awaitable[Any]]
+
+
+class EncodeSession:
+    """A resumable streaming-compression session.
+
+    Built by ``Gateway.open_stream`` (fresh) or ``Gateway.resume_stream``
+    (from a recovery record). ``write`` returns the wire bytes that
+    became final; the caller owns accumulating them (on resume, bytes
+    before ``resumed_at`` offset were already delivered).
+
+    Example (through the gateway)::
+
+        sess = await gw.open_stream(shape=(8, 8), lanes=4,
+                                    session_id="cam-1")
+        wire = await sess.write(xs)       # [n, 4, 8, 8]
+        wire += await sess.close()        # ragged tail + trailer
+    """
+
+    kind = recovery.KIND_ENCODE
+
+    def __init__(self, session_id: str, tenant: str,
+                 encoder: stream.StreamEncoder, *, execute: ExecuteFn,
+                 on_close: Callable[["EncodeSession"], None],
+                 recovery_dir: Optional[str] = None,
+                 meta: Optional[Dict[str, Any]] = None):
+        self.session_id = recovery.check_session_id(session_id)
+        self.tenant = tenant
+        self.encoder = encoder
+        self.meta = dict(meta or {})
+        self._execute = execute
+        self._on_close = on_close
+        self._recovery_dir = recovery_dir
+        self.closed = False
+        #: wire offset this session started at (0 for a fresh session;
+        #: the checkpointed byte offset for a resumed one).
+        self.resumed_at = encoder.wire_bytes
+
+    @property
+    def wire_offset(self) -> int:
+        """Bytes of wire emitted across the session's whole lifetime
+        (including before a resume)."""
+        return self.encoder.wire_bytes
+
+    async def write(self, data: Any,
+                    deadline: Optional[float] = None) -> bytes:
+        """Feed time-major ``[n, lanes, ...]`` datapoints; returns the
+        bytes that became final. Checkpoints automatically whenever the
+        write ends on a block boundary (and a recovery dir is set)."""
+        if self.closed:
+            raise RuntimeError("gateway: write on a closed session")
+        out = await self._execute(lambda: self.encoder.write(data),
+                                  deadline=deadline)
+        if self._recovery_dir is not None \
+                and self.encoder.buffered_symbols == 0:
+            self.checkpoint()
+        return out
+
+    def checkpoint(self) -> recovery.RecoveryRecord:
+        """Persist (when a recovery dir is configured) and return the
+        session's recovery record. Legal only at a block boundary -
+        see ``StreamEncoder.snapshot``."""
+        snap = self.encoder.snapshot()
+        record = recovery.RecoveryRecord(
+            session_id=self.session_id, tenant=self.tenant,
+            kind=self.kind, byte_offset=snap.wire_bytes,
+            block_index=snap.n_blocks, symbols_acked=snap.n_symbols,
+            snapshot=dataclasses.asdict(snap), meta=self.meta)
+        if self._recovery_dir is not None:
+            recovery.save_record(self._recovery_dir, record)
+        return record
+
+    async def close(self, deadline: Optional[float] = None) -> bytes:
+        """Flush the ragged tail + trailer, retire the session's lanes,
+        and drop its recovery record (the stream is complete)."""
+        if self.closed:
+            return b""
+        tail = await self._execute(self.encoder.flush, deadline=deadline)
+        self.closed = True
+        if self._recovery_dir is not None:
+            recovery.delete_record(self._recovery_dir, self.session_id)
+        self._on_close(self)
+        return tail
+
+    def abandon(self) -> None:
+        """Release the session's lanes *without* flushing (client
+        vanished). The recovery record from the last checkpoint stays,
+        so the client can ``resume_stream`` later."""
+        if not self.closed:
+            self.closed = True
+            self._on_close(self)
+
+
+class DecodeSession:
+    """A resumable streaming-decompression session over one BBX2 blob.
+
+    The cursor walks block offsets (from ``stream.format.scan``);
+    ``ack()`` persists progress. On reconnect the gateway rebuilds the
+    session at the first unacknowledged block.
+
+    Example::
+
+        sess = await gw.open_decode(blob, shape=(8, 8),
+                                    session_id="reader-1")
+        while (block := await sess.next_block()) is not None:
+            consume(block)
+            sess.ack()
+    """
+
+    kind = recovery.KIND_DECODE
+
+    def __init__(self, session_id: str, tenant: str, blob: bytes,
+                 decoder: stream.StreamDecoder, *, execute: ExecuteFn,
+                 on_close: Callable[["DecodeSession"], None],
+                 recovery_dir: Optional[str] = None,
+                 start_block: int = 0,
+                 meta: Optional[Dict[str, Any]] = None):
+        self.session_id = recovery.check_session_id(session_id)
+        self.tenant = tenant
+        self.blob = blob
+        self.meta = dict(meta or {})
+        self._decoder = decoder
+        self._execute = execute
+        self._on_close = on_close
+        self._recovery_dir = recovery_dir
+        self.closed = False
+        header, offsets, trailer = fmt.scan(blob)
+        if trailer is None:
+            raise ValueError("gateway: decode session needs a complete "
+                             "stream (no trailer found)")
+        self.header = header
+        self.trailer = trailer
+        self._offsets: List[int] = offsets
+        if not 0 <= start_block <= len(offsets):
+            raise ValueError(
+                f"gateway: resume block {start_block} out of range "
+                f"[0, {len(offsets)}]")
+        #: next block index to decode / first unacknowledged block.
+        self.cursor = start_block
+        self.acked = start_block
+        self.symbols_acked = 0
+        self._pending_symbols = 0
+
+    @property
+    def n_blocks(self) -> int:
+        return len(self._offsets)
+
+    @property
+    def finished(self) -> bool:
+        return self.cursor >= len(self._offsets)
+
+    def _block_bytes(self, index: int) -> bytes:
+        start = self._offsets[index]
+        end = (self._offsets[index + 1]
+               if index + 1 < len(self._offsets) else len(self.blob))
+        return self.blob[start:end]
+
+    async def next_block(self,
+                         deadline: Optional[float] = None) -> Any:
+        """Decode and return the next block (time-major ``[k, lanes,
+        ...]``), or ``None`` at end of stream. Does NOT advance the
+        recovery record - call ``ack()`` once the block is safely
+        consumed."""
+        if self.closed:
+            raise RuntimeError("gateway: next_block on a closed session")
+        if self.finished:
+            return None
+        payload = self._block_bytes(self.cursor)
+        blocks = await self._execute(
+            lambda: self._decoder.read(payload), deadline=deadline)
+        if not blocks:
+            raise ValueError(
+                f"gateway: block {self.cursor} did not decode "
+                "(corrupt slice)")
+        self.cursor += 1
+        self._pending_symbols += sum(
+            jax.tree_util.tree_leaves(b)[0].shape[0] for b in blocks)
+        return blocks[0] if len(blocks) == 1 else blocks
+
+    def ack(self) -> recovery.RecoveryRecord:
+        """Acknowledge every block decoded so far: persists (when a
+        recovery dir is configured) and returns the record pointing at
+        the first *unacknowledged* block."""
+        self.acked = self.cursor
+        self.symbols_acked += self._pending_symbols
+        self._pending_symbols = 0
+        byte_offset = (self._offsets[self.acked]
+                       if self.acked < len(self._offsets)
+                       else len(self.blob))
+        record = recovery.RecoveryRecord(
+            session_id=self.session_id, tenant=self.tenant,
+            kind=self.kind, byte_offset=byte_offset,
+            block_index=self.acked, symbols_acked=self.symbols_acked,
+            meta=self.meta)
+        if self._recovery_dir is not None:
+            recovery.save_record(self._recovery_dir, record)
+        return record
+
+    def close(self) -> None:
+        """Retire the session's lanes; keeps the recovery record unless
+        the stream was fully acknowledged."""
+        if self.closed:
+            return
+        self.closed = True
+        if self._recovery_dir is not None \
+                and self.acked >= len(self._offsets):
+            recovery.delete_record(self._recovery_dir, self.session_id)
+        self._on_close(self)

@@ -8,15 +8,24 @@ mid-stream resume); ``--mode serve-many`` drives the dynamic batcher
 over many requests of different lengths; ``--mode generate`` runs
 batched greedy decoding; ``--mode hvae`` serves the hierarchical image
 codec through ``serve.CodecEngine`` at several image shapes from one
-parameter set. The same Engine runs on pod meshes via the
-dryrun-validated decode/prefill programs.
+parameter set; ``--mode gateway`` drives concurrent ragged clients
+through the async ``repro.gateway`` tier (admission, backpressure,
+recovery). The same Engine runs on pod meshes via the dryrun-validated
+decode/prefill programs.
+
+Shutdown is clean: open ``StreamEncoder``s register themselves, and a
+SIGINT mid-stream flushes each one (ragged tail + valid BBX2 trailer)
+before the process exits, so an interrupted run never leaves a
+truncated wire.
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import signal
 import time
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -28,13 +37,47 @@ from repro.data import tokens as tok_data
 from repro.models import transformer
 from repro.serve.engine import Engine
 
+# Open streaming encoders, flushed on SIGINT so every wire ends in a
+# valid BBX2 trailer (satellite of the gateway PR; see module docstring).
+_OPEN_ENCODERS: Dict[str, stream.StreamEncoder] = {}
+
+
+def flush_open_encoders() -> Dict[str, bytes]:
+    """Flush every registered open ``StreamEncoder`` (ragged tail +
+    trailer) and deregister it; returns ``{name: tail_bytes}``. Safe to
+    call twice - a flushed encoder is removed, and ``flush`` on an
+    already-finished encoder is a no-op anyway."""
+    tails: Dict[str, bytes] = {}
+    for name in list(_OPEN_ENCODERS):
+        tails[name] = _OPEN_ENCODERS.pop(name).flush()
+    return tails
+
+
+def install_sigint_flush():
+    """Install a SIGINT handler that flushes open encoders before
+    re-raising ``KeyboardInterrupt``. Returns the handler (tests call
+    it directly). The previous handler is restored after one firing."""
+    prev = signal.getsignal(signal.SIGINT)
+
+    def handler(signum=signal.SIGINT, frame=None):
+        tails = flush_open_encoders()
+        if tails:
+            total = sum(len(t) for t in tails.values())
+            print(f"\nSIGINT: flushed {len(tails)} open stream(s) to "
+                  f"valid trailers (+{total} bytes)")
+        signal.signal(signal.SIGINT, prev)
+        raise KeyboardInterrupt
+
+    signal.signal(signal.SIGINT, handler)
+    return handler
+
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--mode", default="compress",
                     choices=["compress", "stream", "serve-many",
-                             "generate", "hvae"])
+                             "generate", "hvae", "gateway"])
     ap.add_argument("--lanes", type=int, default=4)
     ap.add_argument("--tokens", type=int, default=64)
     ap.add_argument("--block-symbols", type=int, default=16)
@@ -49,6 +92,8 @@ def main():
 
     if args.mode == "hvae":
         return main_hvae(args)
+    if args.mode == "gateway":
+        return main_gateway(args)
 
     cfg = dataclasses.replace(
         cfg_base.reduced(cfg_base.get(args.arch)),
@@ -96,9 +141,18 @@ def main():
         np.stack([corpus[s:s + args.tokens] for s in starts]), jnp.int32)
 
     if args.mode == "stream":
+        install_sigint_flush()
         t0 = time.perf_counter()
-        blob = eng.compress_stream(toks,
-                                   block_symbols=args.block_symbols)
+        # Built explicitly (same parameters as Engine.compress_stream)
+        # and registered, so a SIGINT mid-write flushes to a valid
+        # trailer instead of leaving a truncated wire.
+        encoder = stream.StreamEncoder(
+            block_codec_fn=eng._block_codec_fn(), lanes=args.lanes,
+            block_symbols=args.block_symbols, seed=None,
+            capacity=int(args.block_symbols * 1.5) + 8)
+        _OPEN_ENCODERS["stream"] = encoder
+        blob = encoder.write(toks.T) + encoder.flush()
+        _OPEN_ENCODERS.pop("stream", None)
         enc = time.perf_counter() - t0
         header, offsets, trailer = stream.format.scan(blob)
         out = eng.decompress_stream(blob)
@@ -125,6 +179,73 @@ def main():
     print(f"corpus entropy {entropy:.3f} bits/tok; achieved "
           f"{bits / toks.size:.3f} bits/tok (untrained model: ~log2 V); "
           f"lossless={ok}; encode {enc:.2f}s")
+
+
+def main_gateway(args):
+    """Async serving demo: ragged concurrent clients stream through the
+    ``repro.gateway`` admission tier over one ``CodecEngine`` (toy
+    uniform family - the point here is scheduling, not the model).
+    SIGINT flushes open sessions to valid trailers before exit."""
+    import asyncio
+
+    from repro import gateway as gw_mod
+    from repro.serve import CodecEngine
+
+    def family(shape):
+        n = int(np.prod(shape))
+        return codecs.Shaped(
+            codecs.Repeat(lambda d: codecs.Uniform(8), n), tuple(shape))
+
+    shape, lanes = (4, 4), args.lanes
+    eng = CodecEngine(family, seed=args.seed, init_chunks=0,
+                      max_inflight_lanes=2 * lanes,
+                      compile=args.compile)
+    rng = np.random.default_rng(args.seed)
+
+    async def client(gw, i: int):
+        n_blocks = int(rng.integers(2, 6))
+        data = jnp.asarray(rng.integers(
+            0, 256, (n_blocks * args.block_symbols, lanes, *shape)),
+            jnp.int32)
+        sess = await gw.open_stream(shape, lanes=lanes,
+                                    session_id=f"client-{i}",
+                                    tenant=f"tenant-{i % 2}",
+                                    block_symbols=args.block_symbols)
+        wire = await sess.write(data)
+        wire += await sess.close()
+        out = eng.decompress_stream(wire, shape)
+        if not bool(jnp.array_equal(out, data)):
+            raise SystemExit(f"client {i}: lossy round trip")
+        return len(wire), int(data.size)
+
+    async def run():
+        async with gw_mod.Gateway(eng, queue_depth=args.requests) as gw:
+            loop = asyncio.get_running_loop()
+            stop = asyncio.Event()
+            try:
+                loop.add_signal_handler(signal.SIGINT, stop.set)
+            except NotImplementedError:
+                pass   # non-Unix event loop
+            work = asyncio.gather(*(client(gw, i)
+                                    for i in range(args.requests)))
+            stopper = asyncio.create_task(stop.wait())
+            done, _ = await asyncio.wait(
+                {work, stopper}, return_when=asyncio.FIRST_COMPLETED)
+            if work in done:
+                stopper.cancel()
+                sizes = work.result()
+                wire = sum(s for s, _ in sizes)
+                syms = sum(n for _, n in sizes)
+                print(f"gateway served {len(sizes)} clients: "
+                      f"{wire * 8 / syms:.3f} wire bits/dim, "
+                      f"stats={gw.stats()}")
+            else:
+                work.cancel()
+                tails = await gw.stop()
+                print(f"SIGINT: flushed {len(tails)} open session(s) "
+                      "to valid trailers")
+
+    asyncio.run(run())
 
 
 def main_hvae(args):

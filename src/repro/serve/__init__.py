@@ -8,6 +8,6 @@ examples for every exported name: docs/API.md.
 """
 
 from repro.serve.engine import (CodecEngine, Engine,  # noqa: F401
-                                ShardedCodecEngine)
+                                LaneLease, ShardedCodecEngine)
 
-__all__ = ["Engine", "CodecEngine", "ShardedCodecEngine"]
+__all__ = ["Engine", "CodecEngine", "ShardedCodecEngine", "LaneLease"]

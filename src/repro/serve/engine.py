@@ -25,8 +25,10 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import itertools
+import threading
 from collections import OrderedDict
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -63,6 +65,62 @@ class _LMMaskedBlock(stream.MaskedBlockCodec):
         return stack, toks.T
 
 
+class LaneLease(NamedTuple):
+    """A granted claim on ``lanes`` lanes of an engine's lane budget.
+
+    Returned by ``try_admit``; hand it back via ``retire``. The token
+    makes double-retire detectable.
+    """
+    lanes: int
+    token: int
+
+
+class _LaneLedger:
+    """Thread-safe non-blocking lane accounting shared by the engines.
+
+    ``try_admit(lanes)`` either grants a ``LaneLease`` immediately or
+    returns ``None`` (budget exhausted) - it never blocks, so an async
+    front can turn a ``None`` into backpressure instead of buffering.
+    ``max_lanes=None`` means an unbounded budget (leases still count,
+    so ``inflight_lanes`` stays meaningful).
+    """
+
+    def __init__(self, max_lanes: Optional[int]):
+        if max_lanes is not None and max_lanes < 1:
+            raise ValueError("engine: max_inflight_lanes must be >= 1")
+        self.max_lanes = max_lanes
+        self._lock = threading.Lock()
+        self._inflight = 0
+        self._tokens = itertools.count()
+        self._live: set = set()
+
+    def try_admit(self, lanes: int) -> Optional[LaneLease]:
+        if lanes < 1:
+            raise ValueError("engine: try_admit needs lanes >= 1")
+        with self._lock:
+            if (self.max_lanes is not None
+                    and self._inflight + lanes > self.max_lanes):
+                return None
+            self._inflight += lanes
+            lease = LaneLease(lanes, next(self._tokens))
+            self._live.add(lease.token)
+            return lease
+
+    def retire(self, lease: LaneLease) -> None:
+        with self._lock:
+            if lease.token not in self._live:
+                raise ValueError(
+                    f"engine: retire of unknown/already-retired lease "
+                    f"{lease!r}")
+            self._live.discard(lease.token)
+            self._inflight -= lease.lanes
+
+    @property
+    def inflight_lanes(self) -> int:
+        with self._lock:
+            return self._inflight
+
+
 class CodecEngine:
     """Shape-polymorphic compression service over any codec family.
 
@@ -94,13 +152,19 @@ class CodecEngine:
 
     def __init__(self, make_codec, *, seed: Optional[int] = 0,
                  init_chunks: int = 32, max_codecs: int = 32,
-                 compile: bool = False, verify: bool = True):
+                 compile: bool = False, verify: bool = True,
+                 max_inflight_lanes: Optional[int] = None):
         if max_codecs < 1:
             raise ValueError("CodecEngine: max_codecs must be >= 1")
         self._make_codec = make_codec
         self._codecs: "OrderedDict[Tuple[int, ...], Any]" = OrderedDict()
         # (shape, n) -> compiled Chained program; evicted with its shape.
         self._programs: "OrderedDict[Tuple, Any]" = OrderedDict()
+        # Registration is not naturally thread-safe (LRU mutation +
+        # build-then-insert races); the gateway serves requests from a
+        # thread pool, so memo and program cache share one lock.
+        self._memo_lock = threading.RLock()
+        self._ledger = _LaneLedger(max_inflight_lanes)
         self._seed = seed
         self._init_chunks = init_chunks
         self._max_codecs = max_codecs
@@ -110,27 +174,47 @@ class CodecEngine:
         # naming the subtree, before any request bytes are at stake.
         self._verify = verify
 
+    # -- admission (non-blocking; the async gateway's hook) -----------------
+
+    def try_admit(self, lanes: int) -> Optional[LaneLease]:
+        """Claim ``lanes`` lanes of the engine's lane budget, or
+        ``None`` when the budget (``max_inflight_lanes``) is exhausted.
+        Never blocks; thread-safe."""
+        return self._ledger.try_admit(lanes)
+
+    def retire(self, lease: LaneLease) -> None:
+        """Return a ``try_admit`` lease's lanes to the budget."""
+        self._ledger.retire(lease)
+
+    @property
+    def inflight_lanes(self) -> int:
+        """Lanes currently held by un-retired leases."""
+        return self._ledger.inflight_lanes
+
     def codec_for(self, shape: Sequence[int]):
         """The memoized per-datapoint codec for one symbol shape.
 
         With ``verify=True`` (the default) a newly built codec is run
         through ``repro.analysis.check_codec`` before it is memoized;
-        a contract violation raises instead of serving requests."""
+        a contract violation raises instead of serving requests.
+        Thread-safe: concurrent registration of the same shape builds
+        (and verifies) the codec exactly once."""
         key = tuple(int(s) for s in shape)
-        if key in self._codecs:
-            self._codecs.move_to_end(key)
+        with self._memo_lock:
+            if key in self._codecs:
+                self._codecs.move_to_end(key)
+                return self._codecs[key]
+            while len(self._codecs) >= self._max_codecs:
+                evicted, _ = self._codecs.popitem(last=False)
+                for pkey in [k for k in self._programs if k[0] == evicted]:
+                    del self._programs[pkey]
+            codec = self._make_codec(key)
+            if self._verify:
+                from repro.analysis import check_codec   # lazy: avoid cycle
+                check_codec(codec, lanes=2,
+                            context=f"CodecEngine.codec_for({key})")
+            self._codecs[key] = codec
             return self._codecs[key]
-        while len(self._codecs) >= self._max_codecs:
-            evicted, _ = self._codecs.popitem(last=False)
-            for pkey in [k for k in self._programs if k[0] == evicted]:
-                del self._programs[pkey]
-        codec = self._make_codec(key)
-        if self._verify:
-            from repro.analysis import check_codec   # lazy: avoid cycle
-            check_codec(codec, lanes=2,
-                        context=f"CodecEngine.codec_for({key})")
-        self._codecs[key] = codec
-        return self._codecs[key]
 
     def _chained_for(self, shape: Sequence[int], n: int):
         """A (compiled, when enabled) chain codec for ``n`` datapoints."""
@@ -138,13 +222,14 @@ class CodecEngine:
         codec = codecs.Chained(self.codec_for(key), n)
         if not self._compile:
             return codec
-        pkey = (key, n)
-        if pkey not in self._programs:
-            while len(self._programs) >= self._max_codecs:
-                self._programs.popitem(last=False)
-            self._programs[pkey] = codecs.compile(codec)
-        self._programs.move_to_end(pkey)
-        return self._programs[pkey]
+        with self._memo_lock:
+            pkey = (key, n)
+            if pkey not in self._programs:
+                while len(self._programs) >= self._max_codecs:
+                    self._programs.popitem(last=False)
+                self._programs[pkey] = codecs.compile(codec)
+            self._programs.move_to_end(pkey)
+            return self._programs[pkey]
 
     @staticmethod
     def _shape_of(data) -> Tuple[int, ...]:
@@ -166,19 +251,45 @@ class CodecEngine:
         """Decode a ``compress`` blob of ``n`` datapoints of ``shape``."""
         return codecs.decompress(self._chained_for(shape, n), blob)
 
+    def stream_encoder(self, shape: Sequence[int], *, lanes: int,
+                       block_symbols: int = 8,
+                       **kwargs) -> stream.StreamEncoder:
+        """A ``StreamEncoder`` configured exactly as ``compress_stream``
+        builds one (same memoized codec, seed, init_chunks, compile
+        choice) - the session constructor the gateway uses, so gateway
+        wires are byte-identical to the synchronous path by
+        construction."""
+        kwargs.setdefault("seed", self._seed)
+        kwargs.setdefault("init_chunks", self._init_chunks)
+        kwargs.setdefault("compile", self._compile)
+        return stream.StreamEncoder(
+            self.codec_for(shape), lanes=lanes,
+            block_symbols=block_symbols, **kwargs)
+
+    def resume_encoder(self, shape: Sequence[int],
+                       snap: stream.EncoderSnapshot
+                       ) -> stream.StreamEncoder:
+        """Rebuild a mid-stream encoder from an ``EncoderSnapshot``;
+        continuing bytes are identical to the uninterrupted stream."""
+        return stream.StreamEncoder.resume(
+            self.codec_for(shape), snap, compile=self._compile)
+
+    def stream_decoder(self, shape: Sequence[int],
+                       **kwargs) -> stream.StreamDecoder:
+        """A ``StreamDecoder`` matching this engine's execution config
+        (pass ``header=`` to start mid-stream)."""
+        kwargs.setdefault("compile", self._compile)
+        return stream.StreamDecoder(self.codec_for(shape), **kwargs)
+
     def compress_stream(self, data, *, block_symbols: int = 8,
                         **kwargs) -> bytes:
         """Chunked-streaming compress to a BBX2 blob: blocks become
         independently decodable as they fill (mid-stream resume via
         ``stream.decode_from_offset``)."""
         leaf = jax.tree_util.tree_leaves(data)[0]
-        lanes = leaf.shape[1]
-        kwargs.setdefault("seed", self._seed)
-        kwargs.setdefault("init_chunks", self._init_chunks)
-        kwargs.setdefault("compile", self._compile)
-        enc = stream.StreamEncoder(
-            self.codec_for(self._shape_of(data)), lanes=lanes,
-            block_symbols=block_symbols, **kwargs)
+        enc = self.stream_encoder(self._shape_of(data),
+                                  lanes=leaf.shape[1],
+                                  block_symbols=block_symbols, **kwargs)
         return enc.write(data) + enc.flush()
 
     def decompress_stream(self, blob: bytes, shape: Sequence[int]):
@@ -219,7 +330,8 @@ class ShardedCodecEngine:
     def __init__(self, make_codec, *, mesh=None,
                  n_shards: Optional[int] = None, seed: Optional[int] = 0,
                  init_chunks: int = 32, max_codecs: int = 32,
-                 compile: bool = True, verify: bool = True):
+                 compile: bool = True, verify: bool = True,
+                 max_inflight_lanes: Optional[int] = None):
         from repro.sharding import api as shard_api
         self._shard_api = shard_api
         self.mesh = mesh if mesh is not None \
@@ -232,10 +344,35 @@ class ShardedCodecEngine:
         self._inner = CodecEngine(make_codec, seed=seed,
                                   init_chunks=init_chunks,
                                   max_codecs=max_codecs, compile=compile,
-                                  verify=verify)
+                                  verify=verify,
+                                  max_inflight_lanes=max_inflight_lanes)
         self._seed = seed
         self._init_chunks = init_chunks
         self._compile = compile
+
+    # -- admission (delegated to the inner engine's ledger) -----------------
+
+    def try_admit(self, lanes: int) -> Optional[LaneLease]:
+        """Non-blocking lane claim; see ``CodecEngine.try_admit``."""
+        return self._inner.try_admit(lanes)
+
+    def retire(self, lease: LaneLease) -> None:
+        self._inner.retire(lease)
+
+    @property
+    def inflight_lanes(self) -> int:
+        return self._inner.inflight_lanes
+
+    # -- stream sessions (delegated; wire bytes == single-device) -----------
+
+    def stream_encoder(self, shape: Sequence[int], **kwargs):
+        return self._inner.stream_encoder(shape, **kwargs)
+
+    def resume_encoder(self, shape: Sequence[int], snap):
+        return self._inner.resume_encoder(shape, snap)
+
+    def stream_decoder(self, shape: Sequence[int], **kwargs):
+        return self._inner.stream_decoder(shape, **kwargs)
 
     # -- one-shot path (SPMD coder programs; BBX1 wire) ---------------------
 
@@ -307,10 +444,11 @@ class Engine:
     """
 
     def __init__(self, params, cfg, max_len: int = 2048,
-                 jit: bool = True):
+                 jit: bool = True, max_inflight_lanes: Optional[int] = None):
         self.params = params
         self.cfg = cfg
         self.max_len = max_len
+        self._ledger = _LaneLedger(max_inflight_lanes)
         self._prefill = jax.jit(
             functools.partial(transformer.prefill, cfg=self.cfg,
                               max_len=max_len)) if jit else \
@@ -320,6 +458,19 @@ class Engine:
             functools.partial(transformer.decode_step, cfg=self.cfg),
             donate_argnames=("state",)) if jit else \
             functools.partial(transformer.decode_step, cfg=self.cfg)
+
+    # -- admission ----------------------------------------------------------
+
+    def try_admit(self, lanes: int) -> Optional[LaneLease]:
+        """Non-blocking lane claim; see ``CodecEngine.try_admit``."""
+        return self._ledger.try_admit(lanes)
+
+    def retire(self, lease: LaneLease) -> None:
+        self._ledger.retire(lease)
+
+    @property
+    def inflight_lanes(self) -> int:
+        return self._ledger.inflight_lanes
 
     # -- session ------------------------------------------------------------
     def start(self, batch: Dict[str, jnp.ndarray]

@@ -23,7 +23,8 @@ byte layouts: docs/FORMATS.md; lane sharding: docs/SCALING.md.
 """
 
 from repro.stream import format  # noqa: F401  (BBX2 + BBX3 wire formats)
-from repro.stream.coder import (BlockChain, KernelTableBlock,  # noqa: F401
+from repro.stream.coder import (BlockChain, EncoderSnapshot,  # noqa: F401
+                                KernelTableBlock,
                                 StreamDecoder, StreamEncoder,
                                 decode_from_offset, decode_stream,
                                 encode_stream)
@@ -36,7 +37,7 @@ from repro.stream.format import (corpus_segment, encode_corpus,  # noqa: F401
 __all__ = [
     "format",
     "BlockChain", "KernelTableBlock",
-    "StreamEncoder", "StreamDecoder",
+    "StreamEncoder", "StreamDecoder", "EncoderSnapshot",
     "encode_stream", "decode_stream", "decode_from_offset",
     "MaskedBlockCodec", "SteppedMaskedBlock", "StreamBatcher",
     "decode_batched",

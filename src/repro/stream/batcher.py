@@ -26,7 +26,8 @@ lane either block was scheduled on.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -96,13 +97,15 @@ class SteppedMaskedBlock(MaskedBlockCodec):
 
 
 class _Client:
-    def __init__(self, stream_id: Any, datapoints: List[Any]):
+    def __init__(self, stream_id: Any, datapoints: List[Any],
+                 deadline: Optional[float] = None):
         self.id = stream_id
         self.datapoints = datapoints
         self.pos = 0
         self.head: Optional[jnp.ndarray] = None  # uint32[] carried head
         self.parts: List[bytes] = []
         self.n_blocks = 0
+        self.deadline = deadline
 
     @property
     def remaining(self) -> int:
@@ -136,7 +139,8 @@ class StreamBatcher:
     def __init__(self, codec, max_lanes: int, block_symbols: int, *,
                  seed: Optional[int] = None, init_chunks: int = 0,
                  precision: int = ans.DEFAULT_PRECISION,
-                 capacity: Optional[int] = None, max_retries: int = 6):
+                 capacity: Optional[int] = None, max_retries: int = 6,
+                 clock: Callable[[], float] = time.monotonic):
         if max_lanes < 1 or block_symbols < 1:
             raise ValueError("batcher: max_lanes/block_symbols must be >= 1")
         if seed is None and init_chunks:
@@ -150,21 +154,36 @@ class StreamBatcher:
         self._init_chunks = init_chunks
         self._capacity = capacity
         self._max_retries = max_retries
+        self._clock = clock
         self._queue: List[_Client] = []
         self._lanes: List[Optional[_Client]] = [None] * max_lanes
         self._zero_dp: Optional[Any] = None
         self._round = 0
         self._admitted = 0
         self._done: Dict[Any, bytes] = {}
+        #: stream ids whose blob was cut short by cancel()/timeout
+        #: eviction (the blob is still a valid BBX2 stream covering the
+        #: blocks coded before the cut).
+        self.evicted: set = set()
 
     # -- submission ----------------------------------------------------------
 
-    def submit(self, stream_id: Any, data: Any) -> None:
-        """Enqueue a client stream; leaves are ``[n, ...]`` (no lanes)."""
+    def submit(self, stream_id: Any, data: Any, *,
+               timeout: Optional[float] = None) -> None:
+        """Enqueue a client stream; leaves are ``[n, ...]`` (no lanes).
+
+        ``timeout`` (seconds) sets a per-stream deadline: a stream
+        still unfinished when it expires is evicted at the next round
+        boundary - its lane frees up and its partial blob (a valid
+        BBX2 stream covering the blocks coded so far) lands in the
+        results with the id recorded in ``evicted``. This is the
+        lane-lease discipline: no client may hold a lane forever.
+        """
         if stream_id in self._done or any(
                 c.id == stream_id
                 for c in self._queue + [l for l in self._lanes if l]):
-            raise ValueError(f"batcher: duplicate stream id {stream_id!r}")
+            raise ValueError(f"batcher: duplicate stream id {stream_id!r} "
+                             "(release() a finished id to reuse it)")
         leaves = jax.tree_util.tree_leaves(data)
         n = leaves[0].shape[0] if leaves else 0
         datapoints = [jax.tree_util.tree_map(lambda a: a[t], data)
@@ -172,7 +191,81 @@ class StreamBatcher:
         if self._zero_dp is None and datapoints:
             self._zero_dp = jax.tree_util.tree_map(
                 jnp.zeros_like, datapoints[0])
-        self._queue.append(_Client(stream_id, datapoints))
+        deadline = (self._clock() + timeout) if timeout is not None else None
+        self._queue.append(_Client(stream_id, datapoints, deadline))
+
+    # -- lane leases ---------------------------------------------------------
+
+    def lane_of(self, stream_id: Any) -> Optional[int]:
+        """The lane a stream currently leases, or None (queued/done)."""
+        for l, c in enumerate(self._lanes):
+            if c is not None and c.id == stream_id:
+                return l
+        return None
+
+    @property
+    def active_ids(self) -> List[Any]:
+        """Stream ids currently holding a lane lease (by lane order)."""
+        return [c.id for c in self._lanes if c is not None]
+
+    @property
+    def queued_ids(self) -> List[Any]:
+        """Stream ids waiting for a lane, in FIFO order."""
+        return [c.id for c in self._queue]
+
+    def cancel(self, stream_id: Any) -> bytes:
+        """Evict a stream now (client disconnect): its lane lease is
+        released and its partial blob - a **valid** BBX2 stream whose
+        trailer covers exactly the blocks coded so far - is finalized,
+        returned, and recorded in ``evicted``.
+
+        Example::
+
+            bat.submit("u1", xs); bat.step()
+            part = bat.cancel("u1")          # decodes to a prefix of xs
+        """
+        for l, c in enumerate(self._lanes):
+            if c is not None and c.id == stream_id:
+                self._lanes[l] = None
+                return self._finalize_partial(c)
+        for i, c in enumerate(self._queue):
+            if c.id == stream_id:
+                del self._queue[i]
+                return self._finalize_partial(c)
+        raise KeyError(f"batcher: no in-flight stream {stream_id!r}")
+
+    def release(self, stream_id: Any) -> None:
+        """Forget a finished stream's blob so its id can be resubmitted
+        (retire-then-readmit)."""
+        if stream_id not in self._done:
+            raise KeyError(f"batcher: {stream_id!r} has no finished blob")
+        del self._done[stream_id]
+        self.evicted.discard(stream_id)
+
+    def _finalize_partial(self, client: _Client) -> bytes:
+        if not client.parts:   # never admitted: header-only empty stream
+            client.parts.append(fmt.encode_header(fmt.StreamHeader(
+                lanes=1, block_symbols=self.block_symbols,
+                precision=self.precision)))
+        client.parts.append(fmt.encode_trailer(
+            fmt.Trailer(client.n_blocks, client.pos)))
+        blob = b"".join(client.parts)
+        self._done[client.id] = blob
+        self.evicted.add(client.id)
+        return blob
+
+    def _evict_expired(self) -> None:
+        now = self._clock()
+        for l, c in enumerate(self._lanes):
+            if c is not None and c.deadline is not None \
+                    and now >= c.deadline:
+                self._lanes[l] = None
+                self._finalize_partial(c)
+        expired = [c for c in self._queue
+                   if c.deadline is not None and now >= c.deadline]
+        for c in expired:
+            self._queue.remove(c)
+            self._finalize_partial(c)
 
     # -- scheduling ----------------------------------------------------------
 
@@ -204,14 +297,17 @@ class StreamBatcher:
     def step(self) -> Dict[Any, bytes]:
         """One round: admit, code one block per active stream, retire.
 
-        Returns the blobs of streams that *finished* this round.
+        Returns the blobs of streams that *finished* this round
+        (including any evicted on timeout - check ``evicted``).
         """
+        finished_before = set(self._done)
+        self._evict_expired()
         self._admit()
         active = [(l, c) for l, c in enumerate(self._lanes)
                   if c is not None]
         if not active:
-            return {}
-        finished_before = set(self._done)
+            return {sid: blob for sid, blob in self._done.items()
+                    if sid not in finished_before}
         counts = {l: min(self.block_symbols, c.remaining)
                   for l, c in active}
         n_steps = max(counts.values())

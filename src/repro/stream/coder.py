@@ -52,6 +52,33 @@ BlockCodecFn = Callable[[int], Codec]
 
 
 @dataclasses.dataclass(frozen=True)
+class EncoderSnapshot:
+    """Resumable ``StreamEncoder`` state, captured at a block boundary.
+
+    Everything a fresh process needs to *continue the exact byte
+    stream*: the carried clean-bit heads, the block counter (per-block
+    seeding is ``fold_in(PRNGKey(seed), n_blocks)``, so the counter
+    pins the clean-bit supply), the grow-and-retry state
+    (``capacity``/``init_chunks``), and the wire byte offset already
+    emitted. All fields are plain Python values, so a snapshot JSON-
+    serializes into a ``repro.gateway.recovery`` record as-is.
+    """
+
+    lanes: int
+    block_symbols: int
+    precision: int
+    seed: Optional[int]
+    init_chunks: int
+    capacity: Optional[int]
+    n_blocks: int
+    n_symbols: int
+    wire_bytes: int
+    net_bits: float
+    started: bool
+    heads: Optional[Tuple[int, ...]]   # carried per-lane heads, or None
+
+
+@dataclasses.dataclass(frozen=True)
 class BlockChain(Codec):
     """Chain ``inner`` over a leading time axis ``[k, lanes, ...]``.
 
@@ -242,6 +269,74 @@ class StreamEncoder:
             fmt.Trailer(self.n_blocks, self.n_symbols)))
         self._finished = True
         return self._emit(b"".join(out))
+
+    @property
+    def buffered_symbols(self) -> int:
+        """Datapoints accepted by ``write`` but not yet on the wire
+        (zero exactly at block boundaries, where ``snapshot`` is legal)."""
+        return len(self._buffer)
+
+    # -- checkpoint / resume -------------------------------------------------
+
+    def snapshot(self) -> EncoderSnapshot:
+        """Capture resumable state at the current block boundary.
+
+        Only legal with an empty symbol buffer (buffered datapoints are
+        not yet on the wire, so a snapshot here would silently drop
+        them) and before ``flush``. A ``StreamEncoder.resume``\\ d
+        encoder continues the byte stream **identically** to one that
+        was never interrupted - asserted by ``tests/test_gateway.py``.
+
+        Example::
+
+            enc = StreamEncoder(codec, lanes=4, block_symbols=8, seed=0)
+            wire = enc.write(xs)              # multiple of 8 datapoints
+            snap = enc.snapshot()             # ... process dies here ...
+            enc2 = StreamEncoder.resume(codec, snap)
+            wire += enc2.write(more) + enc2.flush()   # same bytes
+        """
+        if self._finished:
+            raise RuntimeError("stream: snapshot after flush")
+        if self._buffer:
+            raise RuntimeError(
+                f"stream: snapshot mid-block ({len(self._buffer)} "
+                "datapoints buffered) - write a multiple of "
+                "block_symbols, or flush instead")
+        heads = (tuple(int(h) for h in np.asarray(self._heads))
+                 if self._heads is not None else None)
+        return EncoderSnapshot(
+            lanes=self.lanes, block_symbols=self.block_symbols,
+            precision=self.precision, seed=self._seed,
+            init_chunks=self._init_chunks, capacity=self._capacity,
+            n_blocks=self.n_blocks, n_symbols=self.n_symbols,
+            wire_bytes=self.wire_bytes, net_bits=self.net_bits,
+            started=self._started, heads=heads)
+
+    @classmethod
+    def resume(cls, codec: Optional[Codec], snap: EncoderSnapshot,
+               **kwargs) -> "StreamEncoder":
+        """Rebuild an encoder from a ``snapshot()``; continuing bytes
+        are identical to the uninterrupted stream. ``kwargs`` pass
+        execution choices (``block_codec_fn``, ``use_kernel``,
+        ``compile``) - wire bytes do not depend on them."""
+        enc = cls(codec, lanes=snap.lanes,
+                  block_symbols=snap.block_symbols,
+                  precision=snap.precision, seed=snap.seed,
+                  init_chunks=snap.init_chunks, capacity=snap.capacity,
+                  **kwargs)
+        enc._started = snap.started
+        enc.n_blocks = snap.n_blocks
+        enc.n_symbols = snap.n_symbols
+        enc.wire_bytes = snap.wire_bytes
+        enc.net_bits = snap.net_bits
+        if snap.heads is not None:
+            if len(snap.heads) != snap.lanes:
+                raise ValueError(
+                    f"stream: snapshot heads have {len(snap.heads)} "
+                    f"lanes, expected {snap.lanes}")
+            enc._heads = jnp.asarray(
+                np.asarray(snap.heads, np.uint32))
+        return enc
 
     # -- internals -----------------------------------------------------------
 

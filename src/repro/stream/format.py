@@ -80,7 +80,8 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.codecs.container import pack_lane_rows, unpack_lane_rows
+from repro.codecs.container import (ContainerError, pack_lane_rows,
+                                    unpack_lane_rows)
 
 MAGIC = b"BBX2"
 VERSION = 1
@@ -139,11 +140,16 @@ def decode_header(buf: bytes, offset: int = 0
     magic, version, precision, _flags, lanes, block_symbols = \
         _HEADER.unpack_from(buf, offset)
     if magic != MAGIC:
-        raise ValueError(f"stream: bad magic {magic!r} (not a BBX2 stream)")
+        raise ContainerError(
+            f"stream: bad magic {magic!r} at byte {offset} "
+            "(not a BBX2 stream)")
     if version != VERSION:
-        raise ValueError(f"stream: unsupported BBX2 version {version}")
+        raise ContainerError(
+            f"stream: unsupported BBX2 version {version} at byte {offset}")
     if lanes < 1 or block_symbols < 1:
-        raise ValueError("stream: corrupt header (lanes/block_symbols < 1)")
+        raise ContainerError(
+            f"stream: corrupt header at byte {offset} "
+            "(lanes/block_symbols < 1)")
     return StreamHeader(lanes=lanes, block_symbols=block_symbols,
                         precision=precision, version=version), \
         offset + HEADER_SIZE
@@ -183,7 +189,7 @@ def decode_next(buf: bytes, offset: int, lanes: int):
             buf, offset)
         return Trailer(n_blocks, total_symbols), offset + TRAILER_SIZE
     if marker != BLOCK_MARKER:
-        raise ValueError(
+        raise ContainerError(
             f"stream: bad frame marker 0x{marker:04X} at offset {offset} "
             "(not a block boundary)")
     if avail < BLOCK_HEADER_SIZE + 4 * lanes:
@@ -193,9 +199,11 @@ def decode_next(buf: bytes, offset: int, lanes: int):
                             offset=offset + BLOCK_HEADER_SIZE
                             ).astype(np.int32)
     if (lengths < 2).any():
-        raise ValueError("stream: corrupt block (lane length < 2)")
+        raise ContainerError(
+            f"stream: corrupt block at byte {offset} (lane length < 2)")
     if int(lengths.sum()) != total:
-        raise ValueError("stream: corrupt block (length sum mismatch)")
+        raise ContainerError(
+            f"stream: corrupt block at byte {offset} (length sum mismatch)")
     payload_off = offset + BLOCK_HEADER_SIZE + 4 * lanes
     end = payload_off + 2 * total
     if len(buf) < end:
@@ -210,15 +218,25 @@ def scan(blob: bytes) -> Tuple[StreamHeader, List[int], Optional[Trailer]]:
     The offsets index the first byte of each block's marker - exactly
     what ``StreamDecoder.from_header`` + ``blob[offset:]`` needs for a
     mid-stream resume.
+
+    Corruption raises ``codecs.ContainerError`` naming the byte offset
+    and block index where the frame walk failed, so a bad wire byte is
+    reported as *where* in the stream it sits, not as an index error
+    deep inside the coder.
     """
     parsed = decode_header(blob)
     if parsed is None:
-        raise ValueError("stream: truncated (no header)")
+        raise ContainerError("stream: truncated (no header)")
     header, off = parsed
     offsets: List[int] = []
     trailer: Optional[Trailer] = None
     while True:
-        out = decode_next(blob, off, header.lanes)
+        try:
+            out = decode_next(blob, off, header.lanes)
+        except ContainerError as e:
+            raise ContainerError(
+                f"stream: scan failed at block {len(offsets)} "
+                f"(byte offset {off}): {e}") from e
         if out is None:
             break
         frame, new_off = out
@@ -287,26 +305,31 @@ def scan_corpus(blob: bytes) -> Tuple[CorpusHeader, List[ShardEntry]]:
                     + entries[0].length]       # a complete BBX2 stream
     """
     if len(blob) < CORPUS_HEADER_SIZE:
-        raise ValueError("corpus: truncated (no header)")
+        raise ContainerError("corpus: truncated (no header)")
     magic, version, precision, _flags, n_shards, lanes = \
         _CORPUS_HEADER.unpack_from(blob, 0)
     if magic != CORPUS_MAGIC:
-        raise ValueError(
-            f"corpus: bad magic {magic!r} (not a BBX3 corpus)")
+        raise ContainerError(
+            f"corpus: bad magic {magic!r} at byte 0 (not a BBX3 corpus)")
     if version != CORPUS_VERSION:
-        raise ValueError(f"corpus: unsupported BBX3 version {version}")
+        raise ContainerError(f"corpus: unsupported BBX3 version {version}")
     if n_shards < 1 or lanes < 1:
-        raise ValueError("corpus: corrupt header (n_shards/lanes < 1)")
+        raise ContainerError("corpus: corrupt header (n_shards/lanes < 1)")
+    if n_shards > (len(blob) - CORPUS_HEADER_SIZE) // CORPUS_ENTRY_SIZE:
+        raise ContainerError(
+            f"corpus: corrupt header (n_shards={n_shards} needs a "
+            "larger index than the blob holds)")
     base = CORPUS_HEADER_SIZE + n_shards * CORPUS_ENTRY_SIZE
     if len(blob) < base:
-        raise ValueError("corpus: truncated (index incomplete)")
+        raise ContainerError("corpus: truncated (index incomplete)")
     entries: List[ShardEntry] = []
     for s in range(n_shards):
-        off, length, n_sym = _CORPUS_ENTRY.unpack_from(
-            blob, CORPUS_HEADER_SIZE + s * CORPUS_ENTRY_SIZE)
+        entry_off = CORPUS_HEADER_SIZE + s * CORPUS_ENTRY_SIZE
+        off, length, n_sym = _CORPUS_ENTRY.unpack_from(blob, entry_off)
         if base + off + length > len(blob):
-            raise ValueError(f"corpus: truncated (shard {s} segment "
-                             "extends past the blob)")
+            raise ContainerError(
+                f"corpus: truncated (shard {s} segment at byte "
+                f"{base + off} extends past the blob)")
         entries.append(ShardEntry(base + off, length, n_sym))
     return CorpusHeader(n_shards=n_shards, lanes_per_shard=lanes,
                         precision=precision, version=version), entries
@@ -322,7 +345,7 @@ def corpus_segment(blob: bytes, shard: int) -> bytes:
     """
     _, entries = scan_corpus(blob)
     if not 0 <= shard < len(entries):
-        raise ValueError(
+        raise ContainerError(
             f"corpus: shard {shard} out of range [0, {len(entries)})")
     e = entries[shard]
     return blob[e.offset:e.offset + e.length]

@@ -17,9 +17,28 @@ import os
 import random
 import sys
 
+import pytest
+
 _SRC = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
 if _SRC not in sys.path:
     sys.path.insert(0, _SRC)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _release_xla_state_between_modules():
+    # The suite compiles thousands of distinct XLA programs; on jaxlib
+    # 0.4.x CPU the accumulated backend state eventually segfaults
+    # inside backend_compile (deterministically, ~180 tests into a full
+    # run). Modules share almost no compiled programs, so dropping the
+    # caches at module boundaries keeps the run alive at negligible
+    # recompile cost.
+    yield
+    try:
+        import jax
+
+        jax.clear_caches()
+    except Exception:
+        pass
 
 try:
     import hypothesis  # noqa: F401  (real package wins when available)

@@ -1,9 +1,11 @@
 """The docs are executable and *complete*: every ``python`` fenced
-block in ``docs/API.md`` and ``docs/SCALING.md`` runs (each in a fresh
-namespace), every relative markdown link/anchor in README.md + docs/
-resolves, and - the coverage gate - every public name exported by
-``repro.codecs``, ``repro.stream`` and ``repro.serve`` must appear in
-``docs/API.md`` (the failure message lists the missing names).
+block in ``docs/API.md``, ``docs/SCALING.md``, ``docs/ANALYSIS.md``
+and ``docs/SERVING.md`` runs (each in a fresh namespace), every
+relative markdown link/anchor in README.md + docs/ resolves, and - the
+coverage gate - every public name exported by ``repro.codecs``,
+``repro.stream``, ``repro.serve``, ``repro.analysis`` and
+``repro.gateway`` must appear in ``docs/API.md`` (the failure message
+lists the missing names).
 
 This is the tier-1 backing of the CI "docs" step: the API examples are
 the living spec of the public surface, so a signature change that
@@ -19,11 +21,11 @@ import pytest
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DOC_FILES = ["README.md", "docs/ARCHITECTURE.md", "docs/FORMATS.md",
              "docs/API.md", "docs/PERF.md", "docs/SCALING.md",
-             "docs/ANALYSIS.md"]
+             "docs/ANALYSIS.md", "docs/SERVING.md"]
 
 #: modules whose whole ``__all__`` must be documented in docs/API.md.
 COVERED_MODULES = ("repro.codecs", "repro.stream", "repro.serve",
-                   "repro.analysis")
+                   "repro.analysis", "repro.gateway")
 
 _FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
 _LINK = re.compile(r"(?<!!)\[[^\]]+\]\(([^)\s]+)\)")
@@ -57,6 +59,7 @@ def _anchors(rel):
 _API_BLOCKS = _python_blocks("docs/API.md")
 _SCALING_BLOCKS = _python_blocks("docs/SCALING.md")
 _ANALYSIS_BLOCKS = _python_blocks("docs/ANALYSIS.md")
+_SERVING_BLOCKS = _python_blocks("docs/SERVING.md")
 
 
 def test_api_md_has_examples():
@@ -87,6 +90,16 @@ def test_scaling_md_block_runs(i):
 def test_analysis_md_block_runs(i):
     code = _ANALYSIS_BLOCKS[i]
     exec(compile(code, f"docs/ANALYSIS.md[block {i}]", "exec"), {})
+
+
+def test_serving_md_has_examples():
+    assert len(_SERVING_BLOCKS) >= 2
+
+
+@pytest.mark.parametrize("i", range(len(_SERVING_BLOCKS)))
+def test_serving_md_block_runs(i):
+    code = _SERVING_BLOCKS[i]
+    exec(compile(code, f"docs/SERVING.md[block {i}]", "exec"), {})
 
 
 def test_api_md_covers_every_export():

@@ -1,0 +1,487 @@
+"""Gateway serving-tier tests (ISSUE 7 acceptance).
+
+(a) wire bytes through the async gateway are hex-identical to the
+    synchronous ``CodecEngine`` / ``ShardedCodecEngine`` paths;
+(b) a killed client's session resumes from its recovery record and the
+    finished wire still decodes the full corpus losslessly;
+(c) saturating the lanes produces backpressure (bounded queue,
+    retry-after hints), deadlines are enforced with clean lane
+    retirement, and concurrent goodput stays within 10% of the
+    single-client streaming baseline (via ``benchmarks.loadgen``).
+
+Plus the satellite regressions: thread-safe per-shape codec memo,
+recovery-record CRC integrity, snapshot legality rules, and the
+SIGINT flush hook in ``launch/serve.py``.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import codecs, stream
+from repro.gateway import (AdmissionController, Backpressure,
+                           DeadlineExceeded, Gateway, RecoveryRecord,
+                           TenantQuota, delete_record, list_sessions,
+                           load_record, save_record)
+from repro.serve import CodecEngine, ShardedCodecEngine
+
+
+def _family(bits: int = 6, delay: float = 0.0, counter=None):
+    def make(shape):
+        if counter is not None:
+            counter[tuple(shape)] = counter.get(tuple(shape), 0) + 1
+        if delay:
+            time.sleep(delay)
+        n = int(np.prod(shape))
+        return codecs.Shaped(
+            codecs.Repeat(lambda d: codecs.Uniform(bits), n),
+            tuple(shape))
+    return make
+
+
+def _data(n=6, lanes=4, shape=(2, 3), seed=0, bits=6):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, 1 << bits, (n, lanes, *shape)),
+                       jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# engine admission primitives + thread-safe memo (satellite 1)
+# ---------------------------------------------------------------------------
+
+def test_engine_try_admit_retire():
+    eng = CodecEngine(_family(), max_inflight_lanes=4)
+    a = eng.try_admit(3)
+    assert a is not None and eng.inflight_lanes == 3
+    assert eng.try_admit(2) is None          # would exceed the cap
+    b = eng.try_admit(1)
+    assert b is not None and eng.inflight_lanes == 4
+    eng.retire(a)
+    assert eng.inflight_lanes == 1
+    with pytest.raises(ValueError):
+        eng.retire(a)                        # double retire
+    eng.retire(b)
+    assert eng.inflight_lanes == 0
+
+
+def test_codec_engine_memo_is_thread_safe():
+    """Two threads racing ``codec_for`` on the same unseen shape must
+    build the codec exactly once (lock-guarded LRU memo)."""
+    counter = {}
+    eng = CodecEngine(_family(delay=0.05, counter=counter))
+    barrier = threading.Barrier(2)
+    errs = []
+
+    def hit():
+        try:
+            barrier.wait(timeout=5)
+            eng.codec_for((2, 3))
+        except Exception as e:       # pragma: no cover - failure path
+            errs.append(e)
+
+    ts = [threading.Thread(target=hit) for _ in range(2)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert not errs
+    assert counter[(2, 3)] == 1, "codec built twice under race"
+
+
+# ---------------------------------------------------------------------------
+# (a) byte identity: gateway wire == synchronous wire
+# ---------------------------------------------------------------------------
+
+def test_gateway_byte_identical_to_sync_engines():
+    data = _data()
+    eng = CodecEngine(_family(), seed=0, init_chunks=0,
+                      max_inflight_lanes=8)
+    sync_blob = eng.compress(data)
+    sync_wire = eng.compress_stream(data, block_symbols=2)
+
+    sharded = ShardedCodecEngine(_family(), n_shards=1, seed=0,
+                                 init_chunks=0, max_inflight_lanes=8)
+    sync_corpus = sharded.compress(data)
+
+    async def drive():
+        async with Gateway(eng, queue_depth=8) as gw:
+            blob = await gw.compress(data)
+            wire = await gw.compress_stream(data, block_symbols=2)
+            out = await gw.decompress(blob, int(data.shape[0]), (2, 3))
+            sout = await gw.decompress_stream(wire, (2, 3))
+            return blob, wire, out, sout
+
+    blob, wire, out, sout = asyncio.run(drive())
+    assert blob.hex() == sync_blob.hex()
+    assert wire.hex() == sync_wire.hex()
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(data))
+    np.testing.assert_array_equal(np.asarray(sout), np.asarray(data))
+
+    async def drive_sharded():
+        async with Gateway(sharded, queue_depth=8) as gw:
+            return await gw.compress(data)
+
+    assert asyncio.run(drive_sharded()).hex() == sync_corpus.hex()
+    assert eng.inflight_lanes == 0 and sharded.inflight_lanes == 0
+
+
+def test_gateway_session_wire_matches_sync(tmp_path):
+    data = _data(n=8)
+    eng = CodecEngine(_family(), seed=0, init_chunks=0,
+                      max_inflight_lanes=8)
+    sync_wire = eng.compress_stream(data, block_symbols=2)
+
+    async def drive():
+        async with Gateway(eng, queue_depth=4,
+                           recovery_dir=str(tmp_path)) as gw:
+            sess = await gw.open_stream((2, 3), lanes=4,
+                                        session_id="s", block_symbols=2)
+            wire = b""
+            for i in range(0, 8, 2):
+                wire += await sess.write(data[i:i + 2])
+            return wire + await sess.close()
+
+    assert asyncio.run(drive()).hex() == sync_wire.hex()
+    assert eng.inflight_lanes == 0
+    assert list_sessions(str(tmp_path)) == []   # record cleaned on close
+
+
+# ---------------------------------------------------------------------------
+# (b) killed client -> resume from recovery record, lossless end to end
+# ---------------------------------------------------------------------------
+
+def test_killed_client_resumes_losslessly(tmp_path):
+    data = _data(n=8, seed=3)
+    eng = CodecEngine(_family(), seed=0, init_chunks=0,
+                      max_inflight_lanes=8)
+    sync_wire = eng.compress_stream(data, block_symbols=2)
+
+    async def phase1():
+        async with Gateway(eng, queue_depth=4,
+                           recovery_dir=str(tmp_path)) as gw:
+            sess = await gw.open_stream((2, 3), lanes=4,
+                                        session_id="crash",
+                                        block_symbols=2)
+            w = await sess.write(data[:4])
+            sess.abandon()          # client killed; lanes released,
+            return w                # record persisted at the boundary
+
+    w1 = asyncio.run(phase1())
+    assert eng.inflight_lanes == 0          # abandon retired the lanes
+    assert list_sessions(str(tmp_path)) == ["crash"]
+    rec = load_record(str(tmp_path), "crash")
+    assert rec.byte_offset == len(w1) and rec.block_index == 2
+
+    async def phase2():
+        # A *new* gateway (fresh process in real life) picks the
+        # session up from the record alone.
+        async with Gateway(eng, queue_depth=4,
+                           recovery_dir=str(tmp_path)) as gw:
+            sess = await gw.resume_stream("crash")
+            assert sess.wire_offset == len(w1)
+            w = await sess.write(data[4:])
+            return w + await sess.close()
+
+    w2 = asyncio.run(phase2())
+    wire = w1 + w2
+    assert wire.hex() == sync_wire.hex()    # resume is byte-invisible
+    out = eng.decompress_stream(wire, (2, 3))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(data))
+    assert list_sessions(str(tmp_path)) == []
+    assert eng.inflight_lanes == 0
+
+
+def test_decode_session_ack_and_resume(tmp_path):
+    data = _data(n=6, seed=5)
+    eng = CodecEngine(_family(), seed=0, init_chunks=0,
+                      max_inflight_lanes=8)
+    wire = eng.compress_stream(data, block_symbols=2)
+
+    async def phase1():
+        async with Gateway(eng, queue_depth=4,
+                           recovery_dir=str(tmp_path)) as gw:
+            d = await gw.open_decode(wire, (2, 3), session_id="dec")
+            b0 = await d.next_block()
+            d.ack()                 # consumer persisted block 0
+            d.close()               # dies before finishing: record kept
+            return np.asarray(b0)
+
+    b0 = asyncio.run(phase1())
+    assert list_sessions(str(tmp_path)) == ["dec"]
+
+    async def phase2():
+        async with Gateway(eng, queue_depth=4,
+                           recovery_dir=str(tmp_path)) as gw:
+            d = await gw.resume_decode(wire, "dec")
+            got = []
+            while (b := await d.next_block()) is not None:
+                got.append(np.asarray(b))
+                d.ack()
+            d.close()
+            return got
+
+    rest = asyncio.run(phase2())
+    np.testing.assert_array_equal(np.concatenate([b0, *rest], axis=0),
+                                  np.asarray(data))
+    assert list_sessions(str(tmp_path)) == []   # fully acked -> deleted
+    assert eng.inflight_lanes == 0
+
+
+# ---------------------------------------------------------------------------
+# (c) saturation: backpressure, deadlines, bounded queue, no lane leak
+# ---------------------------------------------------------------------------
+
+def test_backpressure_bounded_queue_and_retry_after():
+    data = _data()
+    eng = CodecEngine(_family(), seed=0, init_chunks=0,
+                      max_inflight_lanes=4)
+    sync_blob = eng.compress(data)
+
+    async def drive():
+        async with Gateway(eng, queue_depth=3) as gw:
+            held = eng.try_admit(4)          # saturate the lanes
+            assert held is not None
+            waiters = [asyncio.create_task(gw.compress(data))
+                       for _ in range(3)]
+            await asyncio.sleep(0.05)        # queue now full
+            with pytest.raises(Backpressure) as ei:
+                await gw.compress(data)
+            assert ei.value.retry_after > 0
+            assert "queue" in ei.value.reason
+            assert gw.stats()["rejected"] >= 1
+            eng.retire(held)                 # lanes free: queue drains
+            gw._pump()
+            blobs = await asyncio.gather(*waiters)
+            assert all(b == sync_blob for b in blobs)
+            return gw.stats()
+
+    stats = asyncio.run(drive())
+    assert stats["inflight_lanes"] == 0 and stats["waiting"] == 0
+
+
+def test_tenant_quota_is_per_tenant():
+    data = _data()
+    eng = CodecEngine(_family(), seed=0, init_chunks=0,
+                      max_inflight_lanes=64)
+
+    async def drive():
+        async with Gateway(eng, queue_depth=16,
+                           default_quota=TenantQuota(max_lanes=4,
+                                                     max_queued=1)) as gw:
+            sess = await gw.open_stream((2, 3), lanes=4,
+                                        session_id="hog",
+                                        tenant="greedy")
+            # greedy's 4-lane quota is exhausted (the engine itself has
+            # 64 lanes free): its next request queues, and the one
+            # after overflows max_queued=1 per-tenant - Backpressure
+            # even though the global queue has room.
+            t = asyncio.create_task(gw.compress(data, tenant="greedy"))
+            await asyncio.sleep(0.05)
+            with pytest.raises(Backpressure, match="tenant"):
+                await gw.compress(data, tenant="greedy")
+            p = asyncio.create_task(gw.compress(data, tenant="polite"))
+            await asyncio.sleep(0.02)
+            await sess.close()      # frees greedy's quota: FIFO drains
+            return await t, await p
+
+    bg, bp = asyncio.run(drive())
+    assert bg == eng.compress(data) and bp == bg
+    assert eng.inflight_lanes == 0
+
+
+def test_deadline_while_queued_raises_deadline_exceeded():
+    data = _data()
+    eng = CodecEngine(_family(), seed=0, init_chunks=0,
+                      max_inflight_lanes=4)
+
+    async def drive():
+        async with Gateway(eng, queue_depth=4) as gw:
+            held = eng.try_admit(4)
+            t0 = time.perf_counter()
+            with pytest.raises(DeadlineExceeded):
+                await gw.compress(data, deadline=0.05)
+            waited = time.perf_counter() - t0
+            eng.retire(held)
+            return waited, gw.stats()
+
+    waited, stats = asyncio.run(drive())
+    assert waited < 2.0                      # gave up, didn't hang
+    assert stats["deadline_exceeded"] == 1
+    assert stats["inflight_lanes"] == 0 and stats["waiting"] == 0
+
+
+def test_deadline_mid_compute_retires_lane_when_thread_returns():
+    """A deadline that fires while the engine is mid-compute cannot
+    preempt the thread; the gateway must still retire the lane once the
+    abandoned computation returns (no permanent lane leak)."""
+    data = _data()
+    eng = CodecEngine(_family(), seed=0, init_chunks=0,
+                      max_inflight_lanes=4)
+    real = eng.compress
+
+    def slow_compress(*a, **k):
+        time.sleep(0.3)
+        return real(*a, **k)
+
+    eng.compress = slow_compress
+
+    async def drive():
+        async with Gateway(eng, queue_depth=4) as gw:
+            with pytest.raises(DeadlineExceeded):
+                await gw.compress(data, deadline=0.05)
+            # lane is still held by the abandoned thread...
+            assert eng.inflight_lanes == 4
+            for _ in range(100):             # ...until it returns
+                if eng.inflight_lanes == 0:
+                    break
+                await asyncio.sleep(0.02)
+            return eng.inflight_lanes
+
+    assert asyncio.run(drive()) == 0
+
+
+def test_goodput_within_10pct_and_p99_bounded():
+    """Acceptance (c): concurrent goodput >= 90% of the single-client
+    streaming baseline, p99 latency bounded, queue bounded, no lane
+    leak. In-process timing is noisy, so the ratio bar gets 3 tries."""
+    from benchmarks import loadgen
+
+    row = None
+    for attempt in range(3):
+        row = loadgen.run(clients=4, lanes=2, block_symbols=8,
+                          shape=(4, 4), min_blocks=2, max_blocks=3,
+                          seed=attempt)[0]
+        assert row["lane_leak"] == 0
+        assert row["deadline_exceeded"] == 0
+        # p99 bound: no single block write may take longer than coding
+        # the *entire* corpus takes synchronously.
+        whole_corpus_s = row["payload_mb"] / row["baseline_mb_per_s"]
+        assert row["p99_ms"] / 1e3 < whole_corpus_s
+        if row["goodput_ratio"] >= 0.9:
+            break
+    assert row["goodput_ratio"] >= 0.9, row
+
+
+# ---------------------------------------------------------------------------
+# recovery records + snapshot legality (supporting contracts)
+# ---------------------------------------------------------------------------
+
+def test_recovery_record_roundtrip_crc_and_corruption(tmp_path):
+    rec = RecoveryRecord(session_id="r1", tenant="t", kind="encode",
+                         byte_offset=64, block_index=2,
+                         symbols_acked=8,
+                         snapshot={"heads": [1, 2], "lanes": 2},
+                         meta={"shape": [2, 3]})
+    path = save_record(str(tmp_path), rec)
+    back = load_record(str(tmp_path), "r1")
+    assert back.byte_offset == 64 and back.block_index == 2
+    assert back.snapshot["heads"] == (1, 2)     # lists -> tuples
+
+    raw = open(path).read()
+    with open(path, "w") as f:                  # flip a stored field
+        f.write(raw.replace('"byte_offset": 64', '"byte_offset": 65'))
+    with pytest.raises(ValueError, match="CRC mismatch"):
+        load_record(str(tmp_path), "r1")
+
+    with open(path, "w") as f:
+        f.write("not json at all")
+    with pytest.raises(ValueError):
+        load_record(str(tmp_path), "r1")
+
+    delete_record(str(tmp_path), "r1")
+    assert load_record(str(tmp_path), "r1") is None
+    assert list_sessions(str(tmp_path)) == []
+
+    with pytest.raises(ValueError, match="session id"):
+        RecoveryRecord(session_id="../evil", tenant="t", kind="encode",
+                       byte_offset=0, block_index=0, symbols_acked=0)
+
+
+def test_stream_encoder_snapshot_rules():
+    codec = codecs.Shaped(
+        codecs.Repeat(lambda d: codecs.Uniform(6), 6), (2, 3))
+    enc = stream.StreamEncoder(codec, lanes=4, block_symbols=2,
+                               seed=0, init_chunks=0)
+    data = _data(n=3)
+    enc.write(data[:2])
+    assert enc.buffered_symbols == 0
+    snap = enc.snapshot()                       # legal at the boundary
+    assert snap.n_blocks == 1 and snap.heads is not None
+    enc.write(data[2:3])
+    assert enc.buffered_symbols == 1
+    with pytest.raises(RuntimeError, match="mid-block"):
+        enc.snapshot()
+    enc.flush()
+    with pytest.raises(RuntimeError, match="after flush"):
+        enc.snapshot()
+    # resume() refuses a codec/lane mismatch
+    with pytest.raises(ValueError, match="lanes"):
+        stream.StreamEncoder.resume(
+            codec, dataclasses.replace(snap, lanes=2))
+
+
+# ---------------------------------------------------------------------------
+# SIGINT flush hook (satellite 2)
+# ---------------------------------------------------------------------------
+
+def test_sigint_handler_flushes_open_encoders_to_valid_trailer():
+    from repro.launch import serve as launch_serve
+
+    codec = codecs.Shaped(
+        codecs.Repeat(lambda d: codecs.Uniform(6), 6), (2, 3))
+    enc = stream.StreamEncoder(codec, lanes=4, block_symbols=2,
+                               seed=None, init_chunks=0)
+    data = _data(n=3)
+    wire = enc.write(data)                      # 1 full block + 1 ragged
+    tail_seen = []
+    orig_flush = enc.flush
+    enc.flush = lambda: (tail_seen.append(orig_flush())   # type: ignore
+                         or tail_seen[-1])
+    launch_serve._OPEN_ENCODERS["t"] = enc
+    handler = launch_serve.install_sigint_flush()
+    try:
+        with pytest.raises(KeyboardInterrupt):
+            handler()                           # simulate the signal
+    finally:
+        import signal as _signal
+        _signal.signal(_signal.SIGINT, _signal.default_int_handler)
+    assert "t" not in launch_serve._OPEN_ENCODERS
+    assert launch_serve.flush_open_encoders() == {}   # idempotent
+    # the handler's flush completed the wire: ragged tail + trailer
+    wire += tail_seen[0]
+    header, offsets, trailer = stream.format.scan(wire)
+    assert trailer is not None and trailer.n_blocks == 2
+    out = stream.decode_stream(codec, wire)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(data))
+
+
+# ---------------------------------------------------------------------------
+# admission controller unit coverage
+# ---------------------------------------------------------------------------
+
+def test_admission_controller_stats_and_quota_accounting():
+    eng = CodecEngine(_family(), max_inflight_lanes=8)
+    ctl = AdmissionController(eng, queue_depth=2,
+                              default_quota=TenantQuota(max_lanes=4))
+    a = ctl.try_acquire("t1", 4)
+    assert a is not None
+    assert ctl.try_acquire("t1", 1) is None     # tenant quota
+    b = ctl.try_acquire("t2", 4)                # other tenant fine
+    assert b is not None
+    ctl.reserve_queue_slot("t1")
+    ctl.reserve_queue_slot("t2")
+    with pytest.raises(Backpressure, match="queue"):
+        ctl.reserve_queue_slot("t3")            # global depth
+    ctl.release_queue_slot("t1")
+    ctl.release_queue_slot("t2")
+    ctl.release("t1", a)
+    ctl.release("t2", b)
+    s = ctl.stats()
+    assert s["rejected"] == 1 and eng.inflight_lanes == 0

@@ -334,3 +334,264 @@ def test_select_lanes_freezes_masked_state():
     popped, out = codec.pop(merged)
     np.testing.assert_array_equal(np.asarray(out)[::2],
                                   np.asarray(sym)[::2])
+
+
+# ---------------------------------------------------------------------------
+# Corruption matrix: BBX2 scan / BBX3 scan_corpus raise ContainerError
+# with the byte offset and block index of the damage (satellite of the
+# gateway PR; mirrors the BBX1 matrix in test_codecs.py)
+# ---------------------------------------------------------------------------
+
+def _bbx2_blob(lanes=2, n=13, block=4):
+    codec = _categorical(lanes)
+    return stream.encode_stream(codec, _symbols(n, lanes), lanes=lanes,
+                                block_symbols=block, seed=None)
+
+
+def _set_u32(blob: bytes, offset: int, value: int) -> bytes:
+    b = bytearray(blob)
+    b[offset:offset + 4] = int(value).to_bytes(4, "little")
+    return bytes(b)
+
+
+def _mut_header_truncated(blob, offs):
+    return blob[:8], "truncated .*no header"
+
+
+def _mut_bad_magic(blob, offs):
+    return b"XXX2" + blob[4:], r"bad magic .*at byte 0"
+
+
+def _mut_bad_version(blob, offs):
+    b = bytearray(blob); b[4] = 9
+    return bytes(b), "unsupported BBX2 version 9 at byte 0"
+
+
+def _mut_zero_lanes(blob, offs):
+    return _set_u32(blob, 8, 0), "corrupt header at byte 0"
+
+
+def _mut_marker_flip(blob, offs):
+    b = bytearray(blob); b[offs[1]] ^= 0xFF
+    return bytes(b), (rf"scan failed at block 1 \(byte offset "
+                      rf"{offs[1]}\).*marker")
+
+
+def _mut_lane_len_lt2(blob, offs):
+    return _set_u32(blob, offs[1] + stream.format.BLOCK_HEADER_SIZE, 1), \
+        rf"block 1 \(byte offset {offs[1]}\).*lane length < 2"
+
+
+def _mut_len_sum_mismatch(blob, offs):
+    total = int.from_bytes(blob[offs[0] + 8:offs[0] + 12], "little")
+    return _set_u32(blob, offs[0] + 8, total + 3), \
+        rf"block 0 \(byte offset {offs[0]}\).*length sum mismatch"
+
+
+@pytest.mark.parametrize("mutate", [
+    _mut_header_truncated, _mut_bad_magic, _mut_bad_version,
+    _mut_zero_lanes, _mut_marker_flip, _mut_lane_len_lt2,
+    _mut_len_sum_mismatch,
+], ids=lambda f: f.__name__[5:])
+def test_bbx2_scan_corruption_matrix(mutate):
+    """Every corruption class surfaces as codecs.ContainerError naming
+    where (byte offset / block index) the frame walk failed."""
+    blob = _bbx2_blob()
+    _, offs, _ = stream.format.scan(blob)
+    bad, pattern = mutate(blob, offs)
+    with pytest.raises(codecs.ContainerError, match=pattern):
+        stream.format.scan(bad)
+    # ContainerError subclasses ValueError: pre-existing callers that
+    # caught ValueError keep working.
+    assert issubclass(codecs.ContainerError, ValueError)
+
+
+def _bbx3_blob():
+    segs = [_bbx2_blob(lanes=1, n=5, block=2),
+            _bbx2_blob(lanes=1, n=7, block=2)]
+    return stream.encode_corpus(segs, [5, 7], lanes_per_shard=1), segs
+
+
+def _cmut_truncated(blob):
+    return blob[:10], "truncated .*no header"
+
+
+def _cmut_bad_magic(blob):
+    return b"XXX3" + blob[4:], r"bad magic .*at byte 0"
+
+
+def _cmut_bad_version(blob):
+    b = bytearray(blob); b[4] = 7
+    return bytes(b), "unsupported BBX3 version 7"
+
+
+def _cmut_zero_shards(blob):
+    return _set_u32(blob, 8, 0), "n_shards/lanes < 1"
+
+
+def _cmut_huge_shards(blob):
+    return _set_u32(blob, 8, 10_000_000), \
+        r"n_shards=10000000 needs a larger index"
+
+
+def _cmut_segment_truncated(blob):
+    return blob[:-4], r"shard 1 segment at byte \d+ extends past"
+
+
+@pytest.mark.parametrize("mutate", [
+    _cmut_truncated, _cmut_bad_magic, _cmut_bad_version,
+    _cmut_zero_shards, _cmut_huge_shards, _cmut_segment_truncated,
+], ids=lambda f: f.__name__[6:])
+def test_bbx3_scan_corpus_corruption_matrix(mutate):
+    blob, _ = _bbx3_blob()
+    bad, pattern = mutate(blob)
+    with pytest.raises(codecs.ContainerError, match=pattern):
+        stream.format.scan_corpus(bad)
+
+
+def test_corpus_segment_out_of_range():
+    blob, segs = _bbx3_blob()
+    assert stream.corpus_segment(blob, 1) == segs[1]
+    with pytest.raises(codecs.ContainerError,
+                       match=r"shard 2 out of range \[0, 2\)"):
+        stream.corpus_segment(blob, 2)
+
+
+# ---------------------------------------------------------------------------
+# Batcher under adversarial schedules (satellite of the gateway PR):
+# disconnect mid-stream, admit-while-full, retire-then-readmit,
+# timeout eviction - FIFO fairness and no lane leak throughout
+# ---------------------------------------------------------------------------
+
+def test_batcher_cancel_midstream_frees_lane_and_yields_valid_prefix():
+    """A client disconnect (cancel) releases its lane to the FIFO queue
+    and finalizes a *valid* partial blob decoding to a prefix."""
+    max_lanes, block = 2, 3
+    codec = _categorical(max_lanes, alphabet=5)
+    rng = np.random.default_rng(21)
+    bat = stream.StreamBatcher(codec, max_lanes=max_lanes,
+                               block_symbols=block, seed=None)
+    datas = {i: jnp.asarray(rng.integers(0, 5, (9,)), jnp.int32)
+             for i in range(3)}
+    for i, d in datas.items():
+        bat.submit(i, d)
+    bat.step()                        # 0 and 1 hold lanes, 2 queued
+    assert bat.active_ids == [0, 1] and bat.queued_ids == [2]
+    lane = bat.lane_of(0)
+    part = bat.cancel(0)              # disconnect mid-stream
+    assert 0 in bat.evicted and bat.lane_of(0) is None
+    codec1 = _categorical(1, alphabet=5)
+    out = stream.decode_stream(codec1, part)   # valid prefix blob
+    np.testing.assert_array_equal(np.asarray(out)[:, 0],
+                                  np.asarray(datas[0])[:block])
+    blobs = bat.run()                 # queued client takes the lane
+    assert bat.lane_of(2) is None and bat.idle   # no lane leak
+    assert set(blobs) == {0, 1, 2}
+    for i in (1, 2):
+        out = stream.decode_stream(codec1, blobs[i])
+        np.testing.assert_array_equal(np.asarray(out)[:, 0],
+                                      np.asarray(datas[i]))
+    assert lane is not None   # it did hold a lane before the cancel
+
+
+def test_batcher_admit_while_full_is_fifo():
+    """Submissions beyond max_lanes wait in FIFO order; admission order
+    equals submission order (fairness), finish frees lanes in turn."""
+    max_lanes, block = 1, 2
+    codec = _categorical(max_lanes, alphabet=5)
+    rng = np.random.default_rng(22)
+    bat = stream.StreamBatcher(codec, max_lanes=max_lanes,
+                               block_symbols=block, seed=None)
+    admitted = []
+    for i in range(4):
+        bat.submit(i, jnp.asarray(rng.integers(0, 5, (2,)), jnp.int32))
+    while not bat.idle:
+        before = set(bat.active_ids)
+        bat.step()
+        admitted.extend(i for i in bat.active_ids if i not in before)
+    # Single lane, 1-block streams: each round admits the next id in
+    # submission order - strict FIFO, nobody starves or overtakes.
+    assert bat.queued_ids == [] and bat.active_ids == []
+    done = bat.run()
+    assert set(done) == {0, 1, 2, 3}
+
+
+def test_batcher_retire_then_readmit_same_lane():
+    """A finished id is released and resubmitted: the same lane serves
+    it again with fresh state; duplicate ids without release raise."""
+    codec = _categorical(1, alphabet=5)
+    rng = np.random.default_rng(23)
+    bat = stream.StreamBatcher(codec, max_lanes=1, block_symbols=4,
+                               seed=None)
+    d1 = jnp.asarray(rng.integers(0, 5, (6,)), jnp.int32)
+    bat.submit("u", d1)
+    blob1 = bat.run()["u"]
+    with pytest.raises(ValueError, match="duplicate stream id"):
+        bat.submit("u", d1)
+    bat.release("u")
+    d2 = jnp.asarray(rng.integers(0, 5, (3,)), jnp.int32)
+    bat.submit("u", d2)
+    blob2 = bat.run()["u"]
+    codec1 = _categorical(1, alphabet=5)
+    np.testing.assert_array_equal(
+        np.asarray(stream.decode_stream(codec1, blob1))[:, 0],
+        np.asarray(d1))
+    np.testing.assert_array_equal(
+        np.asarray(stream.decode_stream(codec1, blob2))[:, 0],
+        np.asarray(d2))
+    assert bat.idle     # no lane leak across the readmit
+
+
+def test_batcher_timeout_evicts_at_round_boundary():
+    """An expired lane lease is evicted: partial blob valid, lane freed
+    for the queue, eviction reported by step()."""
+    clock = [0.0]
+    codec = _categorical(2, alphabet=5)
+    rng = np.random.default_rng(24)
+    bat = stream.StreamBatcher(codec, max_lanes=2, block_symbols=2,
+                               seed=None, clock=lambda: clock[0])
+    slow = jnp.asarray(rng.integers(0, 5, (8,)), jnp.int32)
+    fast = jnp.asarray(rng.integers(0, 5, (8,)), jnp.int32)
+    queued = jnp.asarray(rng.integers(0, 5, (2,)), jnp.int32)
+    bat.submit("slow", slow, timeout=1.0)
+    bat.submit("fast", fast)
+    bat.submit("queued", queued)
+    bat.step()                      # round 0: both code a block
+    assert bat.lane_of("slow") is not None
+    clock[0] = 2.0                  # lease expires
+    finished = bat.step()
+    assert "slow" in finished and "slow" in bat.evicted
+    assert bat.lane_of("slow") is None
+    # The freed lane was re-leased to the queued stream in the same
+    # round - short enough (1 block) that it finished there too.
+    assert "queued" in finished
+    codec1 = _categorical(1, alphabet=5)
+    out = stream.decode_stream(codec1, finished["slow"])
+    np.testing.assert_array_equal(np.asarray(out)[:, 0],
+                                  np.asarray(slow)[:2])  # 1-block prefix
+    blobs = bat.run()
+    assert bat.idle and set(blobs) == {"slow", "fast", "queued"}
+    np.testing.assert_array_equal(
+        np.asarray(stream.decode_stream(codec1, blobs["fast"]))[:, 0],
+        np.asarray(fast))
+
+
+def test_batcher_queued_timeout_evicts_without_admission():
+    """A stream that times out while still queued never gets a lane;
+    its blob is a valid empty/header-only stream."""
+    clock = [0.0]
+    codec = _categorical(1, alphabet=5)
+    bat = stream.StreamBatcher(codec, max_lanes=1, block_symbols=2,
+                               seed=None, clock=lambda: clock[0])
+    bat.submit("a", jnp.asarray([1, 2, 3, 4], jnp.int32))
+    bat.submit("b", jnp.asarray([1, 2], jnp.int32), timeout=0.5)
+    bat.step()
+    clock[0] = 1.0
+    bat.step()
+    assert "b" in bat.evicted
+    blobs = bat.run()
+    codec1 = _categorical(1, alphabet=5)
+    assert stream.decode_stream(codec1, blobs["b"]) is None  # empty
+    np.testing.assert_array_equal(
+        np.asarray(stream.decode_stream(codec1, blobs["a"]))[:, 0],
+        np.asarray([1, 2, 3, 4]))
