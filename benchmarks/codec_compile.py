@@ -1,19 +1,28 @@
 """Compiled-vs-interpreted end-to-end codec latency (the compiler's
 acceptance bench).
 
-Two workloads, both through the one-call container so the timings are
-what a service actually pays:
+Workloads, all through the one-call container so the timings are what a
+service actually pays:
 
   * ``vae``  - the table2 MNIST VAE (BBANS over Gaussian posterior +
     Bernoulli pixels), chained over ``n_chain`` datapoints.
-  * ``hvae`` - the 2-level Bit-Swap ResNet-VAE on HxW images (all-
+  * ``hvae-l2`` - the 2-level Bit-Swap ResNet-VAE on HxW images (all-
     dynamic Gaussian grids - the paper path the compiler targets).
+  * ``vae-fixedpoint`` / ``hvae-l2-fixedpoint`` - the same models with
+    integer-quantized inference (``codecs.quantize``), where the model
+    forward, bucketize, and ANS renorm all live in ONE jitted program
+    per coder direction (``codecs.compile`` fuses ``FixedPointFn``
+    children).
 
-For each, the interpreted combinator tree and its ``codecs.compile``d
-program encode and decode the same data; blobs are asserted
-byte-identical, and the table reports wall time, MB/s of wire, and the
-compiled/interpreted speedups. The ISSUE-4 acceptance bar is >= 3x on
-the dynamic-leaf (Gaussian) paths at quick settings.
+For each workload the interpreted tree and its compiled program encode
+and decode the same data; blobs are asserted byte-identical (for the
+fixed-point rows, the eager interpreter runs the very same quantized
+integer network, so the fused wire is checked hex-for-hex against the
+eager one). The headline metric is wire MB/s *per device*
+(``enc_mb_per_s_per_device``/``dec_mb_per_s_per_device``); fixed-point
+rows also report ``speedup_fused_vs_float_*`` - fused one-program
+latency against the float compiled path - which the ISSUE-8 acceptance
+bar requires to be >= 3x on both workloads.
 """
 
 from __future__ import annotations
@@ -30,6 +39,8 @@ from repro.models import hvae, vae as vae_lib
 def _roundtrip_rows(name: str, interp, prog, data, lanes: int,
                     kwargs: dict):
     """Time (encode, decode) x (interpreted, compiled); assert parity."""
+    n_dev = jax.device_count()
+    n_dp = data.shape[0] * data.shape[1]   # chained datapoints x lanes
     enc_i = lambda: codecs.compress(interp, data, lanes=lanes, **kwargs)
     enc_c = lambda: codecs.compress(prog, data, lanes=lanes, **kwargs)
     blob = enc_c()   # warm the compiled program (trace + compile once)
@@ -53,6 +64,11 @@ def _roundtrip_rows(name: str, interp, prog, data, lanes: int,
             "encode_s": ue / 1e6, "decode_s": ud / 1e6,
             "enc_mb_per_s": mb / (ue / 1e6),
             "dec_mb_per_s": mb / (ud / 1e6),
+            "enc_mb_per_s_per_device": mb / (ue / 1e6) / n_dev,
+            "dec_mb_per_s_per_device": mb / (ud / 1e6) / n_dev,
+            # roofline inputs (launch/roofline.py): wire size and how
+            # many datapoints produced it.
+            "wire_mb": mb, "n_datapoints": n_dp,
         })
     rows[-1]["speedup_encode"] = us_enc_i / us_enc_c
     rows[-1]["speedup_decode"] = us_dec_i / us_dec_c
@@ -71,9 +87,23 @@ def run(lanes: int = 4, n_chain: int = 2, hw: int = 8, seed: int = 0):
         rng.integers(0, 2, (n_chain, lanes, cfg.input_dim)), jnp.int32)
     chained = codecs.Chained(vae_lib.make_bb_codec(params, cfg), n_chain)
     prog = codecs.compile(chained)
-    rows += _roundtrip_rows(
-        "vae", chained, prog, data, lanes,
-        dict(seed=seed, init_chunks=64, capacity=4096))
+    kwargs = dict(seed=seed, init_chunks=64, capacity=4096)
+    vae_rows = _roundtrip_rows("vae", chained, prog, data, lanes, kwargs)
+    rows += vae_rows
+
+    # Fixed-point VAE: fused single-program coder (model forward +
+    # bucketize + renorm in one jit). Its interpreted twin runs the
+    # same integer network eagerly, so wire parity is exact.
+    q_chained = codecs.Chained(
+        vae_lib.make_bb_codec_q(params, cfg), n_chain)
+    q_prog = codecs.compile(q_chained)
+    q_rows = _roundtrip_rows(
+        "vae-fixedpoint", q_chained, q_prog, data, lanes, kwargs)
+    q_rows[-1]["speedup_fused_vs_float_encode"] = \
+        vae_rows[-1]["encode_s"] / q_rows[-1]["encode_s"]
+    q_rows[-1]["speedup_fused_vs_float_decode"] = \
+        vae_rows[-1]["decode_s"] / q_rows[-1]["decode_s"]
+    rows += q_rows
 
     # HVAE-L2 Bit-Swap workload: every layer a dynamic Gaussian grid.
     hcfg = hvae.HVAEConfig(levels=2, ch=8, z_ch=2, n_res=1)
@@ -83,9 +113,24 @@ def run(lanes: int = 4, n_chain: int = 2, hw: int = 8, seed: int = 0):
     hcodec = codecs.Chained(
         hvae.make_bitswap_codec(hparams, hcfg, (hw, hw)), n_chain)
     hprog = codecs.compile(hcodec)
-    rows += _roundtrip_rows(
-        "hvae-l2", hcodec, hprog, imgs, lanes,
-        dict(seed=seed, init_chunks=64, capacity=4096))
+    hvae_rows = _roundtrip_rows(
+        "hvae-l2", hcodec, hprog, imgs, lanes, kwargs)
+    rows += hvae_rows
+
+    # Fixed-point HVAE: fused Bit-Swap schedule (int conv/deconv
+    # resnet + LUT heads inside the coder program).
+    hq_codec = codecs.Chained(
+        hvae.make_bitswap_codec_q(hparams, hcfg, (hw, hw)), n_chain)
+    hq_prog = codecs.compile(hq_codec)
+    hq_rows = _roundtrip_rows(
+        "hvae-l2-fixedpoint", hq_codec, hq_prog, imgs, lanes, kwargs)
+    for r in hq_rows:
+        r["hw"] = hw   # roofline input: image side of this run
+    hq_rows[-1]["speedup_fused_vs_float_encode"] = \
+        hvae_rows[-1]["encode_s"] / hq_rows[-1]["encode_s"]
+    hq_rows[-1]["speedup_fused_vs_float_decode"] = \
+        hvae_rows[-1]["decode_s"] / hq_rows[-1]["decode_s"]
+    rows += hq_rows
     return rows
 
 

@@ -28,7 +28,9 @@ BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                             "baselines")
 
 #: numeric row fields where higher is better and a drop is a regression.
-_THROUGHPUT_SUFFIXES = ("mb_per_s", "msym_per_s")
+#: ``mb_per_s_per_device`` (the headline codec metric since ISSUE-8)
+#: matches via the ``per_device`` suffix.
+_THROUGHPUT_SUFFIXES = ("mb_per_s", "msym_per_s", "per_device")
 _THROUGHPUT_PREFIXES = ("speedup",)
 
 

@@ -37,10 +37,19 @@ def _cases():
     params_bb = vae_lib.init(jax.random.PRNGKey(1), cfg_bb)
     yield "vae-beta-binomial", vae_lib.make_bb_codec(params_bb, cfg_bb)
 
+    # Fixed-point (quantized) variants: the verifier walks the
+    # interpreted twin each FixedPointFn builds; the fused jit program
+    # is bit-identical to it by construction (tests/test_parity_fuzz).
+    yield "vae-bernoulli-quantized", vae_lib.make_bb_codec_q(params, cfg)
+    yield "vae-quantized-compiled", vae_lib.make_bb_codec_q(
+        params, cfg, compiled=True)
+
     from repro.models import hvae
     hcfg = hvae.HVAEConfig(levels=2, ch=8, z_ch=2, n_res=1)
     hparams = hvae.init(jax.random.PRNGKey(2), hcfg)
     yield "hvae-bitswap", hvae.make_bitswap_codec(hparams, hcfg, (4, 4))
+    yield "hvae-bitswap-quantized", hvae.make_bitswap_codec_q(
+        hparams, hcfg, (4, 4))
 
     from repro.configs import base as cfg_base
     from repro.core import lm_codec

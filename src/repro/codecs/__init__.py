@@ -27,6 +27,8 @@ from repro.codecs.combinators import (BBANS, BitSwap, Chained, Repeat,
                                       Serial, Shaped, TreeCodec)
 from repro.codecs.container import (ContainerError, blob_info, compress,
                                     decompress, fresh_stack)
+from repro.codecs.quantize import (FixedPointFn, LutBernoulli, QuantConfig,
+                                   quantize_params)
 from repro.codecs.compile import CompiledCodec, compile
 
 __all__ = [
@@ -38,6 +40,8 @@ __all__ = [
     "BBANS", "BitSwap", "Chained", "Repeat", "Serial", "Shaped", "TreeCodec",
     # compiler
     "compile", "CompiledCodec",
+    # fixed-point inference (codecs.quantize)
+    "FixedPointFn", "LutBernoulli", "QuantConfig", "quantize_params",
     # container
     "compress", "decompress", "blob_info", "fresh_stack",
     "ContainerError",

@@ -68,6 +68,7 @@ from repro.core.distributions import (Bernoulli, BetaBinomial, Categorical,
                                       beta_binomial_log_pmf)
 from repro.codecs import combinators as C
 from repro.codecs import leaves as L
+from repro.codecs import quantize as Q
 from repro.kernels.ans import ops as ans_ops
 
 
@@ -267,6 +268,256 @@ class _TableRepeat(Codec):
         stack, syms = _active_programs()["pop_dyn"][self.donate](
             stack, self.tables, precision=self.precision)
         return stack, syms.T.astype(self.out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused fixed-point programs (model forward INSIDE the jit)
+# ---------------------------------------------------------------------------
+# When a BBANS/BitSwap tree's function-valued children are
+# ``quantize.FixedPointFn`` markers, the whole combinator schedule -
+# quantized network forward, CDF bucketize, ANS renorm - is traced into
+# ONE jitted program per direction. The model math is integer/LUT
+# (exact in any fusion context, see codecs/quantize.py) and the
+# Gaussian CDF chain is the same canonical form the kernels already
+# evaluate inside jit, so wire bytes are identical to the interpreted
+# (eager) twin of the same quantized codec. The eager-float hop per
+# Repeat step - the dominant cost of the lazy BBANS lowering below -
+# disappears entirely.
+
+def _traced_push_uniform(stack: ans.ANSStack, idxT: jnp.ndarray,
+                         bits: int, precision: int) -> ans.ANSStack:
+    shift = precision - bits
+    start = idxT.astype(jnp.uint32) << shift
+    freq = jnp.full_like(start, jnp.uint32(1 << shift))
+    return ans_ops.push_many(stack, start[::-1], freq[::-1],
+                             precision=precision)
+
+
+def _traced_push_gaussian(stack: ans.ANSStack, idxT: jnp.ndarray,
+                          muT: jnp.ndarray, sigmaT: jnp.ndarray,
+                          bits: int, precision: int) -> ans.ANSStack:
+    f = discretize.posterior_starts_fn(muT, sigmaT, bits, precision)
+    start = f(idxT)
+    freq = f(idxT + 1) - start
+    return ans_ops.push_many(stack, start[::-1], freq[::-1],
+                             precision=precision)
+
+
+def _fp_push(stack: ans.ANSStack, fx: "Q.FixedPointFn", ctx: Any,
+             sym: jnp.ndarray) -> ans.ANSStack:
+    """Push ``sym`` under the codec ``fx`` parameterizes by ``ctx``."""
+    flat = sym.reshape(sym.shape[0], -1).astype(jnp.int32)
+    if fx.family == "gaussian":
+        mu, sigma = fx.params(ctx)
+        return _traced_push_gaussian(stack, flat.T, mu.T, sigma.T,
+                                     fx.bits, fx.precision)
+    f1 = fx.params(ctx).T.astype(jnp.uint32)          # [n, lanes]
+    total = jnp.uint32(1 << fx.precision)
+    f0 = total - f1
+    is1 = flat.T.astype(bool)
+    start = jnp.where(is1, f0, jnp.uint32(0))
+    freq = jnp.where(is1, f1, f0)
+    return ans_ops.push_many(stack, start[::-1], freq[::-1],
+                             precision=fx.precision)
+
+
+def _fp_pop(stack: ans.ANSStack, fx: "Q.FixedPointFn",
+            ctx: Any) -> tuple:
+    """Pop a symbol under the codec ``fx`` parameterizes by ``ctx``."""
+    if fx.family == "gaussian":
+        mu, sigma = fx.params(ctx)
+        stack, symT = ans_ops.pop_many_grid(
+            stack, "gaussian", mu.T, sigma.T, fx.n, fx.bits,
+            precision=fx.precision)
+    else:
+        f1 = fx.params(ctx).T.astype(jnp.uint32)      # [n, lanes]
+        total = jnp.uint32(1 << fx.precision)
+        tables = jnp.stack(
+            [jnp.zeros_like(f1), total - f1, jnp.full_like(f1, total)],
+            axis=-1)
+        stack, symT = ans_ops.pop_many_dyn(stack, tables,
+                                           precision=fx.precision)
+    sym = symT.T
+    if fx.shape:
+        sym = sym.reshape((sym.shape[0],) + tuple(fx.shape))
+    return stack, sym
+
+
+class _FusedBBANS(Codec):
+    """``BBANS`` with FixedPointFn children: one jit per direction.
+
+    The push/pop bodies replay ``combinators.BBANS``'s exact schedule
+    with the quantized model forward traced in-line and every
+    multi-symbol leg on the fused kernels. ``push_body``/``pop_body``
+    are the untraced schedules, reused by ``_FusedChained``'s scan.
+    """
+
+    def __init__(self, prior_bits: int, prior_precision: int,
+                 posterior: "Q.FixedPointFn", likelihood: "Q.FixedPointFn",
+                 donate: bool = True):
+        n_lat = posterior.n
+
+        def push_body(stack, s):
+            mu, sigma = posterior.params(s)
+            stack, yT = ans_ops.pop_many_grid(
+                stack, "gaussian", mu.T, sigma.T, n_lat, posterior.bits,
+                precision=posterior.precision)
+            stack = _fp_push(stack, likelihood, yT.T, s)
+            return _traced_push_uniform(stack, yT, prior_bits,
+                                        prior_precision)
+
+        def pop_body(stack):
+            z = jnp.zeros(())
+            stack, yT = ans_ops.pop_many_grid(
+                stack, "uniform", z, z, n_lat, prior_bits,
+                precision=prior_precision)
+            stack, s = _fp_pop(stack, likelihood, yT.T)
+            mu, sigma = posterior.params(s)
+            stack = _traced_push_gaussian(stack, yT, mu.T, sigma.T,
+                                          posterior.bits,
+                                          posterior.precision)
+            return stack, s
+
+        self.push_body, self.pop_body = push_body, pop_body
+        dn = (0,) if donate else ()
+        self._push = jax.jit(push_body, donate_argnums=dn)
+        self._pop = jax.jit(pop_body, donate_argnums=dn)
+
+    def push(self, stack: ans.ANSStack, s: Any) -> ans.ANSStack:
+        return self._push(stack, s)
+
+    def pop(self, stack: ans.ANSStack):
+        return self._pop(stack)
+
+
+class _FusedBitSwap(Codec):
+    """``BitSwap`` with FixedPointFn layers: one jit per direction."""
+
+    def __init__(self, prior_bits: int, prior_precision: int, n_lat: int,
+                 layers: tuple, donate: bool = True):
+        def push_body(stack, s):
+            ctx = s
+            for post_f, lik_f in layers:
+                mu, sigma = post_f.params(ctx)
+                stack, zT = ans_ops.pop_many_grid(
+                    stack, "gaussian", mu.T, sigma.T, post_f.n,
+                    post_f.bits, precision=post_f.precision)
+                stack = _fp_push(stack, lik_f, zT.T, ctx)
+                ctx = zT.T
+            return _traced_push_uniform(stack, ctx.T, prior_bits,
+                                        prior_precision)
+
+        def pop_body(stack):
+            zz = jnp.zeros(())
+            stack, zT = ans_ops.pop_many_grid(
+                stack, "uniform", zz, zz, n_lat, prior_bits,
+                precision=prior_precision)
+            z = zT.T
+            for post_f, lik_f in reversed(layers):
+                stack, ctx = _fp_pop(stack, lik_f, z)
+                mu, sigma = post_f.params(ctx)
+                stack = _traced_push_gaussian(stack, z.T, mu.T, sigma.T,
+                                              post_f.bits,
+                                              post_f.precision)
+                z = ctx
+            return stack, z
+
+        self.push_body, self.pop_body = push_body, pop_body
+        dn = (0,) if donate else ()
+        self._push = jax.jit(push_body, donate_argnums=dn)
+        self._pop = jax.jit(pop_body, donate_argnums=dn)
+
+    def push(self, stack: ans.ANSStack, s: Any) -> ans.ANSStack:
+        return self._push(stack, s)
+
+    def pop(self, stack: ans.ANSStack):
+        return self._pop(stack)
+
+
+class _FusedChained(Codec):
+    """``Chained`` over a fused fixed-point inner: the whole chain is a
+    ``lax.scan`` of the inner's schedule - one jit for ALL datapoints.
+
+    Safe here (and only here): the scan body is integer/LUT model math
+    plus the canonical CDF chain, both bit-stable in any fusion
+    context, so the per-datapoint bytes match the Python chain loop.
+    """
+
+    def __init__(self, inner: Codec, n: int, donate: bool = True):
+        self.n = n
+        inner_push, inner_pop = inner.push_body, inner.pop_body
+
+        def push_body(stack, data):
+            def body(st, s):
+                return inner_push(st, s), None
+
+            stack, _ = jax.lax.scan(body, stack, data)
+            return stack
+
+        def pop_body(stack):
+            def body(st, _):
+                st, s = inner_pop(st)
+                return st, s
+
+            stack, rev = jax.lax.scan(body, stack, None, length=n)
+            return stack, jax.tree_util.tree_map(
+                lambda x: jnp.flip(x, axis=0), rev)
+
+        dn = (0,) if donate else ()
+        self._push = jax.jit(push_body, donate_argnums=dn)
+        self._pop = jax.jit(pop_body, donate_argnums=dn)
+
+    def push(self, stack: ans.ANSStack, data: Any) -> ans.ANSStack:
+        for leaf in jax.tree_util.tree_leaves(data):
+            if leaf.shape[0] != self.n:
+                raise ValueError(
+                    f"Chained(n={self.n}): data leading axis is "
+                    f"{leaf.shape[0]} - a mismatch would silently code "
+                    "the wrong number of datapoints")
+        return self._push(stack, data)
+
+    def pop(self, stack: ans.ANSStack):
+        return self._pop(stack)
+
+
+def _uniform_prior_spec(prior: Codec, n_lat: int, donate: bool):
+    """Lower a BBANS/BitSwap prior; accept only the uniform grid shape
+    the fused schedules hard-code. Returns (bits, precision) or None."""
+    if not isinstance(prior, C.Repeat):
+        return None
+    low = _lower_repeat(prior, donate)
+    if not (isinstance(low, _GridRepeat) and low.kind == "uniform"
+            and low.n == n_lat):
+        return None
+    return low.bits, low.precision
+
+
+def _lower_fused_bbans(codec: C.BBANS, donate: bool) -> Optional[Codec]:
+    post, lik = codec.posterior, codec.likelihood
+    if not (isinstance(post, Q.FixedPointFn)
+            and isinstance(lik, Q.FixedPointFn)):
+        return None
+    if post.family != "gaussian":
+        return None
+    spec = _uniform_prior_spec(codec.prior, post.n, donate)
+    if spec is None:
+        return None
+    return _FusedBBANS(spec[0], spec[1], post, lik, donate)
+
+
+def _lower_fused_bitswap(codec: C.BitSwap, donate: bool) -> Optional[Codec]:
+    layers = codec.layers
+    if not layers or not all(
+            isinstance(p, Q.FixedPointFn) and isinstance(lk, Q.FixedPointFn)
+            for p, lk in layers):
+        return None
+    if any(p.family != "gaussian" for p, _ in layers):
+        return None
+    n_lat = layers[-1][0].n
+    spec = _uniform_prior_spec(codec.prior, n_lat, donate)
+    if spec is None:
+        return None
+    return _FusedBitSwap(spec[0], spec[1], n_lat, layers, donate)
 
 
 # ---------------------------------------------------------------------------
@@ -501,16 +752,27 @@ def _lower(codec: Codec, donate: bool = True) -> Codec:
             codec.tree, is_leaf=lambda c: isinstance(c, Codec))
         return C.TreeCodec(treedef.unflatten([rec(c) for c in leaves]))
     if isinstance(codec, C.Chained):
+        inner_l = rec(codec.inner)
+        if isinstance(inner_l, (_FusedBBANS, _FusedBitSwap)):
+            # Fixed-point inner: the chain body is bit-stable under
+            # fusion, so the whole chain scans inside one program.
+            return _FusedChained(inner_l, codec.n, donate)
         # scan=False: a lax.scan would trace the float evaluations into
         # one fused program, breaking the canonical-eager contract; the
         # Python chain loop is per-datapoint (cheap), not per-symbol.
-        return C.Chained(rec(codec.inner), codec.n, scan=False)
+        return C.Chained(inner_l, codec.n, scan=False)
     if isinstance(codec, C.BBANS):
+        fused = _lower_fused_bbans(codec, donate)
+        if fused is not None:
+            return fused
         lik, post = codec.likelihood, codec.posterior
         return C.BBANS(prior=rec(codec.prior),
                        likelihood=lambda y: rec(lik(y)),
                        posterior=lambda s: rec(post(s)))
     if isinstance(codec, C.BitSwap):
+        fused = _lower_fused_bitswap(codec, donate)
+        if fused is not None:
+            return fused
         layers = tuple(
             (lambda ctx, _p=p: rec(_p(ctx)),
              lambda z, _l=lk: rec(_l(z)))

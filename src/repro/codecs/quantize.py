@@ -1,0 +1,358 @@
+"""Fixed-point (integer-quantized) model inference for fused coder programs.
+
+The codec compiler's determinism contract (docs/PERF.md) historically
+kept every *model* float evaluation in canonical eager form, because
+float32 results in XLA depend on the fusion context: the same network
+fused into two different programs can differ by one ulp, flip a
+``floor``, and corrupt the stream. That forced an eager-float hop per
+``Repeat`` step and capped compiled throughput far below the hardware.
+
+This module removes the restriction the way HiLLoC (arXiv 1912.09953)
+does: make the network itself **bit-exact in any compilation context**
+by evaluating it in fixed point. The allowed operation set is:
+
+  * int32 add / multiply / matmul / convolution - integer arithmetic is
+    associative (mod 2^32), so any XLA fusion, tiling, or reduction
+    order produces identical bits;
+  * gathers from concrete lookup tables (``sigma_table``,
+    ``freq1_table``, ``centre_q_table``) - exact in any context, built
+    once on the host exactly like ``discretize.edge_table``;
+  * arithmetic right shifts (exact floor division by powers of two) and
+    integer clips;
+  * int32 -> float32 conversion of values below 2^24 followed by a
+    multiply with a power-of-two constant - both single correctly-
+    rounded IEEE ops, hence bit-stable.
+
+A quantized network therefore may be traced *inside* the jitted coder
+program: ``codecs.compile`` fuses model forward, bucketize, and ANS
+renorm into one program per direction (see ``_FusedBBANS`` /
+``_FusedBitSwap`` in ``codecs.compile``). The ``FixedPointFn`` marker
+is the hand-off: models wrap their quantized posterior / likelihood
+builders in it, the interpreter calls it like any other codec factory
+(bit-identical eager twin), and the compiler recognizes it and fuses.
+
+Activation/weight layout: values are carried as int32 fixed point with
+``QuantConfig.act_bits`` fractional bits (weights use ``w_bits``); a
+dense/conv layer accumulates at scale ``act_bits + w_bits`` and shifts
+back down. The clip bounds are chosen so a worst-case accumulation over
+any layer in this repo stays below 2^31 (no wraparound in practice; and
+wraparound would still be deterministic, just wasteful).
+
+Quantized codecs produce *different* wire bytes than their float
+parents - they are a different (coarser) model. The parity that
+matters, and that ``benchmarks/codec_compile.py`` and the golden/fuzz
+suites assert, is quantized-eager == quantized-fused, hex-identical.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ans, discretize
+from repro.core.codec import Codec
+from repro.codecs import combinators as C
+from repro.codecs import leaves as L
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Fixed-point format: fractional bits and integer clip bounds.
+
+    Defaults keep every accumulation in this repo inside int32: with
+    ``|act| <= act_clip = 2^11`` (value range +-32) and ``|w| <= w_clip
+    = 2^9`` (value range +-8), a 1024-input dense layer or a 3x3x32
+    conv accumulates at most ~2^30 before the shift back down.
+    """
+
+    act_bits: int = 6        # fractional bits of activations
+    w_bits: int = 6          # fractional bits of weights
+    act_clip: int = 1 << 11  # |quantized activation| bound
+    w_clip: int = 1 << 9     # |quantized weight| bound
+    logit_range: float = 16.0   # sigmoid LUT domain (value units)
+    logvar_range: float = 10.0  # matches the float models' clip(-10, 10)
+
+
+# ---------------------------------------------------------------------------
+# lookup tables (host-built once, gathered everywhere - exact in any context)
+# ---------------------------------------------------------------------------
+
+_SIGMA_TABLES: Dict[Tuple[int, float], jnp.ndarray] = {}
+_FREQ1_TABLES: Dict[Tuple[int, int, float], jnp.ndarray] = {}
+_CENTRE_Q_TABLES: Dict[Tuple[int, int, int], jnp.ndarray] = {}
+
+
+def sigma_table(q: QuantConfig) -> jnp.ndarray:
+    """``exp(0.5 * lv)`` on the quantized logvar grid, float32[2R+1].
+
+    Index ``i`` corresponds to quantized logvar ``i - R`` (R = range in
+    quantized units); entries are strictly positive, so a gathered
+    sigma always satisfies the compiler's positivity contract.
+    """
+    key = (q.act_bits, q.logvar_range)
+    if key not in _SIGMA_TABLES:
+        with jax.ensure_compile_time_eval():
+            r = int(round(q.logvar_range * (1 << q.act_bits)))
+            lv = np.arange(-r, r + 1, dtype=np.float64) \
+                * (2.0 ** -q.act_bits)
+            _SIGMA_TABLES[key] = jnp.asarray(
+                np.exp(0.5 * lv).astype(np.float32))
+    return _SIGMA_TABLES[key]
+
+
+def freq1_table(precision: int, q: QuantConfig) -> jnp.ndarray:
+    """Bernoulli fixed-point frequency of symbol 1 on the quantized
+    logit grid: uint32[2R+1], every entry in [1, 2^precision - 1]."""
+    key = (precision, q.act_bits, q.logit_range)
+    if key not in _FREQ1_TABLES:
+        with jax.ensure_compile_time_eval():
+            total = 1 << precision
+            r = int(round(q.logit_range * (1 << q.act_bits)))
+            logit = np.arange(-r, r + 1, dtype=np.float64) \
+                * (2.0 ** -q.act_bits)
+            p = np.reciprocal(1.0 + np.exp(-logit))
+            f1 = (np.rint(p * (total - 2)) + 1).astype(np.uint32)
+            _FREQ1_TABLES[key] = jnp.asarray(f1)
+    return _FREQ1_TABLES[key]
+
+
+def centre_q_table(lat_bits: int, q: QuantConfig) -> jnp.ndarray:
+    """``discretize.centre_table`` quantized to int32 Q(act_bits): the
+    integer latent values a quantized decoder consumes."""
+    key = (lat_bits, q.act_bits, q.act_clip)
+    if key not in _CENTRE_Q_TABLES:
+        with jax.ensure_compile_time_eval():
+            c = np.asarray(discretize.centre_table(lat_bits),
+                           dtype=np.float64)
+            cq = np.clip(np.rint(c * float(1 << q.act_bits)),
+                         -q.act_clip, q.act_clip).astype(np.int32)
+            _CENTRE_Q_TABLES[key] = jnp.asarray(cq)
+    return _CENTRE_Q_TABLES[key]
+
+
+# ---------------------------------------------------------------------------
+# parameter quantization (host-side, once per model)
+# ---------------------------------------------------------------------------
+
+def quantize_weight(w: Any, q: QuantConfig) -> jnp.ndarray:
+    """float weights -> int32 Q(w_bits), clipped to +-w_clip."""
+    wq = np.clip(np.rint(np.asarray(w, np.float64) * float(1 << q.w_bits)),
+                 -q.w_clip, q.w_clip)
+    return jnp.asarray(wq.astype(np.int32))
+
+
+def quantize_bias(b: Any, q: QuantConfig) -> jnp.ndarray:
+    """float biases -> int32 at the accumulator scale Q(act+w bits)."""
+    scale = float(1 << (q.act_bits + q.w_bits))
+    bq = np.clip(np.rint(np.asarray(b, np.float64) * scale),
+                 -(1 << 30), 1 << 30)
+    return jnp.asarray(bq.astype(np.int32))
+
+
+def quantize_layer(p: Dict[str, Any], q: QuantConfig) -> Dict[str, Any]:
+    """Quantize one ``{"w": ..., "b": ...}`` dense/conv parameter dict."""
+    return {"w": quantize_weight(p["w"], q), "b": quantize_bias(p["b"], q)}
+
+
+def quantize_params(params: Any, q: QuantConfig) -> Any:
+    """Quantize a whole parameter pytree of ``{"w", "b"}`` layer dicts
+    (nested dicts / lists pass through structurally)."""
+    if isinstance(params, dict) and set(params) == {"w", "b"}:
+        return quantize_layer(params, q)
+    if isinstance(params, dict):
+        return {k: quantize_params(v, q) for k, v in params.items()}
+    if isinstance(params, (list, tuple)):
+        return type(params)(quantize_params(v, q) for v in params)
+    raise TypeError(
+        f"quantize_params: expected a pytree of dense/conv layer dicts, "
+        f"got {type(params).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# fixed-point forward ops (traceable; integer-exact in any context)
+# ---------------------------------------------------------------------------
+
+def requantize(acc: jnp.ndarray, q: QuantConfig) -> jnp.ndarray:
+    """Accumulator Q(act+w) -> activation Q(act): exact arithmetic
+    shift (floor division by 2^w_bits) then clip into the safe range."""
+    return jnp.clip(acc >> q.w_bits, -q.act_clip, q.act_clip)
+
+
+def dense_q(pq: Dict[str, Any], x_q: jnp.ndarray,
+            q: QuantConfig) -> jnp.ndarray:
+    """int32 Q(act)[lanes, n_in] @ Q(w) weights -> Q(act)[lanes, n_out]."""
+    return requantize(x_q @ pq["w"] + pq["b"], q)
+
+
+def conv_q(pq: Dict[str, Any], x_q: jnp.ndarray, q: QuantConfig,
+           stride: int = 1) -> jnp.ndarray:
+    """Integer NHWC conv, SAME padding (the quantized ``hvae._conv``)."""
+    acc = jax.lax.conv_general_dilated(
+        x_q, pq["w"], window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return requantize(acc + pq["b"], q)
+
+
+def deconv_q(pq: Dict[str, Any], x_q: jnp.ndarray, q: QuantConfig,
+             stride: int = 2) -> jnp.ndarray:
+    """Integer NHWC transpose conv (the quantized ``hvae._deconv``)."""
+    acc = jax.lax.conv_transpose(
+        x_q, pq["w"], strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return requantize(acc + pq["b"], q)
+
+
+def relu_q(x_q: jnp.ndarray) -> jnp.ndarray:
+    return jnp.maximum(x_q, 0)
+
+
+def gaussian_head(mu_q: jnp.ndarray, logvar_q: jnp.ndarray,
+                  q: QuantConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantized (mu, logvar) heads -> deterministic float32 (mu, sigma).
+
+    ``mu_q`` is below 2^24 so the int->float convert is exact, and the
+    power-of-two scale multiply is exact; ``sigma`` is a table gather.
+    Both are bit-stable in any fusion context.
+    """
+    mu = mu_q.astype(jnp.float32) * jnp.float32(2.0 ** -q.act_bits)
+    r = int(round(q.logvar_range * (1 << q.act_bits)))
+    sigma = jnp.take(sigma_table(q), jnp.clip(logvar_q + r, 0, 2 * r))
+    return mu, sigma
+
+
+def bernoulli_head(logit_q: jnp.ndarray, precision: int,
+                   q: QuantConfig) -> jnp.ndarray:
+    """Quantized logits -> uint32 fixed-point freq of symbol 1 (LUT)."""
+    r = int(round(q.logit_range * (1 << q.act_bits)))
+    return jnp.take(freq1_table(precision, q),
+                    jnp.clip(logit_q + r, 0, 2 * r))
+
+
+def latent_centres_q(idx: jnp.ndarray, lat_bits: int,
+                     q: QuantConfig) -> jnp.ndarray:
+    """Bucket indices -> int32 Q(act) latent values (table gather)."""
+    k = 1 << lat_bits
+    return jnp.take(centre_q_table(lat_bits, q), jnp.clip(idx, 0, k - 1))
+
+
+def quantize_input(s: jnp.ndarray, q: QuantConfig) -> jnp.ndarray:
+    """Binarized observations {0, 1} -> int32 Q(act), exactly."""
+    return s.astype(jnp.int32) << q.act_bits
+
+
+# ---------------------------------------------------------------------------
+# the LUT-Bernoulli leaf (the quantized observation codec)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LutBernoulli(Codec):
+    """Bernoulli whose fixed-point frequency comes from a quantized-
+    logit lookup table instead of a float ``sigmoid`` evaluation.
+
+    The coding arithmetic is identical to ``codecs.Bernoulli`` given
+    the same ``f1``; only the *derivation* of ``f1`` differs (a gather,
+    exact in any context, instead of float math). ``f1`` entries must
+    lie in ``[1, 2^precision - 1]`` - ``quantize.bernoulli_head``
+    guarantees that by table construction.
+
+    Example::
+
+        f1 = bernoulli_head(logit_q, 16, QuantConfig())   # uint32[lanes]
+        codec = LutBernoulli(f1[:, 0])
+    """
+
+    f1: jnp.ndarray   # uint32[lanes], in [1, 2^precision - 1]
+    precision: int = ans.DEFAULT_PRECISION
+
+    def _freqs(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        total = jnp.uint32(1 << self.precision)
+        f1 = self.f1.astype(jnp.uint32)
+        return total - f1, f1
+
+    def push(self, stack: ans.ANSStack, sym: jnp.ndarray) -> ans.ANSStack:
+        f0, f1 = self._freqs()
+        is1 = sym.astype(bool)
+        start = jnp.where(is1, f0, jnp.uint32(0))
+        freq = jnp.where(is1, f1, f0)
+        return ans.push(stack, start, freq, self.precision)
+
+    def pop(self, stack: ans.ANSStack) -> Tuple[ans.ANSStack, jnp.ndarray]:
+        f0, f1 = self._freqs()
+        slot = ans.peek(stack, self.precision)
+        is1 = slot >= f0
+        start = jnp.where(is1, f0, jnp.uint32(0))
+        freq = jnp.where(is1, f1, f0)
+        return (ans.pop_update(stack, start, freq, self.precision),
+                is1.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# the fusion marker
+# ---------------------------------------------------------------------------
+
+#: codec families a FixedPointFn may parameterize.
+FAMILIES = ("gaussian", "bernoulli")
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedPointFn:
+    """A codec-child builder whose parameter computation is fixed-point
+    deterministic, i.e. safe to trace into a fused coder program.
+
+    ``fn(ctx)`` computes the family parameters with the operation set
+    documented in this module's header:
+
+      * family "gaussian":  ``fn -> (mu, sigma)`` float32[lanes, n],
+        coded as ``DiscretizedGaussian`` over the ``bits`` grid;
+      * family "bernoulli": ``fn -> f1`` uint32[lanes, n] (fixed-point
+        freq of symbol 1), coded as ``LutBernoulli``.
+
+    Calling the instance builds the *interpreted twin* - a standard
+    combinator tree over those parameters - so a ``BBANS``/``BitSwap``
+    built from ``FixedPointFn`` children runs unchanged (and verifies
+    unchanged) on the eager path. ``codecs.compile`` recognizes the
+    marker and instead traces ``fn`` inside one jitted program per
+    direction, fusing model forward, bucketize, and ANS renorm; wire
+    bytes are identical to the eager twin by the fixed-point contract.
+
+    ``shape`` presents the flat [lanes, n] symbol as [lanes, *shape]
+    (images); leave empty for flat latent grids.
+    """
+
+    fn: Callable[[Any], Any]
+    family: str
+    n: int
+    bits: int = 0                     # grid bits (gaussian family)
+    precision: int = ans.DEFAULT_PRECISION
+    shape: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if self.family not in FAMILIES:
+            raise ValueError(
+                f"FixedPointFn: unknown family {self.family!r} "
+                f"(expected one of {FAMILIES})")
+        if self.family == "gaussian" and self.bits <= 0:
+            raise ValueError(
+                "FixedPointFn: the gaussian family needs grid bits > 0")
+
+    def params(self, ctx: Any) -> Any:
+        """The raw family parameters (what the fused trace consumes)."""
+        return self.fn(ctx)
+
+    def __call__(self, ctx: Any) -> Codec:
+        """The interpreted twin: a standard combinator tree."""
+        if self.family == "gaussian":
+            mu, sigma = self.fn(ctx)
+            inner: Codec = C.Repeat(
+                lambda d: L.DiscretizedGaussian(
+                    mu[:, d], sigma[:, d], self.bits, self.precision),
+                self.n)
+        else:
+            f1 = self.fn(ctx)
+            inner = C.Repeat(
+                lambda d: LutBernoulli(f1[:, d], self.precision), self.n)
+        return C.Shaped(inner, self.shape) if self.shape else inner

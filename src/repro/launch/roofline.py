@@ -1,195 +1,218 @@
-"""Roofline analysis (deliverable g): three terms per (arch x shape).
+"""Codec roofline: achieved vs peak wire MB/s per device.
 
-Two measurement sources, used for what each is reliable for:
+Reads a ``BENCH_codec_compile.json`` (fresh run or the committed
+baseline) and, for each fixed-point workload row, sets the measured
+``*_mb_per_s_per_device`` against two analytic ceilings:
 
-  * **Analytic terms** (this module): FLOPs / HBM bytes / collective link
-    bytes per device from the config + cell + sharding policy, with the
-    standard accounting (6*N*D training FLOPs, flash-attention S^2 terms,
-    FSDP gathers ~ P*(dp-1)/dp, TP reduces ~ 2/layer, MoE a2a, decode KV
-    sweeps). These set the roofline denominators and the dominant term.
-  * **HLO-measured values** (from the dry-run JSONs): `cost_analysis` and
-    the collective parse. CAVEAT, verified empirically: XLA:CPU cost
-    analysis counts while/scan bodies ONCE, so with scan-over-layers these
-    are per-iteration values - useless as absolutes, but *valid for
-    relative before/after comparison* in the perf loop (same loop
-    structure on both sides). Reported as `hlo_*` columns.
+  * **compute**: integer MACs + coder ops per wire byte, divided into
+    the platform's peak integer op rate. The MAC counts come from the
+    same model configs the bench constructs (``models.vae.paper_config``
+    and the HVAE-L2 bench config), accounted layer by layer below.
+  * **memory**: bytes the fused program must move per wire byte
+    (weights once per block, activations twice per layer, the ANS
+    stack stream), divided into peak memory bandwidth.
 
-Hardware: TPU v5e - 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+The roofline bound is ``min(compute, memory)`` and the report gives the
+achieved fraction of it - the number that says whether the fused
+one-program coder is worth more kernel work or is already at the
+platform ceiling.
 
-Usage: python -m repro.launch.roofline [--mesh single] [--json out.json]
+Platform peaks are nominal datasheet numbers (``--platform`` to
+override the auto-pick); on CPU the point is the *shape* of the gap,
+not its third digit.
+
+Usage::
+
+    python -m repro.launch.roofline [--bench BENCH_codec_compile.json]
+                                    [--platform cpu|tpu-v5e] [--json out]
+
+Runnable example (docs/PERF.md): ``report(load_rows(path))`` returns
+the table as a list of dicts.
 """
 
 from __future__ import annotations
 
 import argparse
-import glob
+import dataclasses
 import json
 import os
+from typing import Dict, List, Optional
 
-PEAK_FLOPS = 197e12     # bf16 / chip
-HBM_BW = 819e9          # bytes/s / chip
-ICI_BW = 50e9           # bytes/s/link
-V5E_HBM_BYTES = 16 * 2 ** 30
+#: nominal per-device peaks: (integer ops/s, memory bytes/s).
+#: cpu: ~8 cores x 3 GHz x 8-lane int32 SIMD x 2 ops (mul+add);
+#: tpu-v5e: datasheet 394 TOPS int8, 819 GB/s HBM.
+PEAKS: Dict[str, tuple] = {
+    "cpu": (0.4e12, 40e9),
+    "tpu-v5e": (394e12, 819e9),
+}
 
-DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
-                          "experiments", "dryrun")
-
-
-def _mesh_dims(mesh: str):
-    return (2, 16, 16) if mesh == "multi" else (1, 16, 16)  # pod, dp, tp
-
-
-def analytic_terms(cfg, cell, mesh: str):
-    """Per-device (flops, hbm_bytes, collective_bytes) for one step."""
-    pod, dp, tp = _mesh_dims(mesh)
-    chips = pod * dp * tp
-    ddp = pod * dp                      # data-parallel degree
-    n_act = cfg.active_params()
-    pbytes = 4 if cfg.param_dtype == "float32" else 2
-    p_dev = cfg.n_params() * pbytes / chips
-    d, l = cfg.d_model, cfg.n_layers + cfg.n_enc_layers
-    hq, dh = max(cfg.n_heads, 1), cfg.head_dim
-    b, s = cell.global_batch, cell.seq_len
-    tokens = b * s
-    tok_dev = tokens / ddp              # tokens a data shard owns
-    act = tok_dev * d * 2               # one residual tensor, bytes/device
-
-    if cell.kind == "train":
-        accum = cfg.grad_accum
-        flops = 6 * n_act * tokens / chips
-        if cfg.mixer != "rwkv6":
-            # flash fwd 4 + bwd 8 + fwd-recompute 4 = 16 matmul units of
-            # B*S^2*H*Dh, no causal skip in the blockwise path (see Perf).
-            flops += 16 * b * s * s * hq * dh / chips
-        # HBM: params fwd+bwd per microbatch, grads + factored update,
-        # ~20 activation-tensor r/w per layer per microbatch.
-        hbm = accum * 2 * p_dev + 3 * p_dev + 20 * act * l
-        # Collectives: FSDP gathers (fwd+bwd per microbatch; ONCE per
-        # step under regather-once) + grad RS + 2 TP reduces per layer.
-        # Gathers move the bf16 compute copy regardless of param dtype
-        # (XLA commutes the cast below the gather - measured, see Perf).
-        p_gather = cfg.n_params() * 2 / chips
-        n_gathers = 3 if cfg.fsdp_regather_once else (2 * accum + 1)
-        coll = n_gathers * p_gather * (ddp - 1) \
-            + 2 * l * (act / 1) * 2 * (tp - 1) / tp
-        if cfg.n_experts:
-            # MoE a2a both ways per layer per microbatch (+ bwd).
-            coll += 2 * 2 * l * act * cfg.top_k * cfg.capacity_factor
-    elif cell.kind == "prefill":
-        flops = 2 * n_act * tokens / chips
-        if cfg.mixer != "rwkv6":
-            flops += 4 * b * s * s * hq * dh / chips
-        kv_dev = (l * b * s * cfg.n_kv_heads * dh * 2 * 2) / (ddp * tp)
-        hbm = p_dev + 8 * act * l + kv_dev
-        coll = p_dev * (ddp - 1) + 2 * l * act * (tp - 1) / tp
-        if cfg.n_experts:
-            coll += 2 * l * act * cfg.top_k * cfg.capacity_factor
-    else:  # decode: one token against a cache of length s
-        flops = 2 * n_act * b / chips
-        if cfg.mixer != "rwkv6":
-            flops += 4 * b * s * cfg.n_kv_heads * dh / chips
-        # KV cache sweep dominates HBM:
-        kv_dev = (l * b * s * cfg.n_kv_heads * dh * 2 * 2) / (ddp * tp)
-        if cfg.mixer == "rwkv6":
-            h = d // dh
-            kv_dev = l * (b / max(ddp, 1)) * h * dh * dh * 4 / tp
-        tok_act = (b / ddp) * d * 2
-        hbm = p_dev + kv_dev + 10 * tok_act * l
-        coll = 2 * l * tok_act * 2 * (tp - 1) / tp \
-            + p_dev * 0  # params stay resident, no per-step gather
-        if cfg.n_experts:
-            coll += 2 * l * tok_act * cfg.top_k * cfg.capacity_factor
-    return flops, hbm, coll
+#: integer ops a lane spends per coded symbol in the fused coder
+#: (bucketize + start/freq lookup + renorm + stack write, amortized).
+CODER_OPS_PER_SYMBOL = 32
 
 
-def model_flops(cfg, cell) -> float:
-    """The 'useful' FLOPs: 6*N_active*D train / 2*N_active*D inference."""
-    n_act = cfg.active_params()
-    if cell.kind == "train":
-        return 6.0 * n_act * cell.seq_len * cell.global_batch
-    if cell.kind == "prefill":
-        return 2.0 * n_act * cell.seq_len * cell.global_batch
-    return 2.0 * n_act * cell.global_batch
+def _conv_macs(h: int, w: int, cin: int, cout: int, k: int = 3) -> float:
+    return float(h * w * k * k * cin * cout)
 
 
-def analyse(rec, mesh: str):
-    from repro.configs import base as cfg_base
-    cfg = cfg_base.get(rec["arch"])
-    cell = cfg_base.SHAPES[rec["shape"]]
-    pod, dp, tp = _mesh_dims(mesh)
-    chips = pod * dp * tp
-
-    flops, hbm, coll = analytic_terms(cfg, cell, mesh)
-    terms = {"compute": flops / PEAK_FLOPS, "memory": hbm / HBM_BW,
-             "collective": coll / ICI_BW}
-    dominant = max(terms, key=terms.get)
-    total = sum(terms.values())
-    step_time = max(terms.values())     # perfect-overlap bound
-    mf = model_flops(cfg, cell)
-    mfu = mf / (chips * PEAK_FLOPS * step_time) if step_time else 0.0
-    return {
-        "arch": rec["arch"], "shape": rec["shape"], "kind": rec["kind"],
-        "compute_s": terms["compute"], "memory_s": terms["memory"],
-        "collective_s": terms["collective"], "dominant": dominant,
-        "roofline_fraction": terms[dominant] / total if total else 0.0,
-        "model_flops": mf,
-        "mfu_bound": mfu,
-        "hlo_flops_periter": rec["cost"].get("flops", 0.0),
-        "hlo_bytes_periter": rec["cost"].get("bytes accessed", 0.0),
-        "hlo_coll_periter": rec["collectives"]["total_bytes"],
-        "mem_gib": rec["memory"]["peak_device_bytes"] / 2 ** 30,
-        "fits_v5e": rec["memory"]["peak_device_bytes"] < V5E_HBM_BYTES,
-    }
+def _stage_macs(h: int, w: int, cin: int, ch: int, cout: int,
+                n_res: int) -> float:
+    """conv in -> n_res resblocks (2 convs each) -> conv head."""
+    return (_conv_macs(h, w, cin, ch)
+            + n_res * 2 * _conv_macs(h, w, ch, ch)
+            + _conv_macs(h, w, ch, cout))
 
 
-def load(mesh: str = "single", dryrun_dir: str = DRYRUN_DIR):
-    recs = []
-    for path in sorted(glob.glob(os.path.join(dryrun_dir,
-                                              f"{mesh}__*.json"))):
-        with open(path) as f:
-            recs.append(json.load(f))
-    return recs
+@dataclasses.dataclass(frozen=True)
+class WorkloadModel:
+    """Analytic per-datapoint terms for one fixed-point bench workload."""
+
+    macs: float            # integer MACs per datapoint (one direction)
+    symbols: float         # coded symbols per datapoint
+    weight_bytes: float    # int32 weight footprint, read once per block
+    act_bytes: float       # activation bytes touched per datapoint
 
 
-def main():
+def vae_terms() -> WorkloadModel:
+    """The table2 MNIST VAE at ``models.vae.paper_config`` shapes.
+
+    One coder direction runs both the posterior net (784->100->2x40)
+    and the likelihood net (40->100->784).
+    """
+    from repro.models import vae as vae_lib
+    cfg = vae_lib.paper_config("bernoulli")
+    d, h, z = cfg.input_dim, cfg.hidden, cfg.latent
+    enc = d * h + h * 2 * z
+    dec = z * h + h * d
+    weights = 4 * (enc + dec)                      # int32 params
+    acts = 4 * 2 * (d + h + 2 * z + z + h + d)     # int32, read+write
+    return WorkloadModel(macs=float(enc + dec),
+                         symbols=float(d + z),
+                         weight_bytes=float(weights),
+                         act_bytes=float(acts))
+
+
+def hvae_terms(hw: int = 8) -> WorkloadModel:
+    """The HVAE-L2 bench config (ch=8, z_ch=2, n_res=1) on hw x hw.
+
+    One Bit-Swap direction runs q1 (stem + stage), p_obs (stage + up +
+    out), q2 and p2 (stages at latent resolution).
+    """
+    from repro.models import hvae
+    cfg = hvae.HVAEConfig(levels=2, ch=8, z_ch=2, n_res=1)
+    h2 = hw // 2
+    ch, z = cfg.ch, cfg.z_ch
+    macs = _conv_macs(h2, h2, cfg.in_channels, ch)            # stem (s2)
+    macs += _stage_macs(h2, h2, ch, ch, 2 * z, cfg.n_res)     # q1
+    macs += _stage_macs(h2, h2, z, ch, ch, cfg.n_res)         # p_obs
+    macs += _conv_macs(h2, h2, ch, ch)                        # up (t2)
+    macs += _conv_macs(hw, hw, ch, cfg.in_channels)           # out
+    for _ in range(2, cfg.levels + 1):                        # q_l, p_l
+        macs += 2 * _stage_macs(h2, h2, z, ch, 2 * z, cfg.n_res)
+    n_lat = h2 * h2 * z
+    symbols = hw * hw + 2 * cfg.levels * n_lat   # obs + z popped+pushed
+    weights = 4.0 * sum(p.size for p in _iter_leaves(hvae.init(
+        __import__("jax").random.PRNGKey(0), cfg)))
+    acts = 4.0 * 2 * (hw * hw + 8 * h2 * h2 * ch)
+    return WorkloadModel(macs=macs, symbols=float(symbols),
+                         weight_bytes=weights, act_bytes=acts)
+
+
+def _iter_leaves(tree):
+    import jax
+    return jax.tree_util.tree_leaves(tree)
+
+
+#: bench workload name -> analytic terms builder (hw from the row).
+WORKLOADS = {
+    "vae-fixedpoint": lambda row: vae_terms(),
+    "hvae-l2-fixedpoint": lambda row: hvae_terms(int(row.get("hw", 8))),
+}
+
+
+def load_rows(path: str) -> List[dict]:
+    """Fixed-point compiled rows of a ``BENCH_codec_compile.json``."""
+    with open(path) as f:
+        payload = json.load(f)
+    return [r for r in payload.get("rows", [])
+            if isinstance(r, dict) and r.get("path") == "compiled"
+            and r.get("workload", "").endswith("fixedpoint")]
+
+
+def analyse(row: dict, platform: str, hw: Optional[int] = None) -> dict:
+    """Roofline terms for one fixed-point bench row."""
+    peak_ops, peak_bw = PEAKS[platform]
+    name = row["workload"]
+    if hw is not None and name.startswith("hvae"):
+        row = dict(row, hw=hw)
+    terms = WORKLOADS[name](row)
+    wire_bytes = row["wire_mb"] * 1e6
+    bytes_per_dp = wire_bytes / row["n_datapoints"]
+    ops_per_dp = terms.macs * 2 + terms.symbols * CODER_OPS_PER_SYMBOL
+    # Weights amortize over the datapoints of one fused block.
+    mem_per_dp = (terms.act_bytes + bytes_per_dp
+                  + terms.weight_bytes / row["n_datapoints"])
+    compute_peak = peak_ops / ops_per_dp * bytes_per_dp / 1e6
+    memory_peak = peak_bw / mem_per_dp * bytes_per_dp / 1e6
+    bound = min(compute_peak, memory_peak)
+    out = {"workload": name, "platform": platform,
+           "wire_bytes_per_datapoint": bytes_per_dp,
+           "int_ops_per_datapoint": ops_per_dp,
+           "compute_peak_mb_per_s": compute_peak,
+           "memory_peak_mb_per_s": memory_peak,
+           "roofline_mb_per_s": bound,
+           "dominant": ("compute" if compute_peak <= memory_peak
+                        else "memory")}
+    for d in ("enc", "dec"):
+        achieved = row[f"{d}_mb_per_s_per_device"]
+        out[f"{d}_achieved_mb_per_s"] = achieved
+        out[f"{d}_fraction_of_roofline"] = achieved / bound
+    return out
+
+
+def report(rows: List[dict], platform: str = "cpu",
+           hw: Optional[int] = None) -> List[dict]:
+    """Analyse every fixed-point row; returns the printable table."""
+    return [analyse(r, platform, hw) for r in rows]
+
+
+def _default_bench_path() -> str:
+    here = os.path.dirname(os.path.abspath(__file__))
+    repo = os.path.dirname(os.path.dirname(os.path.dirname(here)))
+    fresh = os.path.join(repo, "BENCH_codec_compile.json")
+    if os.path.exists(fresh):
+        return fresh
+    return os.path.join(repo, "benchmarks", "baselines",
+                        "BENCH_codec_compile.json")
+
+
+def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mesh", default="single",
-                    choices=["single", "multi"])
-    ap.add_argument("--dir", default=DRYRUN_DIR)
+    ap.add_argument("--bench", default=None,
+                    help="BENCH_codec_compile.json (default: fresh file "
+                         "in the repo root, else the committed baseline)")
+    ap.add_argument("--platform", default="cpu", choices=sorted(PEAKS))
+    ap.add_argument("--hw", type=int, default=None,
+                    help="HVAE image side in the bench run (quick=8, "
+                         "full=12); default 8")
     ap.add_argument("--json", default=None)
     args = ap.parse_args()
 
-    rows = []
-    for rec in load(args.mesh, args.dir):
-        if rec.get("status") == "ok":
-            rows.append(analyse(rec, args.mesh))
-        elif rec.get("status") == "skipped":
-            rows.append({"arch": rec["arch"], "shape": rec["shape"],
-                         "skipped": rec["reason"]})
-        else:
-            rows.append({"arch": rec["arch"], "shape": rec["shape"],
-                         "error": rec.get("error", "?")[:80]})
-
-    print("| arch | shape | compute_s | memory_s | collective_s | "
-          "dominant | fraction | MFU-bound | mem GiB | fits |")
-    print("|" + "---|" * 10)
-    for r in rows:
-        if "skipped" in r:
-            print(f"| {r['arch']} | {r['shape']} | - | - | - | skipped "
-                  f"| - | - | - | - |")
-            continue
-        if "error" in r:
-            print(f"| {r['arch']} | {r['shape']} | - | - | - | ERROR | "
-                  f"- | - | - | - |")
-            continue
-        print(f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
-              f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
-              f"{r['dominant']} | {r['roofline_fraction']:.2f} | "
-              f"{r['mfu_bound']:.3f} | {r['mem_gib']:.2f} | "
-              f"{'y' if r['fits_v5e'] else 'NO'} |")
+    rows = load_rows(args.bench or _default_bench_path())
+    table = report(rows, args.platform, args.hw)
+    print("| workload | dir | achieved MB/s/dev | roofline MB/s | "
+          "fraction | dominant |")
+    print("|" + "---|" * 6)
+    for r in table:
+        for d in ("enc", "dec"):
+            print(f"| {r['workload']} | {d} | "
+                  f"{r[f'{d}_achieved_mb_per_s']:.3f} | "
+                  f"{r['roofline_mb_per_s']:.1f} | "
+                  f"{r[f'{d}_fraction_of_roofline']:.2e} | "
+                  f"{r['dominant']} |")
     if args.json:
         with open(args.json, "w") as f:
-            json.dump(rows, f, indent=1)
+            json.dump(table, f, indent=1)
 
 
 if __name__ == "__main__":

@@ -49,6 +49,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import codecs
+from repro.codecs import quantize
 from repro.core import discretize
 
 Params = Dict[str, Any]
@@ -394,6 +395,126 @@ def make_bitswap_codec(params: Params, cfg: HVAEConfig,
         layers.append((posterior_l, likelihood_l))
 
     n_lat = lat_hw[0] * lat_hw[1] * lat_hw[2]
+    prior = codecs.Repeat(
+        lambda d: codecs.Uniform(cfg.lat_bits, cfg.precision), n_lat)
+    swap = codecs.BitSwap(prior=prior, layers=tuple(layers))
+    return codecs.compile(swap) if compiled else swap
+
+
+# ---------------------------------------------------------------------------
+# fixed-point (quantized) inference + fused Bit-Swap codec
+# ---------------------------------------------------------------------------
+
+def quantize_model(params: Params, cfg: HVAEConfig,
+                   qcfg: quantize.QuantConfig = quantize.QuantConfig()
+                   ) -> Params:
+    """Quantize every conv stage to the fixed-point format."""
+    del cfg
+    return quantize.quantize_params(params, qcfg)
+
+
+def _stage_q(pq: Params, x_q: jnp.ndarray,
+             qcfg: quantize.QuantConfig) -> jnp.ndarray:
+    """Fixed-point twin of ``_stage``: int conv in -> int resblocks ->
+    relu -> int conv head."""
+    h = quantize.conv_q(pq["in"], x_q, qcfg)
+    for rp in pq["res"]:
+        r = quantize.conv_q(rp["c1"], quantize.relu_q(h), qcfg)
+        r = quantize.conv_q(rp["c2"], quantize.relu_q(r), qcfg)
+        h = jnp.clip(h + r, -qcfg.act_clip, qcfg.act_clip)
+    return quantize.conv_q(pq["head"], quantize.relu_q(h), qcfg)
+
+
+def _gaussian_head_q(out_q: jnp.ndarray, qcfg: quantize.QuantConfig
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Split a quantized stage head into flat (mu, sigma) [lanes, n]."""
+    mu_q, lv_q = jnp.split(out_q, 2, axis=-1)
+    mu, sigma = quantize.gaussian_head(mu_q, lv_q, qcfg)
+    lanes = mu.shape[0]
+    return mu.reshape(lanes, -1), sigma.reshape(lanes, -1)
+
+
+def infer_z1_q(qparams: Params, cfg: HVAEConfig,
+               qcfg: quantize.QuantConfig, x: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fixed-point q(z_1|x): x int[lanes, H, W] -> flat (mu, sigma)."""
+    x_q = quantize.quantize_input(x, qcfg)[..., None]
+    h = quantize.conv_q(qparams["enc_stem"], x_q, qcfg, stride=2)
+    out = _stage_q(qparams["q1"], quantize.relu_q(h), qcfg)
+    return _gaussian_head_q(out, qcfg)
+
+
+def _latent_grid_q(cfg: HVAEConfig, qcfg: quantize.QuantConfig,
+                   idx: jnp.ndarray,
+                   lat_hw: Tuple[int, int, int]) -> jnp.ndarray:
+    """Flat bucket indices [lanes, n] -> int32 Q(act) [lanes, h, w, c]."""
+    vals = quantize.latent_centres_q(idx, cfg.lat_bits, qcfg)
+    return vals.reshape((idx.shape[0],) + lat_hw)
+
+
+def stage_gaussian_q(qparams: Params, cfg: HVAEConfig,
+                     qcfg: quantize.QuantConfig, name: str,
+                     idx: jnp.ndarray, lat_hw: Tuple[int, int, int]
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fixed-point q(z_l|z_{l-1}) / p(z_{l-1}|z_l) from bucket indices."""
+    z_q = _latent_grid_q(cfg, qcfg, idx, lat_hw)
+    return _gaussian_head_q(_stage_q(qparams[name], z_q, qcfg), qcfg)
+
+
+def decode_obs_freq1_q(qparams: Params, cfg: HVAEConfig,
+                       qcfg: quantize.QuantConfig, idx: jnp.ndarray,
+                       lat_hw: Tuple[int, int, int]) -> jnp.ndarray:
+    """Fixed-point p(x|z_1) (bernoulli): bucket indices -> uint32
+    [lanes, H*W] fixed-point freq of pixel = 1."""
+    p = qparams["p_obs"]
+    z_q = _latent_grid_q(cfg, qcfg, idx, lat_hw)
+    h = _stage_q(p["stage"], z_q, qcfg)
+    h = quantize.deconv_q(p["up"], quantize.relu_q(h), qcfg, stride=2)
+    logit_q = quantize.conv_q(p["out"], quantize.relu_q(h), qcfg)[..., 0]
+    f1 = quantize.bernoulli_head(logit_q, cfg.obs_precision, qcfg)
+    return f1.reshape(f1.shape[0], -1)
+
+
+def make_bitswap_codec_q(params: Params, cfg: HVAEConfig,
+                         hw: Tuple[int, int], *,
+                         qcfg: quantize.QuantConfig =
+                         quantize.QuantConfig(),
+                         compiled: bool = False) -> codecs.Codec:
+    """The *quantized* HVAE as a Bit-Swap combinator (HiLLoC-style).
+
+    Same layer schedule as ``make_bitswap_codec``, but every network
+    evaluation is fixed point (``codecs.quantize``) and wrapped in
+    ``FixedPointFn`` markers, so ``compiled=True`` fuses the whole
+    interleaved pop/push schedule - convolutions included - into ONE
+    jit program per direction. Wire bytes: identical interpreted vs
+    fused; different from the float model (coarser net).
+    """
+    if cfg.likelihood != "bernoulli":
+        raise ValueError(
+            "make_bitswap_codec_q: fixed-point inference supports the "
+            f"bernoulli likelihood only (got {cfg.likelihood!r})")
+    h, w = hw
+    lat_hw = cfg.latent_shape(hw)
+    n_lat = lat_hw[0] * lat_hw[1] * lat_hw[2]
+    qp = quantize_model(params, cfg, qcfg)
+
+    def gauss_fn(fn):
+        return quantize.FixedPointFn(fn, "gaussian", n_lat, cfg.lat_bits,
+                                     cfg.precision)
+
+    posterior1 = gauss_fn(lambda x: infer_z1_q(qp, cfg, qcfg, x))
+    likelihood1 = quantize.FixedPointFn(
+        lambda idx: decode_obs_freq1_q(qp, cfg, qcfg, idx, lat_hw),
+        "bernoulli", h * w, 0, cfg.obs_precision, (h, w))
+    layers = [(posterior1, likelihood1)]
+    for level in range(2, cfg.levels + 1):
+        layers.append((
+            gauss_fn(lambda idx, _l=level: stage_gaussian_q(
+                qp, cfg, qcfg, f"q{_l}", idx, lat_hw)),
+            gauss_fn(lambda idx, _l=level: stage_gaussian_q(
+                qp, cfg, qcfg, f"p{_l}", idx, lat_hw)),
+        ))
+
     prior = codecs.Repeat(
         lambda d: codecs.Uniform(cfg.lat_bits, cfg.precision), n_lat)
     swap = codecs.BitSwap(prior=prior, layers=tuple(layers))

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import codecs
+from repro.codecs import quantize
 from repro.core import ans, discretize
 from repro.core.distributions import Bernoulli, BetaBinomial
 
@@ -150,6 +151,77 @@ def loss(params: Params, cfg: VAEConfig, key: jax.Array,
 # ---------------------------------------------------------------------------
 # BB-ANS codec (paper Table 1, App. C) via the composable codecs API
 # ---------------------------------------------------------------------------
+
+def quantize_model(params: Params, cfg: VAEConfig,
+                   qcfg: quantize.QuantConfig = quantize.QuantConfig()
+                   ) -> Params:
+    """Quantize the VAE's dense layers to the fixed-point format
+    (``codecs.quantize``): int32 weights/biases, ready for the
+    integer-exact forward passes below."""
+    del cfg
+    return quantize.quantize_params(params, qcfg)
+
+
+def encode_q(qparams: Params, cfg: VAEConfig, qcfg: quantize.QuantConfig,
+             s: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fixed-point twin of ``encode``: s int[lanes, input_dim] ->
+    deterministic float32 (mu, sigma). Integer matmuls, LUT sigma."""
+    x_q = quantize.quantize_input(s, qcfg)
+    h = quantize.relu_q(quantize.dense_q(qparams["enc_h"], x_q, qcfg))
+    mu_q = quantize.dense_q(qparams["enc_mu"], h, qcfg)
+    lv_q = quantize.dense_q(qparams["enc_logvar"], h, qcfg)
+    return quantize.gaussian_head(mu_q, lv_q, qcfg)
+
+
+def decode_freq1_q(qparams: Params, cfg: VAEConfig,
+                   qcfg: quantize.QuantConfig,
+                   idx: jnp.ndarray) -> jnp.ndarray:
+    """Fixed-point twin of ``decode`` (bernoulli): bucket indices
+    int[lanes, latent] -> uint32[lanes, input_dim] fixed-point freq of
+    pixel = 1 (LUT on the quantized logits)."""
+    y_q = quantize.latent_centres_q(idx, cfg.lat_bits, qcfg)
+    h = quantize.relu_q(quantize.dense_q(qparams["dec_h"], y_q, qcfg))
+    logit_q = quantize.dense_q(qparams["dec_out"], h, qcfg)
+    return quantize.bernoulli_head(logit_q, cfg.obs_precision, qcfg)
+
+
+def make_bb_codec_q(params: Params, cfg: VAEConfig, *,
+                    qcfg: quantize.QuantConfig = quantize.QuantConfig(),
+                    compiled: bool = False) -> codecs.Codec:
+    """The *quantized* VAE as a BBANS combinator (HiLLoC-style).
+
+    Model inference runs in fixed point (``codecs.quantize``), so the
+    posterior/likelihood children are ``FixedPointFn`` markers:
+    interpreted, the codec behaves like any other combinator tree;
+    ``compiled=True`` fuses the whole per-datapoint schedule - network
+    forward, bucketize, ANS renorm - into ONE jit program per
+    direction (and a ``Chained`` wrapper into one ``lax.scan``
+    program for the whole chain). Wire bytes are identical between the
+    two paths; they differ from the float model's bytes (a quantized
+    net is a coarser model - rate cost is the quantization error).
+
+    Only the bernoulli likelihood is supported in fixed point (the
+    beta-binomial table build needs float special functions that have
+    no LUT form over a 2-parameter context).
+    """
+    if cfg.likelihood != "bernoulli":
+        raise ValueError(
+            "make_bb_codec_q: fixed-point inference supports the "
+            f"bernoulli likelihood only (got {cfg.likelihood!r})")
+    qp = quantize_model(params, cfg, qcfg)
+
+    posterior = quantize.FixedPointFn(
+        lambda s: encode_q(qp, cfg, qcfg, s),
+        "gaussian", cfg.latent, cfg.lat_bits, cfg.precision)
+    likelihood = quantize.FixedPointFn(
+        lambda idx: decode_freq1_q(qp, cfg, qcfg, idx),
+        "bernoulli", cfg.input_dim, 0, cfg.obs_precision)
+    prior = codecs.Repeat(
+        lambda d: codecs.Uniform(cfg.lat_bits, cfg.precision), cfg.latent)
+    bb = codecs.BBANS(prior=prior, likelihood=likelihood,
+                      posterior=posterior)
+    return codecs.compile(bb) if compiled else bb
+
 
 def make_bb_codec(params: Params, cfg: VAEConfig, *,
                   compiled: bool = False) -> codecs.Codec:

@@ -29,6 +29,15 @@ the codec compiler (``codecs.compile``) into one fused jit program per
 block size (dynamic-leaf codecs included - see docs/PERF.md). All paths
 are bit-identical (tested), so the wire format does not know which one
 produced a block.
+
+``pipeline=True`` double-buffers blocks: block ``b+1``'s fused push is
+dispatched against the *lazy* final heads of block ``b`` before block
+``b`` is synced, so model compute for the next block overlaps coder
+host work (flatten/framing) for the current one. The overflow/underflow
+check of a block is deferred to the moment the next block is dispatched
+(or to ``flush``); on a retry the optimistic dispatch is discarded and
+both blocks are redone from the corrected heads - wire bytes are
+asserted identical to the synchronous path (tests/test_stream.py).
 """
 
 from __future__ import annotations
@@ -49,6 +58,25 @@ from repro.kernels.ans import ops as ans_ops
 from repro.stream import format as fmt
 
 BlockCodecFn = Callable[[int], Codec]
+
+
+@dataclasses.dataclass(frozen=True)
+class _PendingBlock:
+    """An encoded-but-unsynced block in the ``pipeline=True`` path.
+
+    ``stack`` is the lazy result of the block's push (device work may
+    still be in flight); ``bits_before`` is the lazy content-bit count
+    of the stack it started from. ``xs``/``k``/``cap``/``chunks`` are
+    kept so the block can be redone synchronously if the deferred
+    overflow/underflow check fails.
+    """
+
+    xs: Any
+    k: int
+    stack: ans.ANSStack
+    bits_before: jnp.ndarray
+    cap: int
+    chunks: int
 
 
 @dataclasses.dataclass(frozen=True)
@@ -199,7 +227,7 @@ class StreamEncoder:
                  precision: int = ans.DEFAULT_PRECISION,
                  capacity: Optional[int] = None, max_retries: int = 6,
                  use_kernel: bool = True, compile: bool = False,
-                 verify: bool = False):
+                 verify: bool = False, pipeline: bool = False):
         if lanes < 1 or block_symbols < 1:
             raise ValueError("stream: lanes and block_symbols must be >= 1")
         if seed is None and init_chunks:
@@ -223,6 +251,8 @@ class StreamEncoder:
         self._max_retries = max_retries
         self._buffer: List[Any] = []       # pending datapoint pytrees
         self._heads: Optional[jnp.ndarray] = None   # carried across blocks
+        self._pipeline = pipeline
+        self._pending: Optional[_PendingBlock] = None   # in-flight block
         self._started = False
         self._finished = False
         self.n_blocks = 0
@@ -254,7 +284,10 @@ class StreamEncoder:
         while len(self._buffer) >= self.block_symbols:
             block, self._buffer = (self._buffer[:self.block_symbols],
                                    self._buffer[self.block_symbols:])
-            out.append(self._encode_block(block))
+            if self._pipeline:
+                out.append(self._encode_block_pipelined(block))
+            else:
+                out.append(self._encode_block(block))
         return self._emit(b"".join(out))
 
     def flush(self) -> bytes:
@@ -262,6 +295,9 @@ class StreamEncoder:
         if self._finished:
             return b""
         out = [self._header_bytes()]
+        if self._pending is not None:
+            done, _ = self._finalize_pending()
+            out.append(done)
         if self._buffer:
             block, self._buffer = self._buffer, []
             out.append(self._encode_block(block))
@@ -269,6 +305,18 @@ class StreamEncoder:
             fmt.Trailer(self.n_blocks, self.n_symbols)))
         self._finished = True
         return self._emit(b"".join(out))
+
+    def drain(self) -> bytes:
+        """Finalize the in-flight block of a ``pipeline=True`` encoder.
+
+        Returns its wire bytes (b"" when nothing is in flight). Call
+        before ``snapshot`` - a pending block is not yet on the wire,
+        so snapshotting over it would drop its bytes.
+        """
+        if self._pending is None:
+            return b""
+        done, _ = self._finalize_pending()
+        return self._emit(done)
 
     @property
     def buffered_symbols(self) -> int:
@@ -297,6 +345,10 @@ class StreamEncoder:
         """
         if self._finished:
             raise RuntimeError("stream: snapshot after flush")
+        if self._pending is not None:
+            raise RuntimeError(
+                "stream: snapshot with a pipelined block in flight - "
+                "call drain() first (its bytes belong on the wire)")
         if self._buffer:
             raise RuntimeError(
                 f"stream: snapshot mid-block ({len(self._buffer)} "
@@ -359,17 +411,23 @@ class StreamEncoder:
         return max(256, self.block_symbols * per_lane
                    + self._init_chunks + 64)
 
-    def _block_stack(self, capacity: int, chunks: int) -> ans.ANSStack:
+    def _block_stack(self, capacity: int, chunks: int,
+                     block_index: Optional[int] = None,
+                     heads: Optional[jnp.ndarray] = None) -> ans.ANSStack:
+        if block_index is None:
+            block_index = self.n_blocks
+        if heads is None:
+            heads = self._heads
         key = (jax.random.fold_in(jax.random.PRNGKey(self._seed),
-                                  self.n_blocks)
+                                  block_index)
                if self._seed is not None else None)
-        if self._heads is not None:
+        if heads is not None:
             stack = ans.make_stack(self.lanes, capacity)
             # Copy: a compiled block codec donates the stack it is
             # handed, which would delete the carried-heads buffer and
             # break the grow-and-retry path (and the next block) on
             # donation-honoring backends.
-            stack = stack._replace(head=jnp.copy(self._heads))
+            stack = stack._replace(head=jnp.copy(heads))
         elif key is not None:
             k_head, _ = jax.random.split(key)
             stack = ans.make_stack(self.lanes, capacity, key=k_head)
@@ -380,43 +438,117 @@ class StreamEncoder:
             stack = ans.seed_stack(stack, k_bits, chunks)
         return stack
 
-    def _encode_block(self, block: List[Any]) -> bytes:
-        k = len(block)
-        xs = jax.tree_util.tree_map(
-            lambda *ls: jnp.stack(ls, axis=0), *block)
+    def _push_once(self, xs: Any, k: int, cap: int, chunks: int,
+                   heads: Optional[jnp.ndarray],
+                   block_index: int) -> Tuple[ans.ANSStack, jnp.ndarray]:
+        """Dispatch one block push; nothing here syncs with the device."""
         codec = self._block_codec_fn(k)
-        cap = self._capacity or self._default_capacity(block)
-        chunks = self._init_chunks
-        for _ in range(self._max_retries):
-            stack0 = self._block_stack(cap, chunks)
-            # Read before the push: compiled codecs donate stack0.
-            bits_before = float(ans.stack_content_bits(stack0))
-            stack = codec.push(stack0, xs)
+        stack0 = self._block_stack(cap, chunks, block_index, heads)
+        # Dispatch before the push: compiled codecs donate stack0.
+        bits_before = ans.stack_content_bits(stack0)
+        return codec.push(stack0, xs), bits_before
+
+    def _grow(self, over: int, under: int, cap: int,
+              chunks: int) -> Tuple[int, int]:
+        if over:
+            cap *= 2
+        if under:
+            if self._seed is None:
+                raise RuntimeError(
+                    "stream: stack underflow with seed=None - this "
+                    "codec pops initial bits (bits-back); pass a seed "
+                    "so per-block clean bits can be supplied")
+            chunks = max(32, chunks * 4)
+        return cap, chunks
+
+    def _commit(self, stack: ans.ANSStack, bits_before: jnp.ndarray,
+                k: int, cap: int, chunks: int) -> bytes:
+        self.net_bits += float(ans.stack_content_bits(stack)) \
+            - float(bits_before)
+        self._heads = stack.head   # carry clean bits forward
+        self._capacity, self._init_chunks = cap, chunks
+        msg, lengths = ans.flatten(stack)
+        self.n_blocks += 1
+        self.n_symbols += k
+        return fmt.encode_block(k, np.asarray(msg), np.asarray(lengths))
+
+    def _encode_sync(self, xs: Any, k: int, cap: int, chunks: int,
+                     retries: int) -> bytes:
+        for _ in range(retries):
+            stack, bits_before = self._push_once(
+                xs, k, cap, chunks, self._heads, self.n_blocks)
             over = int(jnp.sum(stack.overflows))
             under = int(jnp.sum(stack.underflows))
             if not over and not under:
-                self.net_bits += float(ans.stack_content_bits(stack)) \
-                    - bits_before
-                self._heads = stack.head   # carry clean bits forward
-                self._capacity, self._init_chunks = cap, chunks
-                msg, lengths = ans.flatten(stack)
-                self.n_blocks += 1
-                self.n_symbols += k
-                return fmt.encode_block(k, np.asarray(msg),
-                                        np.asarray(lengths))
-            if over:
-                cap *= 2
-            if under:
-                if self._seed is None:
-                    raise RuntimeError(
-                        "stream: stack underflow with seed=None - this "
-                        "codec pops initial bits (bits-back); pass a seed "
-                        "so per-block clean bits can be supplied")
-                chunks = max(32, chunks * 4)
+                return self._commit(stack, bits_before, k, cap, chunks)
+            cap, chunks = self._grow(over, under, cap, chunks)
         raise RuntimeError(
             f"stream: could not encode block cleanly after "
             f"{self._max_retries} attempts (capacity={cap}, "
             f"init_chunks={chunks})")
+
+    def _encode_block(self, block: List[Any]) -> bytes:
+        k = len(block)
+        xs = jax.tree_util.tree_map(
+            lambda *ls: jnp.stack(ls, axis=0), *block)
+        cap = self._capacity or self._default_capacity(block)
+        return self._encode_sync(xs, k, cap, self._init_chunks,
+                                 self._max_retries)
+
+    def _finalize_pending(self) -> Tuple[bytes, bool]:
+        """Sync the in-flight block; returns (wire bytes, retried?).
+
+        On a clean check the lazily-pushed stack is committed as-is; on
+        overflow/underflow the block is redone synchronously from the
+        still-valid carried heads with grown capacity/chunks, so the
+        bytes are identical to what the synchronous path would emit.
+        """
+        pend = self._pending
+        if pend is None:
+            raise RuntimeError("stream: no block in flight to finalize")
+        self._pending = None
+        over = int(jnp.sum(pend.stack.overflows))
+        under = int(jnp.sum(pend.stack.underflows))
+        if not over and not under:
+            return self._commit(pend.stack, pend.bits_before, pend.k,
+                                pend.cap, pend.chunks), False
+        cap, chunks = self._grow(over, under, pend.cap, pend.chunks)
+        return self._encode_sync(pend.xs, pend.k, cap, chunks,
+                                 self._max_retries - 1), True
+
+    def _encode_block_pipelined(self, block: List[Any]) -> bytes:
+        """Double-buffered block encode: dispatch block ``b+1`` against
+        the lazy final heads of in-flight block ``b``, *then* pay block
+        ``b``'s device sync - the new block's model compute overlaps
+        it. Returns block ``b``'s bytes (b"" on the very first block).
+        """
+        k = len(block)
+        xs = jax.tree_util.tree_map(
+            lambda *ls: jnp.stack(ls, axis=0), *block)
+        cap = self._capacity or self._default_capacity(block)
+        chunks = self._init_chunks
+        if self._pending is None:
+            stack, bits = self._push_once(xs, k, cap, chunks,
+                                          self._heads, self.n_blocks)
+            self._pending = _PendingBlock(xs, k, stack, bits, cap, chunks)
+            return b""
+        # Optimistic dispatch: assume the in-flight block lands cleanly
+        # and chain this block off its lazy heads.
+        stack, bits = self._push_once(xs, k, cap, chunks,
+                                      self._pending.stack.head,
+                                      self.n_blocks + 1)
+        done, retried = self._finalize_pending()
+        if retried:
+            # The in-flight block grew and re-encoded; the optimistic
+            # dispatch chained off stale heads. Discard it (never
+            # synced, so it cannot have left the device) and redo from
+            # the corrected carried heads.
+            cap = self._capacity or cap
+            chunks = self._init_chunks
+            stack, bits = self._push_once(xs, k, cap, chunks,
+                                          self._heads, self.n_blocks)
+        self._pending = _PendingBlock(xs, k, stack, bits, cap, chunks)
+        return done
 
 
 class StreamDecoder:

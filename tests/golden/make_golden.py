@@ -1,0 +1,125 @@
+"""Golden-wire fixture builder: one deterministic blob per format tier.
+
+Every fixture is a pure function of pinned seeds - numpy's
+``default_rng`` for data and logits, ``jax.random.PRNGKey`` for model
+params - so a clean checkout regenerates them byte-for-byte. The
+committed blobs freeze the wire formats: ``tests/test_golden.py``
+re-encodes each fixture and compares hex-for-hex, then decodes the
+*committed* bytes and checks the data comes back losslessly. Any codec
+or kernel change that silently moves a single wire byte fails both
+directions.
+
+Fixtures:
+
+  * ``bbx1_uniform``       - one-call container, all-integer codec (no
+                             float anywhere in table building).
+  * ``bbx1_categorical``   - container over a host-built static table.
+  * ``bbx1_vae_fixedpoint``- container over the quantized VAE, coded by
+                             the FUSED compiled program (wire identical
+                             to the eager interpreter by the ISSUE-8
+                             parity contract).
+  * ``bbx2_stream``        - BBX2 block stream over the quantized VAE,
+                             pipelined double-buffered encoder.
+  * ``bbx3_corpus``        - BBX3 sharded corpus, 2 lane-shards.
+
+Regenerate after an *intentional* wire change::
+
+    PYTHONPATH=src python tests/golden/make_golden.py
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+GOLDEN_DIR = os.path.dirname(os.path.abspath(__file__))
+
+LANES = 4
+
+
+def _vae_codec(compiled: bool):
+    from repro import codecs
+    from repro.models import vae
+    cfg = vae.VAEConfig(input_dim=36, hidden=24, latent=6)
+    params = vae.init(jax.random.PRNGKey(0), cfg)
+    codec = vae.make_bb_codec_q(params, cfg)
+    return codecs.compile(codec) if compiled else codec
+
+
+def _vae_data(n: int) -> jnp.ndarray:
+    rng = np.random.default_rng(1234)
+    return jnp.asarray(rng.integers(0, 2, (n, LANES, 36)), jnp.int32)
+
+
+def build() -> dict:
+    """name -> (blob bytes, decode fn asserting losslessness)."""
+    from repro import codecs, shard_codec
+    from repro.stream.coder import StreamEncoder, decode_stream
+
+    out = {}
+
+    # BBX1, integer-only codec: 9 uniform 6-bit symbols per lane.
+    rng = np.random.default_rng(42)
+    uni = codecs.Shaped(codecs.Repeat(lambda d: codecs.Uniform(6), 9),
+                        (9,))
+    u_data = jnp.asarray(rng.integers(0, 64, (LANES, 9)), jnp.int32)
+    out["bbx1_uniform"] = (
+        lambda: codecs.compress(uni, u_data, lanes=LANES, seed=0),
+        lambda blob: codecs.decompress(uni, blob), u_data)
+
+    # BBX1, static-table categorical (host-built from seeded logits).
+    logits = jnp.asarray(rng.normal(size=(LANES, 12)), jnp.float32)
+    cat = codecs.Categorical(logits)
+    c_data = jnp.asarray(rng.integers(0, 12, (LANES,)), jnp.int32)
+    out["bbx1_categorical"] = (
+        lambda: codecs.compress(cat, c_data, lanes=LANES, seed=0),
+        lambda blob: codecs.decompress(cat, blob), c_data)
+
+    # BBX1, quantized VAE through the fused compiled program.
+    fused = _vae_codec(compiled=True)
+    v_data = _vae_data(1)[0]
+    kw = dict(lanes=LANES, seed=0, init_chunks=16, capacity=512)
+    out["bbx1_vae_fixedpoint"] = (
+        lambda: codecs.compress(fused, v_data, **kw),
+        lambda blob: codecs.decompress(fused, blob), v_data)
+
+    # BBX2 block stream, pipelined encoder (bytes are asserted equal
+    # to the synchronous path in tests/test_stream.py).
+    s_codec = _vae_codec(compiled=False)
+    s_data = _vae_data(6)
+
+    def _encode_stream() -> bytes:
+        enc = StreamEncoder(s_codec, lanes=LANES, block_symbols=2,
+                            seed=0, init_chunks=16, capacity=512,
+                            compile=True, pipeline=True)
+        return enc.write(s_data) + enc.flush()
+
+    out["bbx2_stream"] = (
+        _encode_stream,
+        lambda blob: decode_stream(s_codec, blob), s_data)
+
+    # BBX3 corpus: 2 lane-shards over the quantized VAE stream.
+    d_data = _vae_data(4)
+    out["bbx3_corpus"] = (
+        lambda: shard_codec.compress_dataset(
+            s_codec, d_data, n_shards=2, block_symbols=2, seed=0,
+            init_chunks=16, capacity=512),
+        lambda blob: shard_codec.decompress_dataset(s_codec, blob),
+        d_data)
+    return out
+
+
+def main() -> None:
+    for name, (encode, _decode, _data) in build().items():
+        blob = encode()
+        path = os.path.join(GOLDEN_DIR, f"{name}.bin")
+        with open(path, "wb") as f:
+            f.write(blob)
+        print(f"{name}: {len(blob)} bytes -> {path}")
+
+
+if __name__ == "__main__":
+    main()

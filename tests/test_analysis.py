@@ -231,6 +231,7 @@ def test_shipped_vae_beta_binomial_clean(vae_setup):
     assert report.ok and not report.findings, str(report)
 
 
+@pytest.mark.slow
 def test_shipped_hvae_clean():
     from repro.models import hvae
     cfg = hvae.HVAEConfig(levels=2, ch=8, z_ch=2, n_res=1)

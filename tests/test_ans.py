@@ -46,6 +46,7 @@ def test_push_pop_single_symbol_roundtrip():
     np.testing.assert_array_equal(np.asarray(stack3.ptr), np.asarray(stack.ptr))
 
 
+@pytest.mark.slow
 @settings(max_examples=25, deadline=None)
 @given(
     seed=st.integers(0, 2**31 - 1),

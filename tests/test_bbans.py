@@ -163,6 +163,7 @@ def test_bbans_rate_matches_analytic_exactly(small_cfg, small_params):
     assert achieved == pytest.approx(expected, abs=1.0 * lanes)
 
 
+@pytest.mark.slow
 def test_bbans_chain_rate_near_elbo(small_cfg, small_params):
     """Chained rate lands near the continuous -ELBO (loose: untrained
     model, finite chain; the trained-model ~1% check lives in benchmarks)."""

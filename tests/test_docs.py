@@ -1,6 +1,7 @@
 """The docs are executable and *complete*: every ``python`` fenced
-block in ``docs/API.md``, ``docs/SCALING.md``, ``docs/ANALYSIS.md``
-and ``docs/SERVING.md`` runs (each in a fresh namespace), every
+block in ``docs/API.md``, ``docs/SCALING.md``, ``docs/ANALYSIS.md``,
+``docs/SERVING.md`` and ``docs/PERF.md`` runs (each in a fresh
+namespace), every
 relative markdown link/anchor in README.md + docs/ resolves, and - the
 coverage gate - every public name exported by ``repro.codecs``,
 ``repro.stream``, ``repro.serve``, ``repro.analysis`` and
@@ -60,6 +61,7 @@ _API_BLOCKS = _python_blocks("docs/API.md")
 _SCALING_BLOCKS = _python_blocks("docs/SCALING.md")
 _ANALYSIS_BLOCKS = _python_blocks("docs/ANALYSIS.md")
 _SERVING_BLOCKS = _python_blocks("docs/SERVING.md")
+_PERF_BLOCKS = _python_blocks("docs/PERF.md")
 
 
 def test_api_md_has_examples():
@@ -94,6 +96,16 @@ def test_analysis_md_block_runs(i):
 
 def test_serving_md_has_examples():
     assert len(_SERVING_BLOCKS) >= 2
+
+
+def test_perf_md_has_examples():
+    assert len(_PERF_BLOCKS) >= 1
+
+
+@pytest.mark.parametrize("i", range(len(_PERF_BLOCKS)))
+def test_perf_md_block_runs(i):
+    code = _PERF_BLOCKS[i]
+    exec(compile(code, f"docs/PERF.md[block {i}]", "exec"), {})
 
 
 @pytest.mark.parametrize("i", range(len(_SERVING_BLOCKS)))

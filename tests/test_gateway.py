@@ -347,6 +347,7 @@ def test_deadline_mid_compute_retires_lane_when_thread_returns():
     assert asyncio.run(drive()) == 0
 
 
+@pytest.mark.slow
 def test_goodput_within_10pct_and_p99_bounded():
     """Acceptance (c): concurrent goodput >= 90% of the single-client
     streaming baseline, p99 latency bounded, queue bounded, no lane

@@ -1,0 +1,51 @@
+"""Golden-wire regression suite (ISSUE-8 satellite).
+
+Two directions per committed fixture in ``tests/golden/``:
+
+  * **re-encode**: rebuilding the fixture from its pinned seeds must
+    reproduce the committed blob hex-for-hex - any codec, kernel,
+    compiler, or stream-layer change that moves a wire byte fails here
+    before it can silently corrupt archived data;
+  * **decode**: the committed bytes (read from disk, never re-derived)
+    must decode losslessly back to the fixture's data.
+
+Runs from a clean checkout with only the committed fixtures; regenerate
+intentionally with ``python tests/golden/make_golden.py``.
+"""
+
+import os
+
+import jax.numpy as jnp
+import pytest
+
+from tests.golden.make_golden import GOLDEN_DIR, build
+
+_FIXTURES = sorted(build().keys())
+
+
+def _read(name: str) -> bytes:
+    path = os.path.join(GOLDEN_DIR, f"{name}.bin")
+    if not os.path.exists(path):
+        pytest.fail(f"golden fixture {name}.bin missing - run "
+                    "tests/golden/make_golden.py and commit the blobs")
+    with open(path, "rb") as f:
+        return f.read()
+
+
+@pytest.mark.parametrize("name", _FIXTURES)
+def test_reencode_matches_committed_bytes(name):
+    encode, _decode, _data = build()[name]
+    fresh = encode()
+    committed = _read(name)
+    assert fresh.hex() == committed.hex(), (
+        f"{name}: wire bytes drifted from the committed golden blob "
+        f"({len(fresh)} vs {len(committed)} bytes) - if the format "
+        "change is intentional, regenerate tests/golden/ and say so "
+        "in the commit")
+
+
+@pytest.mark.parametrize("name", _FIXTURES)
+def test_committed_bytes_decode_losslessly(name):
+    _encode, decode, data = build()[name]
+    out = decode(_read(name))
+    assert bool(jnp.array_equal(jnp.asarray(out), jnp.asarray(data)))

@@ -41,6 +41,8 @@ def _images(shape, n, lanes, seed=0):
 # acceptance: lossless round-trips, two shapes, both wire paths
 # ---------------------------------------------------------------------------
 
+
+@pytest.mark.slow
 @pytest.mark.parametrize("shape", [(28, 28), (40, 24)])
 def test_container_roundtrip_any_shape(cfg2, params2, shape):
     """One 2-level parameter set codes 28x28 AND 40x24 byte-exactly
@@ -109,6 +111,8 @@ def test_odd_shape_rejected(cfg2, params2):
 # serve.CodecEngine
 # ---------------------------------------------------------------------------
 
+
+@pytest.mark.slow
 def test_codec_engine_roundtrip(cfg2, params2):
     eng = CodecEngine(hvae.codec_family(params2, cfg2), seed=0)
     data = _images((8, 6), 3, 2, seed=5)

@@ -1,0 +1,216 @@
+"""Property-based wire-parity fuzzer (ISSUE-8 satellite).
+
+Every example derives a random codec tree, shapes, and coder
+precisions from one integer seed (``np.random.default_rng(seed)``, so
+the real hypothesis package and the deterministic conftest fallback
+both work), then asserts the ISSUE-8 parity contract:
+
+    eager interpreter == compiled program == fused fixed-point program
+    == lane-sharded corpus, hex-for-hex on the wire, and every path
+    decodes losslessly.
+
+Quick variants (10 examples) run in tier-1; the ``slow``-marked
+variants push each property past 100 examples and run in the CI full
+suite (zero tolerated divergence).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import codecs, shard_codec
+
+LANES = 4
+
+
+# ---------------------------------------------------------------------------
+# generators (all structure flows from one integer seed)
+# ---------------------------------------------------------------------------
+
+def _random_leaf(rng: np.random.Generator, param_lanes: int = LANES):
+    """(codec, data [LANES]) for one random leaf family.
+
+    ``param_lanes`` sizes the codec's per-lane parameter arrays: the
+    full lane count for the unsharded properties, the per-shard lane
+    count for the sharded one (a lane-split corpus hands each shard a
+    narrower stack, so baked-in parameters must match it; scalar
+    Gaussian parameters broadcast and stay lane-agnostic).
+    """
+    kind = rng.integers(0, 3)
+    if kind == 0:
+        bits = int(rng.integers(2, 9))
+        return (codecs.Uniform(bits),
+                jnp.asarray(rng.integers(0, 1 << bits, (LANES,)),
+                            jnp.int32))
+    if kind == 1:
+        alphabet = int(rng.integers(2, 10))
+        precision = int(rng.integers(12, 17))
+        logits = jnp.asarray(
+            np.tile(rng.normal(size=(1, alphabet)), (param_lanes, 1)),
+            jnp.float32)
+        return (codecs.Categorical(logits, precision=precision),
+                jnp.asarray(rng.integers(0, alphabet, (LANES,)),
+                            jnp.int32))
+    bits = int(rng.integers(4, 9))
+    precision = int(rng.integers(max(12, bits + 2), 17))
+    if param_lanes == LANES:
+        mu = jnp.asarray(rng.normal(size=(LANES,)), jnp.float32)
+        sigma = jnp.asarray(np.exp(rng.normal(size=(LANES,)) * 0.5),
+                            jnp.float32)
+    else:
+        mu = jnp.float32(rng.normal())
+        sigma = jnp.float32(np.exp(rng.normal() * 0.5))
+    return (codecs.DiscretizedGaussian(mu, sigma, bits, precision),
+            jnp.asarray(rng.integers(0, 1 << bits, (LANES,)),
+                        jnp.int32))
+
+
+def _random_tree(rng: np.random.Generator, depth: int = 0,
+                 param_lanes: int = LANES):
+    """(codec, data pytree) - random combinator tree over random leaves."""
+    kind = rng.integers(0, 4) if depth < 2 else 3
+    if kind == 0:                                   # Serial of 2 subtrees
+        (ca, da), (cb, db) = (_random_tree(rng, depth + 1, param_lanes),
+                              _random_tree(rng, depth + 1, param_lanes))
+        return codecs.Serial((ca, cb)), (da, db)
+    if kind == 1:                                   # Shaped Repeat of leaf
+        n = int(rng.integers(1, 5))
+        leaf, _ = _random_leaf(rng, param_lanes)
+        data = jnp.stack([_matching_data(rng, leaf) for _ in range(n)],
+                         axis=-1)
+        return codecs.Shaped(
+            codecs.Repeat(lambda d, _l=leaf: _l, n), (n,)), data
+    if kind == 2:                                   # TreeCodec dict
+        (ca, da), (cb, db) = (_random_tree(rng, depth + 1, param_lanes),
+                              _random_tree(rng, depth + 1, param_lanes))
+        return (codecs.TreeCodec({"a": ca, "b": cb}),
+                {"a": da, "b": db})
+    return _random_leaf(rng, param_lanes)
+
+
+def _matching_data(rng, leaf):
+    if isinstance(leaf, codecs.Uniform):
+        return jnp.asarray(rng.integers(0, 1 << leaf.bits, (LANES,)),
+                           jnp.int32)
+    if isinstance(leaf, codecs.Categorical):
+        a = leaf.logits.shape[-1]
+        return jnp.asarray(rng.integers(0, a, (LANES,)), jnp.int32)
+    return jnp.asarray(rng.integers(0, 1 << leaf.bits, (LANES,)),
+                       jnp.int32)
+
+
+def _random_vae(rng: np.random.Generator):
+    """(fixed-point codec pair, data) for a random small VAE."""
+    from repro.models import vae
+    cfg = vae.VAEConfig(
+        input_dim=int(rng.integers(6, 25)),
+        hidden=int(rng.integers(8, 17)),
+        latent=int(rng.integers(2, 7)),
+        lat_bits=int(rng.integers(6, 11)),
+        precision=int(rng.integers(14, 17)),
+        obs_precision=int(rng.integers(12, 17)))
+    params = vae.init(jax.random.PRNGKey(int(rng.integers(0, 2**31))),
+                      cfg)
+    n_chain = int(rng.integers(1, 4))
+    eager = codecs.Chained(vae.make_bb_codec_q(params, cfg), n_chain)
+    data = jnp.asarray(
+        rng.integers(0, 2, (n_chain, LANES, cfg.input_dim)), jnp.int32)
+    return eager, data
+
+
+# ---------------------------------------------------------------------------
+# properties
+# ---------------------------------------------------------------------------
+
+def _assert_tree_parity(seed: int) -> None:
+    rng = np.random.default_rng(seed)
+    codec, data = _random_tree(rng)
+    kw = dict(lanes=LANES, seed=int(rng.integers(0, 100)))
+    blob = codecs.compress(codec, data, **kw)
+    prog = codecs.compile(codec)
+    assert codecs.compress(prog, data, **kw).hex() == blob.hex(), \
+        f"seed {seed}: compiled wire diverged"
+    out = codecs.decompress(prog, blob)
+    chk = jax.tree_util.tree_map(
+        lambda a, b: bool(jnp.array_equal(a, b)), out, data)
+    assert all(jax.tree_util.tree_leaves(chk)), f"seed {seed}: lossy"
+
+
+def _assert_fused_parity(seed: int) -> None:
+    rng = np.random.default_rng(seed)
+    eager, data = _random_vae(rng)
+    fused = codecs.compile(eager)
+    kw = dict(lanes=LANES, seed=int(rng.integers(0, 100)),
+              init_chunks=16, capacity=1024)
+    blob = codecs.compress(eager, data, **kw)
+    assert codecs.compress(fused, data, **kw).hex() == blob.hex(), \
+        f"seed {seed}: fused fixed-point wire diverged from eager"
+    out = codecs.decompress(fused, blob)
+    assert bool(jnp.array_equal(out, data)), f"seed {seed}: lossy"
+
+
+def _assert_sharded_parity(seed: int) -> None:
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 5))
+    n_shards = int(rng.choice([1, 2, 4]))
+    codec, one = _random_tree(rng, param_lanes=LANES // n_shards)
+    data = jax.tree_util.tree_map(
+        lambda a: jnp.stack([a] * n, axis=0), one)
+    kw = dict(n_shards=n_shards, block_symbols=int(rng.integers(1, 4)),
+              seed=int(rng.integers(0, 100)), init_chunks=0)
+    corpus = shard_codec.compress_dataset(codec, data, **kw)
+    fused = shard_codec.compress_dataset(codec, data, compile=True,
+                                         **kw)
+    assert fused.hex() == corpus.hex(), \
+        f"seed {seed}: sharded wire depends on execution path"
+    out = shard_codec.decompress_dataset(codec, corpus)
+    chk = jax.tree_util.tree_map(
+        lambda a, b: bool(jnp.array_equal(a, b)), out, data)
+    assert all(jax.tree_util.tree_leaves(chk)), f"seed {seed}: lossy"
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_random_tree_compiled_parity(seed):
+    _assert_tree_parity(seed)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_random_vae_fused_parity(seed):
+    _assert_fused_parity(seed)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_random_sharded_parity(seed):
+    _assert_sharded_parity(seed)
+
+
+# -- CI depth: >= 100 examples per property, zero divergence --------------
+
+@pytest.mark.slow
+@settings(max_examples=120, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_random_tree_compiled_parity_deep(seed):
+    jax.clear_caches()   # ~100 distinct programs; keep XLA state small
+    _assert_tree_parity(seed)
+
+
+@pytest.mark.slow
+@settings(max_examples=100, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_random_vae_fused_parity_deep(seed):
+    jax.clear_caches()
+    _assert_fused_parity(seed)
+
+
+@pytest.mark.slow
+@settings(max_examples=100, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_random_sharded_parity_deep(seed):
+    jax.clear_caches()
+    _assert_sharded_parity(seed)

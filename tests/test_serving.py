@@ -174,6 +174,7 @@ def test_latent_lm_elbo_finite_and_trainable():
     assert np.isfinite(gn) and gn > 0
 
 
+@pytest.mark.slow
 def test_int8_kv_decode_close_to_bf16():
     """int8 KV cache (hillclimb 3): decode logits within quantization
     tolerance of the bf16 path, exact same control flow."""

@@ -243,6 +243,7 @@ MULTI_DEVICE_SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_multi_device_wire_matches_single_device():
     """The acceptance-criterion test: bytes produced on 8 simulated
     devices == bytes produced in this 1-device process, for both the

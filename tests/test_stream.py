@@ -153,6 +153,7 @@ def test_kernel_and_python_block_coders_byte_identical():
     np.testing.assert_array_equal(np.asarray(out), np.asarray(data))
 
 
+@pytest.mark.slow
 @settings(max_examples=15, deadline=None)
 @given(seed=st.integers(0, 2**31 - 1), lanes=st.integers(1, 6),
        block=st.integers(1, 9), n=st.integers(0, 30))
@@ -180,6 +181,7 @@ def _tiny_vae(input_dim=48, latent=8):
     return vae_lib.init(jax.random.PRNGKey(0), cfg), cfg
 
 
+@pytest.mark.slow
 def test_bbans_streamed_roundtrip_and_head_carry():
     """BB-ANS streams across blocks: exact roundtrip, and block b+1's
     initial head (recovered by the decoder as its pop residue) equals
@@ -213,6 +215,7 @@ def test_bbans_streamed_roundtrip_and_head_carry():
         np.testing.assert_array_equal(np.asarray(stack.head), prev_head)
 
 
+@pytest.mark.slow
 def test_bbans_streamed_rate_tracks_oneshot():
     """Streamed net rate ~ one-shot net rate (the head-carry payoff)."""
     params, cfg = _tiny_vae(input_dim=96, latent=8)
