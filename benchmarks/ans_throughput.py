@@ -1,12 +1,15 @@
-"""ANS coder throughput (symbols/s) - core jnp path and the Pallas
-kernel path (interpret mode on CPU: correctness-representative, not
-perf-representative; the table reports both with that caveat).
+"""ANS coder throughput (symbols/s) - core jnp path and the dispatched
+kernel path (``kernels.dispatch`` resolves the backend: the pure-XLA
+twin on CPU, compiled Pallas on accelerators; the Pallas interpreter is
+timed separately as the explicitly-pinned oracle row).
 
 Two parts: the static-table categorical coder (the original rows) and
 the *dynamic-leaf* Gaussian path - per-position ``DiscretizedGaussian``
 interpreted one symbol at a time vs the codec compiler's fused
 multi-step kernels (``push_many`` + ``pop_many_grid``), with MB/s of
-produced wire and the compiled/interpreted speedup."""
+produced wire and the compiled/interpreted speedup. Pin every
+dispatched row to one backend with ``REPRO_KERNEL_BACKEND=xla`` (the
+CI smoke step does) or ``--backend``."""
 
 from __future__ import annotations
 
@@ -17,6 +20,7 @@ import numpy as np
 from benchmarks import common
 from repro import codecs
 from repro.core import ans
+from repro.kernels import dispatch
 from repro.kernels.ans import ops as ans_ops
 
 
@@ -45,12 +49,15 @@ def _dynamic_gauss_rows(lanes: int, steps: int, seed: int):
     us_dc, _ = common.timer(lambda: prog.pop(full))
 
     n = lanes * steps
+    n_dev = jax.device_count()
     return [
         {"path": "gauss-interpreted", "us": us_pi,
          "msym_per_s": n / us_pi, "mb_per_s": wire_mb / (us_pi / 1e6),
          "pop_us": us_di, "pop_msym_per_s": n / us_di},
         {"path": "gauss-compiled", "us": us_pc,
          "msym_per_s": n / us_pc, "mb_per_s": wire_mb / (us_pc / 1e6),
+         "enc_mb_per_s_per_device": wire_mb / (us_pc / 1e6) / n_dev,
+         "dec_mb_per_s_per_device": wire_mb / (us_dc / 1e6) / n_dev,
          "pop_us": us_dc, "pop_msym_per_s": n / us_dc,
          "speedup_push": us_pi / us_pc, "speedup_pop": us_di / us_dc},
     ]
@@ -76,20 +83,45 @@ def run(lanes: int = 256, steps: int = 256, seed: int = 0):
         return jax.lax.fori_loop(0, steps, body, stack)
 
     us_core, _ = common.timer(core_push, stack)
+    # The dispatched row runs whatever backend resolve() picks (XLA twin
+    # on CPU); the interpret row pins the historical Pallas-interpreter
+    # oracle so the committed baseline row stays comparable. Both are
+    # jitted - that is how every production caller reaches these ops.
+    d = dispatch.resolve("push_many", lanes=lanes)
+    push_jit = jax.jit(ans_ops.push_many,
+                       static_argnames=("precision", "backend"))
+    push_jit(stack, starts, freqs, 14, backend=d)            # warm
     us_kernel, _ = common.timer(
-        lambda s: ans_ops.push_many(s, starts, freqs, 14), stack)
+        lambda s: push_jit(s, starts, freqs, 14, backend=d), stack)
+    push_jit(stack, starts, freqs, 14, backend="interpret")  # warm
+    us_interp, _ = common.timer(
+        lambda s: push_jit(s, starts, freqs, 14,
+                           backend="interpret"), stack)
     n = lanes * steps
     return [{"path": "core-jnp", "us": us_core,
              "msym_per_s": n / us_core},
-            {"path": "pallas-interpret", "us": us_kernel,
-             "msym_per_s": n / us_kernel}] \
+            {"path": f"kernel-{d.backend}", "us": us_kernel,
+             "msym_per_s": n / us_kernel},
+            {"path": "pallas-interpret", "us": us_interp,
+             "msym_per_s": n / us_interp}] \
         + _dynamic_gauss_rows(lanes, steps, seed)
 
 
 def main():
-    for r in run():
-        print(f"ans_throughput,{r['path']},us={r['us']:.0f},"
-              f"Msym/s={r['msym_per_s']:.2f}")
+    import argparse
+    import contextlib
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default=None,
+                    choices=sorted(dispatch.BACKENDS),
+                    help="pin every dispatched op to one backend "
+                         "(same effect as REPRO_KERNEL_BACKEND)")
+    args = ap.parse_args()
+    ctx = dispatch.use_backend(args.backend) if args.backend \
+        else contextlib.nullcontext()
+    with ctx:
+        for r in run():
+            print(f"ans_throughput,{r['path']},us={r['us']:.0f},"
+                  f"Msym/s={r['msym_per_s']:.2f}")
 
 
 if __name__ == "__main__":

@@ -33,6 +33,7 @@ import numpy as np
 
 from benchmarks import common
 from repro import codecs
+from repro.kernels import dispatch
 from repro.models import hvae, vae as vae_lib
 
 
@@ -67,8 +68,11 @@ def _roundtrip_rows(name: str, interp, prog, data, lanes: int,
             "enc_mb_per_s_per_device": mb / (ue / 1e6) / n_dev,
             "dec_mb_per_s_per_device": mb / (ud / 1e6) / n_dev,
             # roofline inputs (launch/roofline.py): wire size and how
-            # many datapoints produced it.
+            # many datapoints produced it, plus the coder backend the
+            # dispatcher resolved for this run's lane count.
             "wire_mb": mb, "n_datapoints": n_dp,
+            "kernel_backend": dispatch.resolve(
+                "push_many", lanes=lanes).backend,
         })
     rows[-1]["speedup_encode"] = us_enc_i / us_enc_c
     rows[-1]["speedup_decode"] = us_dec_i / us_dec_c

@@ -9,6 +9,15 @@ below baseline. Exit status is nonzero on any regression, so CI can
 gate on it; CI passes a looser tolerance because hosted-runner hardware
 varies run to run (see .github/workflows/ci.yml).
 
+Per-metric tolerance overrides (``--metric-tolerance PATTERN=FRAC``,
+repeatable) loosen or tighten the bar for fields matching ``PATTERN``
+by prefix or suffix - e.g. ``--metric-tolerance speedup_fused=0.8``
+for ratio metrics whose numerator AND denominator both move when the
+kernel backend changes. A delta table of every
+``*_mb_per_s_per_device`` field (baseline -> fresh, x-factor) prints
+with each compared file, so CI logs show the headline throughput
+movement at a glance.
+
 Usage:
     PYTHONPATH=src python -m benchmarks.compare --json-dir .
     PYTHONPATH=src python -m benchmarks.compare --update   # re-baseline
@@ -22,7 +31,7 @@ import json
 import os
 import shutil
 import sys
-from typing import Dict, Tuple
+from typing import Dict, List, Tuple
 
 BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                             "baselines")
@@ -33,6 +42,15 @@ BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
 _THROUGHPUT_SUFFIXES = ("mb_per_s", "msym_per_s", "per_device")
 _THROUGHPUT_PREFIXES = ("speedup",)
 
+#: descriptive row fields excluded from row identity: newer bench runs
+#: annotate rows with these, and the annotation must not orphan the
+#: committed baseline rows that predate it.
+_META_FIELDS = frozenset({"kernel_backend"})
+
+#: fields whose delta prints with every compared file (the headline
+#: codec throughput metric).
+_DELTA_SUFFIX = "mb_per_s_per_device"
+
 
 def _is_throughput_key(key: str) -> bool:
     return key.endswith(_THROUGHPUT_SUFFIXES) or \
@@ -40,10 +58,35 @@ def _is_throughput_key(key: str) -> bool:
 
 
 def _row_key(row: dict) -> Tuple:
-    """Identity of a row = its non-numeric fields, sorted."""
+    """Identity of a row = its non-numeric, non-meta fields, sorted."""
     return tuple(sorted((k, v) for k, v in row.items()
-                        if not isinstance(v, (int, float))
-                        or isinstance(v, bool)))
+                        if k not in _META_FIELDS
+                        and (not isinstance(v, (int, float))
+                             or isinstance(v, bool))))
+
+
+def parse_metric_tolerances(specs: List[str]) -> Dict[str, float]:
+    """``["speedup=0.5", "p50_ms=1.0"]`` -> ``{"speedup": 0.5, ...}``."""
+    out: Dict[str, float] = {}
+    for spec in specs or []:
+        pattern, _, frac = spec.partition("=")
+        if not pattern or not frac:
+            raise SystemExit(
+                f"--metric-tolerance {spec!r}: expected PATTERN=FRAC")
+        out[pattern] = float(frac)
+    return out
+
+
+def _tolerance_for(field: str, default: float,
+                   overrides: Dict[str, float]) -> float:
+    """Most specific (longest) matching override wins; else default."""
+    best = None
+    for pattern, frac in overrides.items():
+        if field == pattern or field.startswith(pattern) \
+                or field.endswith(pattern):
+            if best is None or len(pattern) > len(best[0]):
+                best = (pattern, frac)
+    return best[1] if best is not None else default
 
 
 def _index(payload: dict) -> Dict[Tuple, dict]:
@@ -51,22 +94,31 @@ def _index(payload: dict) -> Dict[Tuple, dict]:
             if isinstance(r, dict)}
 
 
-def compare_file(fresh_path: str, base_path: str,
-                 tolerance: float) -> list:
-    """Return a list of regression strings (empty = clean)."""
+def compare_file(fresh_path: str, base_path: str, tolerance: float,
+                 metric_tolerances: Dict[str, float] = None
+                 ) -> Tuple[list, list]:
+    """Compare one fresh BENCH file against its baseline.
+
+    Returns ``(problems, deltas)``: regression strings (empty = clean)
+    and printable ``*_mb_per_s_per_device`` delta-table lines.
+    """
+    overrides = metric_tolerances or {}
     with open(fresh_path) as f:
         fresh = json.load(f)
     with open(base_path) as f:
         base = json.load(f)
     if fresh.get("failed") or base.get("failed"):
-        return [f"{os.path.basename(fresh_path)}: bench marked failed"]
+        return ([f"{os.path.basename(fresh_path)}: bench marked failed"],
+                [])
     problems = []
+    deltas = []
     fresh_rows = _index(fresh)
     for key, brow in _index(base).items():
         frow = fresh_rows.get(key)
         if frow is None:
             problems.append(f"row {dict(key)} missing from fresh run")
             continue
+        ident = " ".join(str(v) for _, v in key)
         for field, bval in brow.items():
             if not _is_throughput_key(field):
                 continue
@@ -75,12 +127,17 @@ def compare_file(fresh_path: str, base_path: str,
             fval = frow.get(field)
             if not isinstance(fval, (int, float)):
                 continue
-            if fval < bval * (1.0 - tolerance):
+            if field.endswith(_DELTA_SUFFIX):
+                deltas.append(
+                    f"{ident} {field}: {bval:.4g} -> {fval:.4g} "
+                    f"(x{fval / bval:.2f})")
+            tol = _tolerance_for(field, tolerance, overrides)
+            if fval < bval * (1.0 - tol):
                 problems.append(
                     f"{dict(key)} {field}: {fval:.4g} < baseline "
                     f"{bval:.4g} (-{(1 - fval / bval) * 100:.1f}%, "
-                    f"tolerance {tolerance * 100:.0f}%)")
-    return problems
+                    f"tolerance {tol * 100:.0f}%)")
+    return problems, deltas
 
 
 def main() -> None:
@@ -89,10 +146,15 @@ def main() -> None:
                     help="directory holding fresh BENCH_<name>.json")
     ap.add_argument("--tolerance", type=float, default=0.20,
                     help="allowed fractional throughput drop (0.20=20%%)")
+    ap.add_argument("--metric-tolerance", action="append", default=[],
+                    metavar="PATTERN=FRAC",
+                    help="per-metric override, matched by prefix/suffix "
+                         "(repeatable), e.g. speedup_fused=0.8")
     ap.add_argument("--update", action="store_true",
                     help="copy fresh BENCH files into baselines/ "
                          "instead of comparing")
     args = ap.parse_args()
+    overrides = parse_metric_tolerances(args.metric_tolerance)
 
     fresh_files = sorted(glob.glob(
         os.path.join(args.json_dir, "BENCH_*.json")))
@@ -111,7 +173,8 @@ def main() -> None:
             print(f"{os.path.basename(path)}: no baseline, skipped")
             continue
         compared += 1
-        problems = compare_file(path, base, args.tolerance)
+        problems, deltas = compare_file(path, base, args.tolerance,
+                                        overrides)
         if problems:
             failures += 1
             print(f"{os.path.basename(path)}: REGRESSED")
@@ -119,6 +182,8 @@ def main() -> None:
                 print(f"  {p}")
         else:
             print(f"{os.path.basename(path)}: ok")
+        for d in deltas:
+            print(f"  {d}")
     if not compared:
         # A gate that compared nothing must not pass: baseline names
         # drifting out of sync with the bench output would otherwise

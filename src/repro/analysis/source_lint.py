@@ -62,6 +62,10 @@ RULES = {
                     "before .astype(int)",
     "jit-in-table-module": "table-construction modules must stay "
                            "eager; jit belongs to codecs.compile",
+    "pallas-call-site": "pl.pallas_call may only appear under "
+                        "repro/kernels; everything else goes through "
+                        "the dispatched ops (kernels.ans.ops, "
+                        "kernels.bucketize.ops)",
 }
 
 _CODER_DIRS = ("repro/core", "repro/codecs", "repro/kernels",
@@ -110,11 +114,15 @@ def _is_constant_num(node: ast.expr) -> bool:
 
 
 class _Visitor(ast.NodeVisitor):
-    def __init__(self, filename: str, eager_spans, allow):
+    def __init__(self, filename: str, eager_spans, allow,
+                 coder_scope: bool = True):
         self.filename = filename
         self.base = os.path.basename(filename)
         self.eager_spans = eager_spans
         self.allow = allow
+        self.coder_scope = coder_scope
+        self.in_kernels = "repro/kernels" in \
+            filename.replace(os.sep, "/")
         self.findings: List[Finding] = []
 
     def _add(self, rule: str, node: ast.AST, msg: str, hint: str) -> None:
@@ -125,6 +133,9 @@ class _Visitor(ast.NodeVisitor):
             rule, "error", f"{self.filename}:{line}", msg, hint))
 
     def visit_Assert(self, node: ast.Assert) -> None:
+        if not self.coder_scope:
+            self.generic_visit(node)
+            return
         self._add(
             "bare-assert", node,
             "bare assert guards a coder invariant - it vanishes under "
@@ -133,7 +144,7 @@ class _Visitor(ast.NodeVisitor):
         self.generic_visit(node)
 
     def visit_BinOp(self, node: ast.BinOp) -> None:
-        if isinstance(node.op, ast.Div) \
+        if self.coder_scope and isinstance(node.op, ast.Div) \
                 and not _is_constant_num(node.left) \
                 and not _is_constant_num(node.right) \
                 and not _in_spans(node.lineno, self.eager_spans):
@@ -155,6 +166,23 @@ class _Visitor(ast.NodeVisitor):
             name = callee.id
         elif isinstance(callee, ast.Attribute):
             name = callee.attr
+
+        # The one rule that applies to EVERY source file, coder scope
+        # or not: hand-rolled pallas_call sites bypass the backend
+        # dispatcher (and its parity suite) entirely.
+        if name == "pallas_call" and not self.in_kernels:
+            self._add(
+                "pallas-call-site", node,
+                "direct pl.pallas_call outside repro/kernels - the "
+                "call bypasses kernels.dispatch, so backend pinning, "
+                "the tuning cache, and the parity suite never see it",
+                "route through the dispatched ops in kernels/ans/ops "
+                "or kernels/bucketize/ops (or add "
+                "'# analysis: allow(pallas-call-site)' with a reason)")
+
+        if not self.coder_scope:
+            self.generic_visit(node)
+            return
 
         if name == "ndtri" and self.base not in _NDTRI_ALLOWED \
                 and not _in_spans(node.lineno, self.eager_spans):
@@ -191,8 +219,13 @@ class _Visitor(ast.NodeVisitor):
         self.generic_visit(node)
 
 
-def lint_source(source: str, filename: str = "<string>") -> List[Finding]:
+def lint_source(source: str, filename: str = "<string>",
+                coder_scope: bool = True) -> List[Finding]:
     """Lint one file's source text; returns a list of ``Finding``.
+
+    ``coder_scope=False`` restricts the pass to the rules that apply
+    everywhere (currently ``pallas-call-site``) - how ``lint_paths``
+    treats model/serving/training files.
 
     Example::
 
@@ -205,7 +238,8 @@ def lint_source(source: str, filename: str = "<string>") -> List[Finding]:
     except SyntaxError as e:
         return [Finding("bare-assert", "error", f"{filename}:{e.lineno}",
                         f"file does not parse: {e.msg}", "fix the syntax")]
-    visitor = _Visitor(filename, _eager_spans(tree), _allow_lines(source))
+    visitor = _Visitor(filename, _eager_spans(tree), _allow_lines(source),
+                       coder_scope=coder_scope)
     visitor.visit(tree)
     return visitor.findings
 
@@ -215,13 +249,20 @@ def _is_coder_file(path: str) -> bool:
     return p.endswith(".py") and any(d in p for d in _CODER_DIRS)
 
 
-def lint_paths(paths: Iterable[str]) -> Tuple[List[Finding], int]:
-    """Lint every coder-scope ``.py`` file under ``paths``.
+def _is_repro_file(path: str) -> bool:
+    p = path.replace(os.sep, "/")
+    return p.endswith(".py") and "repro/" in p
 
-    Directories are walked and filtered to the coder scope
-    (``repro/core``, ``repro/codecs``, ``repro/kernels``,
-    ``repro/stream``); a path naming a ``.py`` file directly is linted
-    regardless of scope. Returns ``(findings, files_checked)``.
+
+def lint_paths(paths: Iterable[str]) -> Tuple[List[Finding], int]:
+    """Lint every ``repro`` ``.py`` file under ``paths``.
+
+    Files under the coder scope (``repro/core``, ``repro/codecs``,
+    ``repro/kernels``, ``repro/stream``) get the full rule set; every
+    other ``repro`` file gets only the everywhere-rules (the
+    ``pallas-call-site`` ban). A path naming a ``.py`` file directly
+    is linted in full coder scope. Returns
+    ``(findings, files_checked)``.
 
     Example::
 
@@ -237,10 +278,11 @@ def lint_paths(paths: Iterable[str]) -> Tuple[List[Finding], int]:
         for root, _dirs, names in os.walk(path):
             for name in sorted(names):
                 full = os.path.join(root, name)
-                if _is_coder_file(full):
+                if _is_repro_file(full):
                     files.append(full)
     findings: List[Finding] = []
     for f in sorted(set(files)):
         with open(f, "r", encoding="utf-8") as fh:
-            findings.extend(lint_source(fh.read(), f))
+            findings.extend(lint_source(
+                fh.read(), f, coder_scope=_is_coder_file(f)))
     return findings, len(set(files))

@@ -55,6 +55,7 @@ Import note: ``codecs.compile`` (the function re-exported by
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Any, Callable, Dict, Optional, Type
 
 import jax
@@ -69,6 +70,7 @@ from repro.core.distributions import (Bernoulli, BetaBinomial, Categorical,
 from repro.codecs import combinators as C
 from repro.codecs import leaves as L
 from repro.codecs import quantize as Q
+from repro.kernels import dispatch
 from repro.kernels.ans import ops as ans_ops
 
 
@@ -78,6 +80,12 @@ from repro.kernels.ans import ops as ans_ops
 # The ANSStack argument is donated in the True variants so encode and
 # decode update the coder state in place; drivers never reuse an input
 # stack, tests that do should compile with donate=False.
+#
+# ``backend`` is a ``kernels.dispatch.Decision`` (hashable -> a valid
+# static arg): the fused nodes resolve it eagerly per call, so
+# ``use_backend``/``REPRO_KERNEL_BACKEND``/the tuning cache steer even
+# already-compiled codecs, at the cost of one retrace per distinct
+# Decision.
 
 def _coder_jits(fn, static):
     return {
@@ -86,11 +94,50 @@ def _coder_jits(fn, static):
     }
 
 
-_PUSH_MANY = _coder_jits(ans_ops.push_many, ("precision", "interpret"))
-_POP_DYN = _coder_jits(ans_ops.pop_many_dyn, ("precision", "interpret"))
+def _push_grid_body(stack, idxT, mu, sigma, *, kind, bits, precision,
+                    backend=None):
+    """Grid push with the starts evaluation INSIDE the jit.
+
+    The eager-starts hop used to dominate compiled grid encode; the CDF
+    chain is the canonical fusion-stable form (concrete edge tables,
+    reciprocal-multiply - the decode side already evaluates it inside
+    ``pop_many_grid``'s fused bisection), so tracing it here keeps the
+    wire bytes identical while removing the host round-trip.
+    """
+    if kind == "uniform":
+        shift = precision - bits
+        start = idxT.astype(jnp.uint32) << shift
+        freq = jnp.full_like(start, jnp.uint32(1 << shift))
+    else:
+        if kind == "gaussian":
+            f = discretize.posterior_starts_fn(mu, sigma, bits, precision)
+        else:
+            f = L.logistic_starts_fn(mu, sigma, bits, precision)
+        start = f(idxT)
+        freq = f(idxT + 1) - start
+    return ans_ops.push_many(stack, start[::-1], freq[::-1],
+                             precision=precision, backend=backend)
+
+
+def _push_table_body(stack, tables, symT, *, precision, backend=None):
+    """Table push with the per-step starts gather INSIDE the jit
+    (integer gather: exact in any fusion context)."""
+    sym = symT[..., None]                                 # [n, lanes, 1]
+    start = jnp.take_along_axis(tables, sym, axis=2)[..., 0]
+    nxt = jnp.take_along_axis(tables, sym + 1, axis=2)[..., 0]
+    return ans_ops.push_many(stack, start[::-1].astype(jnp.uint32),
+                             (nxt - start)[::-1].astype(jnp.uint32),
+                             precision=precision, backend=backend)
+
+
+_PUSH_MANY = _coder_jits(ans_ops.push_many, ("precision", "backend"))
+_POP_DYN = _coder_jits(ans_ops.pop_many_dyn, ("precision", "backend"))
 _POP_GRID = _coder_jits(
     ans_ops.pop_many_grid,
-    ("kind", "steps", "lat_bits", "precision", "interpret"))
+    ("kind", "steps", "lat_bits", "precision", "backend"))
+_PUSH_GRID = _coder_jits(
+    _push_grid_body, ("kind", "bits", "precision", "backend"))
+_PUSH_TABLE = _coder_jits(_push_table_body, ("precision", "backend"))
 
 
 # ---------------------------------------------------------------------------
@@ -120,36 +167,56 @@ def _mesh_coder_programs(mesh) -> Dict[str, Any]:
     st = _stack_spec(axis)
     lane1 = P(None, axis)          # [steps, lanes]
 
-    def push(stack, starts, freqs, *, precision, interpret=True):
+    def push(stack, starts, freqs, *, precision, backend=None):
         return shard_map(
             lambda s, a, f: ans_ops.push_many(
-                s, a, f, precision=precision, interpret=interpret),
+                s, a, f, precision=precision, backend=backend),
             mesh=mesh, in_specs=(st, lane1, lane1), out_specs=st,
             check_rep=False)(stack, starts, freqs)
 
-    def pop_dyn(stack, tables, *, precision, interpret=True):
+    def pop_dyn(stack, tables, *, precision, backend=None):
         return shard_map(
             lambda s, t: ans_ops.pop_many_dyn(
-                s, t, precision=precision, interpret=interpret),
+                s, t, precision=precision, backend=backend),
             mesh=mesh, in_specs=(st, P(None, axis, None)),
             out_specs=(st, lane1), check_rep=False)(stack, tables)
 
     def pop_grid(stack, *, mu, sigma, kind, steps, lat_bits, precision,
-                 interpret=True):
+                 backend=None):
         spec = lane1 if jnp.ndim(mu) == 2 else P()
         return shard_map(
             lambda s, m, g: ans_ops.pop_many_grid(
                 s, kind, m, g, steps, lat_bits, precision=precision,
-                interpret=interpret),
+                backend=backend),
             mesh=mesh, in_specs=(st, spec, spec),
             out_specs=(st, lane1), check_rep=False)(stack, mu, sigma)
 
+    def push_grid(stack, idxT, mu, sigma, *, kind, bits, precision,
+                  backend=None):
+        spec = lane1 if jnp.ndim(mu) == 2 else P()
+        return shard_map(
+            lambda s, i, m, g: _push_grid_body(
+                s, i, m, g, kind=kind, bits=bits, precision=precision,
+                backend=backend),
+            mesh=mesh, in_specs=(st, lane1, spec, spec), out_specs=st,
+            check_rep=False)(stack, idxT, mu, sigma)
+
+    def push_table(stack, tables, symT, *, precision, backend=None):
+        return shard_map(
+            lambda s, t, y: _push_table_body(
+                s, t, y, precision=precision, backend=backend),
+            mesh=mesh, in_specs=(st, P(None, axis, None), lane1),
+            out_specs=st, check_rep=False)(stack, tables, symT)
+
     return {
-        "push": _coder_jits(push, ("precision", "interpret")),
-        "pop_dyn": _coder_jits(pop_dyn, ("precision", "interpret")),
+        "push": _coder_jits(push, ("precision", "backend")),
+        "pop_dyn": _coder_jits(pop_dyn, ("precision", "backend")),
         "pop_grid": _coder_jits(
             pop_grid,
-            ("kind", "steps", "lat_bits", "precision", "interpret")),
+            ("kind", "steps", "lat_bits", "precision", "backend")),
+        "push_grid": _coder_jits(
+            push_grid, ("kind", "bits", "precision", "backend")),
+        "push_table": _coder_jits(push_table, ("precision", "backend")),
     }
 
 
@@ -169,7 +236,8 @@ def coder_programs(mesh: Optional[Any] = None) -> Dict[str, Any]:
     """
     if mesh is None:
         return {"push": _PUSH_MANY, "pop_dyn": _POP_DYN,
-                "pop_grid": _POP_GRID}
+                "pop_grid": _POP_GRID, "push_grid": _PUSH_GRID,
+                "push_table": _PUSH_TABLE}
     if mesh not in _MESH_PROGRAMS:
         if len(mesh.axis_names) != 1:
             raise ValueError(
@@ -196,9 +264,11 @@ class _GridRepeat(Codec):
     "logistic" (mu carries location, sigma the scale); parameters are
     [n, lanes] in natural position order. Bit-exact with the
     per-position ``Repeat``: push flips to the LIFO order (positions
-    n-1..0), pop streams positions in natural order. Starts/freqs are
-    evaluated eagerly (canonical bits); the multi-step coding runs in
-    one jitted kernel program per direction.
+    n-1..0), pop streams positions in natural order. The starts/freqs
+    CDF chain is the canonical fusion-stable form, so both directions
+    run as one jitted program each (starts evaluated in-jit - see
+    ``_push_grid_body``) on the backend ``kernels.dispatch`` resolves
+    per call.
     """
 
     kind: str
@@ -210,34 +280,22 @@ class _GridRepeat(Codec):
     out_dtype: Any = jnp.int32
     donate: bool = True
 
-    def _starts_fn(self):
-        if self.kind == "gaussian":
-            return discretize.posterior_starts_fn(
-                self.mu, self.sigma, self.bits, self.precision)
-        if self.kind == "logistic":
-            return L.logistic_starts_fn(self.mu, self.sigma, self.bits,
-                                        self.precision)
-        raise AssertionError(self.kind)
-
     def push(self, stack: ans.ANSStack, x: jnp.ndarray) -> ans.ANSStack:
         idx = x.astype(jnp.int32).T                       # [n, lanes]
-        if self.kind == "uniform":
-            shift = self.precision - self.bits
-            start = idx.astype(jnp.uint32) << shift
-            freq = jnp.full_like(start, jnp.uint32(1 << shift))
-        else:
-            f = self._starts_fn()
-            start = f(idx)
-            freq = f(idx + 1) - start
-        return _active_programs()["push"][self.donate](
-            stack, start[::-1], freq[::-1], precision=self.precision)
+        mu = self.mu if self.mu is not None else jnp.zeros(())
+        sigma = self.sigma if self.sigma is not None else jnp.zeros(())
+        d = dispatch.resolve("push_many", lanes=stack.lanes)
+        return _active_programs()["push_grid"][self.donate](
+            stack, idx, mu, sigma, kind=self.kind, bits=self.bits,
+            precision=self.precision, backend=d)
 
     def pop(self, stack: ans.ANSStack):
         mu = self.mu if self.mu is not None else jnp.zeros(())
         sigma = self.sigma if self.sigma is not None else jnp.zeros(())
+        d = dispatch.resolve("pop_many_grid", lanes=stack.lanes)
         stack, syms = _active_programs()["pop_grid"][self.donate](
             stack, mu=mu, sigma=sigma, kind=self.kind, steps=self.n,
-            lat_bits=self.bits, precision=self.precision)
+            lat_bits=self.bits, precision=self.precision, backend=d)
         return stack, syms.T.astype(self.out_dtype)
 
 
@@ -247,7 +305,8 @@ class _TableRepeat(Codec):
 
     ``tables``: uint32[n, lanes, A+1] per-position cumulative starts in
     natural order (built eagerly at lowering time - canonical bits);
-    one dynamic multi-step kernel call each way.
+    one dynamic multi-step program call each way, starts gathered
+    in-jit (integer gather - see ``_push_table_body``).
     """
 
     tables: jnp.ndarray
@@ -256,17 +315,18 @@ class _TableRepeat(Codec):
     donate: bool = True
 
     def push(self, stack: ans.ANSStack, x: jnp.ndarray) -> ans.ANSStack:
-        sym = x.astype(jnp.int32).T[..., None]            # [n, lanes, 1]
-        start = jnp.take_along_axis(self.tables, sym, axis=2)[..., 0]
-        nxt = jnp.take_along_axis(self.tables, sym + 1, axis=2)[..., 0]
-        return _active_programs()["push"][self.donate](
-            stack, start[::-1].astype(jnp.uint32),
-            (nxt - start)[::-1].astype(jnp.uint32),
-            precision=self.precision)
+        symT = x.astype(jnp.int32).T                      # [n, lanes]
+        d = dispatch.resolve("push_many_table", lanes=stack.lanes,
+                             table_size=self.tables.shape[-1] - 1)
+        return _active_programs()["push_table"][self.donate](
+            stack, self.tables, symT, precision=self.precision,
+            backend=d)
 
     def pop(self, stack: ans.ANSStack):
+        d = dispatch.resolve("pop_many_dyn", lanes=stack.lanes,
+                             table_size=self.tables.shape[-1] - 1)
         stack, syms = _active_programs()["pop_dyn"][self.donate](
-            stack, self.tables, precision=self.precision)
+            stack, self.tables, precision=self.precision, backend=d)
         return stack, syms.T.astype(self.out_dtype)
 
 
@@ -285,32 +345,34 @@ class _TableRepeat(Codec):
 # disappears entirely.
 
 def _traced_push_uniform(stack: ans.ANSStack, idxT: jnp.ndarray,
-                         bits: int, precision: int) -> ans.ANSStack:
+                         bits: int, precision: int,
+                         backend=None) -> ans.ANSStack:
     shift = precision - bits
     start = idxT.astype(jnp.uint32) << shift
     freq = jnp.full_like(start, jnp.uint32(1 << shift))
     return ans_ops.push_many(stack, start[::-1], freq[::-1],
-                             precision=precision)
+                             precision=precision, backend=backend)
 
 
 def _traced_push_gaussian(stack: ans.ANSStack, idxT: jnp.ndarray,
                           muT: jnp.ndarray, sigmaT: jnp.ndarray,
-                          bits: int, precision: int) -> ans.ANSStack:
+                          bits: int, precision: int,
+                          backend=None) -> ans.ANSStack:
     f = discretize.posterior_starts_fn(muT, sigmaT, bits, precision)
     start = f(idxT)
     freq = f(idxT + 1) - start
     return ans_ops.push_many(stack, start[::-1], freq[::-1],
-                             precision=precision)
+                             precision=precision, backend=backend)
 
 
 def _fp_push(stack: ans.ANSStack, fx: "Q.FixedPointFn", ctx: Any,
-             sym: jnp.ndarray) -> ans.ANSStack:
+             sym: jnp.ndarray, backend=None) -> ans.ANSStack:
     """Push ``sym`` under the codec ``fx`` parameterizes by ``ctx``."""
     flat = sym.reshape(sym.shape[0], -1).astype(jnp.int32)
     if fx.family == "gaussian":
         mu, sigma = fx.params(ctx)
         return _traced_push_gaussian(stack, flat.T, mu.T, sigma.T,
-                                     fx.bits, fx.precision)
+                                     fx.bits, fx.precision, backend)
     f1 = fx.params(ctx).T.astype(jnp.uint32)          # [n, lanes]
     total = jnp.uint32(1 << fx.precision)
     f0 = total - f1
@@ -318,17 +380,17 @@ def _fp_push(stack: ans.ANSStack, fx: "Q.FixedPointFn", ctx: Any,
     start = jnp.where(is1, f0, jnp.uint32(0))
     freq = jnp.where(is1, f1, f0)
     return ans_ops.push_many(stack, start[::-1], freq[::-1],
-                             precision=fx.precision)
+                             precision=fx.precision, backend=backend)
 
 
 def _fp_pop(stack: ans.ANSStack, fx: "Q.FixedPointFn",
-            ctx: Any) -> tuple:
+            ctx: Any, backend=None) -> tuple:
     """Pop a symbol under the codec ``fx`` parameterizes by ``ctx``."""
     if fx.family == "gaussian":
         mu, sigma = fx.params(ctx)
         stack, symT = ans_ops.pop_many_grid(
             stack, "gaussian", mu.T, sigma.T, fx.n, fx.bits,
-            precision=fx.precision)
+            precision=fx.precision, backend=backend)
     else:
         f1 = fx.params(ctx).T.astype(jnp.uint32)      # [n, lanes]
         total = jnp.uint32(1 << fx.precision)
@@ -336,7 +398,8 @@ def _fp_pop(stack: ans.ANSStack, fx: "Q.FixedPointFn",
             [jnp.zeros_like(f1), total - f1, jnp.full_like(f1, total)],
             axis=-1)
         stack, symT = ans_ops.pop_many_dyn(stack, tables,
-                                           precision=fx.precision)
+                                           precision=fx.precision,
+                                           backend=backend)
     sym = symT.T
     if fx.shape:
         sym = sym.reshape((sym.shape[0],) + tuple(fx.shape))
@@ -357,37 +420,43 @@ class _FusedBBANS(Codec):
                  donate: bool = True):
         n_lat = posterior.n
 
-        def push_body(stack, s):
+        def push_body(stack, s, backend=None):
             mu, sigma = posterior.params(s)
             stack, yT = ans_ops.pop_many_grid(
                 stack, "gaussian", mu.T, sigma.T, n_lat, posterior.bits,
-                precision=posterior.precision)
-            stack = _fp_push(stack, likelihood, yT.T, s)
+                precision=posterior.precision, backend=backend)
+            stack = _fp_push(stack, likelihood, yT.T, s, backend)
             return _traced_push_uniform(stack, yT, prior_bits,
-                                        prior_precision)
+                                        prior_precision, backend)
 
-        def pop_body(stack):
+        def pop_body(stack, backend=None):
             z = jnp.zeros(())
             stack, yT = ans_ops.pop_many_grid(
                 stack, "uniform", z, z, n_lat, prior_bits,
-                precision=prior_precision)
-            stack, s = _fp_pop(stack, likelihood, yT.T)
+                precision=prior_precision, backend=backend)
+            stack, s = _fp_pop(stack, likelihood, yT.T, backend)
             mu, sigma = posterior.params(s)
             stack = _traced_push_gaussian(stack, yT, mu.T, sigma.T,
                                           posterior.bits,
-                                          posterior.precision)
+                                          posterior.precision, backend)
             return stack, s
 
         self.push_body, self.pop_body = push_body, pop_body
         dn = (0,) if donate else ()
-        self._push = jax.jit(push_body, donate_argnums=dn)
-        self._pop = jax.jit(pop_body, donate_argnums=dn)
+        self._push = jax.jit(push_body, donate_argnums=dn,
+                             static_argnames=("backend",))
+        self._pop = jax.jit(pop_body, donate_argnums=dn,
+                            static_argnames=("backend",))
 
     def push(self, stack: ans.ANSStack, s: Any) -> ans.ANSStack:
-        return self._push(stack, s)
+        return self._push(stack, s,
+                          backend=dispatch.resolve("push_many",
+                                                   lanes=stack.lanes))
 
     def pop(self, stack: ans.ANSStack):
-        return self._pop(stack)
+        return self._pop(stack,
+                         backend=dispatch.resolve("pop_many_grid",
+                                                  lanes=stack.lanes))
 
 
 class _FusedBitSwap(Codec):
@@ -395,43 +464,50 @@ class _FusedBitSwap(Codec):
 
     def __init__(self, prior_bits: int, prior_precision: int, n_lat: int,
                  layers: tuple, donate: bool = True):
-        def push_body(stack, s):
+        def push_body(stack, s, backend=None):
             ctx = s
             for post_f, lik_f in layers:
                 mu, sigma = post_f.params(ctx)
                 stack, zT = ans_ops.pop_many_grid(
                     stack, "gaussian", mu.T, sigma.T, post_f.n,
-                    post_f.bits, precision=post_f.precision)
-                stack = _fp_push(stack, lik_f, zT.T, ctx)
+                    post_f.bits, precision=post_f.precision,
+                    backend=backend)
+                stack = _fp_push(stack, lik_f, zT.T, ctx, backend)
                 ctx = zT.T
             return _traced_push_uniform(stack, ctx.T, prior_bits,
-                                        prior_precision)
+                                        prior_precision, backend)
 
-        def pop_body(stack):
+        def pop_body(stack, backend=None):
             zz = jnp.zeros(())
             stack, zT = ans_ops.pop_many_grid(
                 stack, "uniform", zz, zz, n_lat, prior_bits,
-                precision=prior_precision)
+                precision=prior_precision, backend=backend)
             z = zT.T
             for post_f, lik_f in reversed(layers):
-                stack, ctx = _fp_pop(stack, lik_f, z)
+                stack, ctx = _fp_pop(stack, lik_f, z, backend)
                 mu, sigma = post_f.params(ctx)
                 stack = _traced_push_gaussian(stack, z.T, mu.T, sigma.T,
                                               post_f.bits,
-                                              post_f.precision)
+                                              post_f.precision, backend)
                 z = ctx
             return stack, z
 
         self.push_body, self.pop_body = push_body, pop_body
         dn = (0,) if donate else ()
-        self._push = jax.jit(push_body, donate_argnums=dn)
-        self._pop = jax.jit(pop_body, donate_argnums=dn)
+        self._push = jax.jit(push_body, donate_argnums=dn,
+                             static_argnames=("backend",))
+        self._pop = jax.jit(pop_body, donate_argnums=dn,
+                            static_argnames=("backend",))
 
     def push(self, stack: ans.ANSStack, s: Any) -> ans.ANSStack:
-        return self._push(stack, s)
+        return self._push(stack, s,
+                          backend=dispatch.resolve("push_many",
+                                                   lanes=stack.lanes))
 
     def pop(self, stack: ans.ANSStack):
-        return self._pop(stack)
+        return self._pop(stack,
+                         backend=dispatch.resolve("pop_many_grid",
+                                                  lanes=stack.lanes))
 
 
 class _FusedChained(Codec):
@@ -447,16 +523,16 @@ class _FusedChained(Codec):
         self.n = n
         inner_push, inner_pop = inner.push_body, inner.pop_body
 
-        def push_body(stack, data):
+        def push_body(stack, data, backend=None):
             def body(st, s):
-                return inner_push(st, s), None
+                return inner_push(st, s, backend), None
 
             stack, _ = jax.lax.scan(body, stack, data)
             return stack
 
-        def pop_body(stack):
+        def pop_body(stack, backend=None):
             def body(st, _):
-                st, s = inner_pop(st)
+                st, s = inner_pop(st, backend)
                 return st, s
 
             stack, rev = jax.lax.scan(body, stack, None, length=n)
@@ -464,8 +540,10 @@ class _FusedChained(Codec):
                 lambda x: jnp.flip(x, axis=0), rev)
 
         dn = (0,) if donate else ()
-        self._push = jax.jit(push_body, donate_argnums=dn)
-        self._pop = jax.jit(pop_body, donate_argnums=dn)
+        self._push = jax.jit(push_body, donate_argnums=dn,
+                             static_argnames=("backend",))
+        self._pop = jax.jit(pop_body, donate_argnums=dn,
+                            static_argnames=("backend",))
 
     def push(self, stack: ans.ANSStack, data: Any) -> ans.ANSStack:
         for leaf in jax.tree_util.tree_leaves(data):
@@ -474,10 +552,14 @@ class _FusedChained(Codec):
                     f"Chained(n={self.n}): data leading axis is "
                     f"{leaf.shape[0]} - a mismatch would silently code "
                     "the wrong number of datapoints")
-        return self._push(stack, data)
+        return self._push(stack, data,
+                          backend=dispatch.resolve("push_many",
+                                                   lanes=stack.lanes))
 
     def pop(self, stack: ans.ANSStack):
-        return self._pop(stack)
+        return self._pop(stack,
+                         backend=dispatch.resolve("pop_many_grid",
+                                                  lanes=stack.lanes))
 
 
 def _uniform_prior_spec(prior: Codec, n_lat: int, donate: bool):
@@ -785,6 +867,45 @@ def _lower(codec: Codec, donate: bool = True) -> Codec:
 # the compiled program
 # ---------------------------------------------------------------------------
 
+def _consult_tuning(codec: Codec) -> None:
+    """Walk a lowered tree and warm the kernel tuning cache for its
+    fused nodes. Only active under ``REPRO_AUTOTUNE=1`` (measured
+    autotuning at lowering time is opt-in; without it, cache hits from
+    previous runs still apply via ``dispatch.resolve``)."""
+    if not os.environ.get("REPRO_AUTOTUNE"):
+        return
+    from repro.kernels import tuning
+
+    def walk(c: Any) -> None:
+        if isinstance(c, _GridRepeat):
+            lanes = c.mu.shape[1] if c.mu is not None \
+                and jnp.ndim(c.mu) == 2 else None
+            tuning.ensure("push_many", lanes=lanes, steps=c.n,
+                          lat_bits=c.bits, precision=c.precision)
+            tuning.ensure("pop_many_grid", lanes=lanes, steps=c.n,
+                          lat_bits=c.bits, precision=c.precision)
+        elif isinstance(c, _TableRepeat):
+            lanes, tsize = c.tables.shape[1], c.tables.shape[2] - 1
+            tuning.ensure("push_many_table", lanes=lanes,
+                          table_size=tsize, steps=c.tables.shape[0],
+                          precision=c.precision)
+            tuning.ensure("pop_many_dyn", lanes=lanes, table_size=tsize,
+                          steps=c.tables.shape[0], precision=c.precision)
+        elif isinstance(c, C.Shaped):
+            walk(c.inner)
+        elif isinstance(c, C.Serial):
+            for child in c.codecs:
+                walk(child)
+        elif isinstance(c, C.TreeCodec):
+            for child in jax.tree_util.tree_leaves(
+                    c.tree, is_leaf=lambda x: isinstance(x, Codec)):
+                walk(child)
+        elif isinstance(c, C.Chained):
+            walk(c.inner)
+
+    walk(codec)
+
+
 class CompiledCodec(Codec):
     """A codec lowered into fused kernel-backed execution.
 
@@ -804,6 +925,7 @@ class CompiledCodec(Codec):
     def __init__(self, codec: Codec, *, donate: bool = True):
         self.source = codec
         self.lowered = _lower(codec, donate)
+        _consult_tuning(self.lowered)
 
     def push(self, stack: ans.ANSStack, x: Any) -> ans.ANSStack:
         return self.lowered.push(stack, x)

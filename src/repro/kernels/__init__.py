@@ -1,3 +1,21 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Coder kernels: Pallas/XLA implementations behind one dispatcher.
+
+Subpackages hold one op family each (``ans``, ``bucketize``, ``flash``)
+as kernel.py (Pallas) + xla.py (pure-XLA twin) + ops.py (the dispatched
+public surface) + ref.py (oracle). ``dispatch`` picks the backend per
+(op, platform, workload); ``tuning`` measures candidates once and
+persists the winners. See docs/PERF.md ("Kernel backends").
+"""
+
+from repro.kernels.dispatch import (Decision, available_backends,
+                                    resolve, use_backend)
+from repro.kernels.tuning import autotune_op, tuning_cache_path
+
+__all__ = [
+    "Decision",
+    "available_backends",
+    "resolve",
+    "use_backend",
+    "autotune_op",
+    "tuning_cache_path",
+]

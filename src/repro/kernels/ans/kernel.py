@@ -23,13 +23,13 @@ from jax.experimental import pallas as pl
 LANE_TILE = 128
 
 
-def _check_lanes(lanes: int) -> None:
+def _check_lanes(lanes: int, lane_tile: int = LANE_TILE) -> None:
     # Explicit raise rather than assert: the invariant must survive
-    # python -O (ops.py pads to a LANE_TILE multiple before calling).
-    if lanes % LANE_TILE != 0:
+    # python -O (ops.py pads to a lane_tile multiple before calling).
+    if lanes % lane_tile != 0:
         raise ValueError(
             f"kernels.ans: lanes ({lanes}) must be a multiple of "
-            f"LANE_TILE ({LANE_TILE}); ops.py pads before calling")
+            f"lane_tile ({lane_tile}); ops.py pads before calling")
 
 
 def _push_kernel(head_ref, starts_ref, freqs_ref,
@@ -56,28 +56,29 @@ def _push_kernel(head_ref, starts_ref, freqs_ref,
 
 
 def push_emit(head: jnp.ndarray, starts: jnp.ndarray, freqs: jnp.ndarray,
-              precision: int, interpret: bool = True):
+              precision: int, interpret: bool = True,
+              lane_tile: int = LANE_TILE):
     """head uint32[lanes]; starts/freqs uint32[steps, lanes] ->
     (new_head, chunks uint32[steps, lanes], need uint32[steps, lanes]).
 
-    lanes must be a multiple of LANE_TILE (ops.py pads).
+    lanes must be a multiple of ``lane_tile`` (ops.py pads).
     """
     steps, lanes = starts.shape
-    _check_lanes(lanes)
-    grid = (lanes // LANE_TILE,)
+    _check_lanes(lanes, lane_tile)
+    grid = (lanes // lane_tile,)
     kernel = functools.partial(_push_kernel, precision=precision)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((LANE_TILE,), lambda i: (i,)),
-            pl.BlockSpec((steps, LANE_TILE), lambda i: (0, i)),
-            pl.BlockSpec((steps, LANE_TILE), lambda i: (0, i)),
+            pl.BlockSpec((lane_tile,), lambda i: (i,)),
+            pl.BlockSpec((steps, lane_tile), lambda i: (0, i)),
+            pl.BlockSpec((steps, lane_tile), lambda i: (0, i)),
         ],
         out_specs=[
-            pl.BlockSpec((LANE_TILE,), lambda i: (i,)),
-            pl.BlockSpec((steps, LANE_TILE), lambda i: (0, i)),
-            pl.BlockSpec((steps, LANE_TILE), lambda i: (0, i)),
+            pl.BlockSpec((lane_tile,), lambda i: (i,)),
+            pl.BlockSpec((steps, lane_tile), lambda i: (0, i)),
+            pl.BlockSpec((steps, lane_tile), lambda i: (0, i)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((lanes,), jnp.uint32),
@@ -99,16 +100,17 @@ def _peek_kernel(head_ref, slots_out_ref, *, precision: int):
 
 
 def pop_slots(head: jnp.ndarray, precision: int,
-              interpret: bool = True) -> jnp.ndarray:
+              interpret: bool = True,
+              lane_tile: int = LANE_TILE) -> jnp.ndarray:
     """Vector peek: slot = head mod 2^precision per lane."""
     lanes = head.shape[0]
-    _check_lanes(lanes)
+    _check_lanes(lanes, lane_tile)
     kernel = functools.partial(_peek_kernel, precision=precision)
     out = pl.pallas_call(
         kernel,
-        grid=(lanes // LANE_TILE,),
-        in_specs=[pl.BlockSpec((LANE_TILE,), lambda i: (i,))],
-        out_specs=pl.BlockSpec((1, LANE_TILE), lambda i: (0, i)),
+        grid=(lanes // lane_tile,),
+        in_specs=[pl.BlockSpec((lane_tile,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1, lane_tile), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((1, lanes), jnp.uint32),
         interpret=interpret,
     )(head)
@@ -156,31 +158,31 @@ def _pop_table_kernel(head_ref, table_ref, feed_ref,
 
 def pop_table_emit(head: jnp.ndarray, table: jnp.ndarray,
                    feed: jnp.ndarray, precision: int,
-                   interpret: bool = True):
+                   interpret: bool = True, lane_tile: int = LANE_TILE):
     """head uint32[lanes]; table uint32[lanes, A+1]; feed uint32[steps,
     lanes] -> (new_head, syms uint32[steps, lanes], reads uint32[lanes]).
 
     ``feed[r, l]`` must hold the ``r``-th chunk lane ``l``'s stack would
     serve (top first, clamped at the bottom - see ops.pop_many). lanes
-    must be a multiple of LANE_TILE (ops.py pads).
+    must be a multiple of ``lane_tile`` (ops.py pads).
     """
     steps, lanes = feed.shape
-    _check_lanes(lanes)
-    grid = (lanes // LANE_TILE,)
+    _check_lanes(lanes, lane_tile)
+    grid = (lanes // lane_tile,)
     a1 = table.shape[1]
     kernel = functools.partial(_pop_table_kernel, precision=precision)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((LANE_TILE,), lambda i: (i,)),
-            pl.BlockSpec((LANE_TILE, a1), lambda i: (i, 0)),
-            pl.BlockSpec((steps, LANE_TILE), lambda i: (0, i)),
+            pl.BlockSpec((lane_tile,), lambda i: (i,)),
+            pl.BlockSpec((lane_tile, a1), lambda i: (i, 0)),
+            pl.BlockSpec((steps, lane_tile), lambda i: (0, i)),
         ],
         out_specs=[
-            pl.BlockSpec((LANE_TILE,), lambda i: (i,)),
-            pl.BlockSpec((steps, LANE_TILE), lambda i: (0, i)),
-            pl.BlockSpec((LANE_TILE,), lambda i: (i,)),
+            pl.BlockSpec((lane_tile,), lambda i: (i,)),
+            pl.BlockSpec((steps, lane_tile), lambda i: (0, i)),
+            pl.BlockSpec((lane_tile,), lambda i: (i,)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((lanes,), jnp.uint32),
@@ -230,27 +232,27 @@ def _pop_dyntable_kernel(head_ref, tables_ref, feed_ref,
 
 def pop_dyntable_emit(head: jnp.ndarray, tables: jnp.ndarray,
                       feed: jnp.ndarray, precision: int,
-                      interpret: bool = True):
+                      interpret: bool = True, lane_tile: int = LANE_TILE):
     """head uint32[lanes]; tables uint32[steps, lanes, A+1]; feed
     uint32[steps, lanes] -> (new_head, syms uint32[steps, lanes],
-    reads uint32[lanes]). lanes must be a multiple of LANE_TILE."""
+    reads uint32[lanes]). lanes must be a multiple of ``lane_tile``."""
     steps, lanes = feed.shape
-    _check_lanes(lanes)
-    grid = (lanes // LANE_TILE,)
+    _check_lanes(lanes, lane_tile)
+    grid = (lanes // lane_tile,)
     a1 = tables.shape[2]
     kernel = functools.partial(_pop_dyntable_kernel, precision=precision)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((LANE_TILE,), lambda i: (i,)),
-            pl.BlockSpec((steps, LANE_TILE, a1), lambda i: (0, i, 0)),
-            pl.BlockSpec((steps, LANE_TILE), lambda i: (0, i)),
+            pl.BlockSpec((lane_tile,), lambda i: (i,)),
+            pl.BlockSpec((steps, lane_tile, a1), lambda i: (0, i, 0)),
+            pl.BlockSpec((steps, lane_tile), lambda i: (0, i)),
         ],
         out_specs=[
-            pl.BlockSpec((LANE_TILE,), lambda i: (i,)),
-            pl.BlockSpec((steps, LANE_TILE), lambda i: (0, i)),
-            pl.BlockSpec((LANE_TILE,), lambda i: (i,)),
+            pl.BlockSpec((lane_tile,), lambda i: (i,)),
+            pl.BlockSpec((steps, lane_tile), lambda i: (0, i)),
+            pl.BlockSpec((lane_tile,), lambda i: (i,)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((lanes,), jnp.uint32),
@@ -343,22 +345,23 @@ def _pop_grid_kernel(head_ref, mu_ref, sigma_ref, feed_ref, edges_ref,
 
 def pop_grid_emit(head: jnp.ndarray, mu: jnp.ndarray, sigma: jnp.ndarray,
                   feed: jnp.ndarray, edges: jnp.ndarray, kind: str,
-                  lat_bits: int, precision: int, interpret: bool = True):
+                  lat_bits: int, precision: int, interpret: bool = True,
+                  lane_tile: int = LANE_TILE):
     """head uint32[lanes]; mu/sigma float32[steps, lanes]; feed
     uint32[steps, lanes]; edges float32[K+1] -> (new_head, idx
     uint32[steps, lanes], reads uint32[lanes]).
 
     ``kind`` in {"gaussian", "logistic", "uniform"}; for uniform the
     mu/sigma/edges contents are ignored (pass zero-size-compatible
-    dummies). lanes must be a multiple of LANE_TILE (ops.py pads).
+    dummies). lanes must be a multiple of ``lane_tile`` (ops.py pads).
     """
     if kind not in ("gaussian", "logistic", "uniform"):
         raise ValueError(
             f"kernels.ans: unknown grid kind {kind!r} (expected "
             "'gaussian', 'logistic', or 'uniform')")
     steps, lanes = feed.shape
-    _check_lanes(lanes)
-    grid = (lanes // LANE_TILE,)
+    _check_lanes(lanes, lane_tile)
+    grid = (lanes // lane_tile,)
     e = edges.shape[0]
     kernel = functools.partial(_pop_grid_kernel, kind=kind,
                                lat_bits=lat_bits, precision=precision)
@@ -366,16 +369,16 @@ def pop_grid_emit(head: jnp.ndarray, mu: jnp.ndarray, sigma: jnp.ndarray,
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((LANE_TILE,), lambda i: (i,)),
-            pl.BlockSpec((steps, LANE_TILE), lambda i: (0, i)),
-            pl.BlockSpec((steps, LANE_TILE), lambda i: (0, i)),
-            pl.BlockSpec((steps, LANE_TILE), lambda i: (0, i)),
+            pl.BlockSpec((lane_tile,), lambda i: (i,)),
+            pl.BlockSpec((steps, lane_tile), lambda i: (0, i)),
+            pl.BlockSpec((steps, lane_tile), lambda i: (0, i)),
+            pl.BlockSpec((steps, lane_tile), lambda i: (0, i)),
             pl.BlockSpec((e,), lambda i: (0,)),
         ],
         out_specs=[
-            pl.BlockSpec((LANE_TILE,), lambda i: (i,)),
-            pl.BlockSpec((steps, LANE_TILE), lambda i: (0, i)),
-            pl.BlockSpec((LANE_TILE,), lambda i: (i,)),
+            pl.BlockSpec((lane_tile,), lambda i: (i,)),
+            pl.BlockSpec((steps, lane_tile), lambda i: (0, i)),
+            pl.BlockSpec((lane_tile,), lambda i: (i,)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((lanes,), jnp.uint32),

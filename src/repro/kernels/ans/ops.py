@@ -1,47 +1,63 @@
-"""jit wrappers: Pallas coder kernels + XLA gather/scatter -> ANSStack ops.
+"""Dispatched ANSStack coder ops: one public surface, three backends.
 
 ``push_many`` is the production batch-encode path: the ALU-bound coder
-loop runs in the Pallas kernel (VPU lanes), the irregular per-lane stack
-append becomes one vectorized cumsum + scatter. ``pop_many`` is its
-decode twin: the table search and state updates run in the kernel
-against a pre-gathered chunk feed (each pop reads at most one chunk, in
-stack order, so the feed is a dense [steps, lanes] slice), and the
-per-lane pointer/underflow bookkeeping happens outside. Both are
-bit-exact equivalents of the sequential ``repro.core.ans`` calls,
-validated against the ``ref.py`` oracle; ``repro.stream`` uses them as
-the block coder's fast path.
+loop runs in whichever backend ``kernels.dispatch`` resolves - the
+pure-XLA twin (``xla.py``, the CPU fast path: no lane padding, tunable
+unroll), the compiled Pallas kernel (``kernel.py`` on TPU/GPU), or the
+Pallas interpreter as the last-resort oracle - and the irregular
+per-lane stack append becomes one vectorized cumsum + scatter.
+``pop_many`` is its decode twin: the table search and state updates run
+in the selected backend against a pre-gathered chunk feed (each pop
+reads at most one chunk, in stack order, so the feed is a dense
+[steps, lanes] slice), and the per-lane pointer/underflow bookkeeping
+happens outside. All backends are bit-exact equivalents of the
+sequential ``repro.core.ans`` calls, validated against the ``ref.py``
+oracle and each other (tests/test_dispatch.py); ``repro.stream`` and
+``codecs.compile`` use them as the block coder's fast path.
+
+``backend=`` accepts None (resolve via env / context / tuning cache /
+platform heuristic), a backend name, or a full ``dispatch.Decision``
+(hashable, so compiled programs pass it through ``jax.jit`` statically).
 """
 
 from __future__ import annotations
 
 from typing import Tuple
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import ans
+from repro.kernels import dispatch
 from repro.kernels.ans import kernel as K
+from repro.kernels.ans import xla as X
 
 
 def push_many(stack: ans.ANSStack, starts: jnp.ndarray, freqs: jnp.ndarray,
               precision: int = ans.DEFAULT_PRECISION,
-              interpret: bool = True) -> ans.ANSStack:
+              backend: dispatch.BackendLike = None) -> ans.ANSStack:
     """Push ``steps`` symbols per lane. starts/freqs uint32[steps, lanes].
 
-    Bit-exact equivalent of ``steps`` sequential ``ans.push`` calls.
+    Bit-exact equivalent of ``steps`` sequential ``ans.push`` calls,
+    whatever backend resolves.
     """
     steps, lanes = starts.shape
-    pad = (-lanes) % K.LANE_TILE
-    head = stack.head
-    if pad:
-        head = jnp.pad(head, (0, pad), constant_values=1 << 16)
-        starts = jnp.pad(starts, ((0, 0), (0, pad)))
-        freqs = jnp.pad(freqs, ((0, 0), (0, pad)), constant_values=1)
-    new_head, chunks, need = K.push_emit(head, starts, freqs, precision,
-                                         interpret=interpret)
-    new_head = new_head[:lanes]
-    chunks = chunks[:, :lanes]
-    need = need[:, :lanes]
+    d = dispatch.resolve("push_many", lanes=lanes, backend=backend)
+    if d.backend == "xla":
+        new_head, chunks, need = X.push_emit(stack.head, starts, freqs,
+                                             precision, unroll=d.unroll)
+    else:
+        head = stack.head
+        pad = (-lanes) % d.lane_tile
+        if pad:
+            head = jnp.pad(head, (0, pad), constant_values=1 << 16)
+            starts = jnp.pad(starts, ((0, 0), (0, pad)))
+            freqs = jnp.pad(freqs, ((0, 0), (0, pad)), constant_values=1)
+        new_head, chunks, need = K.push_emit(
+            head, starts, freqs, precision,
+            interpret=(d.backend == "interpret"), lane_tile=d.lane_tile)
+        new_head = new_head[:lanes]
+        chunks = chunks[:, :lanes]
+        need = need[:, :lanes]
     # Compaction: chunk emitted at step t lands at ptr + (#emits before t).
     before = jnp.cumsum(need, axis=0) - need
     pos = stack.ptr[None, :] + before
@@ -59,7 +75,7 @@ def push_many(stack: ans.ANSStack, starts: jnp.ndarray, freqs: jnp.ndarray,
 def push_many_table(stack: ans.ANSStack, starts_table: jnp.ndarray,
                     symbols: jnp.ndarray,
                     precision: int = ans.DEFAULT_PRECISION,
-                    interpret: bool = True) -> ans.ANSStack:
+                    backend: dispatch.BackendLike = None) -> ans.ANSStack:
     """Push ``steps`` symbols per lane from a static per-lane table.
 
     ``starts_table``: uint32[lanes, A+1] cumulative starts (as in
@@ -70,8 +86,12 @@ def push_many_table(stack: ans.ANSStack, starts_table: jnp.ndarray,
     rows = jnp.arange(stack.lanes)[None, :]
     starts = starts_table[rows, sym]
     freqs = starts_table[rows, sym + 1] - starts
+    if backend is None:
+        backend = dispatch.resolve(
+            "push_many_table", lanes=stack.lanes,
+            table_size=starts_table.shape[-1] - 1)
     return push_many(stack, starts.astype(jnp.uint32),
-                     freqs.astype(jnp.uint32), precision, interpret)
+                     freqs.astype(jnp.uint32), precision, backend)
 
 
 def _chunk_feed(stack: ans.ANSStack, steps: int) -> jnp.ndarray:
@@ -106,7 +126,7 @@ def _finish_pop(stack: ans.ANSStack, new_head: jnp.ndarray,
 
 def pop_many(stack: ans.ANSStack, starts_table: jnp.ndarray, steps: int,
              precision: int = ans.DEFAULT_PRECISION,
-             interpret: bool = True
+             backend: dispatch.BackendLike = None
              ) -> Tuple[ans.ANSStack, jnp.ndarray]:
     """Pop ``steps`` symbols per lane from a static per-lane table.
 
@@ -117,21 +137,30 @@ def pop_many(stack: ans.ANSStack, starts_table: jnp.ndarray, steps: int,
     in pop order.
     """
     lanes = stack.lanes
+    d = dispatch.resolve("pop_many", lanes=lanes,
+                         table_size=starts_table.shape[-1] - 1,
+                         backend=backend)
     feed = _chunk_feed(stack, steps)
     head, table = stack.head, starts_table.astype(jnp.uint32)
-    pad = (-lanes) % K.LANE_TILE
-    if pad:
-        head = jnp.pad(head, (0, pad), constant_values=1 << 16)
-        table = jnp.pad(table, ((0, pad), (0, 0)))
-        feed = jnp.pad(feed, ((0, 0), (0, pad)))
-    new_head, syms, reads = K.pop_table_emit(head, table, feed, precision,
-                                             interpret=interpret)
+    if d.backend == "xla":
+        new_head, syms, reads = X.pop_table_emit(head, table, feed,
+                                                 precision,
+                                                 unroll=d.unroll)
+    else:
+        pad = (-lanes) % d.lane_tile
+        if pad:
+            head = jnp.pad(head, (0, pad), constant_values=1 << 16)
+            table = jnp.pad(table, ((0, pad), (0, 0)))
+            feed = jnp.pad(feed, ((0, 0), (0, pad)))
+        new_head, syms, reads = K.pop_table_emit(
+            head, table, feed, precision,
+            interpret=(d.backend == "interpret"), lane_tile=d.lane_tile)
     return _finish_pop(stack, new_head, syms, reads)
 
 
 def pop_many_dyn(stack: ans.ANSStack, tables: jnp.ndarray,
                  precision: int = ans.DEFAULT_PRECISION,
-                 interpret: bool = True
+                 backend: dispatch.BackendLike = None
                  ) -> Tuple[ans.ANSStack, jnp.ndarray]:
     """Pop ``steps`` symbols per lane from *per-step* dynamic tables.
 
@@ -142,23 +171,30 @@ def pop_many_dyn(stack: ans.ANSStack, tables: jnp.ndarray,
     lanes])`` in pop order.
     """
     steps, lanes = tables.shape[0], stack.lanes
+    d = dispatch.resolve("pop_many_dyn", lanes=lanes,
+                         table_size=tables.shape[-1] - 1, backend=backend)
     feed = _chunk_feed(stack, steps)
     head, tables = stack.head, tables.astype(jnp.uint32)
-    pad = (-lanes) % K.LANE_TILE
-    if pad:
-        head = jnp.pad(head, (0, pad), constant_values=1 << 16)
-        tables = jnp.pad(tables, ((0, 0), (0, pad), (0, 0)))
-        feed = jnp.pad(feed, ((0, 0), (0, pad)))
-    new_head, syms, reads = K.pop_dyntable_emit(head, tables, feed,
-                                                precision,
-                                                interpret=interpret)
+    if d.backend == "xla":
+        new_head, syms, reads = X.pop_dyntable_emit(head, tables, feed,
+                                                    precision,
+                                                    unroll=d.unroll)
+    else:
+        pad = (-lanes) % d.lane_tile
+        if pad:
+            head = jnp.pad(head, (0, pad), constant_values=1 << 16)
+            tables = jnp.pad(tables, ((0, 0), (0, pad), (0, 0)))
+            feed = jnp.pad(feed, ((0, 0), (0, pad)))
+        new_head, syms, reads = K.pop_dyntable_emit(
+            head, tables, feed, precision,
+            interpret=(d.backend == "interpret"), lane_tile=d.lane_tile)
     return _finish_pop(stack, new_head, syms, reads)
 
 
 def pop_many_grid(stack: ans.ANSStack, kind: str, mu: jnp.ndarray,
                   sigma: jnp.ndarray, steps: int, lat_bits: int,
                   precision: int = ans.DEFAULT_PRECISION,
-                  interpret: bool = True
+                  backend: dispatch.BackendLike = None
                   ) -> Tuple[ans.ANSStack, jnp.ndarray]:
     """Fused bucketize+pop over the max-entropy N(0,1) bucket grid.
 
@@ -169,11 +205,12 @@ def pop_many_grid(stack: ans.ANSStack, kind: str, mu: jnp.ndarray,
     pops (``sigma`` carries the scale), ``"uniform"`` vs
     ``discretize.pop_prior`` (mu/sigma ignored; pass zeros). The CDF
     bisection of ``kernels/bucketize`` runs inside the pop renorm chain
-    - one kernel call for the whole [steps, lanes] grid.
+    - one program for the whole [steps, lanes] grid.
     """
     from repro.kernels.bucketize import kernel as BK
 
     lanes = stack.lanes
+    d = dispatch.resolve("pop_many_grid", lanes=lanes, backend=backend)
     feed = _chunk_feed(stack, steps)
     head = stack.head
     if kind == "uniform":
@@ -184,13 +221,19 @@ def pop_many_grid(stack: ans.ANSStack, kind: str, mu: jnp.ndarray,
         mu = mu.astype(jnp.float32)
         sigma = sigma.astype(jnp.float32)
         edges = BK.edge_table(lat_bits)
-    pad = (-lanes) % K.LANE_TILE
-    if pad:
-        head = jnp.pad(head, (0, pad), constant_values=1 << 16)
-        mu = jnp.pad(mu, ((0, 0), (0, pad)))
-        sigma = jnp.pad(sigma, ((0, 0), (0, pad)), constant_values=1.0)
-        feed = jnp.pad(feed, ((0, 0), (0, pad)))
-    new_head, idx, reads = K.pop_grid_emit(head, mu, sigma, feed, edges,
-                                           kind, lat_bits, precision,
-                                           interpret=interpret)
+    if d.backend == "xla":
+        new_head, idx, reads = X.pop_grid_emit(head, mu, sigma, feed,
+                                               edges, kind, lat_bits,
+                                               precision, unroll=d.unroll)
+    else:
+        pad = (-lanes) % d.lane_tile
+        if pad:
+            head = jnp.pad(head, (0, pad), constant_values=1 << 16)
+            mu = jnp.pad(mu, ((0, 0), (0, pad)))
+            sigma = jnp.pad(sigma, ((0, 0), (0, pad)),
+                            constant_values=1.0)
+            feed = jnp.pad(feed, ((0, 0), (0, pad)))
+        new_head, idx, reads = K.pop_grid_emit(
+            head, mu, sigma, feed, edges, kind, lat_bits, precision,
+            interpret=(d.backend == "interpret"), lane_tile=d.lane_tile)
     return _finish_pop(stack, new_head, idx, reads)

@@ -67,22 +67,23 @@ def _bucketize_kernel(slot_ref, mu_ref, sigma_ref, edges_ref,
 
 
 def bucketize(slot: jnp.ndarray, mu: jnp.ndarray, sigma: jnp.ndarray,
-              lat_bits: int, precision: int, interpret: bool = True):
+              lat_bits: int, precision: int, interpret: bool = True,
+              lane_tile: int = LANE_TILE):
     """uint32[lanes], f32[lanes], f32[lanes] -> (idx i32, start u32,
-    freq u32). lanes must be a multiple of LANE_TILE (ops.py pads)."""
+    freq u32). lanes must be a multiple of ``lane_tile`` (ops.py pads)."""
     lanes = slot.shape[0]
-    if lanes % LANE_TILE != 0:
+    if lanes % lane_tile != 0:
         raise ValueError(
             f"kernels.bucketize: lanes ({lanes}) must be a multiple of "
-            f"LANE_TILE ({LANE_TILE}); ops.py pads before calling")
+            f"lane_tile ({lane_tile}); ops.py pads before calling")
     k = 1 << lat_bits
     edges = edge_table(lat_bits)
     kernel = functools.partial(_bucketize_kernel, lat_bits=lat_bits,
                                precision=precision)
-    spec = pl.BlockSpec((LANE_TILE,), lambda i: (i,))
+    spec = pl.BlockSpec((lane_tile,), lambda i: (i,))
     return pl.pallas_call(
         kernel,
-        grid=(lanes // LANE_TILE,),
+        grid=(lanes // lane_tile,),
         in_specs=[spec, spec, spec,
                   pl.BlockSpec((k + 1,), lambda i: (0,))],
         out_specs=[spec, spec, spec],

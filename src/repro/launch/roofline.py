@@ -139,6 +139,23 @@ def load_rows(path: str) -> List[dict]:
             and r.get("workload", "").endswith("fixedpoint")]
 
 
+def resolved_backends(lanes: Optional[int] = None) -> List[dict]:
+    """Which backend each hot coder op resolves to right now.
+
+    One row per op in ``kernels.tuning.OPS`` with the full
+    :class:`~repro.kernels.dispatch.Decision` (backend, lane tile,
+    unroll) under the active env / context / tuning-cache state - the
+    selection the bench rows actually ran under.
+    """
+    from repro.kernels import dispatch, tuning
+    rows = []
+    for op in tuning.OPS:
+        d = dispatch.resolve(op, lanes=lanes)
+        rows.append({"op": op, "backend": d.backend,
+                     "lane_tile": d.lane_tile, "unroll": d.unroll})
+    return rows
+
+
 def analyse(row: dict, platform: str, hw: Optional[int] = None) -> dict:
     """Roofline terms for one fixed-point bench row."""
     peak_ops, peak_bw = PEAKS[platform]
@@ -155,7 +172,15 @@ def analyse(row: dict, platform: str, hw: Optional[int] = None) -> dict:
     compute_peak = peak_ops / ops_per_dp * bytes_per_dp / 1e6
     memory_peak = peak_bw / mem_per_dp * bytes_per_dp / 1e6
     bound = min(compute_peak, memory_peak)
+    # Backend the bench row was measured under: recorded by newer bench
+    # runs; resolved live for older BENCH files (same answer unless the
+    # env/cache changed since the run).
+    backend = row.get("kernel_backend")
+    if backend is None:
+        from repro.kernels import dispatch
+        backend = dispatch.resolve("push_many").backend
     out = {"workload": name, "platform": platform,
+           "kernel_backend": backend,
            "wire_bytes_per_datapoint": bytes_per_dp,
            "int_ops_per_datapoint": ops_per_dp,
            "compute_peak_mb_per_s": compute_peak,
@@ -200,12 +225,16 @@ def main() -> None:
 
     rows = load_rows(args.bench or _default_bench_path())
     table = report(rows, args.platform, args.hw)
-    print("| workload | dir | achieved MB/s/dev | roofline MB/s | "
-          "fraction | dominant |")
-    print("|" + "---|" * 6)
+    print("resolved kernel backends (op -> backend/tile/unroll):")
+    for b in resolved_backends():
+        print(f"  {b['op']}: {b['backend']} "
+              f"(lane_tile={b['lane_tile']}, unroll={b['unroll']})")
+    print("| workload | backend | dir | achieved MB/s/dev | "
+          "roofline MB/s | fraction | dominant |")
+    print("|" + "---|" * 7)
     for r in table:
         for d in ("enc", "dec"):
-            print(f"| {r['workload']} | {d} | "
+            print(f"| {r['workload']} | {r['kernel_backend']} | {d} | "
                   f"{r[f'{d}_achieved_mb_per_s']:.3f} | "
                   f"{r['roofline_mb_per_s']:.1f} | "
                   f"{r[f'{d}_fraction_of_roofline']:.2e} | "

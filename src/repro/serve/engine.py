@@ -23,6 +23,7 @@ Three services live here:
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import itertools
@@ -36,6 +37,7 @@ import jax.numpy as jnp
 from repro import codecs, stream
 from repro.core import ans, lm_codec
 from repro.core.codec import FnCodec
+from repro.kernels import dispatch
 from repro.models import transformer
 
 
@@ -153,9 +155,17 @@ class CodecEngine:
     def __init__(self, make_codec, *, seed: Optional[int] = 0,
                  init_chunks: int = 32, max_codecs: int = 32,
                  compile: bool = False, verify: bool = True,
-                 max_inflight_lanes: Optional[int] = None):
+                 max_inflight_lanes: Optional[int] = None,
+                 kernel_backend: Optional[str] = None):
         if max_codecs < 1:
             raise ValueError("CodecEngine: max_codecs must be >= 1")
+        # Pin every request to one coder backend (None = auto-dispatch:
+        # env / tuning cache / platform heuristic picks the fastest
+        # bit-exact kernel per op).  Validated eagerly so a typo fails
+        # at construction, not mid-request.
+        if kernel_backend is not None:
+            dispatch.Decision(backend=kernel_backend)
+        self._kernel_backend = kernel_backend
         self._make_codec = make_codec
         self._codecs: "OrderedDict[Tuple[int, ...], Any]" = OrderedDict()
         # (shape, n) -> compiled Chained program; evicted with its shape.
@@ -236,20 +246,33 @@ class CodecEngine:
         leaf = jax.tree_util.tree_leaves(data)[0]
         return tuple(leaf.shape[2:])  # [n, lanes, *shape]
 
+    def _backend_ctx(self):
+        """Kernel-backend pin for one request (no-op when unset).
+
+        Fused coder programs resolve their ``dispatch.Decision`` at
+        call time, so the pin steers even codecs compiled before the
+        engine was built - at the cost of one retrace per distinct
+        decision."""
+        if self._kernel_backend is None:
+            return contextlib.nullcontext()
+        return dispatch.use_backend(self._kernel_backend)
+
     def compress(self, data, **kwargs) -> bytes:
         """One-shot compress of ``[n, lanes, *shape]`` data to a BBX1
         blob (``codecs.compress`` semantics: grow-and-retry, never a
         corrupt blob)."""
         leaf = jax.tree_util.tree_leaves(data)[0]
         n, lanes = leaf.shape[0], leaf.shape[1]
-        codec = self._chained_for(self._shape_of(data), n)
-        kwargs.setdefault("seed", self._seed)
-        kwargs.setdefault("init_chunks", self._init_chunks)
-        return codecs.compress(codec, data, lanes=lanes, **kwargs)
+        with self._backend_ctx():
+            codec = self._chained_for(self._shape_of(data), n)
+            kwargs.setdefault("seed", self._seed)
+            kwargs.setdefault("init_chunks", self._init_chunks)
+            return codecs.compress(codec, data, lanes=lanes, **kwargs)
 
     def decompress(self, blob: bytes, n: int, shape: Sequence[int]):
         """Decode a ``compress`` blob of ``n`` datapoints of ``shape``."""
-        return codecs.decompress(self._chained_for(shape, n), blob)
+        with self._backend_ctx():
+            return codecs.decompress(self._chained_for(shape, n), blob)
 
     def stream_encoder(self, shape: Sequence[int], *, lanes: int,
                        block_symbols: int = 8,
@@ -287,15 +310,17 @@ class CodecEngine:
         independently decodable as they fill (mid-stream resume via
         ``stream.decode_from_offset``)."""
         leaf = jax.tree_util.tree_leaves(data)[0]
-        enc = self.stream_encoder(self._shape_of(data),
-                                  lanes=leaf.shape[1],
-                                  block_symbols=block_symbols, **kwargs)
-        return enc.write(data) + enc.flush()
+        with self._backend_ctx():
+            enc = self.stream_encoder(self._shape_of(data),
+                                      lanes=leaf.shape[1],
+                                      block_symbols=block_symbols, **kwargs)
+            return enc.write(data) + enc.flush()
 
     def decompress_stream(self, blob: bytes, shape: Sequence[int]):
         """Decode a ``compress_stream`` blob back to [n, lanes, *shape]."""
-        return stream.decode_stream(self.codec_for(shape), blob,
-                                    compile=self._compile)
+        with self._backend_ctx():
+            return stream.decode_stream(self.codec_for(shape), blob,
+                                        compile=self._compile)
 
 
 class ShardedCodecEngine:
@@ -331,7 +356,8 @@ class ShardedCodecEngine:
                  n_shards: Optional[int] = None, seed: Optional[int] = 0,
                  init_chunks: int = 32, max_codecs: int = 32,
                  compile: bool = True, verify: bool = True,
-                 max_inflight_lanes: Optional[int] = None):
+                 max_inflight_lanes: Optional[int] = None,
+                 kernel_backend: Optional[str] = None):
         from repro.sharding import api as shard_api
         self._shard_api = shard_api
         self.mesh = mesh if mesh is not None \
@@ -345,7 +371,8 @@ class ShardedCodecEngine:
                                   init_chunks=init_chunks,
                                   max_codecs=max_codecs, compile=compile,
                                   verify=verify,
-                                  max_inflight_lanes=max_inflight_lanes)
+                                  max_inflight_lanes=max_inflight_lanes,
+                                  kernel_backend=kernel_backend)
         self._seed = seed
         self._init_chunks = init_chunks
         self._compile = compile
@@ -407,28 +434,31 @@ class ShardedCodecEngine:
         chunks) into a BBX3 corpus: ``n_shards`` independently
         decodable per-device BBX2 segments plus an index."""
         from repro import shard_codec
-        first, data = shard_codec.peek_chunks(data)
-        codec = self._inner.codec_for(self._inner._shape_of(first))
-        kwargs.setdefault("seed", self._seed)
-        kwargs.setdefault("init_chunks", self._init_chunks)
-        kwargs.setdefault("compile", self._compile)
-        return shard_codec.compress_dataset(
-            codec, data, n_shards=self.n_shards,
-            block_symbols=block_symbols, **kwargs)
+        with self._inner._backend_ctx():
+            first, data = shard_codec.peek_chunks(data)
+            codec = self._inner.codec_for(self._inner._shape_of(first))
+            kwargs.setdefault("seed", self._seed)
+            kwargs.setdefault("init_chunks", self._init_chunks)
+            kwargs.setdefault("compile", self._compile)
+            return shard_codec.compress_dataset(
+                codec, data, n_shards=self.n_shards,
+                block_symbols=block_symbols, **kwargs)
 
     def decompress_dataset(self, blob: bytes, shape: Sequence[int]):
         """Decode a whole BBX3 corpus back to ``[n, lanes, *shape]``."""
         from repro import shard_codec
-        return shard_codec.decompress_dataset(
-            self._inner.codec_for(shape), blob, compile=self._compile)
+        with self._inner._backend_ctx():
+            return shard_codec.decompress_dataset(
+                self._inner.codec_for(shape), blob, compile=self._compile)
 
     def decompress_shard(self, blob: bytes, shard: int,
                          shape: Sequence[int]):
         """Decode ONE shard's segment - the distributed-decode unit."""
         from repro import shard_codec
-        return shard_codec.decompress_shard(
-            self._inner.codec_for(shape), blob, shard,
-            compile=self._compile)
+        with self._inner._backend_ctx():
+            return shard_codec.decompress_shard(
+                self._inner.codec_for(shape), blob, shard,
+                compile=self._compile)
 
 
 class Engine:

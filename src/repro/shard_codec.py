@@ -39,6 +39,7 @@ a trained VAE/HVAE, Table-1 comparison vs gzip/bz2/PNG-proxy) is
 
 from __future__ import annotations
 
+import contextlib
 import itertools
 from typing import Any, Iterable, List, Optional, Sequence, Tuple
 
@@ -48,6 +49,7 @@ import jax.numpy as jnp
 from repro import stream
 from repro.core import ans
 from repro.core.codec import Codec
+from repro.kernels import dispatch
 from repro.stream import format as fmt
 
 __all__ = [
@@ -139,11 +141,21 @@ def peek_chunks(data: Any) -> Tuple[Any, Iterable[Any]]:
     return data, [data]
 
 
+def _backend_ctx(kernel_backend: Optional[str]):
+    """``dispatch.use_backend`` pin for one corpus pass (no-op when
+    ``None``: each coder op auto-resolves via the tuning cache /
+    platform heuristic - wire bytes are the same either way)."""
+    if kernel_backend is None:
+        return contextlib.nullcontext()
+    return dispatch.use_backend(kernel_backend)
+
+
 def compress_dataset(codec: Codec, data: Any, *, n_shards: int,
                      block_symbols: int = 8,
                      seed: Optional[int] = 0, init_chunks: int = 32,
                      precision: int = ans.DEFAULT_PRECISION,
                      devices: Optional[Sequence[Any]] = None,
+                     kernel_backend: Optional[str] = None,
                      **encoder_kwargs) -> bytes:
     """Compress a dataset to one BBX3 corpus blob, lane-parallel.
 
@@ -177,19 +189,20 @@ def compress_dataset(codec: Codec, data: Any, *, n_shards: int,
     if len(devs) != n_shards:
         raise ValueError(f"shard_codec: got {len(devs)} devices for "
                          f"{n_shards} shards")
-    encoders = [stream.StreamEncoder(
-        codec, lanes=lanes // n_shards, block_symbols=block_symbols,
-        seed=None if seed is None else seed + s,
-        init_chunks=init_chunks, precision=precision,
-        **encoder_kwargs) for s in range(n_shards)]
-    segments = [bytearray() for _ in range(n_shards)]
-    for chunk in chunks:
-        for s, shard in enumerate(split_lane_tree(chunk, n_shards)):
-            placed = jax.tree_util.tree_map(
-                lambda a: jax.device_put(a, devs[s]), shard)
-            segments[s].extend(encoders[s].write(placed))
-    for s, enc in enumerate(encoders):
-        segments[s].extend(enc.flush())
+    with _backend_ctx(kernel_backend):
+        encoders = [stream.StreamEncoder(
+            codec, lanes=lanes // n_shards, block_symbols=block_symbols,
+            seed=None if seed is None else seed + s,
+            init_chunks=init_chunks, precision=precision,
+            **encoder_kwargs) for s in range(n_shards)]
+        segments = [bytearray() for _ in range(n_shards)]
+        for chunk in chunks:
+            for s, shard in enumerate(split_lane_tree(chunk, n_shards)):
+                placed = jax.tree_util.tree_map(
+                    lambda a: jax.device_put(a, devs[s]), shard)
+                segments[s].extend(encoders[s].write(placed))
+        for s, enc in enumerate(encoders):
+            segments[s].extend(enc.flush())
     return fmt.encode_corpus(
         [bytes(seg) for seg in segments],
         [enc.n_symbols for enc in encoders],
@@ -197,6 +210,7 @@ def compress_dataset(codec: Codec, data: Any, *, n_shards: int,
 
 
 def decompress_shard(codec: Codec, blob: bytes, shard: int,
+                     kernel_backend: Optional[str] = None,
                      **decoder_kwargs) -> Any:
     """Decode ONE shard of a BBX3 corpus - no other shard's bytes are
     touched (the unit of distributed decode).
@@ -205,12 +219,14 @@ def decompress_shard(codec: Codec, blob: bytes, shard: int,
 
         xs3 = decompress_shard(codec, blob, 3)   # [n, lanes_per_shard, ...]
     """
-    return stream.decode_stream(codec, fmt.corpus_segment(blob, shard),
-                                **decoder_kwargs)
+    with _backend_ctx(kernel_backend):
+        return stream.decode_stream(codec, fmt.corpus_segment(blob, shard),
+                                    **decoder_kwargs)
 
 
 def decompress_dataset(codec: Codec, blob: bytes, *,
                        devices: Optional[Sequence[Any]] = None,
+                       kernel_backend: Optional[str] = None,
                        **decoder_kwargs) -> Any:
     """Decode a whole BBX3 corpus back to ``[n, lanes, ...]``,
     bit-exactly, shard by shard (each independently, on its own
@@ -225,11 +241,12 @@ def decompress_dataset(codec: Codec, blob: bytes, *,
     devs = list(devices) if devices is not None \
         else shard_devices(header.n_shards)
     outs = []
-    for s, e in enumerate(entries):
-        seg = blob[e.offset:e.offset + e.length]
-        with jax.default_device(devs[s % len(devs)]):
-            outs.append(stream.decode_stream(codec, seg,
-                                             **decoder_kwargs))
+    with _backend_ctx(kernel_backend):
+        for s, e in enumerate(entries):
+            seg = blob[e.offset:e.offset + e.length]
+            with jax.default_device(devs[s % len(devs)]):
+                outs.append(stream.decode_stream(codec, seg,
+                                                 **decoder_kwargs))
     return merge_lane_tree(outs)
 
 

@@ -146,7 +146,10 @@ class KernelTableBlock(Codec):
 
     Symbols are int[k, lanes] (time-major); push/pop are bit-identical
     to ``BlockChain(Categorical(...), k)`` but run the whole block
-    through one ``push_many_table``/``pop_many`` kernel call.
+    through one ``push_many_table``/``pop_many`` kernel call, on
+    whichever backend ``kernels.dispatch`` resolves (``backend=None``
+    here means auto: env var / ``use_backend`` context / tuning cache /
+    platform heuristic - set it to pin one).
 
     Example::
 
@@ -158,13 +161,16 @@ class KernelTableBlock(Codec):
     table: jnp.ndarray   # uint32[lanes, A+1]
     k: int
     precision: int = ans.DEFAULT_PRECISION
+    backend: Optional[str] = None
 
     def push(self, stack: ans.ANSStack, xs: jnp.ndarray) -> ans.ANSStack:
         return ans_ops.push_many_table(stack, self.table, xs[::-1],
-                                       self.precision)
+                                       self.precision,
+                                       backend=self.backend)
 
     def pop(self, stack: ans.ANSStack) -> Tuple[ans.ANSStack, jnp.ndarray]:
-        return ans_ops.pop_many(stack, self.table, self.k, self.precision)
+        return ans_ops.pop_many(stack, self.table, self.k, self.precision,
+                                backend=self.backend)
 
 
 # The compiler lowers a BlockChain by lowering its inner codec; block

@@ -413,8 +413,8 @@ def test_precision_guard_survives_optimization():
 
 def test_kernel_lane_guard_raises():
     from repro.kernels.ans import kernel as ans_kernel
-    head = jnp.full((3,), 1 << 16, jnp.uint32)   # not a LANE_TILE multiple
-    with pytest.raises(ValueError, match="LANE_TILE"):
+    head = jnp.full((3,), 1 << 16, jnp.uint32)   # not a lane-tile multiple
+    with pytest.raises(ValueError, match="lane_tile"):
         ans_kernel.pop_slots(head, 16)
 
 
@@ -422,8 +422,9 @@ def test_kernel_lane_guard_raises():
 # source lint
 # ---------------------------------------------------------------------------
 
-def lint_rules(src, name="src/repro/core/x.py"):
-    return {f.rule for f in lint_source(src, name)}
+def lint_rules(src, name="src/repro/core/x.py", coder_scope=True):
+    return {f.rule for f in lint_source(src, name,
+                                        coder_scope=coder_scope)}
 
 
 def test_lint_bare_assert():
@@ -469,9 +470,26 @@ def test_lint_allow_comment_escape():
 
 
 def test_lint_scopes_to_coder_dirs():
-    # directories outside the coder scope contribute no files
+    # Files outside the coder dirs ARE walked, but only the
+    # everywhere-rules apply there: model/serving code evaluates floats
+    # and asserts by design, so none of the coder-only rules fire.
     found, n = lint_paths(["src/repro/models"])
-    assert n == 0 and found == []
+    assert n > 0 and found == []
+
+
+def test_lint_pallas_call_site_rule():
+    src = "import jax.experimental.pallas as pl\nout = pl.pallas_call(k)(x)"
+    # Outside repro/kernels the rule fires even in non-coder scope...
+    assert "pallas-call-site" in lint_rules(src, "src/repro/models/m.py")
+    assert lint_rules(src, "src/repro/models/m.py",
+                      coder_scope=False) == {"pallas-call-site"}
+    # ...inside kernels/ it is the one place pallas_call belongs.
+    assert "pallas-call-site" not in lint_rules(
+        src, "src/repro/kernels/ans/kernel.py")
+    # The escape comment suppresses it like every other rule.
+    esc = src.replace("(x)", "(x)  # analysis: allow(pallas-call-site)")
+    assert "pallas-call-site" not in lint_rules(
+        esc, "src/repro/models/m.py")
 
 
 def test_lint_shipped_tree_clean():

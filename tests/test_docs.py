@@ -4,9 +4,9 @@ block in ``docs/API.md``, ``docs/SCALING.md``, ``docs/ANALYSIS.md``,
 namespace), every
 relative markdown link/anchor in README.md + docs/ resolves, and - the
 coverage gate - every public name exported by ``repro.codecs``,
-``repro.stream``, ``repro.serve``, ``repro.analysis`` and
-``repro.gateway`` must appear in ``docs/API.md`` (the failure message
-lists the missing names).
+``repro.stream``, ``repro.serve``, ``repro.analysis``,
+``repro.gateway`` and ``repro.kernels`` must appear in ``docs/API.md``
+(the failure message lists the missing names).
 
 This is the tier-1 backing of the CI "docs" step: the API examples are
 the living spec of the public surface, so a signature change that
@@ -26,7 +26,7 @@ DOC_FILES = ["README.md", "docs/ARCHITECTURE.md", "docs/FORMATS.md",
 
 #: modules whose whole ``__all__`` must be documented in docs/API.md.
 COVERED_MODULES = ("repro.codecs", "repro.stream", "repro.serve",
-                   "repro.analysis", "repro.gateway")
+                   "repro.analysis", "repro.gateway", "repro.kernels")
 
 _FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
 _LINK = re.compile(r"(?<!!)\[[^\]]+\]\(([^)\s]+)\)")
