@@ -14,12 +14,22 @@ Wire bytes are asserted byte-identical to the synchronous
 ``CodecEngine.compress_stream`` path for every client - the gateway
 schedules, it never recodes.
 
+``run_cluster`` drives the same ragged clients through a multi-host
+``GatewayCluster`` (one event loop per host) and **kills one host
+mid-run**: the killed host's streams fail over to peers via replicated
+recovery records, every finished wire is still asserted byte-identical
+to the synchronous path, and the row reports cross-host goodput
+against the same single-host synchronous baseline (the ISSUE-10
+acceptance bar is ``goodput_ratio`` >= 0.85 with ``lane_leak`` 0).
+
 Fields ending in ``mb_per_s`` are gated by ``benchmarks/compare.py``
-against the committed baseline (CI's "Gateway smoke" step); latency
-fields are reported but not gated (they are not higher-is-better).
+against the committed baseline (CI's "Gateway smoke" and "Cluster
+smoke" steps); latency fields are reported but not gated (they are not
+higher-is-better).
 
 Usage:
     PYTHONPATH=src python -m benchmarks.loadgen --quick
+    PYTHONPATH=src python -m benchmarks.loadgen --quick --cluster
     PYTHONPATH=src python -m benchmarks.run --only loadgen
 """
 
@@ -139,10 +149,123 @@ def run(clients: int = 6, lanes: int = 2, block_symbols: int = 16,
     }]
 
 
+def run_cluster(hosts: int = 2, clients: int = 6, lanes: int = 2,
+                block_symbols: int = 16, shape=(8, 8),
+                min_blocks: int = 2, max_blocks: int = 5,
+                seed: int = 0, max_workers: int = 1):
+    """Ragged clients across a multi-host cluster with one injected
+    mid-run host kill; returns one ``workload="cluster-stream"`` row."""
+    import tempfile
+
+    from repro.gateway import GatewayCluster, TenantQuota
+
+    rng = np.random.default_rng(seed)
+    budget = max(2, clients // 2) * lanes
+    ref = CodecEngine(_family(), seed=seed, init_chunks=0,
+                      max_inflight_lanes=budget)
+    host_engines = [CodecEngine(_family(), seed=seed, init_chunks=0,
+                                max_inflight_lanes=budget)
+                    for _ in range(hosts)]
+    corpora = []
+    for _ in range(clients):
+        k = int(rng.integers(min_blocks, max_blocks + 1))
+        corpora.append(jnp.asarray(
+            rng.integers(0, 256, (k * block_symbols, lanes, *shape)),
+            jnp.int32))
+    total_bytes = sum(int(d.size) for d in corpora)
+
+    # Warmup every engine (host engines each JIT their own programs)
+    # so the measured window is steady-state scheduling, not compiles.
+    for eng in [ref] + host_engines:
+        eng.compress_stream(corpora[0][:block_symbols],
+                            block_symbols=block_symbols)
+    t0 = time.perf_counter()
+    base_wires = [ref.compress_stream(d, block_symbols=block_symbols)
+                  for d in corpora]
+    base_s = time.perf_counter() - t0
+
+    latencies_ms = []
+    wires = [b""] * clients
+    rejected_retries = 0
+    killed = [None]
+
+    async def client(cluster, i: int):
+        nonlocal rejected_retries
+        data = corpora[i]
+        while True:
+            try:
+                sess = await cluster.open_stream(
+                    shape, lanes=lanes, session_id=f"load-{i}",
+                    tenant=f"tenant-{i % 3}",
+                    block_symbols=block_symbols)
+                break
+            except Backpressure as e:
+                rejected_retries += 1
+                await asyncio.sleep(e.retry_after)
+        wire = b""
+        for start in range(0, int(data.shape[0]), block_symbols):
+            t = time.perf_counter()
+            wire += await sess.write(data[start:start + block_symbols])
+            latencies_ms.append((time.perf_counter() - t) * 1e3)
+            if i == 0 and start == 0 and killed[0] is None:
+                # The injected fault: whichever host serves client 0
+                # dies after its first block; its streams fail over.
+                killed[0] = sess.host
+                await cluster.kill_host(sess.host)
+        wire += await sess.close()
+        wires[i] = wire
+
+    async def drive(tmp: str):
+        cluster = GatewayCluster(
+            host_engines, loop_per_host=True, recovery_root=tmp,
+            queue_depth=clients,
+            default_quota=TenantQuota(max_lanes=budget,
+                                      max_queued=clients),
+            max_workers=max_workers)
+        async with cluster:
+            await asyncio.gather(*(client(cluster, i)
+                                   for i in range(clients)))
+            return cluster.stats()
+
+    t0 = time.perf_counter()
+    with tempfile.TemporaryDirectory() as tmp:
+        stats = asyncio.run(drive(tmp))
+    gw_s = time.perf_counter() - t0
+
+    for i, (w, b) in enumerate(zip(wires, base_wires)):
+        assert w == b, (f"client {i}: cluster wire != synchronous wire "
+                        f"(killed {killed[0]})")
+    assert stats["failovers"] >= 1, "the injected kill failed over "\
+        "no streams"
+
+    goodput = total_bytes / 1e6 / gw_s
+    baseline = total_bytes / 1e6 / base_s
+    return [{
+        "bench": "loadgen", "workload": "cluster-stream",
+        "hosts": hosts, "clients": clients, "lanes": lanes,
+        "blocks": sum(int(d.shape[0]) // block_symbols
+                      for d in corpora),
+        "payload_mb": total_bytes / 1e6,
+        "goodput_mb_per_s": goodput,
+        "baseline_mb_per_s": baseline,
+        "goodput_ratio": goodput / baseline,
+        "p50_ms": _percentile(latencies_ms, 50),
+        "p99_ms": _percentile(latencies_ms, 99),
+        "backpressure_retries": rejected_retries,
+        "failovers": stats["failovers"],
+        "lane_leak": stats["cluster_held_lanes"]
+        + stats["inflight_lanes"],   # must be 0
+    }]
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="fewer clients / smaller corpora (CI smoke)")
+    ap.add_argument("--cluster", action="store_true",
+                    help="also run the multi-host cluster loadgen "
+                         "(one injected host kill)")
+    ap.add_argument("--hosts", type=int, default=2)
     ap.add_argument("--json-dir", default=".",
                     help="directory for BENCH_loadgen.json")
     ap.add_argument("--seed", type=int, default=0)
@@ -153,6 +276,12 @@ def main():
                block_symbols=8 if args.quick else 16,
                max_blocks=3 if args.quick else 5,
                seed=args.seed)
+    if args.cluster:
+        rows += run_cluster(hosts=args.hosts,
+                            clients=4 if args.quick else 6,
+                            block_symbols=8 if args.quick else 16,
+                            max_blocks=3 if args.quick else 5,
+                            seed=args.seed)
     payload = {"bench": "loadgen", "quick": args.quick,
                "elapsed_s": time.time() - t0, "rows": rows}
     path = os.path.join(args.json_dir, "BENCH_loadgen.json")

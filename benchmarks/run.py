@@ -72,6 +72,9 @@ def main() -> None:
             n_images=256 if q else 2048),
         "loadgen": lambda: loadgen.run(
             clients=4 if q else 8, block_symbols=8 if q else 16,
+            max_blocks=3 if q else 5)
+        + loadgen.run_cluster(
+            clients=4 if q else 6, block_symbols=8 if q else 16,
             max_blocks=3 if q else 5),
     }
     # historical/module aliases for --only (e.g. CI's stream_throughput)

@@ -5,14 +5,20 @@ backpressure (reject with ``retry_after``, never unbounded buffering),
 deadline enforcement that retires lanes cleanly, and mid-stream
 checkpoint/resume via durable recovery records. The gateway schedules;
 it never recodes - wire bytes are byte-identical to the synchronous
-engine paths. See docs/SERVING.md.
+engine paths. ``repro.gateway.cluster`` spreads shards and streams
+across N gateways with replicated recovery and health-checked
+failover, same bytes. See docs/SERVING.md.
 """
 
+from repro.gateway.cluster import ClusterHost, ClusterSession, \
+    GatewayCluster, ResumeGap
 from repro.gateway.frontend import DeadlineExceeded, Gateway
 from repro.gateway.quota import AdmissionController, Backpressure, \
-    TenantQuota
-from repro.gateway.recovery import RecoveryRecord, delete_record, \
-    list_sessions, load_record, save_record
+    ClusterAdmission, TenantQuota
+from repro.gateway.recovery import RecoveryRecord, RecoveryStore, \
+    ReplicatedRecoveryStore, as_store, delete_record, list_sessions, \
+    load_record, save_record
+from repro.gateway.router import HostDown, ShardRouter
 from repro.gateway.session import DecodeSession, EncodeSession
 
 __all__ = [
@@ -28,4 +34,14 @@ __all__ = [
     "load_record",
     "delete_record",
     "list_sessions",
+    "RecoveryStore",
+    "ReplicatedRecoveryStore",
+    "as_store",
+    "GatewayCluster",
+    "ClusterSession",
+    "ClusterHost",
+    "ClusterAdmission",
+    "ShardRouter",
+    "HostDown",
+    "ResumeGap",
 ]

@@ -1,0 +1,646 @@
+"""``repro.gateway.cluster`` - multi-host serving over N gateways.
+
+The paper's parallelization claim, taken to its serving conclusion:
+BBX3 shards and BBX2 streams are *independent* coders, so a corpus (or
+a fleet of tenant streams) spreads across N ``Gateway`` instances -
+each with its own engine, admission domain, and (optionally) its own
+event loop - **without changing a single wire byte**. Three invariants
+carry the whole design (proved by ``tests/test_cluster.py`` +
+``tests/chaos.py``):
+
+  * **Placement is derived, never serialized.** Corpus shard ``s``
+    routes to host ``s % n_hosts`` (``stream.format.shard_host``);
+    streams rendezvous-hash their session id (``router.ShardRouter``).
+    Nothing about the assignment enters the blob, so cluster bytes are
+    hex-identical to the single-host gateway - and to the synchronous
+    ``shard_codec.compress_dataset`` - by construction.
+  * **Recovery records are replicated, write-through.** Each host's
+    gateway persists session records through a
+    ``recovery.ReplicatedRecoveryStore``: every checkpoint lands on
+    >= ``replication`` replica directories in the same transaction as
+    the block commit, reads scan all replicas with CRC-checked
+    read-repair. A killed host's streams resume **byte-identically**
+    from any peer.
+  * **Failover re-emits, it never re-codes.** When a host stops
+    answering, an in-flight stream resumes from its replicated record
+    on the rendezvous-next peer; committed blocks are never coded
+    again. If the record and the client's delivered bytes disagree
+    (e.g. a timed-out write whose bytes were discarded), the resume
+    raises ``ResumeGap`` - a clean reject, never silent divergence.
+
+Cluster-wide admission (``quota.ClusterAdmission``) composes above the
+per-host controllers: a tenant's lanes are bounded across the cluster
+*and* on each host.
+
+Example (2 hosts, one corpus, byte-identical to single-host)::
+
+    cluster = GatewayCluster([eng0, eng1], recovery_root=tmp)
+    async with cluster:
+        blob = await cluster.compress_corpus(xs, n_shards=4)
+        assert blob == shard_codec.compress_dataset(codec, xs,
+                                                    n_shards=4)
+
+See docs/SERVING.md ("Cluster") for routing, replication, and failover
+semantics.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import os
+import threading
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.core import ans
+from repro.gateway import recovery
+from repro.gateway.frontend import Gateway
+from repro.gateway.quota import ClusterAdmission, TenantQuota
+from repro.gateway.router import HostDown, ShardRouter
+from repro.stream import format as fmt
+
+__all__ = [
+    "GatewayCluster", "ClusterHost", "ClusterSession",
+    "ShardRouter", "HostDown", "ResumeGap",
+]
+
+
+class ResumeGap(RuntimeError):
+    """A failover/resume found the replicated record pointing at a wire
+    offset different from what the client actually holds (e.g. a block
+    committed by a timed-out write whose bytes were never delivered).
+    The bytes in the gap exist nowhere the client can reach, so the
+    resume is **cleanly rejected** instead of silently producing a
+    divergent blob - the client keeps its valid prefix."""
+
+    def __init__(self, session_id: str, record_offset: int,
+                 delivered: int):
+        super().__init__(
+            f"gateway: session {session_id!r} record is at byte "
+            f"{record_offset} but the client holds {delivered} - "
+            "resume rejected (clean prefix kept, never silent "
+            "divergence)")
+        self.session_id = session_id
+        self.record_offset = record_offset
+        self.delivered = delivered
+
+
+class _LoopThread:
+    """One host's private event loop on a daemon thread ("separate
+    event loops" in the issue's sense): the cluster submits coroutines
+    via ``run_coroutine_threadsafe`` and awaits them from its own
+    loop."""
+
+    def __init__(self, name: str):
+        self._loop = asyncio.new_event_loop()
+        self._thread = threading.Thread(
+            target=self._loop.run_forever, name=f"gateway-host-{name}",
+            daemon=True)
+        self._thread.start()
+
+    def submit(self, coro):
+        return asyncio.wrap_future(
+            asyncio.run_coroutine_threadsafe(coro, self._loop))
+
+    def stop(self) -> None:
+        self._loop.call_soon_threadsafe(self._loop.stop)
+        self._thread.join(timeout=5)
+        if not self._loop.is_running():
+            self._loop.close()
+
+
+class ClusterHost:
+    """One member of the cluster: a name, an engine, a ``Gateway``, and
+    (in ``loop_per_host`` mode) a private event loop. ``call`` is the
+    only way traffic reaches the host; a killed host raises
+    ``HostDown`` from it - "stops answering", deterministically."""
+
+    def __init__(self, name: str, engine: Any, gateway: Gateway,
+                 loop: Optional[_LoopThread] = None):
+        self.name = name
+        self.engine = engine
+        self.gateway = gateway
+        self._loop = loop
+        self.dead = False
+
+    async def call(self, fn):
+        """Run ``fn() -> coroutine`` on this host (its own loop when
+        one exists). Raises ``HostDown`` once the host was killed."""
+        if self.dead:
+            raise HostDown(self.name, "killed")
+        return await self._submit(fn)
+
+    async def _submit(self, fn):
+        # No liveness check: the kill/shutdown paths still need to run
+        # cleanup coroutines on the host's loop.
+        coro = fn()
+        if self._loop is None:
+            return await coro
+        return await self._loop.submit(coro)
+
+    async def ping(self) -> Dict[str, Any]:
+        """Health probe: a trivial round-trip through the host's loop."""
+        async def probe():
+            return self.gateway.stats()
+        return await self.call(lambda: probe())
+
+
+class ClusterSession:
+    """A cluster-routed encode stream: one underlying ``EncodeSession``
+    on whichever host currently serves it, plus the failover logic.
+
+    ``delivered`` tracks the wire bytes this client actually received;
+    on failover the resumed session's ``resumed_at`` must equal it, or
+    the resume is rejected with ``ResumeGap`` (committed blocks are
+    re-emitted from the record only when the client is missing them -
+    never re-coded, never silently duplicated)."""
+
+    def __init__(self, cluster: "GatewayCluster", sess: Any,
+                 host: ClusterHost, tenant: str, lanes: int):
+        self._cluster = cluster
+        self._sess = sess
+        self._host = host
+        self.session_id = sess.session_id
+        self.tenant = tenant
+        self.lanes = lanes
+        self.delivered = int(sess.resumed_at)
+        self.failovers = 0
+        self._released = False
+
+    @property
+    def host(self) -> str:
+        """The host currently serving this stream."""
+        return self._host.name
+
+    @property
+    def closed(self) -> bool:
+        return self._released
+
+    async def write(self, data: Any,
+                    deadline: Optional[float] = None) -> bytes:
+        """Feed datapoints; returns the bytes that became final. A dead
+        host triggers one transparent failover (resume on the
+        rendezvous-next peer from the replicated record), after which
+        the write is re-issued - the data's blocks were never committed
+        on the dead host past the record."""
+        if self._released:
+            raise RuntimeError("gateway: write on a closed cluster "
+                               "session")
+        sess = self._sess
+        try:
+            out = await self._host.call(
+                lambda: sess.write(data, deadline=deadline))
+        except HostDown:
+            await self._failover()
+            sess = self._sess
+            out = await self._host.call(
+                lambda: sess.write(data, deadline=deadline))
+        self.delivered += len(out)
+        return out
+
+    async def close(self, deadline: Optional[float] = None) -> bytes:
+        """Flush tail + trailer (failing over first if the host died),
+        release the cluster-wide lane hold, drop the records."""
+        if self._released:
+            return b""
+        sess = self._sess
+        try:
+            tail = await self._host.call(
+                lambda: sess.close(deadline=deadline))
+        except HostDown:
+            await self._failover()
+            sess = self._sess
+            tail = await self._host.call(
+                lambda: sess.close(deadline=deadline))
+        self.delivered += len(tail)
+        self._release()
+        return tail
+
+    async def reattach(self) -> None:
+        """Re-open the underlying session from its recovery record on a
+        healthy host - the client's path back after a deadline abandon
+        or a host kill. Raises ``ResumeGap`` when the record does not
+        match the delivered bytes (clean reject)."""
+        if self._released:
+            raise RuntimeError("gateway: reattach on a closed cluster "
+                               "session")
+        await self._failover(require_dead=False)
+
+    async def abandon(self) -> None:
+        """Drop the stream without flushing: underlying session
+        abandoned (when its host still answers), records kept,
+        cluster-wide lanes released."""
+        if self._released:
+            return
+        sess = self._sess
+        if not sess.closed and not self._host.dead:
+            async def drop():
+                sess.abandon()
+            await self._host.call(lambda: drop())
+        self._release()
+
+    # -- internals -----------------------------------------------------------
+
+    def _release(self) -> None:
+        if not self._released:
+            self._released = True
+            self._cluster._release_session(self)
+
+    async def _failover(self, require_dead: bool = True) -> None:
+        old = self._host
+        if old.dead or not self._cluster.router.is_healthy(old.name):
+            self._cluster.router.mark_down(old.name)
+            try:
+                peer = self._cluster.router.failover_host(
+                    self.session_id, exclude=old.name)
+            except HostDown:
+                self._release()   # no healthy peer: lanes must not leak
+                raise
+        elif require_dead:
+            raise HostDown(old.name, "failover without a dead host")
+        else:
+            peer = old.name          # reattach on the same, live host
+        host = self._cluster.host(peer)
+        sess = await host.call(
+            lambda: host.gateway.resume_stream(self.session_id,
+                                               tenant=self.tenant))
+        if int(sess.resumed_at) != self.delivered:
+            gap = ResumeGap(self.session_id, int(sess.resumed_at),
+                            self.delivered)
+
+            async def drop():
+                sess.abandon()
+            await host.call(lambda: drop())
+            self._release()
+            raise gap
+        self._host, self._sess = host, sess
+        self.failovers += 1
+        self._cluster.failovers += 1
+
+
+class GatewayCluster:
+    """N ``Gateway`` instances behind one deterministic router.
+
+    ``engines`` is one engine - or one ``serve.EngineHandle`` - per
+    host; handles are resolved *on the host* (its own event loop in
+    ``loop_per_host`` mode), the remote-attach story. ``recovery_root``
+    enables the replicated record store: host ``i`` writes through to
+    ``replication`` replica directories starting at its own
+    (``recovery_root/<host>``), and every host reads (and read-repairs)
+    all of them, so any peer resumes any session.
+
+    Admission composes: ``cluster_default_quota``/``cluster_quotas``
+    bound each tenant's lanes across the whole cluster (reject with
+    ``Backpressure``, no extra queue) *before* the routed host's own
+    ``AdmissionController`` applies its per-host quota + bounded queue.
+
+    Use as an async context manager; ``kill_host`` + ``check_health``
+    are the failure-injection/monitoring surface.
+    """
+
+    def __init__(self, engines: Sequence[Any], *,
+                 host_names: Optional[Sequence[str]] = None,
+                 queue_depth: int = 16,
+                 default_quota: TenantQuota = TenantQuota(),
+                 quotas: Optional[Dict[str, TenantQuota]] = None,
+                 cluster_default_quota: TenantQuota = TenantQuota(
+                     max_lanes=1024, max_queued=0),
+                 cluster_quotas: Optional[Dict[str, TenantQuota]] = None,
+                 recovery_root: Optional[str] = None,
+                 replication: int = 2,
+                 loop_per_host: bool = False,
+                 max_workers: int = 4):
+        engines = list(engines)
+        if not engines:
+            raise ValueError("gateway: cluster needs >= 1 engine")
+        names = ([str(n) for n in host_names] if host_names is not None
+                 else [f"host{i}" for i in range(len(engines))])
+        if len(names) != len(engines):
+            raise ValueError(
+                f"gateway: {len(names)} host names for "
+                f"{len(engines)} engines")
+        self.router = ShardRouter(names)
+        self._engines = engines
+        self._queue_depth = queue_depth
+        self._default_quota = default_quota
+        self._quotas = quotas
+        self._max_workers = max_workers
+        self._recovery_root = recovery_root
+        self._replication = replication
+        self._loop_per_host = loop_per_host
+        self.admission = ClusterAdmission(
+            default_quota=cluster_default_quota, quotas=cluster_quotas)
+        self._hosts: Dict[str, ClusterHost] = {}
+        self._open: Dict[str, ClusterSession] = {}
+        self.failovers = 0
+        self._started = False
+        self._stopped = False
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def _host_store(self, index: int):
+        """Host ``index``'s record store: its own dir first, then the
+        next ``replication - 1`` peers (write window); reads scan every
+        host's dir."""
+        if self._recovery_root is None:
+            return None
+        dirs = [os.path.join(self._recovery_root, name)
+                for name in self.router.hosts]
+        if len(dirs) == 1:
+            return recovery.RecoveryStore(dirs[0])
+        repl = min(self._replication, len(dirs))
+        window = [dirs[(index + k) % len(dirs)] for k in range(repl)]
+        return recovery.ReplicatedRecoveryStore(
+            dirs, min_replicas=repl, write_replicas=window)
+
+    async def start(self) -> "GatewayCluster":
+        """Attach every host: resolve engine handles (on the host's own
+        loop when ``loop_per_host``), build its gateway + replicated
+        store."""
+        if self._started:
+            return self
+        from repro import serve
+        for i, name in enumerate(self.router.hosts):
+            loop = _LoopThread(name) if self._loop_per_host else None
+            spec = self._engines[i]
+
+            async def attach(spec=spec):
+                return (serve.engine_from_handle(spec)
+                        if isinstance(spec, serve.EngineHandle) else spec)
+            engine = (await loop.submit(attach())
+                      if loop is not None else await attach())
+            gw = Gateway(engine, queue_depth=self._queue_depth,
+                         default_quota=self._default_quota,
+                         quotas=self._quotas,
+                         recovery_dir=self._host_store(i),
+                         max_workers=self._max_workers)
+            self._hosts[name] = ClusterHost(name, engine, gw, loop)
+        self._started = True
+        return self
+
+    async def __aenter__(self) -> "GatewayCluster":
+        return await self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    async def stop(self) -> None:
+        """Flush + stop every live host's gateway, stop the loops."""
+        if self._stopped or not self._started:
+            self._stopped = True
+            return
+        for host in self._hosts.values():
+            if not host.dead:
+                await host._submit(host.gateway.stop)
+            if host._loop is not None:
+                host._loop.stop()
+        self._stopped = True
+
+    # -- topology ------------------------------------------------------------
+
+    @property
+    def hosts(self) -> Tuple[str, ...]:
+        return tuple(self.router.hosts)
+
+    def host(self, name: str) -> ClusterHost:
+        if name not in self._hosts:
+            raise KeyError(f"gateway: unknown host {name!r}")
+        return self._hosts[name]
+
+    async def kill_host(self, name: str) -> Tuple[str, ...]:
+        """Kill a host: mark it down, abandon its open sessions (their
+        replicated records survive, current to the last committed
+        block), and make every future ``call`` raise ``HostDown``.
+        Returns the abandoned session ids - each resumes on a peer."""
+        host = self.host(name)
+        self.router.mark_down(name)
+        if host.dead:
+            return ()
+        host.dead = True
+
+        async def drop():
+            return host.gateway.abandon_sessions()
+        return await host._submit(lambda: drop())
+
+    async def check_health(self, timeout: float = 1.0) -> Dict[str, bool]:
+        """Probe every host (``timeout`` seconds each); a host that
+        raises or stops answering is marked down so the router stops
+        placing traffic on it. Returns ``{host: healthy}``."""
+        out: Dict[str, bool] = {}
+        for name, host in self._hosts.items():
+            try:
+                await asyncio.wait_for(host.ping(), timeout)
+            except (HostDown, asyncio.TimeoutError, RuntimeError):
+                self.router.mark_down(name)
+                out[name] = False
+            else:
+                self.router.mark_up(name)
+                out[name] = True
+        return out
+
+    # -- tenant streams ------------------------------------------------------
+
+    async def open_stream(self, shape: Sequence[int], *, lanes: int,
+                          session_id: str, tenant: str = "default",
+                          block_symbols: int = 8,
+                          deadline: Optional[float] = None,
+                          **kwargs) -> ClusterSession:
+        """Open a stream on its rendezvous host. Cluster-wide admission
+        first (``Backpressure`` on the tenant's cluster quota), then
+        the host's own admission - the composed limit."""
+        host_name = self.router.session_host(session_id)
+        return await self._open_on(
+            host_name, shape, lanes=lanes, session_id=session_id,
+            tenant=tenant, block_symbols=block_symbols,
+            deadline=deadline, **kwargs)
+
+    async def _open_on(self, host_name: str, shape: Sequence[int], *,
+                       lanes: int, session_id: str, tenant: str,
+                       block_symbols: int,
+                       deadline: Optional[float] = None,
+                       **kwargs) -> ClusterSession:
+        if session_id in self._open:
+            raise ValueError(
+                f"gateway: session id {session_id!r} already open in "
+                "the cluster")
+        self.admission.acquire(tenant, lanes)
+        host = self.host(host_name)
+        try:
+            sess = await host.call(
+                lambda: host.gateway.open_stream(
+                    tuple(int(s) for s in shape), lanes=lanes,
+                    session_id=session_id, tenant=tenant,
+                    block_symbols=block_symbols, deadline=deadline,
+                    **kwargs))
+        except BaseException:
+            self.admission.release(tenant, lanes)
+            raise
+        cs = ClusterSession(self, sess, host, tenant, lanes)
+        self._open[session_id] = cs
+        return cs
+
+    async def resume_stream(self, session_id: str, *,
+                            tenant: Optional[str] = None
+                            ) -> ClusterSession:
+        """Resume a stream (after a kill or abandon) from its
+        replicated record, on a healthy host. A session still open in
+        the cluster rejects the duplicate resume with ``ValueError`` -
+        two writers on one stream would fork the wire."""
+        if session_id in self._open:
+            raise ValueError(
+                f"gateway: session id {session_id!r} already open in "
+                "the cluster (duplicate resume rejected)")
+        host_name = self.router.session_host(session_id)
+        host = self.host(host_name)
+        sess = await host.call(
+            lambda: host.gateway.resume_stream(session_id,
+                                               tenant=tenant))
+        lanes = int(sess.encoder.lanes)
+        try:
+            self.admission.acquire(sess.tenant, lanes)
+        except BaseException:
+            async def drop():
+                sess.abandon()
+            await host.call(lambda: drop())
+            raise
+        cs = ClusterSession(self, sess, host, sess.tenant, lanes)
+        self._open[session_id] = cs
+        return cs
+
+    def _release_session(self, cs: ClusterSession) -> None:
+        self._open.pop(cs.session_id, None)
+        self.admission.release(cs.tenant, cs.lanes)
+
+    # -- corpora (BBX3 across hosts; bytes == single-host) -------------------
+
+    async def compress_corpus(self, data: Any, *, n_shards: int,
+                              block_symbols: int = 8,
+                              seed: Optional[int] = 0,
+                              init_chunks: int = 32,
+                              precision: int = ans.DEFAULT_PRECISION,
+                              tenant: str = "default",
+                              tag: str = "corpus",
+                              **encoder_kwargs) -> bytes:
+        """Compress ``[n, lanes, ...]`` data (or an iterable of chunks)
+        to one BBX3 corpus, shards spread across hosts by the derived
+        assignment. Shard ``s`` streams through a gateway session on
+        host ``shard_host(s)`` with seed ``seed + s`` - exactly the
+        ``shard_codec.compress_dataset`` recipe - so the blob is
+        **hex-identical** to the single-host (and the synchronous)
+        path, even when a host dies mid-corpus and its shards fail
+        over."""
+        from repro import shard_codec
+        first, chunks = shard_codec.peek_chunks(data)
+        leaf = jax.tree_util.tree_leaves(first)[0]
+        lanes = int(leaf.shape[1])
+        if n_shards < 1 or lanes % n_shards:
+            raise ValueError(
+                f"gateway: {lanes} lanes do not divide into "
+                f"{n_shards} equal shards")
+        shape = tuple(int(s) for s in leaf.shape[2:])
+        # Cluster-level lanes are held per shard session (via _open_on);
+        # the per-host tenant quota must fit the shards a host serves,
+        # or the open queues behind this corpus's own sessions.
+        sessions: List[ClusterSession] = []
+        symbols = [0] * n_shards
+        segments = [bytearray() for _ in range(n_shards)]
+        try:
+            for s in range(n_shards):
+                open_kw = dict(
+                    lanes=lanes // n_shards,
+                    session_id=f"{tag}-shard{s}", tenant=tenant,
+                    block_symbols=block_symbols,
+                    seed=None if seed is None else seed + s,
+                    init_chunks=init_chunks, precision=precision,
+                    **encoder_kwargs)
+                try:
+                    cs = await self._open_on(
+                        self.router.shard_route(s, n_shards), shape,
+                        **open_kw)
+                except HostDown as e:
+                    # The routed host died between routing and open:
+                    # mark it and re-route (bytes are host-blind).
+                    self.router.mark_down(e.host)
+                    cs = await self._open_on(
+                        self.router.shard_route(s, n_shards), shape,
+                        **open_kw)
+                sessions.append(cs)
+            for chunk in chunks:
+                shards = shard_codec.split_lane_tree(chunk, n_shards)
+                outs = await asyncio.gather(
+                    *(cs.write(part)
+                      for cs, part in zip(sessions, shards)))
+                for s, out in enumerate(outs):
+                    segments[s].extend(out)
+                    symbols[s] += int(jax.tree_util.tree_leaves(
+                        shards[s])[0].shape[0])
+            tails = await asyncio.gather(
+                *(cs.close() for cs in sessions))
+            for s, tail in enumerate(tails):
+                segments[s].extend(tail)
+        except BaseException:
+            for cs in sessions:
+                if not cs.closed:
+                    await cs.abandon()
+            raise
+        return fmt.encode_corpus(
+            [bytes(seg) for seg in segments], symbols,
+            lanes_per_shard=lanes // n_shards, precision=precision)
+
+    async def decompress_corpus(self, blob: bytes,
+                                shape: Sequence[int], *,
+                                tenant: str = "default") -> Any:
+        """Decode a BBX3 corpus, each shard on its routed host (down
+        hosts' shards reroute to healthy peers - decode is stateless,
+        bytes unaffected). Bit-exact."""
+        from repro import shard_codec
+        header, entries = fmt.scan_corpus(blob)
+        lanes = header.lanes_per_shard * header.n_shards
+        self.admission.acquire(tenant, lanes)
+        try:
+            async def one(s: int, e) -> Any:
+                seg = blob[e.offset:e.offset + e.length]
+                host = self.host(
+                    self.router.shard_route(s, header.n_shards))
+                try:
+                    return await host.call(
+                        lambda: host.gateway.decompress_stream(
+                            seg, tuple(int(d) for d in shape),
+                            tenant=tenant))
+                except HostDown:
+                    self.router.mark_down(host.name)
+                    peer = self.host(
+                        self.router.shard_route(s, header.n_shards))
+                    return await peer.call(
+                        lambda: peer.gateway.decompress_stream(
+                            seg, tuple(int(d) for d in shape),
+                            tenant=tenant))
+            outs = await asyncio.gather(
+                *(one(s, e) for s, e in enumerate(entries)))
+        finally:
+            self.admission.release(tenant, lanes)
+        return shard_codec.merge_lane_tree(outs)
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def open_sessions(self) -> Tuple[str, ...]:
+        return tuple(sorted(self._open))
+
+    def stats(self) -> Dict[str, Any]:
+        """Cluster admission + router health + per-host gateway stats
+        (``inflight_lanes`` summed: 0 after drain = no leak anywhere)."""
+        out = self.admission.stats()
+        hosts = {name: host.gateway.stats()
+                 for name, host in self._hosts.items() if not host.dead}
+        out.update(
+            hosts=hosts,
+            healthy_hosts=self.router.healthy_hosts(),
+            failovers=self.failovers,
+            open_sessions=len(self._open),
+            cluster_held_lanes=self.admission.held_lanes,
+            inflight_lanes=sum(h["inflight_lanes"]
+                               for h in hosts.values()),
+        )
+        return out

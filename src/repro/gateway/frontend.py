@@ -84,7 +84,11 @@ class Gateway:
                  max_workers: int = 4,
                  clock: Callable[[], float] = time.monotonic):
         self.engine = engine
+        # A directory path or any record store (e.g. the cluster's
+        # ReplicatedRecoveryStore) - sessions and resume go through the
+        # normalized store interface either way.
         self.recovery_dir = recovery_dir
+        self._store = recovery.as_store(recovery_dir)
         self._clock = clock
         self._ctl = AdmissionController(
             engine, queue_depth=queue_depth,
@@ -122,6 +126,23 @@ class Gateway:
         self._stopped = True
         self._executor.shutdown(wait=True)
         return tails
+
+    def abandon_sessions(self) -> Tuple[str, ...]:
+        """Abandon every open session *without* flushing - the
+        host-kill path: lanes are freed, recovery records stay so a
+        peer gateway resumes each stream byte-identically. Encode
+        abandons synchronize with any in-flight write transaction, so
+        the surviving records are never one block stale."""
+        sids = tuple(sorted(self._sessions))
+        for sid in list(self._sessions):
+            sess = self._sessions.get(sid)
+            if sess is None:
+                continue
+            if isinstance(sess, EncodeSession):
+                sess.abandon()
+            else:
+                sess.close()
+        return sids
 
     # -- admission / execution machinery -------------------------------------
 
@@ -342,10 +363,14 @@ class Gateway:
             session_id, tenant, enc,
             execute=self._session_execute(box),
             on_close=lambda s: None,
-            recovery_dir=self.recovery_dir,
+            recovery_dir=self._store,
             meta={"shape": [int(s) for s in shape], "lanes": int(lanes),
                   "block_symbols": int(block_symbols)})
         box[0] = sess
+        if self._store is not None:
+            # Initial block-0 record: the session is resumable on a
+            # peer even if this host dies before its first commit.
+            sess.checkpoint()
         return self._register(sess, tenant, lease)
 
     async def resume_stream(self, session_id: str, *,
@@ -356,9 +381,9 @@ class Gateway:
         record; the continued wire is byte-identical to an
         uninterrupted stream. Bytes before ``sess.resumed_at`` were
         already delivered."""
-        if self.recovery_dir is None:
+        if self._store is None:
             raise RuntimeError("gateway: no recovery_dir configured")
-        record = recovery.load_record(self.recovery_dir, session_id)
+        record = self._store.load(session_id)
         if record is None:
             raise KeyError(
                 f"gateway: no recovery record for {session_id!r}")
@@ -388,7 +413,7 @@ class Gateway:
             session_id, tenant, enc,
             execute=self._session_execute(box),
             on_close=lambda s: None,
-            recovery_dir=self.recovery_dir, meta=dict(record.meta))
+            recovery_dir=self._store, meta=dict(record.meta))
         box[0] = sess
         return self._register(sess, tenant, lease)
 
@@ -421,7 +446,7 @@ class Gateway:
             session_id, tenant, blob, dec,
             execute=self._session_execute(box),
             on_close=lambda s: None,
-            recovery_dir=self.recovery_dir, start_block=start_block,
+            recovery_dir=self._store, start_block=start_block,
             meta={"shape": [int(s) for s in shape]})
         box[0] = sess
         return self._register(sess, tenant, lease)
@@ -431,9 +456,9 @@ class Gateway:
                             deadline: Optional[float] = None
                             ) -> DecodeSession:
         """Reopen a decode session at its first unacknowledged block."""
-        if self.recovery_dir is None:
+        if self._store is None:
             raise RuntimeError("gateway: no recovery_dir configured")
-        record = recovery.load_record(self.recovery_dir, session_id)
+        record = self._store.load(session_id)
         if record is None:
             raise KeyError(
                 f"gateway: no recovery record for {session_id!r}")

@@ -173,3 +173,80 @@ class AdmissionController:
                 "tenant_queued": {t: n for t, n in
                                   self._tenant_queued.items() if n},
             }
+
+
+class ClusterAdmission:
+    """Cluster-wide per-tenant lane accounting, composed *above* each
+    host's ``AdmissionController``.
+
+    A tenant's lanes are bounded twice: across the whole cluster by the
+    quota here (``TenantQuota.max_lanes`` read as a cluster total), and
+    on each host by that gateway's own controller - so one tenant can
+    neither monopolize the cluster nor pile onto a single host past its
+    local budget. ``acquire`` raises ``Backpressure`` immediately when
+    the cluster total would be exceeded (no cluster-level queue: the
+    per-host bounded queues are the only buffering tier).
+
+    Example::
+
+        adm = ClusterAdmission(default_quota=TenantQuota(max_lanes=8))
+        adm.acquire("tenant-a", 4)      # cluster-wide hold
+        ...                             # then the host gateway admits
+        adm.release("tenant-a", 4)
+    """
+
+    def __init__(self, *, default_quota: TenantQuota = TenantQuota(),
+                 quotas: Optional[Dict[str, TenantQuota]] = None,
+                 retry_after: Callable[[], float] = lambda: 0.05):
+        self._default_quota = default_quota
+        self._quotas = dict(quotas or {})
+        self._retry_after = retry_after
+        self._lock = threading.Lock()
+        self._tenant_lanes: Dict[str, int] = {}
+        self.admitted = 0
+        self.rejected = 0
+
+    def quota_for(self, tenant: str) -> TenantQuota:
+        return self._quotas.get(tenant, self._default_quota)
+
+    def acquire(self, tenant: str, lanes: int) -> None:
+        """Hold ``lanes`` cluster-wide for ``tenant`` or raise
+        ``Backpressure`` (the cluster quota is a hard reject, not a
+        queue). Never blocks."""
+        if lanes < 1:
+            raise ValueError("gateway: ClusterAdmission needs lanes >= 1")
+        quota = self.quota_for(tenant)
+        with self._lock:
+            held = self._tenant_lanes.get(tenant, 0)
+            if held + lanes > quota.max_lanes:
+                self.rejected += 1
+                raise Backpressure(
+                    f"gateway: tenant {tenant!r} over cluster lane "
+                    f"quota ({held}+{lanes} > {quota.max_lanes})",
+                    self._retry_after())
+            self._tenant_lanes[tenant] = held + lanes
+            self.admitted += 1
+
+    def release(self, tenant: str, lanes: int) -> None:
+        with self._lock:
+            held = self._tenant_lanes.get(tenant, 0)
+            if held < lanes:
+                raise ValueError(
+                    f"gateway: tenant {tenant!r} releasing {lanes} "
+                    f"cluster lanes but holds {held}")
+            self._tenant_lanes[tenant] = held - lanes
+
+    @property
+    def held_lanes(self) -> int:
+        """Total lanes held cluster-wide (0 = no leak)."""
+        with self._lock:
+            return sum(self._tenant_lanes.values())
+
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            return {
+                "cluster_admitted": self.admitted,
+                "cluster_rejected": self.rejected,
+                "cluster_tenant_lanes": {
+                    t: n for t, n in self._tenant_lanes.items() if n},
+            }

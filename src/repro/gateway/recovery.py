@@ -164,3 +164,163 @@ def list_sessions(directory: str) -> List[str]:
         return []
     return sorted(name[:-len(_SUFFIX)] for name in os.listdir(directory)
                   if name.endswith(_SUFFIX))
+
+
+# ---------------------------------------------------------------------------
+# record stores - the pluggable persistence surface sessions write to
+# ---------------------------------------------------------------------------
+
+class RecoveryStore:
+    """One recovery-record directory behind the store interface the
+    sessions call (``save``/``load``/``delete``/``sessions``).
+
+    The plain single-host store: each method is the matching module
+    function over one directory. ``ReplicatedRecoveryStore`` is the
+    multi-replica drop-in; ``as_store`` normalizes either (or a bare
+    path) for the gateway.
+    """
+
+    def __init__(self, directory: str):
+        self.directory = directory
+
+    def save(self, record: RecoveryRecord) -> None:
+        save_record(self.directory, record)
+
+    def load(self, session_id: str) -> Optional[RecoveryRecord]:
+        return load_record(self.directory, session_id)
+
+    def delete(self, session_id: str) -> bool:
+        return delete_record(self.directory, session_id)
+
+    def sessions(self) -> List[str]:
+        return list_sessions(self.directory)
+
+
+class ReplicatedRecoveryStore:
+    """Write-through record replication across >= 2 directories with
+    CRC-checked read-repair - the cluster's durability layer.
+
+    ``save`` writes the record to every replica (each write is itself
+    atomic + CRC-stamped); it fails unless at least ``min_replicas``
+    replicas accepted the record, so a committed block is never
+    considered durable on a single disk. ``load`` reads *all* replicas,
+    discards corrupt ones (CRC mismatch / bad JSON), picks the furthest
+    record by ``(block_index, byte_offset)``, and **repairs** every
+    stale, corrupt, or missing replica by rewriting the winner - so a
+    killed host's peer always resumes from the newest surviving record
+    (``GatewayCluster`` failover, docs/SERVING.md).
+
+    Example::
+
+        store = ReplicatedRecoveryStore([dir_a, dir_b])
+        store.save(rec)
+        assert store.load(rec.session_id) == rec   # from either replica
+    """
+
+    def __init__(self, replicas: List[str], *, min_replicas: int = 2,
+                 write_replicas: Optional[List[str]] = None):
+        dirs = [str(d) for d in replicas]
+        if len(set(dirs)) != len(dirs):
+            raise ValueError("gateway: replica directories must be distinct")
+        if not 1 <= min_replicas <= len(dirs):
+            raise ValueError(
+                f"gateway: min_replicas {min_replicas} out of range "
+                f"[1, {len(dirs)}] for {len(dirs)} replicas")
+        if len(dirs) < 2:
+            raise ValueError(
+                "gateway: replication needs >= 2 replica directories "
+                "(use RecoveryStore for a single-host setup)")
+        self.replicas = dirs
+        # Writes go through this window (a host's own dir + the next
+        # replication-1 peers in the cluster case); reads always scan
+        # the full replica set, so any peer can resume any session.
+        self.write_replicas = dirs if write_replicas is None \
+            else [str(d) for d in write_replicas]
+        if not set(self.write_replicas) <= set(dirs):
+            raise ValueError(
+                "gateway: write_replicas must be a subset of replicas")
+        if min_replicas > len(self.write_replicas):
+            raise ValueError(
+                f"gateway: min_replicas {min_replicas} exceeds the "
+                f"{len(self.write_replicas)} write replicas")
+        self.min_replicas = min_replicas
+        #: replica writes dropped by fault injection / IO errors (tests).
+        self.dropped_writes = 0
+
+    # The one seam fault-injection hooks (tests/chaos.py): a drop-one-
+    # replica fault overrides this method, nothing else.
+    def _save_one(self, directory: str, record: RecoveryRecord) -> bool:
+        save_record(directory, record)
+        return True
+
+    def save(self, record: RecoveryRecord) -> None:
+        ok = 0
+        errors: List[str] = []
+        for directory in self.write_replicas:
+            try:
+                if self._save_one(directory, record):
+                    ok += 1
+                else:
+                    self.dropped_writes += 1
+            except OSError as e:
+                errors.append(f"{directory}: {e}")
+        if ok < self.min_replicas:
+            raise OSError(
+                f"gateway: record {record.session_id!r} reached only "
+                f"{ok}/{self.min_replicas} required replicas "
+                f"({'; '.join(errors) or 'writes dropped'})")
+
+    @staticmethod
+    def _progress(record: RecoveryRecord) -> tuple:
+        return (record.block_index, record.byte_offset,
+                record.symbols_acked)
+
+    def load(self, session_id: str) -> Optional[RecoveryRecord]:
+        held: List[tuple] = []      # (directory, record | None)
+        for directory in self.replicas:
+            try:
+                held.append((directory, load_record(directory, session_id)))
+            except ValueError:      # corrupt replica: a repair target
+                held.append((directory, None))
+        candidates = [rec for _, rec in held if rec is not None]
+        if not candidates:
+            return None
+        best = max(candidates, key=self._progress)
+        # Read-repair: divergent/corrupt/missing replicas converge on
+        # the furthest CRC-valid record.
+        for directory, rec in held:
+            if rec != best:
+                try:
+                    save_record(directory, best)
+                except OSError:
+                    pass   # a dead replica dir must not fail the read
+        return best
+
+    def delete(self, session_id: str) -> bool:
+        existed = False
+        for directory in self.replicas:
+            existed = delete_record(directory, session_id) or existed
+        return existed
+
+    def sessions(self) -> List[str]:
+        out: set = set()
+        for directory in self.replicas:
+            out.update(list_sessions(directory))
+        return sorted(out)
+
+
+def as_store(dir_or_store):
+    """Normalize the gateway's ``recovery_dir=`` argument: a path
+    becomes a ``RecoveryStore``; a store (anything with ``save`` /
+    ``load`` / ``delete``) passes through; ``None`` stays ``None``."""
+    if dir_or_store is None:
+        return None
+    if isinstance(dir_or_store, (str, os.PathLike)):
+        return RecoveryStore(os.fspath(dir_or_store))
+    for method in ("save", "load", "delete"):
+        if not callable(getattr(dir_or_store, method, None)):
+            raise TypeError(
+                f"gateway: recovery_dir must be a path or a record "
+                f"store (got {type(dir_or_store).__name__} without "
+                f"{method!r})")
+    return dir_or_store

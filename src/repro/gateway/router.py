@@ -1,0 +1,124 @@
+"""Deterministic placement + health tracking for the gateway cluster.
+
+Two routing questions, both answered by pure functions so nothing
+about placement ever needs serializing into the wire:
+
+  * **Corpus shards** - ``stream.format.shard_host``: shard ``s`` of an
+    ``n_shards`` BBX3 corpus belongs to host ``s % n_hosts`` in the
+    cluster's configured host order. Shard *bytes* never depend on the
+    assignment (each shard's segment is a function of (codec, data,
+    seed + s) only - ``repro.shard_codec``), so a down host's shards
+    reroute to any healthy peer with zero wire change.
+  * **Tenant streams** - rendezvous (highest-random-weight) hashing of
+    the session id over the *healthy* host set: stable placement while
+    the cluster is calm, deterministic failover order when a host goes
+    down, and no reshuffling of unrelated sessions either way.
+
+Health is tracked as a simple up/down flag per host, flipped by
+``mark_down``/``mark_up`` (the cluster flips it on kill, on a failed
+call, or from its health-check probe). Routing never returns a down
+host; when every host is down the router raises ``HostDown`` rather
+than inventing a placement.
+"""
+
+from __future__ import annotations
+
+import zlib
+from typing import Dict, List, Sequence
+
+from repro.stream import format as fmt
+
+
+class HostDown(RuntimeError):
+    """The targeted gateway host is marked down (killed, failed a
+    health probe, or stopped answering). In-flight streams fail over to
+    a peer via their replicated recovery records - committed blocks are
+    never re-coded (``GatewayCluster``, docs/SERVING.md)."""
+
+    def __init__(self, host: str, reason: str = "marked down"):
+        super().__init__(f"gateway: host {host!r} {reason}")
+        self.host = host
+
+
+class ShardRouter:
+    """Derived shard->host and session->host placement over a fixed,
+    ordered host list.
+
+    Example::
+
+        router = ShardRouter(["h0", "h1"])
+        assert router.shard_owner(3, n_shards=4) == "h1"
+        first = router.session_host("cam-1")
+        router.mark_down(first)
+        assert router.session_host("cam-1") != first   # failover peer
+    """
+
+    def __init__(self, hosts: Sequence[str]):
+        names = list(hosts)
+        if not names:
+            raise ValueError("gateway: ShardRouter needs >= 1 host")
+        if len(set(names)) != len(names):
+            raise ValueError("gateway: duplicate host names")
+        self.hosts = names
+        self._healthy: Dict[str, bool] = {h: True for h in names}
+
+    # -- health --------------------------------------------------------------
+
+    def mark_down(self, host: str) -> None:
+        self._check_known(host)
+        self._healthy[host] = False
+
+    def mark_up(self, host: str) -> None:
+        self._check_known(host)
+        self._healthy[host] = True
+
+    def is_healthy(self, host: str) -> bool:
+        self._check_known(host)
+        return self._healthy[host]
+
+    def healthy_hosts(self) -> List[str]:
+        return [h for h in self.hosts if self._healthy[h]]
+
+    def _check_known(self, host: str) -> None:
+        if host not in self._healthy:
+            raise KeyError(f"gateway: unknown host {host!r}")
+
+    # -- corpus shards -------------------------------------------------------
+
+    def shard_owner(self, shard: int, n_shards: int) -> str:
+        """The host shard ``shard`` is *assigned* to (health-blind -
+        the derived placement; bytes never depend on it)."""
+        return self.hosts[fmt.shard_host(shard, n_shards, len(self.hosts))]
+
+    def shard_route(self, shard: int, n_shards: int) -> str:
+        """The host shard ``shard`` is *served* by right now: its owner
+        when healthy, else the next healthy host in cluster order."""
+        owner = self.shard_owner(shard, n_shards)
+        if self._healthy[owner]:
+            return owner
+        up = self.healthy_hosts()
+        if not up:
+            raise HostDown(owner, "down with no healthy peer")
+        return up[shard % len(up)]
+
+    # -- tenant streams ------------------------------------------------------
+
+    @staticmethod
+    def _weight(session_id: str, host: str) -> int:
+        return zlib.crc32(f"{session_id}@{host}".encode())
+
+    def session_host(self, session_id: str) -> str:
+        """Rendezvous-hash placement of a stream over the healthy host
+        set; deterministic, and stable under unrelated host changes."""
+        up = self.healthy_hosts()
+        if not up:
+            raise HostDown(self.hosts[0], "no healthy host in cluster")
+        return max(up, key=lambda h: self._weight(session_id, h))
+
+    def failover_host(self, session_id: str, exclude: str) -> str:
+        """Where ``session_id`` resumes after ``exclude`` died: the
+        rendezvous winner among the remaining healthy hosts."""
+        up = [h for h in self.healthy_hosts() if h != exclude]
+        if not up:
+            raise HostDown(exclude, "down with no healthy peer")
+        return max(up, key=lambda h: self._weight(session_id, h))

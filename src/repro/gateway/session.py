@@ -28,6 +28,7 @@ Sessions never recode: encode wire bytes equal the synchronous
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Any, Awaitable, Callable, Dict, List, Optional
 
 import jax
@@ -69,8 +70,16 @@ class EncodeSession:
         self.meta = dict(meta or {})
         self._execute = execute
         self._on_close = on_close
-        self._recovery_dir = recovery_dir
+        self._store = recovery.as_store(recovery_dir)
         self.closed = False
+        # Block commit and record write are ONE transaction under this
+        # lock: a concurrent checkpoint/abandon (deadline reaper,
+        # cluster failover) can never observe a committed block whose
+        # record is still the previous boundary - the one-block-stale
+        # resume race. Fault injection pauses inside the gap via
+        # ``_gap_hook`` (tests only).
+        self._txn_lock = threading.Lock()
+        self._gap_hook: Optional[Callable[[], None]] = None
         #: wire offset this session started at (0 for a fresh session;
         #: the checkpointed byte offset for a resumed one).
         self.resumed_at = encoder.wire_bytes
@@ -84,50 +93,70 @@ class EncodeSession:
     async def write(self, data: Any,
                     deadline: Optional[float] = None) -> bytes:
         """Feed time-major ``[n, lanes, ...]`` datapoints; returns the
-        bytes that became final. Checkpoints automatically whenever the
-        write ends on a block boundary (and a recovery dir is set)."""
+        bytes that became final. Whenever the write ends on a block
+        boundary (and a recovery store is set) the recovery record is
+        written *in the same transaction* as the block commit, so no
+        observer ever resumes one block stale."""
         if self.closed:
             raise RuntimeError("gateway: write on a closed session")
-        out = await self._execute(lambda: self.encoder.write(data),
-                                  deadline=deadline)
-        if self._recovery_dir is not None \
-                and self.encoder.buffered_symbols == 0:
-            self.checkpoint()
-        return out
 
-    def checkpoint(self) -> recovery.RecoveryRecord:
-        """Persist (when a recovery dir is configured) and return the
-        session's recovery record. Legal only at a block boundary -
-        see ``StreamEncoder.snapshot``."""
+        def txn():
+            with self._txn_lock:
+                out = self.encoder.write(data)
+                if self._store is not None \
+                        and self.encoder.buffered_symbols == 0:
+                    self._checkpoint_locked()
+                return out
+        return await self._execute(txn, deadline=deadline)
+
+    def _checkpoint_locked(self) -> recovery.RecoveryRecord:
         snap = self.encoder.snapshot()
         record = recovery.RecoveryRecord(
             session_id=self.session_id, tenant=self.tenant,
             kind=self.kind, byte_offset=snap.wire_bytes,
             block_index=snap.n_blocks, symbols_acked=snap.n_symbols,
             snapshot=dataclasses.asdict(snap), meta=self.meta)
-        if self._recovery_dir is not None:
-            recovery.save_record(self._recovery_dir, record)
+        if self._gap_hook is not None:   # injected pause (tests/chaos)
+            self._gap_hook()
+        if self._store is not None:
+            self._store.save(record)
         return record
+
+    def checkpoint(self) -> recovery.RecoveryRecord:
+        """Persist (when a recovery store is configured) and return the
+        session's recovery record. Legal only at a block boundary -
+        see ``StreamEncoder.snapshot``. Synchronizes with any in-flight
+        write transaction."""
+        with self._txn_lock:
+            return self._checkpoint_locked()
 
     async def close(self, deadline: Optional[float] = None) -> bytes:
         """Flush the ragged tail + trailer, retire the session's lanes,
         and drop its recovery record (the stream is complete)."""
         if self.closed:
             return b""
-        tail = await self._execute(self.encoder.flush, deadline=deadline)
+
+        def txn():
+            with self._txn_lock:
+                return self.encoder.flush()
+        tail = await self._execute(txn, deadline=deadline)
         self.closed = True
-        if self._recovery_dir is not None:
-            recovery.delete_record(self._recovery_dir, self.session_id)
+        if self._store is not None:
+            self._store.delete(self.session_id)
         self._on_close(self)
         return tail
 
     def abandon(self) -> None:
         """Release the session's lanes *without* flushing (client
-        vanished). The recovery record from the last checkpoint stays,
-        so the client can ``resume_stream`` later."""
-        if not self.closed:
-            self.closed = True
-            self._on_close(self)
+        vanished, deadline expired, or the host was killed). Waits for
+        any in-flight write transaction, so the surviving recovery
+        record always matches the last committed block - a peer
+        resuming from it continues byte-identically, never one block
+        stale."""
+        with self._txn_lock:
+            if not self.closed:
+                self.closed = True
+                self._on_close(self)
 
 
 class DecodeSession:
@@ -161,7 +190,7 @@ class DecodeSession:
         self._decoder = decoder
         self._execute = execute
         self._on_close = on_close
-        self._recovery_dir = recovery_dir
+        self._store = recovery.as_store(recovery_dir)
         self.closed = False
         header, offsets, trailer = fmt.scan(blob)
         if trailer is None:
@@ -231,8 +260,8 @@ class DecodeSession:
             kind=self.kind, byte_offset=byte_offset,
             block_index=self.acked, symbols_acked=self.symbols_acked,
             meta=self.meta)
-        if self._recovery_dir is not None:
-            recovery.save_record(self._recovery_dir, record)
+        if self._store is not None:
+            self._store.save(record)
         return record
 
     def close(self) -> None:
@@ -241,7 +270,7 @@ class DecodeSession:
         if self.closed:
             return
         self.closed = True
-        if self._recovery_dir is not None \
+        if self._store is not None \
                 and self.acked >= len(self._offsets):
-            recovery.delete_record(self._recovery_dir, self.session_id)
+            self._store.delete(self.session_id)
         self._on_close(self)

@@ -8,6 +8,10 @@ examples for every exported name: docs/API.md.
 """
 
 from repro.serve.engine import (CodecEngine, Engine,  # noqa: F401
-                                LaneLease, ShardedCodecEngine)
+                                EngineHandle, LaneLease,
+                                ShardedCodecEngine, engine_from_handle,
+                                register_engine_factory)
 
-__all__ = ["Engine", "CodecEngine", "ShardedCodecEngine", "LaneLease"]
+__all__ = ["Engine", "CodecEngine", "ShardedCodecEngine", "LaneLease",
+           "EngineHandle", "register_engine_factory",
+           "engine_from_handle"]

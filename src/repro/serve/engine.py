@@ -461,6 +461,78 @@ class ShardedCodecEngine:
                 compile=self._compile)
 
 
+# ---------------------------------------------------------------------------
+# engine factory handles - the remote-attach surface for the cluster
+# ---------------------------------------------------------------------------
+
+#: name -> builder(**kwargs) -> engine. Builders are registered once
+#: per process; a handle names one, so it stays JSON-small on the wire.
+_ENGINE_FACTORIES: Dict[str, Any] = {}
+_FACTORY_LOCK = threading.Lock()
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineHandle:
+    """A serializable recipe for attaching an engine on a remote host.
+
+    Engines hold codec closures and device buffers, so they cannot
+    cross process boundaries; a handle can - it is just a registered
+    ``factory`` name plus JSON-able ``kwargs``. Each cluster host (its
+    own event loop or process) resolves the handle *locally* with
+    ``engine_from_handle``, building its own engine from the same
+    recipe - which is exactly what keeps cluster wire bytes identical
+    to single-host: every host derives its coder state from (family,
+    seed), never from another host's memory.
+
+    Example::
+
+        register_engine_factory("uniform8", lambda **kw:
+            CodecEngine(make_uniform_family(8), **kw))
+        handle = EngineHandle("uniform8", {"seed": 0, "init_chunks": 0})
+        eng = engine_from_handle(handle)     # on any host
+    """
+
+    factory: str
+    kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+def register_engine_factory(name: str, builder: Any, *,
+                            overwrite: bool = False) -> None:
+    """Register ``builder(**kwargs) -> engine`` under ``name`` so
+    ``EngineHandle(name, ...)`` resolves on this host. Re-registering
+    an existing name raises unless ``overwrite=True``."""
+    if not name or not isinstance(name, str):
+        raise ValueError("serve: engine factory name must be a "
+                         "non-empty string")
+    if not callable(builder):
+        raise TypeError(f"serve: engine factory {name!r} must be callable")
+    with _FACTORY_LOCK:
+        if name in _ENGINE_FACTORIES and not overwrite:
+            raise ValueError(
+                f"serve: engine factory {name!r} already registered "
+                "(pass overwrite=True to replace)")
+        _ENGINE_FACTORIES[name] = builder
+
+
+def engine_from_handle(handle: EngineHandle) -> Any:
+    """Build the engine a handle describes, using this host's factory
+    registry. Raises ``KeyError`` with the known names when the factory
+    was never registered here - the remote host must load the same
+    registration module the submitting host did."""
+    if not isinstance(handle, EngineHandle):
+        raise TypeError(
+            f"serve: expected an EngineHandle, got "
+            f"{type(handle).__name__}")
+    with _FACTORY_LOCK:
+        builder = _ENGINE_FACTORIES.get(handle.factory)
+        known = sorted(_ENGINE_FACTORIES)
+    if builder is None:
+        raise KeyError(
+            f"serve: no engine factory {handle.factory!r} registered "
+            f"on this host (known: {known})")
+    return builder(**dict(handle.kwargs))
+
+
 class Engine:
     """The LM serving engine: sessionful generation plus the token
     compression service (one-shot BBX1, streamed BBX2, dynamic-batched

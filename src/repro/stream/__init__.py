@@ -31,8 +31,9 @@ from repro.stream.coder import (BlockChain, EncoderSnapshot,  # noqa: F401
 from repro.stream.batcher import (MaskedBlockCodec,  # noqa: F401
                                   SteppedMaskedBlock, StreamBatcher,
                                   decode_batched)
-from repro.stream.format import (corpus_segment, encode_corpus,  # noqa: F401
-                                 scan_corpus)
+from repro.stream.format import (corpus_assignments,  # noqa: F401
+                                 corpus_segment, encode_corpus,
+                                 scan_corpus, shard_host)
 
 __all__ = [
     "format",
@@ -42,4 +43,5 @@ __all__ = [
     "MaskedBlockCodec", "SteppedMaskedBlock", "StreamBatcher",
     "decode_batched",
     "encode_corpus", "scan_corpus", "corpus_segment",
+    "shard_host", "corpus_assignments",
 ]

@@ -349,3 +349,48 @@ def corpus_segment(blob: bytes, shard: int) -> bytes:
             f"corpus: shard {shard} out of range [0, {len(entries)})")
     e = entries[shard]
     return blob[e.offset:e.offset + e.length]
+
+
+# ---------------------------------------------------------------------------
+# shard -> host placement (derived, never serialized)
+# ---------------------------------------------------------------------------
+
+def shard_host(shard: int, n_shards: int, n_hosts: int) -> int:
+    """The host index shard ``shard`` of an ``n_shards`` corpus is
+    served by in an ``n_hosts`` cluster: round-robin over the cluster's
+    host order.
+
+    The assignment is a pure function of the BBX3 index - it is
+    *derived* at routing time and **never serialized into the wire**,
+    so corpus bytes stay hex-identical whether one host or N encode or
+    decode them (the cluster determinism contract,
+    ``tests/test_cluster.py``).
+
+    Example::
+
+        assert shard_host(5, n_shards=8, n_hosts=3) == 5 % 3
+    """
+    if n_shards < 1 or n_hosts < 1:
+        raise ValueError("corpus: shard_host needs n_shards/n_hosts >= 1")
+    if not 0 <= shard < n_shards:
+        raise ContainerError(
+            f"corpus: shard {shard} out of range [0, {n_shards})")
+    return shard % n_hosts
+
+
+def corpus_assignments(blob: bytes, n_hosts: int) -> List[List[int]]:
+    """Per-host shard lists for a BBX3 corpus, derived from its index
+    alone (``shard_host`` per entry; only header + index bytes are
+    read).
+
+    Example::
+
+        plan = corpus_assignments(blob, n_hosts=2)
+        assert sorted(s for shards in plan for s in shards) == \\
+            list(range(scan_corpus(blob)[0].n_shards))
+    """
+    header, _ = scan_corpus(blob)
+    plan: List[List[int]] = [[] for _ in range(n_hosts)]
+    for s in range(header.n_shards):
+        plan[shard_host(s, header.n_shards, n_hosts)].append(s)
+    return plan

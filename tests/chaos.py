@@ -1,0 +1,265 @@
+"""Deterministic fault injection for the gateway cluster.
+
+A ``FaultSchedule`` is a seeded, reproducible plan of failures - kill
+this host after block k, drop that many recovery-replica writes, delay
+a write past its deadline, attempt a duplicate resume - and
+``drive_stream`` executes a cluster encode stream under it. Every
+schedule must end in exactly one of two outcomes (the acceptance
+contract for ``repro.gateway.cluster``):
+
+  * ``("wire", blob)`` - the finished stream, which the caller asserts
+    **hex-identical** to the single-host / synchronous wire; or
+  * ``("reject", exc_name, prefix)`` - a clean typed reject
+    (``ResumeGap``, ``OSError``, ``Backpressure``, ``ValueError``)
+    whose delivered ``prefix`` is a valid prefix of the reference
+    wire. Never a silently divergent blob.
+
+The injectors touch exactly the seams the production code exposes:
+``ReplicatedRecoveryStore._save_one`` (replica write drops),
+``EncodeSession`` ``_gap_hook`` (the PR-7 snapshot/commit gap),
+``cluster.kill_host`` (host death), and an encoder-level write delay
+(deadline expiry). Nothing here reaches into coder state - faults
+change *scheduling*, the determinism contract says bytes must not.
+
+Shared by ``tests/test_cluster.py`` and the cluster variant in
+``tests/test_parity_fuzz.py``; not collected by pytest (no ``test_``
+prefix).
+"""
+
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.gateway import Backpressure, DeadlineExceeded, HostDown, \
+    ResumeGap
+from repro.gateway.cluster import ClusterSession, GatewayCluster
+
+KILL_HOST = "kill-host"
+DROP_RECOVERY = "drop-recovery-write"
+DELAY_WRITE = "delay-past-deadline"
+DUP_RESUME = "duplicate-resume"
+KINDS = (KILL_HOST, DROP_RECOVERY, DELAY_WRITE, DUP_RESUME)
+
+#: rejects that count as *clean* (typed, prefix-preserving)
+CLEAN_REJECTS = ("ResumeGap", "OSError", "Backpressure", "ValueError",
+                 "DeadlineExceeded", "HostDown")
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One injected failure: ``kind`` fires just before block
+    ``at_block`` is written. ``arg`` parameterizes the kind (for
+    ``DROP_RECOVERY``: how many replica writes to drop)."""
+
+    kind: str
+    at_block: int
+    arg: int = 0
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"chaos: unknown fault kind {self.kind!r}")
+        if self.at_block < 0:
+            raise ValueError("chaos: at_block must be >= 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSchedule:
+    """A seeded, deterministic set of faults for one stream."""
+
+    seed: int
+    faults: Tuple[Fault, ...]
+
+    @classmethod
+    def from_seed(cls, seed: int, n_blocks: int,
+                  kinds: Tuple[str, ...] = KINDS) -> "FaultSchedule":
+        """Derive a schedule from ``seed`` alone: same seed, same
+        faults, same blocks - every chaos run is replayable."""
+        rng = np.random.default_rng(seed)
+        kind = kinds[int(rng.integers(len(kinds)))]
+        at = int(rng.integers(1, max(2, n_blocks)))
+        arg = int(rng.integers(1, 3)) if kind == DROP_RECOVERY else 0
+        return cls(seed=seed, faults=(Fault(kind, at, arg),))
+
+    def at(self, block: int) -> List[Fault]:
+        return [f for f in self.faults if f.at_block == block]
+
+
+# ---------------------------------------------------------------------------
+# injectors - each targets one production seam
+# ---------------------------------------------------------------------------
+
+def drop_replica_writes(store, count: int) -> None:
+    """Make the first ``count`` directories of ``store``'s write window
+    silently drop every future record write (the lost-disk fault). The
+    store's own ``min_replicas`` arithmetic decides whether saves still
+    succeed (write-through survives) or raise ``OSError`` (clean
+    reject)."""
+    dropped = set(store.write_replicas[:count])
+    orig = type(store)._save_one
+
+    def save_one(directory, record):
+        if directory in dropped:
+            return False
+        return orig(store, directory, record)
+    store._save_one = save_one
+
+
+def corrupt_replica(store, session_id: str, index: int = 0) -> None:
+    """Flip bytes in one replica's record file (CRC now mismatches):
+    ``load`` must skip it and read-repair from a healthy peer."""
+    from repro.gateway import recovery
+    path = recovery.record_path(store.replicas[index], session_id)
+    with open(path, "r+b") as f:
+        f.seek(0)
+        f.write(b"corrupt!")
+
+
+def delay_encoder_writes(sess, seconds: float) -> None:
+    """Delay the underlying encoder's block commits by ``seconds``
+    (inside the write transaction, *after* the commit) - paired with a
+    shorter deadline this reproduces the nastiest timeout: the client's
+    wait expires and discards the bytes while the worker thread still
+    finishes commit + record, leaving the record *ahead* of what the
+    client holds."""
+    enc = sess.encoder
+    orig = enc.write
+
+    def slow(data):
+        out = orig(data)
+        time.sleep(seconds)
+        return out
+    enc.write = slow
+
+
+async def quiesce(cluster: GatewayCluster, session_id: str,
+                  timeout: float = 10.0) -> None:
+    """Wait until no host still has ``session_id`` open (the timed-out
+    worker thread has returned and its abandon ran) - only then is a
+    resume's record state deterministic."""
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if all(session_id not in cluster.host(name).gateway.open_sessions
+               for name in cluster.hosts
+               if not cluster.host(name).dead):
+            return
+        await asyncio.sleep(0.01)
+    raise TimeoutError(f"chaos: {session_id!r} never quiesced")
+
+
+# ---------------------------------------------------------------------------
+# the chaos driver
+# ---------------------------------------------------------------------------
+
+async def _apply(cluster: GatewayCluster, cs: ClusterSession,
+                 fault: Fault, notes: List[str]) -> Optional[float]:
+    """Inject ``fault`` against the stream's *current* host. Returns a
+    deadline to impose on the next write (``DELAY_WRITE``), else
+    ``None``."""
+    host = cluster.host(cs.host)
+    if fault.kind == KILL_HOST:
+        await cluster.kill_host(host.name)
+        notes.append(f"killed {host.name} before block {fault.at_block}")
+        return None
+    if fault.kind == DROP_RECOVERY:
+        drop_replica_writes(host.gateway._store, fault.arg)
+        notes.append(f"dropping {fault.arg} replica writes on "
+                     f"{host.name}")
+        return None
+    if fault.kind == DELAY_WRITE:
+        delay_encoder_writes(cs._sess, 0.25)
+        notes.append(f"delaying block {fault.at_block} past a 50ms "
+                     "deadline")
+        return 0.05
+    if fault.kind == DUP_RESUME:
+        try:
+            await cluster.resume_stream(cs.session_id)
+        except ValueError:
+            notes.append("duplicate resume cleanly rejected")
+        else:   # pragma: no cover - would be the silent-fork bug
+            raise AssertionError(
+                "chaos: duplicate resume was admitted while the "
+                "session is open")
+        return None
+    raise ValueError(fault.kind)   # pragma: no cover
+
+
+async def drive_stream(cluster: GatewayCluster, data, *,
+                       schedule: FaultSchedule, session_id: str,
+                       block_symbols: int,
+                       tenant: str = "default",
+                       **open_kwargs) -> Tuple:
+    """Run one cluster encode stream under ``schedule``.
+
+    Feeds ``data`` ([n, lanes, *shape]) block by block; before block
+    ``b`` every fault scheduled at ``b`` fires. Outcomes::
+
+        ("wire", blob, notes)            # finished; assert blob == ref
+        ("reject", exc_name, prefix, notes)   # clean reject; assert
+                                              # ref.startswith(prefix)
+
+    Any other exception propagates - that is a harness bug or a real
+    divergence, and the test should fail loudly.
+    """
+    shape = tuple(int(s) for s in data.shape[2:])
+    lanes = int(data.shape[1])
+    n_blocks = int(data.shape[0]) // block_symbols
+    notes: List[str] = []
+    wire = bytearray()
+    cs = await cluster.open_stream(
+        shape, lanes=lanes, session_id=session_id, tenant=tenant,
+        block_symbols=block_symbols, **open_kwargs)
+    try:
+        for b in range(n_blocks):
+            deadline = None
+            for fault in schedule.at(b):
+                deadline = await _apply(cluster, cs, fault, notes) \
+                    or deadline
+            chunk = data[b * block_symbols:(b + 1) * block_symbols]
+            if deadline is not None:
+                # The delayed write must expire, the session quiesce,
+                # and the reattach decide: resume or clean ResumeGap.
+                try:
+                    wire.extend(await cs.write(chunk, deadline=deadline))
+                except DeadlineExceeded:
+                    notes.append(f"block {b} deadline exceeded")
+                    await quiesce(cluster, session_id)
+                    await cs.reattach()   # ResumeGap when record ahead
+                    wire.extend(await cs.write(chunk))
+                else:   # pragma: no cover - delay failed to trip
+                    raise AssertionError(
+                        "chaos: delayed write beat its deadline")
+            else:
+                wire.extend(await cs.write(chunk))
+        wire.extend(await cs.close())
+        return ("wire", bytes(wire), notes)
+    except (ResumeGap, Backpressure, OSError, ValueError,
+            DeadlineExceeded, HostDown) as e:
+        if not cs.closed:
+            await cs.abandon()
+        notes.append(f"clean reject: {type(e).__name__}: {e}")
+        return ("reject", type(e).__name__, bytes(wire), notes)
+
+
+def check_outcome(outcome: Tuple, reference: bytes) -> None:
+    """The acceptance assertion: a finished wire is hex-identical to
+    ``reference``; a reject is typed-clean and its delivered prefix is
+    a prefix of ``reference``. Anything else fails."""
+    kind = outcome[0]
+    if kind == "wire":
+        _, wire, notes = outcome
+        assert wire == reference, (
+            f"chaos: wire diverged under faults ({notes}): "
+            f"{wire[:32].hex()} != {reference[:32].hex()}")
+    elif kind == "reject":
+        _, name, prefix, notes = outcome
+        assert name in CLEAN_REJECTS, f"chaos: untyped reject {name}"
+        assert reference.startswith(prefix), (
+            f"chaos: rejected stream delivered a diverging prefix "
+            f"({notes})")
+    else:   # pragma: no cover
+        raise AssertionError(f"chaos: unknown outcome {kind!r}")

@@ -21,6 +21,12 @@ Fixtures:
   * ``bbx2_stream``        - BBX2 block stream over the quantized VAE,
                              pipelined double-buffered encoder.
   * ``bbx3_corpus``        - BBX3 sharded corpus, 2 lane-shards.
+  * ``bbx3_cluster``       - BBX3 corpus driven through a 2-host
+                             ``GatewayCluster`` with one host killed
+                             mid-stream and its shard streams resumed
+                             on the peer (public cluster API only); the
+                             committed bytes pin the failover path
+                             hex-for-hex to the synchronous wire.
 
 Regenerate after an *intentional* wire change::
 
@@ -109,7 +115,68 @@ def build() -> dict:
             init_chunks=16, capacity=512),
         lambda blob: shard_codec.decompress_dataset(s_codec, blob),
         d_data)
+
+    # BBX3 corpus through a 2-host cluster with a mid-stream host kill:
+    # the determinism contract says the committed bytes are identical
+    # to the synchronous sharded path, kill or no kill.
+    g_rng = np.random.default_rng(2024)
+    g_data = jnp.asarray(g_rng.integers(0, 64, (8, 8, 9)), jnp.int32)
+    out["bbx3_cluster"] = (
+        lambda: _encode_cluster_corpus(uni, g_data, n_shards=4),
+        lambda blob: shard_codec.decompress_dataset(uni, blob),
+        g_data)
     return out
+
+
+def _encode_cluster_corpus(codec, data, n_shards: int) -> bytes:
+    """Drive ``data`` shard-by-shard through a 2-host cluster (public
+    ``repro.gateway`` API only), killing ``host1`` after the first
+    block round so its shard streams fail over mid-stream to ``host0``
+    via their replicated recovery records."""
+    import asyncio
+    import tempfile
+
+    from repro import shard_codec
+    from repro.gateway import GatewayCluster, TenantQuota
+    from repro.serve import CodecEngine
+    from repro.stream import format as fmt
+
+    lanes = int(data.shape[1])
+    per = lanes // n_shards
+    shards = shard_codec.split_lane_tree(data, n_shards)
+
+    async def scenario(tmp: str) -> bytes:
+        cluster = GatewayCluster(
+            [CodecEngine(lambda s, _c=codec: _c,
+                         max_inflight_lanes=lanes)
+             for _ in range(2)],
+            recovery_root=tmp,
+            default_quota=TenantQuota(max_lanes=lanes, max_queued=8))
+        async with cluster:
+            sessions, segments = [], [bytearray()
+                                      for _ in range(n_shards)]
+            for s in range(n_shards):
+                sessions.append(await cluster.open_stream(
+                    tuple(int(d) for d in data.shape[2:]), lanes=per,
+                    session_id=f"golden-shard{s}", block_symbols=2,
+                    seed=s, init_chunks=0))
+            for s, cs in enumerate(sessions):       # first block round
+                segments[s].extend(await cs.write(shards[s][:4]))
+            victim = sessions[0].host               # host with streams
+            peer, = [h for h in cluster.hosts if h != victim]
+            killed = await cluster.kill_host(victim)
+            assert killed, "golden: no stream was on the killed host"
+            for s, cs in enumerate(sessions):       # failover round
+                segments[s].extend(await cs.write(shards[s][4:]))
+                segments[s].extend(await cs.close())
+            assert all(cs.host == peer for cs in sessions), \
+                "golden: a stream survived on the killed host"
+            return fmt.encode_corpus(
+                [bytes(seg) for seg in segments],
+                [int(data.shape[0])] * n_shards, lanes_per_shard=per)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        return asyncio.run(scenario(tmp))
 
 
 def main() -> None:

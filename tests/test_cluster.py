@@ -1,0 +1,589 @@
+"""Multi-host gateway cluster tests (ISSUE 10 acceptance).
+
+(a) cluster wire bytes - streams and BBX3 corpora spread over N hosts -
+    are hex-identical to the single-host gateway and the synchronous
+    ``shard_codec.compress_dataset`` path;
+(b) a killed host's streams fail over to a peer via replicated recovery
+    records and finish **byte-identically** (never re-coding committed
+    blocks); divergent record/delivery states reject cleanly with
+    ``ResumeGap``;
+(c) the replicated store write-throughs to >= 2 replicas, skips
+    CRC-corrupt copies, and read-repairs divergence;
+(d) cluster-wide admission composes with per-host quotas, with zero
+    lane leaks after every scenario - including every seeded fault
+    schedule in ``tests/chaos.py``.
+
+Plus the PR-7 regression: block commit + recovery-record write are one
+transaction, so an abandon racing a write can never leave the record a
+block stale.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import codecs, shard_codec
+from repro.gateway import (Backpressure, ClusterAdmission, Gateway,
+                           GatewayCluster, HostDown, RecoveryRecord,
+                           RecoveryStore, ReplicatedRecoveryStore,
+                           ResumeGap, ShardRouter, TenantQuota, as_store)
+from repro.serve import (CodecEngine, EngineHandle, ShardedCodecEngine,
+                         engine_from_handle, register_engine_factory)
+from tests import chaos
+
+
+def _family(bits: int = 6):
+    def make(shape):
+        n = int(np.prod(shape))
+        return codecs.Shaped(
+            codecs.Repeat(lambda d: codecs.Uniform(bits), n),
+            tuple(shape))
+    return make
+
+
+def _data(n=8, lanes=4, shape=(2,), seed=0, bits=6):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, 1 << bits, (n, lanes, *shape)),
+                       jnp.int32)
+
+
+def _engine(lanes: int = 64, **kw):
+    kw.setdefault("max_inflight_lanes", lanes)
+    return CodecEngine(_family(), **kw)
+
+
+def _cluster(n_hosts: int, tmp_path, **kw):
+    kw.setdefault("recovery_root", str(tmp_path / "recovery"))
+    # Roomy per-host quota: corpus tests park several shard sessions
+    # per host for one tenant (quota pressure gets its own test).
+    kw.setdefault("default_quota", TenantQuota(max_lanes=64,
+                                               max_queued=8))
+    return GatewayCluster([_engine() for _ in range(n_hosts)], **kw)
+
+
+def _run(coro):
+    return asyncio.run(coro)
+
+
+def _record(sid="sess-1", block=1, offset=64, acked=8):
+    return RecoveryRecord(sid, "default", "decode", byte_offset=offset,
+                          block_index=block, symbols_acked=acked)
+
+
+# ---------------------------------------------------------------------------
+# router: derived placement + health
+# ---------------------------------------------------------------------------
+
+def test_shard_owner_round_robin():
+    router = ShardRouter(["h0", "h1", "h2"])
+    assert [router.shard_owner(s, 6) for s in range(6)] == \
+        ["h0", "h1", "h2", "h0", "h1", "h2"]
+
+
+def test_shard_route_skips_down_host():
+    router = ShardRouter(["h0", "h1"])
+    router.mark_down("h1")
+    # h1's shards reroute to the healthy peer; h0's stay put.
+    assert [router.shard_route(s, 4) for s in range(4)] == ["h0"] * 4
+    router.mark_up("h1")
+    assert router.shard_route(1, 4) == "h1"
+
+
+def test_session_placement_deterministic_and_stable():
+    router = ShardRouter(["h0", "h1", "h2"])
+    placed = {f"sess-{i}": router.session_host(f"sess-{i}")
+              for i in range(32)}
+    assert len(set(placed.values())) > 1          # actually spreads
+    assert placed == {s: router.session_host(s) for s in placed}
+    victim = placed["sess-0"]
+    router.mark_down(victim)
+    # Rendezvous: only the dead host's sessions move.
+    for sid, host in placed.items():
+        if host != victim:
+            assert router.session_host(sid) == host
+
+
+def test_failover_host_excludes_the_dead_host():
+    router = ShardRouter(["h0", "h1"])
+    first = router.session_host("cam-1")
+    peer = router.failover_host("cam-1", exclude=first)
+    assert peer != first
+    router.mark_down(peer)
+    with pytest.raises(HostDown):
+        router.failover_host("cam-1", exclude=first)
+
+
+def test_router_validates_hosts():
+    with pytest.raises(ValueError):
+        ShardRouter([])
+    with pytest.raises(ValueError):
+        ShardRouter(["h0", "h0"])
+    with pytest.raises(KeyError):
+        ShardRouter(["h0"]).mark_down("nope")
+
+
+# ---------------------------------------------------------------------------
+# replicated recovery store
+# ---------------------------------------------------------------------------
+
+def _dirs(tmp_path, n):
+    return [str(tmp_path / f"rep{i}") for i in range(n)]
+
+
+def test_replicated_store_write_through_and_union(tmp_path):
+    a, b = _dirs(tmp_path, 2)
+    store = ReplicatedRecoveryStore([a, b])
+    store.save(_record())
+    # Every replica holds the record; either alone can serve it.
+    assert RecoveryStore(a).load("sess-1") == _record()
+    assert RecoveryStore(b).load("sess-1") == _record()
+    assert store.sessions() == ["sess-1"]
+    assert store.delete("sess-1") and store.sessions() == []
+
+
+def test_replicated_store_skips_corrupt_and_read_repairs(tmp_path):
+    dirs = _dirs(tmp_path, 2)
+    store = ReplicatedRecoveryStore(dirs)
+    store.save(_record(block=3, offset=96))
+    chaos.corrupt_replica(store, "sess-1", index=0)
+    with pytest.raises(ValueError):
+        RecoveryStore(dirs[0]).load("sess-1")     # really corrupt
+    assert store.load("sess-1") == _record(block=3, offset=96)
+    # Read-repair rewrote the corrupt replica from the healthy one.
+    assert RecoveryStore(dirs[0]).load("sess-1") == \
+        _record(block=3, offset=96)
+
+
+def test_replicated_store_picks_furthest_and_repairs_stale(tmp_path):
+    dirs = _dirs(tmp_path, 3)
+    store = ReplicatedRecoveryStore(dirs, min_replicas=2)
+    from repro.gateway import save_record
+    save_record(dirs[0], _record(block=1, offset=32))
+    save_record(dirs[1], _record(block=4, offset=128))
+    assert store.load("sess-1").block_index == 4
+    for d in dirs:      # divergent + missing replicas converged
+        assert RecoveryStore(d).load("sess-1").block_index == 4
+
+
+def test_replicated_store_min_replicas_enforced(tmp_path):
+    store = ReplicatedRecoveryStore(_dirs(tmp_path, 2), min_replicas=2)
+    chaos.drop_replica_writes(store, 1)
+    with pytest.raises(OSError):
+        store.save(_record())
+    assert store.dropped_writes == 1
+
+
+def test_replicated_store_survivable_drop(tmp_path):
+    # A window wider than min_replicas tolerates a lost disk.
+    dirs = _dirs(tmp_path, 3)
+    store = ReplicatedRecoveryStore(dirs, min_replicas=2)
+    chaos.drop_replica_writes(store, 1)
+    store.save(_record(block=2))
+    assert store.dropped_writes == 1
+    assert store.load("sess-1").block_index == 2
+
+
+def test_replicated_store_validation(tmp_path):
+    dirs = _dirs(tmp_path, 2)
+    with pytest.raises(ValueError):
+        ReplicatedRecoveryStore([dirs[0]])
+    with pytest.raises(ValueError):
+        ReplicatedRecoveryStore([dirs[0], dirs[0]])
+    with pytest.raises(ValueError):
+        ReplicatedRecoveryStore(dirs, min_replicas=3)
+    with pytest.raises(ValueError):
+        ReplicatedRecoveryStore(dirs, write_replicas=["elsewhere"])
+    with pytest.raises(ValueError):
+        ReplicatedRecoveryStore(dirs, min_replicas=2,
+                                write_replicas=[dirs[0]])
+
+
+def test_as_store_normalizes(tmp_path):
+    assert as_store(None) is None
+    st = as_store(str(tmp_path))
+    assert isinstance(st, RecoveryStore)
+    assert as_store(st) is st
+    with pytest.raises(TypeError):
+        as_store(42)
+
+
+# ---------------------------------------------------------------------------
+# PR-7 regression: commit + record are one transaction
+# ---------------------------------------------------------------------------
+
+def test_recovery_record_never_one_block_stale(tmp_path):
+    """An abandon racing a write must wait for the commit+record
+    transaction: with a pause injected in the old snapshot->save gap,
+    the surviving record still describes the committed block, and the
+    resumed stream is byte-identical."""
+    xs = _data(n=8)
+    ref = _engine().compress_stream(xs, block_symbols=2)
+
+    async def scenario():
+        eng = _engine()
+        async with Gateway(eng, recovery_dir=str(tmp_path)) as gw:
+            sess = await gw.open_stream(
+                (2,), lanes=4, session_id="txn", block_symbols=2)
+            in_gap, release = threading.Event(), threading.Event()
+
+            def hook():
+                in_gap.set()
+                assert release.wait(10)
+            sess._gap_hook = hook
+            writer = asyncio.create_task(sess.write(xs[:2]))
+            assert await asyncio.to_thread(in_gap.wait, 10)
+            # The write txn is sitting *between* snapshot and record
+            # save. Abandon must block until the record is durable.
+            abandoner = asyncio.create_task(
+                asyncio.to_thread(sess.abandon))
+            await asyncio.sleep(0.1)
+            assert not abandoner.done(), \
+                "abandon slipped through the txn lock"
+            rec_before = gw._store.load("txn")
+            release.set()
+            prefix = await writer
+            await abandoner
+            rec = gw._store.load("txn")
+            assert rec_before is None or rec_before.block_index == 0
+            assert rec is not None and rec.block_index == 1, \
+                "record is stale relative to the committed block"
+            assert rec.byte_offset == len(prefix)
+            # Resume from the record: continuation is hex-identical.
+            sess2 = await gw.resume_stream("txn")
+            assert sess2.resumed_at == len(prefix)
+            rest = await sess2.write(xs[2:])
+            rest += await sess2.close()
+            return prefix + rest
+
+    assert _run(scenario()) == ref
+
+
+# ---------------------------------------------------------------------------
+# cluster wire identity (corpus + stream), engine handles
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_hosts,n_shards", [(1, 2), (2, 4), (3, 4)])
+def test_cluster_corpus_hex_identical(tmp_path, n_hosts, n_shards):
+    xs = _data(n=8, lanes=8)
+    codec = _family()((2,))
+    ref = shard_codec.compress_dataset(codec, xs, n_shards=n_shards,
+                                       block_symbols=2)
+
+    async def scenario():
+        async with _cluster(n_hosts, tmp_path) as cluster:
+            blob = await cluster.compress_corpus(
+                xs, n_shards=n_shards, block_symbols=2)
+            out = await cluster.decompress_corpus(blob, (2,))
+            st = cluster.stats()
+            return blob, out, st
+
+    blob, out, st = _run(scenario())
+    assert blob == ref                     # hex-identical across hosts
+    assert (out == xs).all()               # lossless
+    assert st["cluster_held_lanes"] == 0 and st["inflight_lanes"] == 0
+
+
+def test_cluster_corpus_matches_sharded_engine(tmp_path):
+    xs = _data(n=8, lanes=8)
+    eng = ShardedCodecEngine(_family(), n_shards=4,
+                             max_inflight_lanes=64)
+    ref = eng.compress_dataset(xs, block_symbols=2)
+
+    async def scenario():
+        async with _cluster(2, tmp_path) as cluster:
+            return await cluster.compress_corpus(
+                xs, n_shards=4, block_symbols=2)
+
+    assert _run(scenario()) == ref
+
+
+@pytest.mark.parametrize("loop_per_host", [False, True])
+def test_cluster_stream_hex_identical(tmp_path, loop_per_host):
+    xs = _data(n=8)
+    ref = _engine().compress_stream(xs, block_symbols=2)
+
+    async def scenario():
+        async with _cluster(2, tmp_path,
+                            loop_per_host=loop_per_host) as cluster:
+            cs = await cluster.open_stream(
+                (2,), lanes=4, session_id="s1", block_symbols=2)
+            wire = b""
+            for b in range(4):
+                wire += await cs.write(xs[2 * b:2 * b + 2])
+            wire += await cs.close()
+            return wire, cluster.stats()
+
+    wire, st = _run(scenario())
+    assert wire == ref
+    assert st["cluster_held_lanes"] == 0 and st["inflight_lanes"] == 0
+
+
+def test_cluster_from_engine_handles(tmp_path):
+    register_engine_factory(
+        "test-cluster-uniform",
+        lambda **kw: CodecEngine(_family(), **kw), overwrite=True)
+    handle = EngineHandle("test-cluster-uniform",
+                          {"max_inflight_lanes": 64})
+    assert isinstance(engine_from_handle(handle), CodecEngine)
+    xs = _data(n=4, lanes=8)
+    codec = _family()((2,))
+    ref = shard_codec.compress_dataset(codec, xs, n_shards=2,
+                                       block_symbols=2)
+
+    async def scenario():
+        cluster = GatewayCluster(
+            [handle, handle], loop_per_host=True,
+            recovery_root=str(tmp_path / "recovery"))
+        async with cluster:
+            return await cluster.compress_corpus(
+                xs, n_shards=2, block_symbols=2)
+
+    assert _run(scenario()) == ref
+
+
+# ---------------------------------------------------------------------------
+# failover: kill a host mid-stream / mid-corpus
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("loop_per_host", [False, True])
+def test_kill_host_mid_stream_failover_identical(tmp_path,
+                                                 loop_per_host):
+    xs = _data(n=8)
+    ref = _engine().compress_stream(xs, block_symbols=2)
+
+    async def scenario():
+        async with _cluster(2, tmp_path,
+                            loop_per_host=loop_per_host) as cluster:
+            cs = await cluster.open_stream(
+                (2,), lanes=4, session_id="s1", block_symbols=2)
+            wire = await cs.write(xs[:4])
+            victim = cs.host
+            assert (await cluster.kill_host(victim)) == ("s1",)
+            wire += await cs.write(xs[4:])      # transparent failover
+            wire += await cs.close()
+            assert cs.host != victim and cs.failovers == 1
+            return wire, cluster.stats()
+
+    wire, st = _run(scenario())
+    assert wire == ref
+    assert st["healthy_hosts"] == ["host0"] or \
+        st["healthy_hosts"] == ["host1"]
+    assert st["cluster_held_lanes"] == 0 and st["inflight_lanes"] == 0
+    assert st["failovers"] == 1
+
+
+def test_kill_host_mid_corpus_reroutes_and_bytes_hold(tmp_path):
+    xs = _data(n=8, lanes=8)
+    codec = _family()((2,))
+    ref = shard_codec.compress_dataset(codec, xs, n_shards=4,
+                                       block_symbols=2)
+
+    async def scenario():
+        async with _cluster(2, tmp_path) as cluster:
+            chunks = [xs[:4], xs[4:]]
+
+            async def killer():
+                await asyncio.sleep(0)
+                await cluster.kill_host("host1")
+            blob, _ = await asyncio.gather(
+                cluster.compress_corpus(iter(chunks), n_shards=4,
+                                        block_symbols=2),
+                killer())
+            return blob, cluster.stats()
+
+    blob, st = _run(scenario())
+    assert blob == ref
+    assert st["cluster_held_lanes"] == 0 and st["inflight_lanes"] == 0
+
+
+def test_resume_gap_is_a_clean_reject(tmp_path):
+    """A record *ahead* of the delivered bytes (timed-out write whose
+    bytes were discarded but whose commit finished) must reject the
+    resume - never fabricate or re-code the gap."""
+    xs = _data(n=8)
+    ref = _engine().compress_stream(xs, block_symbols=2)
+
+    async def scenario():
+        async with _cluster(2, tmp_path) as cluster:
+            cs = await cluster.open_stream(
+                (2,), lanes=4, session_id="s1", block_symbols=2)
+            prefix = await cs.write(xs[:2])
+            chaos.delay_encoder_writes(cs._sess, 0.25)
+            from repro.gateway import DeadlineExceeded
+            with pytest.raises(DeadlineExceeded):
+                await cs.write(xs[2:4], deadline=0.05)
+            await chaos.quiesce(cluster, "s1")
+            with pytest.raises(ResumeGap):
+                await cs.reattach()
+            assert cs.closed
+            return prefix, cluster.stats()
+
+    prefix, st = _run(scenario())
+    assert ref.startswith(prefix) and prefix    # valid delivered prefix
+    assert st["cluster_held_lanes"] == 0 and st["inflight_lanes"] == 0
+
+
+def test_duplicate_resume_rejected_while_open(tmp_path):
+    async def scenario():
+        async with _cluster(2, tmp_path) as cluster:
+            cs = await cluster.open_stream(
+                (2,), lanes=4, session_id="s1", block_symbols=2)
+            await cs.write(_data(n=2))
+            with pytest.raises(ValueError):
+                await cluster.resume_stream("s1")
+            with pytest.raises(ValueError):
+                await cluster.open_stream((2,), lanes=4,
+                                          session_id="s1",
+                                          block_symbols=2)
+            await cs.close()
+            return cluster.stats()
+
+    st = _run(scenario())
+    assert st["cluster_held_lanes"] == 0
+
+
+# ---------------------------------------------------------------------------
+# cluster admission + health checks
+# ---------------------------------------------------------------------------
+
+def test_cluster_admission_composes_with_host_quota(tmp_path):
+    async def scenario():
+        cluster = _cluster(
+            2, tmp_path,
+            default_quota=TenantQuota(max_lanes=8, max_queued=0),
+            cluster_default_quota=TenantQuota(max_lanes=6,
+                                              max_queued=0))
+        async with cluster:
+            a = await cluster.open_stream((2,), lanes=4,
+                                          session_id="a",
+                                          block_symbols=2)
+            # Cluster total (6) trips before the per-host quota (8).
+            with pytest.raises(Backpressure):
+                await cluster.open_stream((2,), lanes=4,
+                                          session_id="b",
+                                          block_symbols=2)
+            assert cluster.admission.held_lanes == 4
+            await a.write(_data(n=2))
+            await a.close()
+            b = await cluster.open_stream((2,), lanes=4,
+                                          session_id="b",
+                                          block_symbols=2)
+            await b.write(_data(n=2))
+            await b.close()
+            return cluster.stats()
+
+    st = _run(scenario())
+    assert st["cluster_rejected"] == 1
+    assert st["cluster_held_lanes"] == 0 and st["inflight_lanes"] == 0
+
+
+def test_cluster_admission_unit():
+    adm = ClusterAdmission(default_quota=TenantQuota(max_lanes=4))
+    adm.acquire("t", 3)
+    with pytest.raises(Backpressure):
+        adm.acquire("t", 2)
+    adm.release("t", 3)
+    assert adm.held_lanes == 0
+    with pytest.raises(ValueError):
+        adm.release("t", 1)
+    with pytest.raises(ValueError):
+        adm.acquire("t", 0)
+
+
+def test_check_health_marks_down_and_reroutes(tmp_path):
+    async def scenario():
+        async with _cluster(2, tmp_path) as cluster:
+            assert await cluster.check_health() == \
+                {"host0": True, "host1": True}
+            await cluster.kill_host("host1")
+            health = await cluster.check_health()
+            assert health == {"host0": True, "host1": False}
+            # Routing never returns the down host now.
+            assert cluster.router.session_host("any") == "host0"
+            assert cluster.router.shard_route(1, 4) == "host0"
+            xs = _data(n=4, lanes=8)
+            blob = await cluster.compress_corpus(xs, n_shards=4,
+                                                 block_symbols=2)
+            return blob, xs
+
+    blob, xs = _run(scenario())
+    codec = _family()((2,))
+    assert blob == shard_codec.compress_dataset(
+        codec, xs, n_shards=4, block_symbols=2)
+
+
+# ---------------------------------------------------------------------------
+# seeded fault schedules (tests/chaos.py): every ending is clean
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", chaos.KINDS)
+def test_chaos_each_fault_kind_ends_clean(tmp_path, kind):
+    xs = _data(n=8)
+    ref = _engine().compress_stream(xs, block_symbols=2)
+    schedule = chaos.FaultSchedule(
+        seed=0, faults=(chaos.Fault(kind, at_block=2, arg=2),))
+
+    async def scenario():
+        async with _cluster(2, tmp_path) as cluster:
+            outcome = await chaos.drive_stream(
+                cluster, xs, schedule=schedule, session_id="s1",
+                block_symbols=2)
+            return outcome, cluster.stats()
+
+    outcome, st = _run(scenario())
+    chaos.check_outcome(outcome, ref)
+    assert st["cluster_held_lanes"] == 0 and st["inflight_lanes"] == 0
+    if kind in (chaos.KILL_HOST, chaos.DUP_RESUME):
+        # These faults are fully survivable: the wire must finish.
+        assert outcome[0] == "wire"
+    if kind == chaos.DROP_RECOVERY:
+        # 2-host write-through (min 2 replicas) cannot absorb drops.
+        assert outcome[0] == "reject" and outcome[1] == "OSError"
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_chaos_seeded_schedules_end_clean(tmp_path, seed):
+    xs = _data(n=8, seed=seed)
+    ref = _engine().compress_stream(xs, block_symbols=2)
+    schedule = chaos.FaultSchedule.from_seed(seed, n_blocks=4)
+
+    async def scenario():
+        async with _cluster(2, tmp_path) as cluster:
+            outcome = await chaos.drive_stream(
+                cluster, xs, schedule=schedule, session_id="s1",
+                block_symbols=2)
+            return outcome, cluster.stats()
+
+    outcome, st = _run(scenario())
+    chaos.check_outcome(outcome, ref)
+    assert st["cluster_held_lanes"] == 0 and st["inflight_lanes"] == 0
+
+
+def test_golden_cluster_fixture_matches_sync_path():
+    """The committed bbx3_cluster blob (2 hosts, 4 shards, one host
+    killed mid-stream + failover) is hex-identical to the synchronous
+    ``shard_codec.compress_dataset`` wire - the kill left no trace."""
+    import os
+    from tests.golden.make_golden import GOLDEN_DIR
+    with open(os.path.join(GOLDEN_DIR, "bbx3_cluster.bin"), "rb") as f:
+        committed = f.read()
+    rng = np.random.default_rng(2024)
+    data = jnp.asarray(rng.integers(0, 64, (8, 8, 9)), jnp.int32)
+    codec = codecs.Shaped(
+        codecs.Repeat(lambda d: codecs.Uniform(6), 9), (9,))
+    ref = shard_codec.compress_dataset(codec, data, n_shards=4,
+                                       block_symbols=2, seed=0,
+                                       init_chunks=0)
+    assert committed.hex() == ref.hex()
+
+
+def test_chaos_schedule_is_deterministic():
+    for seed in range(16):
+        a = chaos.FaultSchedule.from_seed(seed, n_blocks=4)
+        b = chaos.FaultSchedule.from_seed(seed, n_blocks=4)
+        assert a == b and a.faults[0].kind in chaos.KINDS

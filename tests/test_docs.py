@@ -26,7 +26,8 @@ DOC_FILES = ["README.md", "docs/ARCHITECTURE.md", "docs/FORMATS.md",
 
 #: modules whose whole ``__all__`` must be documented in docs/API.md.
 COVERED_MODULES = ("repro.codecs", "repro.stream", "repro.serve",
-                   "repro.analysis", "repro.gateway", "repro.kernels")
+                   "repro.analysis", "repro.gateway",
+                   "repro.gateway.cluster", "repro.kernels")
 
 _FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
 _LINK = re.compile(r"(?<!!)\[[^\]]+\]\(([^)\s]+)\)")
